@@ -1,0 +1,56 @@
+//! Bandwidth sensitivity sweep (the paper's Fig. 14 experiment, finer-
+//! grained): run Base and CABA-BDI at several peak-bandwidth points and
+//! show where compression stops mattering.
+//!
+//! Run: `cargo run --release --example bandwidth_sweep [-- <app>]`
+
+use caba::compress::Algo;
+use caba::report::Table;
+use caba::sim::designs::Design;
+use caba::sim::Simulator;
+use caba::workload::apps;
+use caba::SimConfig;
+
+fn main() {
+    let app_name = std::env::args().nth(1).unwrap_or_else(|| "PVC".into());
+    let app = apps::find(&app_name).unwrap_or_else(|| {
+        eprintln!("unknown app {app_name:?}; see `caba list`");
+        std::process::exit(1);
+    });
+    let scale = 0.05;
+
+    println!("# Bandwidth sweep: {} (Base vs CABA-BDI, normalized to Base@1x)\n", app.name);
+    let mut base1 = None;
+    let mut t = Table::new(["bw", "Base IPC", "CABA IPC", "CABA speedup", "Base bw-util", "CABA ratio"]);
+    for bw in [0.25, 0.5, 1.0, 2.0, 4.0] {
+        let mut cfg = SimConfig::default();
+        cfg.bw_scale = bw;
+        let b = Simulator::new(cfg.clone(), Design::base(), app, scale).run();
+        let c = Simulator::new(cfg.clone(), Design::caba(Algo::Bdi), app, scale).run();
+        if bw == 1.0 {
+            base1 = Some(b.ipc());
+        }
+        t.row([
+            format!("{bw}x"),
+            format!("{:.3}", b.ipc()),
+            format!("{:.3}", c.ipc()),
+            format!("{:+.1}%", (c.ipc() / b.ipc() - 1.0) * 100.0),
+            format!("{:.1}%", b.dram.bandwidth_utilization(b.cycles, cfg.n_mcs) * 100.0),
+            format!("{:.2}x", c.dram.compression_ratio()),
+        ]);
+    }
+    println!("{}", t.render());
+    if let Some(b1) = base1 {
+        let mut cfg = SimConfig::default();
+        cfg.bw_scale = 2.0;
+        let b2 = Simulator::new(cfg.clone(), Design::base(), app, scale).run();
+        cfg.bw_scale = 1.0;
+        let c1 = Simulator::new(cfg, Design::caba(Algo::Bdi), app, scale).run();
+        println!(
+            "paper claim check: CABA@1x = {:.2}x Base@1x; doubling BW = {:.2}x \
+             (\"performance improvement of CABA is often equivalent to doubling the bandwidth\")",
+            c1.ipc() / b1,
+            b2.ipc() / b1
+        );
+    }
+}

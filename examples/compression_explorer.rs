@@ -1,0 +1,98 @@
+//! Compression explorer: push data-distribution classes (and, optionally,
+//! a real file) through BDI / FPC / C-Pack with both oracle backends and
+//! print per-pattern compression ratios — a standalone tour of the
+//! substrate the assist warps execute.
+//!
+//! Run: `cargo run --release --example compression_explorer [-- <file>]`
+
+use caba::compress::oracle::{CompressionOracle, NativeOracle};
+use caba::compress::{Algo, Line, LINE_BYTES, LINE_BURSTS};
+use caba::report::Table;
+use caba::runtime::{artifacts_available, PjrtOracle};
+use caba::workload::datagen::{line_data, DataPattern};
+
+fn ratio(oracle: &mut dyn CompressionOracle, algo: Algo, lines: &[Line]) -> f64 {
+    let verdicts = oracle.analyze(algo, lines);
+    let bursts: u64 = verdicts.iter().map(|v| v.bursts as u64).sum();
+    (lines.len() as u64 * LINE_BURSTS as u64) as f64 / bursts as f64
+}
+
+fn main() {
+    let n = 2048;
+    let patterns: Vec<(&str, DataPattern)> = vec![
+        ("zeros-heavy", DataPattern::ZeroHeavy { p_zero: 0.6 }),
+        ("pointers-8B (PVC)", DataPattern::LowDynRange { value_bytes: 8, delta_bytes: 1 }),
+        ("narrow-int (SLA)", DataPattern::NarrowInt { max: 120 }),
+        ("dict-pointers (graph)", DataPattern::PointerLike { n_bases: 4 }),
+        ("repeated-bytes (JPEG)", DataPattern::RepBytes),
+        ("sparse-narrow (LPS)", DataPattern::SparseNarrow { p_nonzero: 0.3 }),
+        ("float-grid (RAY)", DataPattern::FloatGrid { exp: 120 }),
+        ("random (SCP)", DataPattern::Random),
+    ];
+
+    let mut native = NativeOracle;
+    let mut pjrt = if artifacts_available() {
+        Some(PjrtOracle::from_default_dir().expect("artifact load"))
+    } else {
+        eprintln!("(artifacts missing — native backend only; run `make artifacts`)");
+        None
+    };
+
+    let mut t = Table::new(["pattern", "BDI", "FPC", "C-Pack", "Best", "backend-check"]);
+    for (name, p) in &patterns {
+        let lines: Vec<Line> = (0..n).map(|i| line_data(p, 42, i as u64, 0)).collect();
+        let r: Vec<f64> = [Algo::Bdi, Algo::Fpc, Algo::CPack, Algo::BestOfAll]
+            .iter()
+            .map(|&a| ratio(&mut native, a, &lines))
+            .collect();
+        let check = match &mut pjrt {
+            Some(px) => {
+                let agree = Algo::CONCRETE.iter().all(|&a| {
+                    px.analyze(a, &lines[..256]) == native.analyze(a, &lines[..256])
+                });
+                if agree { "pjrt==native" } else { "MISMATCH!" }
+            }
+            None => "native-only",
+        };
+        t.row([
+            name.to_string(),
+            format!("{:.2}x", r[0]),
+            format!("{:.2}x", r[1]),
+            format!("{:.2}x", r[2]),
+            format!("{:.2}x", r[3]),
+            check.to_string(),
+        ]);
+    }
+    println!("# Compression ratios by data-distribution class ({n} lines each)\n");
+    println!("{}", t.render());
+
+    // Optional: analyze a real file's bytes.
+    if let Some(path) = std::env::args().nth(1) {
+        match std::fs::read(&path) {
+            Ok(bytes) => {
+                let lines: Vec<Line> = bytes
+                    .chunks_exact(LINE_BYTES)
+                    .take(1 << 16)
+                    .map(|c| {
+                        let mut l = [0u8; LINE_BYTES];
+                        l.copy_from_slice(c);
+                        l
+                    })
+                    .collect();
+                if lines.is_empty() {
+                    eprintln!("{path}: too small ({} bytes)", bytes.len());
+                    return;
+                }
+                println!("\n# {path} ({} lines)", lines.len());
+                for algo in [Algo::Bdi, Algo::Fpc, Algo::CPack, Algo::BestOfAll] {
+                    println!(
+                        "  {:<10} {:.3}x",
+                        algo.name(),
+                        ratio(&mut native, algo, &lines)
+                    );
+                }
+            }
+            Err(e) => eprintln!("cannot read {path}: {e}"),
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! End-to-end evaluation driver — the run recorded in EXPERIMENTS.md.
+//!
+//! Exercises the full three-layer stack on the paper's evaluation set:
+//!
+//! 1. loads the AOT-compiled JAX/Pallas compression model (PJRT) and
+//!    verifies it against the native substrate on this run's data;
+//! 2. simulates every eval-set workload under the five headline designs
+//!    (Fig. 8/9) plus the three CABA algorithm variants (Fig. 12/13);
+//! 3. prints the paper-format tables with GMean/Mean summaries and the
+//!    headline-claim comparison.
+//!
+//! Run: `make artifacts && cargo run --release --example full_eval`
+//! (set CABA_SCALE to trade fidelity for speed; default 0.1)
+
+use caba::compress::oracle::{CompressionOracle, MemoOracle, NativeOracle};
+use caba::compress::Algo;
+use caba::energy::EnergyModel;
+use caba::report::{figure_matrix, Series};
+use caba::runtime::{artifacts_available, PjrtOracle};
+use caba::sim::designs::{Design, Mechanism};
+use caba::sim::Simulator;
+use caba::stats::SimStats;
+use caba::util::geomean;
+use caba::workload::apps;
+use caba::SimConfig;
+use std::time::Instant;
+
+fn main() {
+    let scale: f64 = std::env::var("CABA_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let t0 = Instant::now();
+
+    // ---- Layer contract check: PJRT artifact vs native substrate ----
+    if artifacts_available() {
+        let mut pjrt = PjrtOracle::from_default_dir().expect("load artifacts");
+        let mut native = NativeOracle;
+        let lines: Vec<_> = (0..512)
+            .map(|i| {
+                caba::workload::datagen::line_data(
+                    &caba::workload::datagen::DataPattern::LowDynRange {
+                        value_bytes: 8,
+                        delta_bytes: 1,
+                    },
+                    7,
+                    i,
+                    0,
+                )
+            })
+            .collect();
+        for algo in Algo::CONCRETE {
+            assert_eq!(
+                pjrt.analyze(algo, &lines),
+                native.analyze(algo, &lines),
+                "PJRT artifact disagrees with native {algo:?}"
+            );
+        }
+        println!("[ok] PJRT artifacts bit-identical to native substrate (3 algos x 512 lines)");
+
+        // Run one full simulation with the PJRT oracle on the hot path to
+        // prove the three layers compose end-to-end.
+        let app = apps::find("PVC").unwrap();
+        let oracle = MemoOracle::new(PjrtOracle::from_default_dir().unwrap());
+        let mut sim = Simulator::with_oracle(
+            SimConfig::default(),
+            Design::caba(Algo::Bdi),
+            app,
+            (scale * 0.2).max(0.01),
+            Box::new(oracle),
+        );
+        let s = sim.run();
+        println!(
+            "[ok] end-to-end sim on PJRT oracle: PVC/CABA-BDI IPC={:.3} ratio={:.2}x\n",
+            s.ipc(),
+            s.dram.compression_ratio()
+        );
+    } else {
+        println!("[warn] artifacts/ missing — run `make artifacts` for the PJRT path\n");
+    }
+
+    // ---- Figs. 8/9/10/11: five headline designs ----
+    let set = apps::eval_set();
+    let names: Vec<&str> = set.iter().map(|a| a.name).collect();
+    let designs = Design::headline();
+    let em = EnergyModel::default();
+
+    let mut all: Vec<Vec<SimStats>> = Vec::new();
+    for app in &set {
+        let mut row = Vec::new();
+        for d in designs.iter() {
+            row.push(Simulator::new(SimConfig::default(), *d, app, scale).run());
+        }
+        all.push(row);
+        eprint!(".");
+    }
+    eprintln!();
+
+    let metric = |f: &dyn Fn(&SimStats, &Design) -> f64| -> Vec<Series> {
+        designs
+            .iter()
+            .enumerate()
+            .map(|(di, d)| Series {
+                label: d.name.to_string(),
+                values: all.iter().map(|row| f(&row[di], d)).collect(),
+            })
+            .collect()
+    };
+
+    let base_ipc: Vec<f64> = all.iter().map(|r| r[0].ipc()).collect();
+    let mut perf = metric(&|s, _| s.ipc());
+    for s in perf.iter_mut() {
+        for (i, v) in s.values.iter_mut().enumerate() {
+            *v /= base_ipc[i];
+        }
+    }
+    println!("# Fig. 8 — normalized performance (paper: CABA-BDI +41.7%)\n{}",
+        figure_matrix(&names, &perf, 3));
+
+    let n_mcs = SimConfig::default().n_mcs;
+    let bw = metric(&|s, _| s.dram.bandwidth_utilization(s.cycles, n_mcs) * 100.0);
+    println!("# Fig. 9 — bandwidth utilization % (paper: 53.6% -> 35.6%)\n{}",
+        figure_matrix(&names, &bw, 1));
+
+    let energy = |s: &SimStats, d: &Design| {
+        em.evaluate(s, d.mechanism == Mechanism::Caba, d.mechanism == Mechanism::Hardware)
+            .total_mj()
+    };
+    let base_e: Vec<f64> = all.iter().map(|r| energy(&r[0], &designs[0])).collect();
+    let mut en = metric(&energy);
+    for s in en.iter_mut() {
+        for (i, v) in s.values.iter_mut().enumerate() {
+            *v /= base_e[i];
+        }
+    }
+    println!("# Fig. 10 — normalized energy (paper: CABA-BDI -22.2%)\n{}",
+        figure_matrix(&names, &en, 3));
+
+    // ---- Fig. 12/13: algorithm variants ----
+    let algo_designs = [
+        Design::caba(Algo::Fpc),
+        Design::caba(Algo::Bdi),
+        Design::caba(Algo::CPack),
+        Design::caba(Algo::BestOfAll),
+    ];
+    let mut speed = Vec::new();
+    let mut ratio = Vec::new();
+    for d in algo_designs.iter() {
+        let mut sv = Vec::new();
+        let mut rv = Vec::new();
+        for (i, app) in set.iter().enumerate() {
+            let s = Simulator::new(SimConfig::default(), *d, app, scale).run();
+            sv.push(s.ipc() / base_ipc[i]);
+            rv.push(s.dram.compression_ratio());
+        }
+        speed.push(Series { label: d.name.to_string(), values: sv });
+        ratio.push(Series { label: d.name.to_string(), values: rv });
+        eprint!("+");
+    }
+    eprintln!();
+    println!("# Fig. 12 — speedup per algorithm (paper: FPC +20.7% BDI +41.7% C-Pack +35.2%)\n{}",
+        figure_matrix(&names, &speed, 3));
+    println!("# Fig. 13 — compression ratio (paper avg: BDI 2.1x)\n{}",
+        figure_matrix(&names, &ratio, 2));
+
+    // ---- Headline claims ----
+    let gm = |di: usize| geomean(&perf[di].values);
+    println!("# Headline comparison (geomean over {} apps)", names.len());
+    println!("  CABA-BDI speedup:      {:+.1}%   (paper +41.7%)", (gm(3) - 1.0) * 100.0);
+    println!("  vs Ideal-BDI:          {:+.1}%   (paper -2.8%)", (gm(3) / gm(4) - 1.0) * 100.0);
+    println!("  vs HW-BDI-Mem:         {:+.1}%   (paper +9.9%)", (gm(3) / gm(1) - 1.0) * 100.0);
+    println!("  vs HW-BDI:             {:+.1}%   (paper -1.6%)", (gm(3) / gm(2) - 1.0) * 100.0);
+    let ratio_bdi = geomean(&ratio[1].values);
+    println!("  BDI compression ratio: {:.2}x   (paper 2.1x)", ratio_bdi);
+    let e_gm = geomean(&en[3].values);
+    println!("  CABA-BDI energy:       {:+.1}%   (paper -22.2%)", (e_gm - 1.0) * 100.0);
+    println!("\ncompleted in {:.1}s at scale {scale}", t0.elapsed().as_secs_f64());
+}

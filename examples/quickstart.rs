@@ -1,0 +1,64 @@
+//! Quickstart: simulate one bandwidth-bound workload (PVC, the paper's
+//! Fig. 6 example app) under the baseline and under CABA-BDI, and print
+//! the headline comparison.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use caba::compress::Algo;
+use caba::energy::EnergyModel;
+use caba::sim::designs::Design;
+use caba::sim::Simulator;
+use caba::workload::apps;
+use caba::SimConfig;
+
+fn main() {
+    let app = apps::find("PVC").expect("PVC profile");
+    let cfg = SimConfig::default();
+    let scale = 0.1;
+
+    println!("== CABA quickstart: {} (Mars suite, memory-bound) ==\n", app.name);
+    println!("{}\n", cfg.table1());
+
+    let base = Simulator::new(cfg.clone(), Design::base(), app, scale).run();
+    let caba = Simulator::new(cfg.clone(), Design::caba(Algo::Bdi), app, scale).run();
+
+    let em = EnergyModel::default();
+    let e_base = em.evaluate(&base, false, false);
+    let e_caba = em.evaluate(&caba, true, false);
+
+    println!("metric                      Base        CABA-BDI");
+    println!("cycles               {:>11} {:>14}", base.cycles, caba.cycles);
+    println!("IPC                  {:>11.3} {:>14.3}", base.ipc(), caba.ipc());
+    println!(
+        "speedup              {:>11} {:>13.1}%",
+        "-",
+        (caba.ipc() / base.ipc() - 1.0) * 100.0
+    );
+    println!(
+        "DRAM bursts          {:>11} {:>14}",
+        base.dram.bursts, caba.dram.bursts
+    );
+    println!(
+        "compression ratio    {:>11.2} {:>14.2}",
+        base.dram.compression_ratio(),
+        caba.dram.compression_ratio()
+    );
+    println!(
+        "bandwidth util       {:>10.1}% {:>13.1}%",
+        base.dram.bandwidth_utilization(base.cycles, cfg.n_mcs) * 100.0,
+        caba.dram.bandwidth_utilization(caba.cycles, cfg.n_mcs) * 100.0
+    );
+    println!(
+        "energy (mJ)          {:>11.2} {:>14.2}",
+        e_base.total_mj(),
+        e_caba.total_mj()
+    );
+    println!(
+        "assist warps         {:>11} {:>14}",
+        0,
+        caba.caba.decompress_warps + caba.caba.compress_warps
+    );
+    println!(
+        "\npaper (avg over eval set): +41.7% IPC, 2.1x ratio, -22.2% energy"
+    );
+}

@@ -1,0 +1,59 @@
+"""AOT export: lower the L2 model (with its L1 Pallas kernels) to HLO text.
+
+HLO *text*, not ``lowered.compiler_ir("hlo").serialize()`` — jax ≥ 0.5 emits
+protos with 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and DESIGN.md).
+
+Usage (via `make artifacts`):
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # BDI needs uint64 arithmetic
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .kernels import BATCH  # noqa: E402
+from .model import MODEL_FNS  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str, batch: int = BATCH) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    spec = jax.ShapeDtypeStruct((batch, 32), jnp.uint32)
+    written = {}
+    for name, fn in MODEL_FNS.items():
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written[name] = path
+        print(f"wrote {path} ({len(text)} chars, batch={batch})")
+    return written
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--batch", type=int, default=BATCH)
+    args = p.parse_args()
+    export_all(args.out_dir, args.batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""L1 Pallas kernels: compression analysis for BDI / FPC / C-Pack.
+
+`interpret=True` everywhere — the CPU PJRT backend cannot execute Mosaic
+custom-calls; interpret mode lowers the kernels to plain HLO that both the
+build-time pytest and the Rust runtime can run (see DESIGN.md
+§Hardware-Adaptation for the TPU mapping rationale).
+
+NOTE: BDI needs uint64 arithmetic — callers must enable x64
+(`jax.config.update("jax_enable_x64", True)`) before tracing.
+"""
+
+from .bdi import bdi_pallas
+from .cpack import cpack_pallas
+from .fpc import fpc_pallas
+
+# Default batch/block geometry shared with aot.py and the Rust runtime
+# (rust/src/runtime/mod.rs: BATCH).
+BATCH = 256
+BLOCK = 64
+
+KERNEL_FNS = {
+    "bdi": bdi_pallas,
+    "fpc": fpc_pallas,
+    "cpack": cpack_pallas,
+}

@@ -1,0 +1,76 @@
+"""Pallas kernel: BDI compression analysis.
+
+One grid step analyzes a `(BLOCK, 32)`-word tile of cache lines held in
+VMEM. The per-line reduction over lanes (`jnp.all`) is the VPU analogue of
+the paper's warp-wide predicate AND (the "global predicate register" of
+§5.1.2); the geometry cascade mirrors Algorithm 2's encoding loop.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BDI_GEOMETRIES, BDI_ENC_REPEAT, BDI_ENC_ZEROS, BDI_ENC_UNCOMPRESSED, LINE_BYTES, bdi_encoded_size
+
+
+def _values(words, base_size):
+    w = words.astype(jnp.uint64)
+    if base_size == 4:
+        return w
+    if base_size == 8:
+        return w[:, 0::2] | (w[:, 1::2] << jnp.uint64(32))
+    lo = w & jnp.uint64(0xFFFF)
+    hi = (w >> jnp.uint64(16)) & jnp.uint64(0xFFFF)
+    return jnp.stack([lo, hi], axis=-1).reshape(w.shape[0], -1)
+
+
+def _kernel(words_ref, enc_ref, size_ref):
+    words = words_ref[...]
+    n = words.shape[0]
+    enc = jnp.full((n,), BDI_ENC_UNCOMPRESSED, jnp.int32)
+    size = jnp.full((n,), 1 + LINE_BYTES, jnp.int32)
+
+    # Geometry cascade, worst-preference first so better ones overwrite.
+    for g_enc, base_size, delta_size in reversed(BDI_GEOMETRIES):
+        v = _values(words, base_size)
+        nz = v != 0
+        first = jnp.argmax(nz, axis=1)
+        base = jnp.take_along_axis(v, first[:, None], axis=1)
+        m = jnp.uint64(1 << (8 * delta_size - 1))
+        two_m = m + m
+        fits_base = (v - base + m) < two_m  # u64 wrap = signed range check
+        fits_zero = (v + m) < two_m
+        ok = jnp.all(fits_base | fits_zero, axis=1)
+        enc = jnp.where(ok, g_enc, enc)
+        size = jnp.where(ok, bdi_encoded_size(base_size, delta_size), size)
+
+    v8 = _values(words, 8)
+    rep = jnp.all(v8 == v8[:, :1], axis=1)
+    enc = jnp.where(rep, BDI_ENC_REPEAT, enc)
+    size = jnp.where(rep, 9, size)
+    zeros = jnp.all(words == 0, axis=1)
+    enc = jnp.where(zeros, BDI_ENC_ZEROS, enc)
+    size = jnp.where(zeros, 1, size)
+
+    enc_ref[...] = enc
+    size_ref[...] = size
+
+
+def bdi_pallas(words, block: int = 64):
+    """Analyze `uint32[N, 32]` lines; N must be a multiple of `block`."""
+    n = words.shape[0]
+    grid = (n // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, words.shape[1]), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ),
+        interpret=True,
+    )(words)

@@ -1,0 +1,79 @@
+"""Pallas kernel: restricted C-Pack compression analysis.
+
+C-Pack's dictionary build is inherently serial over the 32 words of a line
+(Algorithm 6), so the kernel runs a `fori_loop` over word positions while
+staying fully vectorized across the lines of the tile — the same
+"serial in words, parallel in lanes" shape the paper's assist warp has
+(one lane per line here instead of one lane per word, the natural VPU
+transposition).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ref import (
+    CPACK_DICT,
+    CPACK_ENC_UNCOMPRESSED,
+    LINE_BYTES,
+    WORDS_PER_LINE,
+    cpack_compressed_size,
+)
+
+
+def _kernel(words_ref, enc_ref, size_ref):
+    words = words_ref[...]
+    n = words.shape[0]
+    lane = jnp.arange(CPACK_DICT)[None, :]
+
+    def step(i, carry):
+        dict_vals, dict_len, fail = carry
+        w = words[:, i]
+        upper = w & jnp.uint32(0xFFFFFF00)
+        is_zero = w == 0
+        is_zext = (upper == 0) & ~is_zero
+        valid = lane < dict_len[:, None]
+        full = jnp.any((dict_vals == w[:, None]) & valid, axis=1)
+        partial = jnp.any(
+            ((dict_vals & jnp.uint32(0xFFFFFF00)) == upper[:, None]) & valid, axis=1
+        )
+        matched = is_zero | is_zext | full | partial
+        need_new = ~matched
+        overflow = need_new & (dict_len >= CPACK_DICT)
+        append = need_new & ~overflow
+        slot = jnp.clip(dict_len, 0, CPACK_DICT - 1)
+        one_hot = lane == slot[:, None]
+        dict_vals = jnp.where(append[:, None] & one_hot, w[:, None], dict_vals)
+        dict_len = dict_len + append.astype(jnp.int32)
+        return dict_vals, dict_len, fail | overflow
+
+    init = (
+        jnp.zeros((n, CPACK_DICT), jnp.uint32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), bool),
+    )
+    _, dict_len, fail = lax.fori_loop(0, WORDS_PER_LINE, step, init)
+    enc_ref[...] = jnp.where(fail, CPACK_ENC_UNCOMPRESSED, dict_len).astype(jnp.int32)
+    size_ref[...] = jnp.where(fail, 1 + LINE_BYTES, cpack_compressed_size(dict_len)).astype(
+        jnp.int32
+    )
+
+
+def cpack_pallas(words, block: int = 64):
+    """Analyze `uint32[N, 32]` lines; N must be a multiple of `block`."""
+    n = words.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block, words.shape[1]), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ),
+        interpret=True,
+    )(words)

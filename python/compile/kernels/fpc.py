@@ -1,0 +1,56 @@
+"""Pallas kernel: segmented-FPC compression analysis.
+
+The tile is reshaped into `(lines, 4 segments, 8 words)`; each segment's
+pattern test is a lane-axis reduction, mirroring the per-segment uniform
+encoding the paper introduces to parallelize FPC across SIMT lanes
+(Algorithms 3–4).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import (
+    FPC_ENC_UNCOMPRESSED,
+    FPC_N_SEGMENTS,
+    FPC_SEGMENT_WORDS,
+    LINE_BYTES,
+)
+
+
+def _kernel(words_ref, enc_ref, size_ref):
+    words = words_ref[...]
+    n = words.shape[0]
+    seg = words.reshape(n, FPC_N_SEGMENTS, FPC_SEGMENT_WORDS)
+    s = seg.astype(jnp.int32)
+    zero = jnp.all(seg == 0, axis=2)
+    se1 = jnp.all((s >= -128) & (s <= 127), axis=2)
+    b = seg & jnp.uint32(0xFF)
+    repb = jnp.all(seg == b * jnp.uint32(0x01010101), axis=2)
+    se2 = jnp.all((s >= -32768) & (s <= 32767), axis=2)
+    bpw = jnp.where(zero, 0, jnp.where(se1, 1, jnp.where(repb, 1, jnp.where(se2, 2, 4))))
+    compressed_seg = zero | se1 | repb | se2
+    size = (1 + FPC_N_SEGMENTS + FPC_SEGMENT_WORDS * jnp.sum(bpw, axis=1)).astype(jnp.int32)
+    n_comp = jnp.sum(compressed_seg.astype(jnp.int32), axis=1)
+    passthrough = size >= LINE_BYTES
+    enc_ref[...] = jnp.where(passthrough, FPC_ENC_UNCOMPRESSED, n_comp).astype(jnp.int32)
+    size_ref[...] = jnp.where(passthrough, 1 + LINE_BYTES, size).astype(jnp.int32)
+
+
+def fpc_pallas(words, block: int = 64):
+    """Analyze `uint32[N, 32]` lines; N must be a multiple of `block`."""
+    n = words.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block, words.shape[1]), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ),
+        interpret=True,
+    )(words)

@@ -1,0 +1,203 @@
+"""Pure-jnp correctness oracles for the compression-analysis kernels.
+
+Each function maps a batch of 128-byte cache lines (as ``uint32[N, 32]``
+little-endian words) to ``(encoding int32[N], size_bytes int32[N])`` and is
+the bit-exact specification the Pallas kernels (bdi.py / fpc.py / cpack.py)
+and the Rust `NativeOracle` must agree with (see
+rust/tests/integration_pjrt.rs).
+
+Semantics mirror rust/src/compress/{bdi,fpc,cpack}.rs exactly, including
+encoding preference order, tie-breaking, and metadata byte counts.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+WORDS_PER_LINE = 32
+LINE_BYTES = 128
+
+# --- BDI constants (rust/src/compress/bdi.rs) ---
+BDI_ENC_ZEROS = 0
+BDI_ENC_REPEAT = 1
+BDI_ENC_UNCOMPRESSED = 15
+# (enc, base_size, delta_size) in the exact preference order the Rust
+# compressor tries them (stable sort of BASE_DELTA_ENCODINGS by size).
+BDI_GEOMETRIES = (
+    (2, 8, 1),  # base8-d1,  27 B
+    (5, 4, 1),  # base4-d1,  41 B
+    (3, 8, 2),  # base8-d2,  43 B
+    (6, 4, 2),  # base4-d2,  73 B
+    (7, 2, 1),  # base2-d1,  75 B
+    (4, 8, 4),  # base8-d4,  75 B
+)
+
+
+def bdi_encoded_size(base_size: int, delta_size: int) -> int:
+    n = LINE_BYTES // base_size
+    return 1 + n // 8 + base_size + n * delta_size
+
+
+def _as_values(words, base_size: int):
+    """View u32[N,32] as unsigned values of `base_size` bytes → u64[N, n]."""
+    w = words.astype(jnp.uint64)
+    if base_size == 4:
+        return w
+    if base_size == 8:
+        lo = w[:, 0::2]
+        hi = w[:, 1::2]
+        return lo | (hi << jnp.uint64(32))
+    if base_size == 2:
+        lo = w & jnp.uint64(0xFFFF)
+        hi = (w >> jnp.uint64(16)) & jnp.uint64(0xFFFF)
+        # interleave: value i*2 = lo word, i*2+1 = hi word
+        return jnp.stack([lo, hi], axis=-1).reshape(w.shape[0], -1)
+    raise ValueError(base_size)
+
+
+def _first_nonzero(v):
+    """Per row: first non-zero value (0 if all zero) — the BDI base."""
+    nz = v != 0
+    idx = jnp.argmax(nz, axis=1)
+    return jnp.take_along_axis(v, idx[:, None], axis=1)[:, 0]
+
+
+def _fits(d, delta_size: int):
+    """Does wrapped difference `d` (u64) fit a signed `delta_size`-byte int?"""
+    m = jnp.uint64(1 << (8 * delta_size - 1))
+    return (d + m) < (m + m)  # u64 wrap-around makes this the signed check
+
+
+def bdi_ref(words):
+    """BDI analysis: (encoding, size_bytes) per line."""
+    n_lines = words.shape[0]
+    enc = jnp.full((n_lines,), BDI_ENC_UNCOMPRESSED, jnp.int32)
+    size = jnp.full((n_lines,), 1 + LINE_BYTES, jnp.int32)
+    decided = jnp.zeros((n_lines,), bool)
+
+    # Geometries, tried in preference order (worst first so better ones
+    # overwrite — we instead guard with `decided`).
+    for g_enc, base_size, delta_size in reversed(BDI_GEOMETRIES):
+        v = _as_values(words, base_size)
+        base = _first_nonzero(v)[:, None]
+        ok = jnp.all(_fits(v - base, delta_size) | _fits(v, delta_size), axis=1)
+        enc = jnp.where(ok, g_enc, enc)
+        size = jnp.where(ok, bdi_encoded_size(base_size, delta_size), size)
+
+    del decided
+    # Repeated 8-byte value (higher priority than any geometry).
+    v8 = _as_values(words, 8)
+    rep = jnp.all(v8 == v8[:, :1], axis=1)
+    enc = jnp.where(rep, BDI_ENC_REPEAT, enc)
+    size = jnp.where(rep, 9, size)
+    # All zeros (highest priority).
+    zeros = jnp.all(words == 0, axis=1)
+    enc = jnp.where(zeros, BDI_ENC_ZEROS, enc)
+    size = jnp.where(zeros, 1, size)
+    return enc.astype(jnp.int32), size.astype(jnp.int32)
+
+
+# --- FPC (rust/src/compress/fpc.rs, segmented variant) ---
+FPC_SEGMENT_WORDS = 8
+FPC_N_SEGMENTS = WORDS_PER_LINE // FPC_SEGMENT_WORDS
+FPC_ENC_UNCOMPRESSED = 0xFF
+
+
+def fpc_ref(words):
+    """Segmented-FPC analysis: (encoding, size_bytes) per line.
+
+    encoding = number of compressed segments (the AWS subroutine selector
+    the Rust side uses), or 0xFF for a passthrough line.
+    """
+    n_lines = words.shape[0]
+    seg = words.reshape(n_lines, FPC_N_SEGMENTS, FPC_SEGMENT_WORDS)
+    s = seg.astype(jnp.int32)
+    zero = jnp.all(seg == 0, axis=2)
+    se1 = jnp.all((s >= -128) & (s <= 127), axis=2)
+    b = seg & 0xFF
+    repb = jnp.all(seg == b * 0x01010101, axis=2)
+    se2 = jnp.all((s >= -32768) & (s <= 32767), axis=2)
+    # Pattern choice in CANDIDATES order: Zero, SignExt1, RepByte, SignExt2,
+    # Uncompressed → payload bytes/word 0,1,1,2,4.
+    bpw = jnp.where(
+        zero, 0, jnp.where(se1, 1, jnp.where(repb, 1, jnp.where(se2, 2, 4)))
+    )
+    compressed_seg = zero | se1 | repb | se2
+    size = 1 + FPC_N_SEGMENTS + FPC_SEGMENT_WORDS * jnp.sum(bpw, axis=1)
+    n_comp = jnp.sum(compressed_seg.astype(jnp.int32), axis=1)
+    passthrough = size >= LINE_BYTES
+    enc = jnp.where(passthrough, FPC_ENC_UNCOMPRESSED, n_comp)
+    size = jnp.where(passthrough, 1 + LINE_BYTES, size)
+    return enc.astype(jnp.int32), size.astype(jnp.int32)
+
+
+# --- C-Pack (rust/src/compress/cpack.rs, restricted variant) ---
+CPACK_DICT = 4
+CPACK_ENC_UNCOMPRESSED = 0xFF
+
+
+def cpack_compressed_size(dict_used):
+    # [hdr][codes 4-bit x32][dict 4B x used][payload 1B x32] = 49 + 4*used
+    return 1 + WORDS_PER_LINE // 2 + dict_used * 4 + WORDS_PER_LINE
+
+
+def cpack_ref(words):
+    """Restricted C-Pack analysis: (encoding, size_bytes) per line.
+
+    The dictionary build is serial (Algorithm 6): scan the 32 words,
+    adding a new dictionary entry whenever a word matches no pattern and
+    no existing entry; a 5th needed entry fails the line.
+    """
+    n_lines = words.shape[0]
+
+    def step(carry, w):
+        dict_vals, dict_len, fail = carry  # (N,4) u32, (N,) i32, (N,) bool
+        upper = w & jnp.uint32(0xFFFFFF00)
+        is_zero = w == 0
+        is_zext = (upper == 0) & ~is_zero
+        full = (dict_vals == w[:, None]) & (
+            jnp.arange(CPACK_DICT)[None, :] < dict_len[:, None]
+        )
+        partial = ((dict_vals & jnp.uint32(0xFFFFFF00)) == upper[:, None]) & (
+            jnp.arange(CPACK_DICT)[None, :] < dict_len[:, None]
+        )
+        matched = is_zero | is_zext | jnp.any(full, axis=1) | jnp.any(partial, axis=1)
+        need_new = ~matched
+        overflow = need_new & (dict_len >= CPACK_DICT)
+        # Append w where a new entry is needed and there is room.
+        slot = jnp.clip(dict_len, 0, CPACK_DICT - 1)
+        append = need_new & ~overflow
+        one_hot = jnp.arange(CPACK_DICT)[None, :] == slot[:, None]
+        dict_vals = jnp.where(append[:, None] & one_hot, w[:, None], dict_vals)
+        dict_len = dict_len + append.astype(jnp.int32)
+        fail = fail | overflow
+        return (dict_vals, dict_len, fail), None
+
+    init = (
+        jnp.zeros((n_lines, CPACK_DICT), jnp.uint32),
+        jnp.zeros((n_lines,), jnp.int32),
+        jnp.zeros((n_lines,), bool),
+    )
+    (dict_vals, dict_len, fail), _ = lax.scan(step, init, jnp.swapaxes(words, 0, 1))
+    del dict_vals
+    enc = jnp.where(fail, CPACK_ENC_UNCOMPRESSED, dict_len)
+    size = jnp.where(fail, 1 + LINE_BYTES, cpack_compressed_size(dict_len))
+    return enc.astype(jnp.int32), size.astype(jnp.int32)
+
+
+def best_ref(words):
+    """Per-line best of the three algorithms (paper's CABA-BestOfAll):
+    smallest size wins; ties resolve BDI > FPC > C-Pack (the Rust order)."""
+    be, bs = bdi_ref(words)
+    fe, fs = fpc_ref(words)
+    ce, cs = cpack_ref(words)
+    enc, size = be, bs
+    better = fs < size
+    enc = jnp.where(better, fe, enc)
+    size = jnp.where(better, fs, size)
+    better = cs < size
+    enc = jnp.where(better, ce, enc)
+    size = jnp.where(better, cs, size)
+    return enc.astype(jnp.int32), size.astype(jnp.int32)
+
+
+REF_FNS = {"bdi": bdi_ref, "fpc": fpc_ref, "cpack": cpack_ref, "best": best_ref}

@@ -1,0 +1,50 @@
+"""L2 model: the assist-warp compute expressed as a JAX graph.
+
+`analyze_<algo>(words)` maps a batch of cache lines (`uint32[N, 32]`) to
+`(encoding int32[N], size_bytes int32[N])` by calling the L1 Pallas
+kernels; `analyze_best` fuses all three and reduces per line — the
+CABA-BestOfAll selection of §7.3 as one dataflow graph.
+
+These are the functions `aot.py` lowers to the HLO artifacts the Rust
+runtime executes; Python never runs at simulation time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import bdi_pallas, cpack_pallas, fpc_pallas
+
+
+def analyze_bdi(words):
+    return bdi_pallas(words)
+
+
+def analyze_fpc(words):
+    return fpc_pallas(words)
+
+
+def analyze_cpack(words):
+    return cpack_pallas(words)
+
+
+def analyze_best(words):
+    """Per-line best-of-{BDI, FPC, C-Pack}; ties prefer BDI then FPC then
+    C-Pack (matching `caba::compress::compress(Algo::BestOfAll, ..)`)."""
+    be, bs = analyze_bdi(words)
+    fe, fs = analyze_fpc(words)
+    ce, cs = analyze_cpack(words)
+    enc, size = be, bs
+    better = fs < size
+    enc = jnp.where(better, fe, enc)
+    size = jnp.where(better, fs, size)
+    better = cs < size
+    enc = jnp.where(better, ce, enc)
+    size = jnp.where(better, cs, size)
+    return enc, size
+
+
+MODEL_FNS = {
+    "bdi": analyze_bdi,
+    "fpc": analyze_fpc,
+    "cpack": analyze_cpack,
+    "best": analyze_best,
+}

@@ -1,0 +1,4 @@
+import jax
+
+# BDI needs uint64 arithmetic; must be set before any tracing.
+jax.config.update("jax_enable_x64", True)

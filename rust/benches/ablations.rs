@@ -1,0 +1,106 @@
+//! Ablation studies for the design choices DESIGN.md §6 calls out:
+//! AWC throttling, MD-cache size, AWT capacity, and the FPC segment-size
+//! simplicity/compressibility trade-off (§5.1.4).
+
+use caba::compress::fpc::Fpc;
+use caba::compress::{Algo, Compressor, LINE_BURSTS};
+use caba::report::Table;
+use caba::sim::designs::Design;
+use caba::sim::Simulator;
+use caba::workload::apps;
+use caba::workload::datagen::{line_data, DataPattern};
+use caba::SimConfig;
+
+fn ipc(app: &'static caba::workload::apps::AppSpec, cfg: SimConfig, scale: f64) -> f64 {
+    Simulator::new(cfg, Design::caba(Algo::Bdi), app, scale).run().ipc()
+}
+
+fn main() {
+    let scale = caba::report::benchutil::bench_scale();
+    let app = apps::find("PVC").unwrap();
+
+    // --- Throttling on/off (§4.4 dynamic feedback) ---
+    let mut t = Table::new(["throttle", "IPC", "compress skipped", "throttled deploys"]);
+    for on in [true, false] {
+        let mut cfg = SimConfig::default();
+        cfg.caba_throttle = on;
+        let s = Simulator::new(cfg, Design::caba(Algo::Bdi), app, scale).run();
+        t.row([
+            on.to_string(),
+            format!("{:.3}", s.ipc()),
+            s.caba.compress_skipped.to_string(),
+            s.caba.throttled_deploys.to_string(),
+        ]);
+    }
+    println!("# Ablation: AWC utilization-feedback throttle (PVC, CABA-BDI)\n{}", t.render());
+
+    // --- MD cache size (§5.3.2) ---
+    let mut t = Table::new(["md cache", "IPC", "MD hit rate", "extra DRAM accesses"]);
+    for kb in [1usize, 4, 8, 32, 128] {
+        let mut cfg = SimConfig::default();
+        cfg.md_cache_bytes = kb * 1024;
+        let s = Simulator::new(cfg, Design::caba(Algo::Bdi), app, scale).run();
+        t.row([
+            format!("{kb}KB"),
+            format!("{:.3}", s.ipc()),
+            format!("{:.1}%", s.md.hit_rate() * 100.0),
+            s.dram.md_accesses.to_string(),
+        ]);
+    }
+    println!("# Ablation: MD-cache size (paper: 8KB 4-way, 85% avg hit rate)\n{}", t.render());
+
+    // --- AWT capacity ---
+    let mut t = Table::new(["AWT entries", "IPC", "compress skipped"]);
+    for entries in [4usize, 16, 32, 128] {
+        let mut cfg = SimConfig::default();
+        cfg.awt_entries = entries;
+        let s = Simulator::new(cfg, Design::caba(Algo::Bdi), app, scale).run();
+        t.row([
+            entries.to_string(),
+            format!("{:.3}", s.ipc()),
+            s.caba.compress_skipped.to_string(),
+        ]);
+    }
+    println!("# Ablation: Assist Warp Table capacity\n{}", t.render());
+
+    // --- FPC segment size (ratio only; §5.1.4 trade-off) ---
+    let mut t = Table::new(["segment words", "ratio (sparse)", "ratio (narrow)"]);
+    for seg in [4usize, 8, 16] {
+        let f = Fpc { segment_words: seg };
+        let mut ratios = Vec::new();
+        for p in [
+            DataPattern::SparseNarrow { p_nonzero: 0.3 },
+            DataPattern::NarrowInt { max: 120 },
+        ] {
+            let mut bursts = 0u64;
+            let n = 2000;
+            for i in 0..n {
+                bursts += f.compress(&line_data(&p, 5, i, 0)).bursts() as u64;
+            }
+            ratios.push(n as f64 * LINE_BURSTS as f64 / bursts as f64);
+        }
+        t.row([
+            seg.to_string(),
+            format!("{:.2}x", ratios[0]),
+            format!("{:.2}x", ratios[1]),
+        ]);
+    }
+    println!("# Ablation: FPC segment size (parallelism vs compressibility)\n{}", t.render());
+
+    // --- Assist-warp register provisioning (occupancy cost, §4.2.2) ---
+    let mut t = Table::new(["app", "CTAs base", "CTAs +2regs", "unallocated base"]);
+    let cfg = SimConfig::default();
+    for name in ["PVC", "CONS", "RAY", "MM"] {
+        let a = apps::find(name).unwrap();
+        let o0 = caba::workload::occupancy(a, &cfg, 0);
+        let o2 = caba::workload::occupancy(a, &cfg, caba::sim::CABA_EXTRA_REGS);
+        t.row([
+            name.to_string(),
+            o0.ctas_per_sm.to_string(),
+            o2.ctas_per_sm.to_string(),
+            format!("{:.1}%", o0.unallocated_reg_frac * 100.0),
+        ]);
+    }
+    println!("# Ablation: assist-warp register provisioning\n{}", t.render());
+    let _ = ipc; // helper retained for future ablations
+}

@@ -1,0 +1,56 @@
+//! §8 extension experiments: the paper's other CABA use cases, implemented
+//! as first-class framework features — memoization (§8.1) on compute-bound
+//! SFU-heavy apps, and stride-prefetching (§8.2) on latency-sensitive apps.
+//! (The paper leaves their evaluation to future work; these benches are the
+//! "future work" experiments.)
+
+use caba::report::Table;
+use caba::sim::designs::Design;
+use caba::sim::Simulator;
+use caba::workload::apps;
+use caba::SimConfig;
+
+fn main() {
+    let scale = caba::report::benchutil::bench_scale();
+
+    // --- §8.1 Memoization: compute-bound, SFU-heavy apps ---
+    let mut t = Table::new(["app", "Base IPC", "CABA-Memo IPC", "speedup", "LUT hit rate"]);
+    for name in ["dmr", "RAY", "sr", "bh", "STO"] {
+        let app = apps::find(name).unwrap();
+        let base = Simulator::new(SimConfig::default(), Design::base(), app, scale).run();
+        let memo = Simulator::new(SimConfig::default(), Design::caba_memo(), app, scale).run();
+        let hit = if memo.caba.memo_lookups > 0 {
+            memo.caba.memo_hits as f64 / memo.caba.memo_lookups as f64
+        } else {
+            0.0
+        };
+        t.row([
+            name.to_string(),
+            format!("{:.3}", base.ipc()),
+            format!("{:.3}", memo.ipc()),
+            format!("{:+.1}%", (memo.ipc() / base.ipc() - 1.0) * 100.0),
+            format!("{:.0}%", hit * 100.0),
+        ]);
+    }
+    println!("# §8.1 — CABA memoization on compute-bound apps\n{}", t.render());
+
+    // --- §8.2 Prefetching: latency-bound streaming apps ---
+    let mut t = Table::new(["app", "Base IPC", "CABA-Prefetch IPC", "speedup", "prefetches", "L1 hit Δ"]);
+    for name in ["hs", "CONS", "MM", "RAY", "bh"] {
+        let app = apps::find(name).unwrap();
+        let base = Simulator::new(SimConfig::default(), Design::base(), app, scale).run();
+        let pf = Simulator::new(SimConfig::default(), Design::caba_prefetch(), app, scale).run();
+        t.row([
+            name.to_string(),
+            format!("{:.3}", base.ipc()),
+            format!("{:.3}", pf.ipc()),
+            format!("{:+.1}%", (pf.ipc() / base.ipc() - 1.0) * 100.0),
+            pf.caba.prefetches_issued.to_string(),
+            format!(
+                "{:+.1}pp",
+                (pf.l1.hit_rate() - base.l1.hit_rate()) * 100.0
+            ),
+        ]);
+    }
+    println!("# §8.2 — CABA stride-prefetching on latency-sensitive apps\n{}", t.render());
+}

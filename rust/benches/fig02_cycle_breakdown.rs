@@ -1,0 +1,4 @@
+//! Fig. 2: issue-cycle breakdown, 27 apps × {0.5x, 1x, 2x} bandwidth.
+fn main() {
+    caba::report::benchutil::run_bench("fig02", caba::report::figures::fig02_cycle_breakdown);
+}

@@ -1,0 +1,4 @@
+//! Fig. 8: normalized performance of the five designs.
+fn main() {
+    caba::report::benchutil::run_bench("fig08", caba::report::figures::fig08_performance);
+}

@@ -1,0 +1,4 @@
+//! Fig. 9: memory bandwidth utilization of the five designs.
+fn main() {
+    caba::report::benchutil::run_bench("fig09", caba::report::figures::fig09_bandwidth_utilization);
+}

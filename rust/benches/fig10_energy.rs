@@ -1,0 +1,4 @@
+//! Fig. 10: normalized energy of the five designs.
+fn main() {
+    caba::report::benchutil::run_bench("fig10", caba::report::figures::fig10_energy);
+}

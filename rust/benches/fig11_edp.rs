@@ -1,0 +1,4 @@
+//! Fig. 11: normalized energy-delay product.
+fn main() {
+    caba::report::benchutil::run_bench("fig11", caba::report::figures::fig11_edp);
+}

@@ -1,0 +1,4 @@
+//! Fig. 12: speedup with FPC / BDI / C-Pack / BestOfAll under CABA.
+fn main() {
+    caba::report::benchutil::run_bench("fig12", caba::report::figures::fig12_algorithms);
+}

@@ -1,0 +1,4 @@
+//! Fig. 13: compression ratio of the algorithms under CABA.
+fn main() {
+    caba::report::benchutil::run_bench("fig13", caba::report::figures::fig13_compression_ratio);
+}

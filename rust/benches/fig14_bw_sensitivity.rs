@@ -1,0 +1,4 @@
+//! Fig. 14: sensitivity to 0.5x/1x/2x peak memory bandwidth.
+fn main() {
+    caba::report::benchutil::run_bench("fig14", caba::report::figures::fig14_bw_sensitivity);
+}

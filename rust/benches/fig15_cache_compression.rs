@@ -1,0 +1,4 @@
+//! Fig. 15: L1/L2 cache-capacity compression (2x/4x tags).
+fn main() {
+    caba::report::benchutil::run_bench("fig15", caba::report::figures::fig15_cache_compression);
+}

@@ -1,0 +1,4 @@
+//! Fig. 16: Uncompressed-L2 and Direct-Load optimizations.
+fn main() {
+    caba::report::benchutil::run_bench("fig16", caba::report::figures::fig16_optimizations);
+}

@@ -1,0 +1,4 @@
+//! §5.3.2: MD-cache hit rate across the eval set (paper: 85% average).
+fn main() {
+    caba::report::benchutil::run_bench("md_cache", caba::report::figures::md_cache_hitrate);
+}

@@ -1,0 +1,91 @@
+//! Hot-path microbenchmarks — the measurement harness for EXPERIMENTS.md
+//! §Perf (L3 simulator throughput, compression substrate throughput, oracle
+//! memoization, PJRT batch latency).
+
+use caba::compress::oracle::{CompressionOracle, MemoOracle, NativeOracle};
+use caba::compress::{compress, Algo, Line, LINE_BYTES};
+use caba::sim::designs::Design;
+use caba::sim::Simulator;
+use caba::workload::apps;
+use caba::workload::datagen::{line_data, DataPattern};
+use caba::SimConfig;
+use std::time::Instant;
+
+fn lines(n: usize, p: DataPattern) -> Vec<Line> {
+    (0..n).map(|i| line_data(&p, 3, i as u64, 0)).collect()
+}
+
+fn main() {
+    println!("# Hot-path microbenchmarks\n");
+
+    // --- Compression substrate throughput ---
+    let mixed: Vec<Line> = lines(4096, DataPattern::LowDynRange { value_bytes: 8, delta_bytes: 1 })
+        .into_iter()
+        .chain(lines(4096, DataPattern::Random))
+        .chain(lines(4096, DataPattern::SparseNarrow { p_nonzero: 0.3 }))
+        .collect();
+    for algo in Algo::CONCRETE {
+        let t0 = Instant::now();
+        let mut total = 0usize;
+        for line in &mixed {
+            total += compress(algo, line).size_bytes();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "compress {:<7} {:>8.1} Mlines/s  ({:>6.1} MB/s input, checksum {total})",
+            algo.name(),
+            mixed.len() as f64 / dt / 1e6,
+            mixed.len() as f64 * LINE_BYTES as f64 / dt / 1e6
+        );
+    }
+
+    // --- Oracle memoization ---
+    let mut memo = MemoOracle::new(NativeOracle);
+    let t0 = Instant::now();
+    memo.analyze(Algo::Bdi, &mixed);
+    let cold = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    memo.analyze(Algo::Bdi, &mixed);
+    let warm = t0.elapsed().as_secs_f64();
+    println!(
+        "\noracle memo: cold {:>8.1} Mlines/s, warm {:>8.1} Mlines/s ({:.0}x)",
+        mixed.len() as f64 / cold / 1e6,
+        mixed.len() as f64 / warm / 1e6,
+        cold / warm
+    );
+
+    // --- PJRT batch path ---
+    if caba::runtime::artifacts_available() {
+        let mut pjrt = caba::runtime::PjrtOracle::from_default_dir().expect("artifacts");
+        pjrt.analyze(Algo::Bdi, &mixed[..256]); // compile+warm
+        let t0 = Instant::now();
+        let reps = 8;
+        for _ in 0..reps {
+            pjrt.analyze(Algo::Bdi, &mixed[..2048]);
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "pjrt oracle (BDI, 2048-line call): {:.2} ms/call, {:>6.2} Mlines/s",
+            dt * 1e3,
+            2048.0 / dt / 1e6
+        );
+    } else {
+        println!("pjrt oracle: SKIPPED (run `make artifacts`)");
+    }
+
+    // --- Simulator throughput (the L3 hot loop) ---
+    println!();
+    for (name, design) in [("Base", Design::base()), ("CABA-BDI", Design::caba(Algo::Bdi))] {
+        let app = apps::find("PVC").unwrap();
+        let t0 = Instant::now();
+        let stats = Simulator::new(SimConfig::default(), design, app, 0.1).run();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "sim PVC/{name:<9} {:>7.2} Mcycles/s  {:>7.2} Minsts/s  (cycles {}, host {:.2}s)",
+            stats.cycles as f64 / dt / 1e6,
+            stats.warp_insts as f64 / dt / 1e6,
+            stats.cycles,
+            dt
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Table 1: the simulated system configuration.
+fn main() {
+    caba::report::benchutil::run_bench("table1", |_| {
+        format!("# Table 1 — major parameters of the simulated system\n{}", caba::SimConfig::default().table1())
+    });
+}

@@ -1,0 +1,476 @@
+//! The CABA microarchitecture (§4): Assist Warp Store (AWS), Assist Warp
+//! Controller (AWC) with its Assist Warp Table (AWT), and the Assist Warp
+//! Buffer (AWB) partitions in the instruction buffer.
+//!
+//! One [`Awc`] instance lives in each SM. Decompression assist warps are
+//! *high priority* — they issue ahead of parent warps and the parent's
+//! destination registers stay unavailable until the assist warp retires
+//! (§5.2.1: "stalls the progress of its parent warp until it completes").
+//! Compression assist warps are *low priority* — they live in the dedicated
+//! two-entry AWB partition and issue only into issue slots parent warps
+//! left idle (§4.3), subject to the utilization-feedback throttle (§4.4).
+
+pub mod memoization;
+pub mod prefetch;
+pub mod subroutines;
+
+use crate::compress::oracle::LineVerdict;
+use crate::config::SimConfig;
+use crate::stats::CabaStats;
+use subroutines::Subroutine;
+
+/// Scheduling priority of an assist warp (§4.2.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    High,
+    Low,
+}
+
+/// What happens when an assist warp retires.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Release the parent-warp registers waiting on this decompression:
+    /// `(warp slot, register)` pairs (grows as MSHR merges attach).
+    Decompress { regs: Vec<(usize, u8)> },
+    /// Dispatch the buffered store with its compression verdict.
+    Compress { line_addr: u64, verdict: LineVerdict },
+    /// Issue the predicted prefetches into the memory system (§8.2).
+    Prefetch { lines: Vec<u64> },
+    /// Install a memoized result into the LUT (§8.1) — bookkeeping only.
+    MemoInstall,
+}
+
+/// One AWT row (Fig. 5): live-in/out register ids are abstracted into the
+/// payload; `SR.ID`/`Inst.ID` into the remaining-instruction counters.
+#[derive(Clone, Debug)]
+pub struct AwtEntry {
+    /// Unique token identifying this entry instance (AWT rows are reused;
+    /// stale references must not attach to a recycled row).
+    pub token: u64,
+    /// Trigger time: instructions may deploy from this cycle on.
+    pub active_from: u64,
+    pub sp_left: u16,
+    pub mem_left: u16,
+    pub priority: Priority,
+    pub payload: Payload,
+    /// Warp slot of the parent (shares its context and warp ID, §4.2.1).
+    pub parent_warp: usize,
+}
+
+/// A retirement the core must act upon.
+#[derive(Clone, Debug)]
+pub struct Retirement {
+    pub at: u64,
+    pub payload: Payload,
+}
+
+/// Free issue slots left this cycle (shared with parent warps).
+#[derive(Clone, Copy, Debug)]
+pub struct Slots {
+    pub sp: usize,
+    pub sfu: usize,
+    pub mem: usize,
+}
+
+/// Per-SM Assist Warp Controller.
+pub struct Awc {
+    /// The AWT; `None` = free row.
+    entries: Vec<Option<AwtEntry>>,
+    /// Round-robin deployment pointer (§4.4: "selects an assist warp to
+    /// deploy in a round-robin fashion").
+    rr: usize,
+    /// Dedicated low-priority AWB partition size (§4.3: two entries).
+    low_prio_slots: usize,
+    /// Exec latency applied after the last instruction issues.
+    retire_latency: u64,
+    /// Monotonic token source for AWT entry instances.
+    next_token: u64,
+    /// Live AWT row indices per priority, in deployment order — the issue
+    /// path touches only live rows instead of scanning the whole table.
+    rows_high: Vec<usize>,
+    rows_low: Vec<usize>,
+    /// Utilization-feedback throttle state: EMA of issue-slot utilization.
+    util_ema: f64,
+    throttle_enabled: bool,
+    throttle_threshold: f64,
+    pub stats: CabaStats,
+}
+
+impl Awc {
+    pub fn new(cfg: &SimConfig) -> Awc {
+        Awc {
+            entries: (0..cfg.awt_entries).map(|_| None).collect(),
+            rr: 0,
+            low_prio_slots: cfg.awb_low_prio_slots,
+            retire_latency: cfg.alu_latency as u64,
+            next_token: 1,
+            rows_high: Vec::new(),
+            rows_low: Vec::new(),
+            util_ema: 0.0,
+            throttle_enabled: cfg.caba_throttle,
+            throttle_threshold: cfg.throttle_util_threshold,
+            stats: CabaStats::default(),
+        }
+    }
+
+    /// Trigger a decompression assist warp (high priority). Returns the AWT
+    /// row index, or `None` if the AWT is full (caller must fall back to
+    /// blocking semantics).
+    pub fn trigger_decompress(
+        &mut self,
+        active_from: u64,
+        sub: Subroutine,
+        parent_warp: usize,
+        reg: u8,
+    ) -> Option<u64> {
+        let idx = self.free_row()?;
+        let token = self.next_token;
+        self.next_token += 1;
+        self.entries[idx] = Some(AwtEntry {
+            token,
+            active_from,
+            sp_left: sub.sp(),
+            mem_left: sub.mem,
+            priority: Priority::High,
+            payload: Payload::Decompress { regs: vec![(parent_warp, reg)] },
+            parent_warp,
+        });
+        self.stats.decompress_warps += 1;
+        self.rows_high.push(idx);
+        Some(token)
+    }
+
+    /// Trigger a compression assist warp (low priority). Returns `None`
+    /// (and the caller flushes the store uncompressed) when the AWT is full
+    /// or the throttle vetoes deployment (§4.4).
+    pub fn trigger_compress(
+        &mut self,
+        active_from: u64,
+        sub: Subroutine,
+        parent_warp: usize,
+        line_addr: u64,
+        verdict: LineVerdict,
+    ) -> Option<u64> {
+        if self.throttled() {
+            self.stats.throttled_deploys += 1;
+            return None;
+        }
+        let idx = self.free_row()?;
+        let token = self.next_token;
+        self.next_token += 1;
+        self.entries[idx] = Some(AwtEntry {
+            token,
+            active_from,
+            sp_left: sub.sp(),
+            mem_left: sub.mem,
+            priority: Priority::Low,
+            payload: Payload::Compress { line_addr, verdict },
+            parent_warp,
+        });
+        self.stats.compress_warps += 1;
+        self.rows_low.push(idx);
+        Some(token)
+    }
+
+    /// Trigger a generic low-priority assist warp (prefetch / memo-install).
+    pub fn trigger_low(
+        &mut self,
+        active_from: u64,
+        sub: Subroutine,
+        parent_warp: usize,
+        payload: Payload,
+    ) -> Option<u64> {
+        if self.throttled() {
+            self.stats.throttled_deploys += 1;
+            return None;
+        }
+        let idx = self.free_row()?;
+        let token = self.next_token;
+        self.next_token += 1;
+        self.entries[idx] = Some(AwtEntry {
+            token,
+            active_from,
+            sp_left: sub.sp(),
+            mem_left: sub.mem,
+            priority: Priority::Low,
+            payload,
+            parent_warp,
+        });
+        self.rows_low.push(idx);
+        Some(token)
+    }
+
+    fn row_of(&self, token: u64) -> Option<usize> {
+        self.entries
+            .iter()
+            .position(|e| e.as_ref().map_or(false, |e| e.token == token))
+    }
+
+    /// Attach another waiting register to an in-flight decompression
+    /// (MSHR-merge on the same line). Returns false if the entry already
+    /// retired (its row may have been recycled).
+    pub fn attach_reg(&mut self, token: u64, warp: usize, reg: u8) -> bool {
+        if let Some(idx) = self.row_of(token) {
+            if let Some(e) = &mut self.entries[idx] {
+                if let Payload::Decompress { regs } = &mut e.payload {
+                    regs.push((warp, reg));
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Kill an entry (line turned out uncompressed / no longer needed,
+    /// §4.4 "Communication and Control").
+    pub fn kill(&mut self, token: u64) {
+        if let Some(idx) = self.row_of(token) {
+            match self.entries[idx].take().map(|e| e.priority) {
+                Some(Priority::High) => self.rows_high.retain(|&r| r != idx),
+                Some(Priority::Low) => self.rows_low.retain(|&r| r != idx),
+                None => {}
+            }
+            self.stats.killed += 1;
+        }
+    }
+
+    /// Is this entry instance still live?
+    pub fn is_live(&self, token: u64) -> bool {
+        self.row_of(token).is_some()
+    }
+
+    fn free_row(&self) -> Option<usize> {
+        self.entries.iter().position(|e| e.is_none())
+    }
+
+    /// Count of live entries (for buffer-capacity decisions).
+    pub fn live(&self) -> usize {
+        self.rows_high.len() + self.rows_low.len()
+    }
+
+    /// Earliest cycle any live entry can issue; `u64::MAX` when the AWT is
+    /// empty (fast-forward hint for the core).
+    pub fn next_active(&self, now: u64) -> u64 {
+        let mut next = u64::MAX;
+        for e in self.entries.iter().flatten() {
+            if e.active_from <= now {
+                return now + 1;
+            }
+            next = next.min(e.active_from);
+        }
+        next
+    }
+
+    fn throttled(&self) -> bool {
+        self.throttle_enabled && self.util_ema > self.throttle_threshold
+    }
+
+    /// Update the feedback EMA with this cycle's issue-slot utilization.
+    pub fn observe_utilization(&mut self, used: usize, total: usize) {
+        let u = used as f64 / total.max(1) as f64;
+        self.util_ema = 0.99 * self.util_ema + 0.01 * u;
+    }
+
+    /// Issue high-priority assist instructions into `slots` (before parent
+    /// warps see them). Returns retirements the core must apply.
+    pub fn issue_high(&mut self, now: u64, slots: &mut Slots) -> Vec<Retirement> {
+        if self.rows_high.is_empty() {
+            return Vec::new();
+        }
+        self.issue_priority(now, slots, Priority::High, usize::MAX, false)
+    }
+
+    /// Issue low-priority assist instructions into slots the parent warps
+    /// left free this cycle. Only the dedicated AWB partition (2 entries)
+    /// is visible to the scheduler. `cycle_idle` marks slots counted as
+    /// idle-issue for the stats.
+    pub fn issue_low(&mut self, now: u64, slots: &mut Slots) -> Vec<Retirement> {
+        if self.rows_low.is_empty() {
+            return Vec::new();
+        }
+        let cap = self.low_prio_slots;
+        self.issue_priority(now, slots, Priority::Low, cap, true)
+    }
+
+    fn issue_priority(
+        &mut self,
+        now: u64,
+        slots: &mut Slots,
+        prio: Priority,
+        max_entries: usize,
+        idle_slots: bool,
+    ) -> Vec<Retirement> {
+        let mut retired = Vec::new();
+        let rows = std::mem::take(match prio {
+            Priority::High => &mut self.rows_high,
+            Priority::Low => &mut self.rows_low,
+        });
+        let n = rows.len();
+        let mut visited = 0;
+        let mut used_entries = 0;
+        let mut any_retired = false;
+        // Round-robin over live rows of this priority (§4.4).
+        while visited < n && (slots.sp > 0 || slots.mem > 0) && used_entries < max_entries {
+            let idx = rows[(self.rr + visited) % n];
+            visited += 1;
+            let Some(e) = &mut self.entries[idx] else { continue };
+            if e.active_from > now {
+                continue;
+            }
+            used_entries += 1;
+            // Issue as many of this warp's instructions as slots allow this
+            // cycle (the AWC deploys at most issue-width per cycle; slots
+            // are shared with everything else, so this is bounded).
+            let mut issued_any = false;
+            while e.mem_left > 0 && slots.mem > 0 {
+                e.mem_left -= 1;
+                slots.mem -= 1;
+                issued_any = true;
+                self.stats.assist_insts_issued += 1;
+                if idle_slots {
+                    self.stats.assist_insts_idle_slots += 1;
+                }
+            }
+            while e.sp_left > 0 && slots.sp > 0 {
+                e.sp_left -= 1;
+                slots.sp -= 1;
+                issued_any = true;
+                self.stats.assist_insts_issued += 1;
+                if idle_slots {
+                    self.stats.assist_insts_idle_slots += 1;
+                }
+            }
+            let _ = issued_any;
+            if e.sp_left == 0 && e.mem_left == 0 {
+                let e = self.entries[idx].take().unwrap();
+                any_retired = true;
+                retired.push(Retirement {
+                    at: now + self.retire_latency,
+                    payload: e.payload,
+                });
+            }
+        }
+        let mut rows = rows;
+        if any_retired {
+            let entries = &self.entries;
+            rows.retain(|&r| entries[r].is_some());
+        }
+        match prio {
+            Priority::High => self.rows_high = rows,
+            Priority::Low => self.rows_low = rows,
+        }
+        self.rr = self.rr.wrapping_add(1);
+        retired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use subroutines::{subroutine, AwKind};
+    use crate::compress::Algo;
+
+    fn awc() -> Awc {
+        Awc::new(&SimConfig::default())
+    }
+
+    fn slots() -> Slots {
+        Slots { sp: 2, sfu: 1, mem: 1 }
+    }
+
+    #[test]
+    fn decompress_lifecycle() {
+        let mut a = awc();
+        let sub = subroutine(Algo::Bdi, AwKind::Decompress, crate::compress::bdi::ENC_B8D1, false);
+        let idx = a.trigger_decompress(10, sub, 3, 7).unwrap();
+        assert!(a.is_live(idx));
+        // Not active before its trigger time.
+        let r = a.issue_high(5, &mut slots());
+        assert!(r.is_empty());
+        assert!(a.is_live(idx));
+        // Issue to completion.
+        let mut now = 10;
+        let mut retired = Vec::new();
+        while retired.is_empty() && now < 100 {
+            retired = a.issue_high(now, &mut slots());
+            now += 1;
+        }
+        assert_eq!(retired.len(), 1);
+        assert!(retired[0].at >= now);
+        match &retired[0].payload {
+            Payload::Decompress { regs } => assert_eq!(regs, &vec![(3usize, 7u8)]),
+            _ => panic!("wrong payload"),
+        }
+        assert!(!a.is_live(idx));
+        assert_eq!(a.stats.decompress_warps, 1);
+        assert!(a.stats.assist_insts_issued as u16 >= sub.total);
+    }
+
+    #[test]
+    fn slots_bound_issue_rate() {
+        let mut a = awc();
+        let sub = Subroutine { total: 10, mem: 4 };
+        a.trigger_decompress(0, sub, 0, 1).unwrap();
+        // One cycle with 2 sp + 1 mem slots issues at most 3 instructions.
+        let before = a.stats.assist_insts_issued;
+        let mut s = slots();
+        a.issue_high(0, &mut s);
+        assert_eq!(a.stats.assist_insts_issued - before, 3);
+        assert_eq!(s.sp, 0);
+        assert_eq!(s.mem, 0);
+    }
+
+    #[test]
+    fn low_priority_respects_partition_cap() {
+        let mut a = awc();
+        let sub = Subroutine { total: 4, mem: 1 };
+        let v = LineVerdict { encoding: 0, size_bytes: 17, bursts: 1 };
+        for i in 0..4 {
+            a.trigger_compress(0, sub, i, 100 + i as u64, v).unwrap();
+        }
+        // Plenty of slots, but only 2 low-prio entries may progress/cycle.
+        let mut s = Slots { sp: 100, sfu: 1, mem: 100 };
+        a.issue_low(0, &mut s);
+        // 2 entries × 4 insts = 8 issued max this cycle.
+        assert!(a.stats.assist_insts_issued <= 8, "{}", a.stats.assist_insts_issued);
+    }
+
+    #[test]
+    fn awt_capacity_limits_triggers() {
+        let mut cfg = SimConfig::default();
+        cfg.awt_entries = 2;
+        let mut a = Awc::new(&cfg);
+        let sub = Subroutine { total: 4, mem: 1 };
+        assert!(a.trigger_decompress(0, sub, 0, 1).is_some());
+        assert!(a.trigger_decompress(0, sub, 1, 2).is_some());
+        assert!(a.trigger_decompress(0, sub, 2, 3).is_none());
+        assert_eq!(a.live(), 2);
+    }
+
+    #[test]
+    fn throttle_vetoes_low_priority_only() {
+        let mut a = awc();
+        // Saturate the utilization EMA.
+        for _ in 0..2000 {
+            a.observe_utilization(4, 4);
+        }
+        let sub = Subroutine { total: 4, mem: 1 };
+        let v = LineVerdict { encoding: 0, size_bytes: 17, bursts: 1 };
+        assert!(a.trigger_compress(0, sub, 0, 5, v).is_none());
+        assert_eq!(a.stats.throttled_deploys, 1);
+        // High priority is never throttled (needed for correctness).
+        assert!(a.trigger_decompress(0, sub, 0, 1).is_some());
+    }
+
+    #[test]
+    fn attach_and_kill() {
+        let mut a = awc();
+        let sub = Subroutine { total: 4, mem: 1 };
+        let idx = a.trigger_decompress(0, sub, 0, 1).unwrap();
+        assert!(a.attach_reg(idx, 5, 9));
+        a.kill(idx);
+        assert!(!a.is_live(idx));
+        assert_eq!(a.stats.killed, 1);
+        assert!(!a.attach_reg(idx, 6, 9));
+    }
+}

@@ -1,0 +1,95 @@
+//! CABA use case: **opportunistic prefetching** (paper §8.2).
+//!
+//! Assist warps use spare registers for per-warp stride bookkeeping and the
+//! idle memory pipeline to prefetch the warp's predicted next lines into
+//! the L1 — "scheduling assist warps that perform prefetching only when
+//! the memory pipelines are idle or underutilized".
+//!
+//! The predictor here is the paper's simple per-warp stride case: a
+//! coalesced streaming access by warp *w* at iteration *i* will touch the
+//! line its own access function yields at iteration *i + reuse* — which the
+//! prefetch assist warp computes with the same address math the parent
+//! executes (CABA runs real instructions, so it can run the *application's*
+//! address computation — the paper's argument for hybrid software
+//! prefetching, §8.2(2)).
+
+use crate::isa::{AccessKind, MemAccess};
+use crate::workload::Workload;
+
+/// Instruction budget of the prefetch subroutine: load stride state,
+/// compute next address, issue prefetch, update state (§8.2(1)).
+pub const PREFETCH_SUB_TOTAL: u16 = 4;
+pub const PREFETCH_SUB_MEM: u16 = 1;
+
+/// How many iterations ahead to prefetch.
+pub const PREFETCH_DEPTH: u32 = 2;
+
+/// Lines the prefetcher would fetch for this access, or `None` when the
+/// pattern is not stride-predictable (scatter) — the cases the paper
+/// leaves to application-specific assist warps.
+pub fn predict(
+    wl: &Workload,
+    mem: &MemAccess,
+    warp_uid: u64,
+    iter: u32,
+    slot: usize,
+    out: &mut Vec<u64>,
+) -> bool {
+    match mem.kind {
+        AccessKind::Coalesced { reuse } => {
+            let target = iter + reuse.max(1) as u32 * PREFETCH_DEPTH;
+            if target as u64 >= wl.program.iters as u64 {
+                return false;
+            }
+            wl.access_lines(mem, warp_uid, target, slot, out);
+            true
+        }
+        AccessKind::Strided { .. } => {
+            let target = iter + PREFETCH_DEPTH;
+            if target as u64 >= wl.program.iters as u64 {
+                return false;
+            }
+            wl.access_lines(mem, warp_uid, target, slot, out);
+            true
+        }
+        AccessKind::Scatter { .. } => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::apps;
+    use crate::SimConfig;
+
+    #[test]
+    fn predicts_own_future_lines() {
+        let app = apps::find("SLA").unwrap();
+        let wl = Workload::build(app, &SimConfig::default(), 0.2);
+        let mem = MemAccess { array: 0, kind: AccessKind::Coalesced { reuse: 1 } };
+        let mut now = Vec::new();
+        let mut pred = Vec::new();
+        wl.access_lines(&mem, 7, 5 + PREFETCH_DEPTH, 0, &mut now);
+        assert!(predict(&wl, &mem, 7, 5, 0, &mut pred));
+        assert_eq!(now, pred, "prediction must equal the future demand access");
+    }
+
+    #[test]
+    fn scatter_not_predicted() {
+        let app = apps::find("bfs").unwrap();
+        let wl = Workload::build(app, &SimConfig::default(), 0.2);
+        let mem = MemAccess { array: 1, kind: AccessKind::Scatter { degree: 4 } };
+        let mut pred = Vec::new();
+        assert!(!predict(&wl, &mem, 3, 2, 1, &mut pred));
+    }
+
+    #[test]
+    fn no_prefetch_past_end() {
+        let app = apps::find("SLA").unwrap();
+        let wl = Workload::build(app, &SimConfig::default(), 0.05);
+        let mem = MemAccess { array: 0, kind: AccessKind::Coalesced { reuse: 1 } };
+        let last = wl.program.iters - 1;
+        let mut pred = Vec::new();
+        assert!(!predict(&wl, &mem, 0, last, 0, &mut pred));
+    }
+}

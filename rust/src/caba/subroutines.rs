@@ -1,0 +1,164 @@
+//! Assist-warp subroutine shapes: how many instructions (and how many of
+//! them are memory ops) each (algorithm × encoding × direction) subroutine
+//! executes on the SIMT pipelines.
+//!
+//! These are the instruction sequences the paper stores in the Assist Warp
+//! Store (Figs. 4–5), derived from Algorithms 1–6. The simulator charges
+//! each instruction a real issue slot and pipeline, which is exactly the
+//! CABA-vs-Ideal overhead the paper quantifies (§7.1: CABA-BDI within 2.8%
+//! of Ideal-BDI).
+
+use crate::compress::{bdi, cpack, fpc, Algo};
+
+/// Direction of an assist-warp subroutine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AwKind {
+    Decompress,
+    Compress,
+}
+
+/// Instruction budget of one subroutine instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Subroutine {
+    /// Total instructions issued by this assist warp.
+    pub total: u16,
+    /// Of which memory-pipeline instructions (loads/stores of the line).
+    pub mem: u16,
+}
+
+impl Subroutine {
+    pub fn sp(&self) -> u16 {
+        self.total - self.mem
+    }
+}
+
+/// Number of encodings Algorithm 2/4/6 tests before settling on `encoding`
+/// (drives compression-subroutine length).
+fn bdi_tests(encoding: u8) -> u16 {
+    // Candidates are tried smallest-first (see `bdi::BASE_DELTA_ENCODINGS`);
+    // zeros/repeat are detected by the first two cheap checks.
+    match encoding {
+        bdi::ENC_ZEROS => 1,
+        bdi::ENC_REPEAT => 2,
+        _ => {
+            let mut order = bdi::BASE_DELTA_ENCODINGS;
+            order.sort_by_key(|&(_, b, d)| bdi::encoded_size(b, d));
+            order
+                .iter()
+                .position(|&(e, _, _)| e == encoding)
+                .map(|p| p as u16 + 3)
+                .unwrap_or(9) // uncompressed: tried everything
+        }
+    }
+}
+
+/// Look up the subroutine shape.
+///
+/// `direct_load` (Fig. 16) shortens decompression: only the requested words
+/// are extracted instead of materializing the whole line.
+pub fn subroutine(algo: Algo, kind: AwKind, encoding: u8, direct_load: bool) -> Subroutine {
+    let s = match (algo, kind) {
+        (Algo::Bdi, AwKind::Decompress) => {
+            let total = bdi::decompress_subroutine_len(encoding) as u16;
+            // Algorithm 1: load base+deltas (≈1/3), add, store (≈1/4).
+            Subroutine { total, mem: (total / 3).max(1) + (total / 4).max(1) }
+        }
+        (Algo::Bdi, AwKind::Compress) => {
+            // Algorithm 2: load values (2 wide loads), then per tested
+            // encoding: subtract, predicate-AND, size check (≈3 insts),
+            // finally store base+deltas (2).
+            let tests = bdi_tests(encoding);
+            Subroutine { total: 4 + 3 * tests, mem: 4 }
+        }
+        (Algo::Fpc, AwKind::Decompress) => {
+            let total = fpc::decompress_subroutine_len(4) as u16;
+            Subroutine { total, mem: 8 } // per-segment load + store
+        }
+        (Algo::Fpc, AwKind::Compress) => {
+            let total = fpc::compress_subroutine_len(4, 2) as u16;
+            Subroutine { total, mem: 9 }
+        }
+        (Algo::CPack, AwKind::Decompress) => {
+            let total = cpack::decompress_subroutine_len() as u16;
+            Subroutine { total, mem: 7 } // dict loads + masked loads + stores
+        }
+        (Algo::CPack, AwKind::Compress) => {
+            // Algorithm 6 serially builds the dictionary: at least 3 and up
+            // to 4 candidate values are tested against the whole line.
+            let dict = (encoding.min(4) as u16).clamp(3, 4);
+            let total = cpack::compress_subroutine_len(dict as usize) as u16;
+            Subroutine { total, mem: 5 }
+        }
+        (Algo::BestOfAll, kind) => {
+            // Selection is idealized (paper §7.3); charge the BDI path.
+            return subroutine(Algo::Bdi, kind, encoding, direct_load);
+        }
+    };
+    if direct_load && kind == AwKind::Decompress {
+        // Extract only the needed words: ~1/4 the work, minimum 2 insts.
+        Subroutine {
+            total: (s.total / 4).max(2),
+            mem: (s.mem / 4).max(1),
+        }
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_is_cheapest_bdi_decompress() {
+        let z = subroutine(Algo::Bdi, AwKind::Decompress, bdi::ENC_ZEROS, false);
+        let d1 = subroutine(Algo::Bdi, AwKind::Decompress, bdi::ENC_B8D1, false);
+        let d2b = subroutine(Algo::Bdi, AwKind::Decompress, bdi::ENC_B2D1, false);
+        assert!(z.total < d1.total);
+        assert!(d1.total < d2b.total);
+    }
+
+    #[test]
+    fn compression_longer_than_decompression() {
+        // The paper gives compression low priority partly because it is the
+        // longer, off-critical-path direction.
+        for algo in Algo::CONCRETE {
+            let d = subroutine(algo, AwKind::Decompress, 2, false);
+            let c = subroutine(algo, AwKind::Compress, 2, false);
+            assert!(c.total >= d.total, "{algo:?}: c={} d={}", c.total, d.total);
+        }
+    }
+
+    #[test]
+    fn bdi_tests_monotonic_with_encoding_order() {
+        assert_eq!(bdi_tests(bdi::ENC_ZEROS), 1);
+        assert_eq!(bdi_tests(bdi::ENC_REPEAT), 2);
+        assert!(bdi_tests(bdi::ENC_B8D1) < bdi_tests(bdi::ENC_B8D4));
+        assert_eq!(bdi_tests(bdi::ENC_UNCOMPRESSED), 9);
+    }
+
+    #[test]
+    fn direct_load_shortens_decompress() {
+        let full = subroutine(Algo::Bdi, AwKind::Decompress, bdi::ENC_B8D1, false);
+        let dl = subroutine(Algo::Bdi, AwKind::Decompress, bdi::ENC_B8D1, true);
+        assert!(dl.total < full.total);
+        assert!(dl.mem >= 1);
+        // Compression is unaffected.
+        let c1 = subroutine(Algo::Bdi, AwKind::Compress, 2, false);
+        let c2 = subroutine(Algo::Bdi, AwKind::Compress, 2, true);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn mem_never_exceeds_total() {
+        for algo in Algo::CONCRETE {
+            for kind in [AwKind::Decompress, AwKind::Compress] {
+                for enc in 0..16u8 {
+                    let s = subroutine(algo, kind, enc, false);
+                    assert!(s.mem <= s.total, "{algo:?} {kind:?} enc={enc}");
+                    assert!(s.total > 0);
+                }
+            }
+        }
+    }
+}

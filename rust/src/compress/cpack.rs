@@ -1,0 +1,261 @@
+//! C-Pack dictionary compression, restricted variant (paper §5.1.5).
+//!
+//! Original C-Pack (Chen et al.) uses variable-length codes and a serially
+//! built dictionary, which (like FPC) serializes decompression. The paper's
+//! assist-warp variant restricts it so that every compressed word has a
+//! *fixed* size and the dictionary lives at the head of the line:
+//!
+//! * at most **4 dictionary entries**;
+//! * word encodings: `zero`, `full match`, `partial match` (upper 3 bytes
+//!   match a dictionary entry, low byte stored), `zero-extend` (upper 3
+//!   bytes zero, low byte stored);
+//! * if the line needs a 5th dictionary entry, it is left uncompressed.
+//!
+//! Layout: `[hdr][codes ×32 (2b dict-idx + 2b kind, packed 2/byte)]`
+//! `[dict ×used ×4B][payload byte ×32]` — `49 + 4×dict_used` bytes when
+//! compressible. Fixed positions ⇒ all 32 lanes decompress in parallel,
+//! which is exactly the property the paper needs ("A fixed compressed word
+//! size enables compression and decompression of different words within the
+//! cache line in parallel").
+
+use super::{Compressed, Compressor, Algo, Line, LINE_BYTES, WORDS_PER_LINE};
+
+/// Maximum dictionary entries (paper: "we limit the number of dictionary
+/// values to 4").
+pub const DICT_SIZE: usize = 4;
+
+/// Per-word code kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Code {
+    Zero = 0,
+    FullMatch = 1,
+    PartialMatch = 2,
+    ZeroExt = 3,
+}
+
+impl Code {
+    pub fn from_u8(v: u8) -> Code {
+        match v & 0b11 {
+            0 => Code::Zero,
+            1 => Code::FullMatch,
+            2 => Code::PartialMatch,
+            _ => Code::ZeroExt,
+        }
+    }
+}
+
+pub const ENC_COMPRESSED: u8 = 0;
+pub const ENC_UNCOMPRESSED: u8 = 0xFF;
+
+/// Compressed size when compressible: header + packed 4-bit codes +
+/// used dictionary entries + fixed 1-byte payload per word.
+pub const fn compressed_size(dict_used: usize) -> usize {
+    1 + WORDS_PER_LINE / 2 + dict_used * 4 + WORDS_PER_LINE
+}
+/// Upper bound (full dictionary).
+pub const COMPRESSED_SIZE: usize = compressed_size(DICT_SIZE);
+
+/// Assist-warp subroutine lengths, from Algorithms 5/6: dictionary loads,
+/// per-encoding masked loads, mismatch-byte handling, stores.
+pub fn decompress_subroutine_len() -> usize {
+    2 + DICT_SIZE + 4 * 2 + 2
+}
+pub fn compress_subroutine_len(dict_entries_tested: usize) -> usize {
+    2 + dict_entries_tested * 5 + 3
+}
+
+/// Restricted C-Pack compressor.
+pub struct CPack;
+
+impl Compressor for CPack {
+    fn compress(&self, line: &Line) -> Compressed {
+        let words = super::line_words(line);
+        let mut dict: Vec<u32> = Vec::with_capacity(DICT_SIZE);
+        let mut codes = [0u8; WORDS_PER_LINE];
+        let mut payload = [0u8; WORDS_PER_LINE];
+        // Serial dictionary build (Algorithm 6): each word either matches an
+        // existing entry / pattern or becomes a new dictionary entry.
+        for (i, &w) in words.iter().enumerate() {
+            let code = if w == 0 {
+                Some((Code::Zero, 0u8, 0u8))
+            } else if w & 0xFFFF_FF00 == 0 {
+                Some((Code::ZeroExt, 0, (w & 0xFF) as u8))
+            } else if let Some(j) = dict.iter().position(|&d| d == w) {
+                Some((Code::FullMatch, j as u8, 0))
+            } else if let Some(j) = dict.iter().position(|&d| d & 0xFFFF_FF00 == w & 0xFFFF_FF00) {
+                Some((Code::PartialMatch, j as u8, (w & 0xFF) as u8))
+            } else {
+                None
+            };
+            match code {
+                Some((kind, idx, pay)) => {
+                    codes[i] = (idx << 2) | kind as u8;
+                    payload[i] = pay;
+                }
+                None => {
+                    if dict.len() == DICT_SIZE {
+                        // 5th dictionary value needed — line stays raw.
+                        let mut bytes = vec![ENC_UNCOMPRESSED];
+                        bytes.extend_from_slice(line);
+                        return Compressed {
+                            algo: Algo::CPack,
+                            encoding: ENC_UNCOMPRESSED,
+                            bytes,
+                        };
+                    }
+                    dict.push(w);
+                    codes[i] = ((dict.len() as u8 - 1) << 2) | Code::FullMatch as u8;
+                    payload[i] = 0;
+                }
+            }
+        }
+        let mut bytes = Vec::with_capacity(compressed_size(dict.len()));
+        bytes.push(dict.len() as u8);
+        // 4-bit codes packed two per byte: low nibble = even word.
+        for pair in codes.chunks_exact(2) {
+            bytes.push((pair[0] & 0x0F) | (pair[1] << 4));
+        }
+        for &d in &dict {
+            bytes.extend_from_slice(&d.to_le_bytes());
+        }
+        bytes.extend_from_slice(&payload);
+        debug_assert_eq!(bytes.len(), compressed_size(dict.len()));
+        // encoding = dictionary entries used (selects the AWS subroutine).
+        Compressed { algo: Algo::CPack, encoding: dict.len() as u8, bytes }
+    }
+
+    fn decompress(&self, c: &Compressed) -> Line {
+        assert_eq!(c.algo, Algo::CPack);
+        if c.encoding == ENC_UNCOMPRESSED {
+            let mut line = [0u8; LINE_BYTES];
+            line.copy_from_slice(&c.bytes[1..1 + LINE_BYTES]);
+            return line;
+        }
+        let dict_used = c.bytes[0] as usize;
+        let packed = &c.bytes[1..1 + WORDS_PER_LINE / 2];
+        let dict_off = 1 + WORDS_PER_LINE / 2;
+        let mut dict = [0u32; DICT_SIZE];
+        for (j, d) in dict.iter_mut().take(dict_used).enumerate() {
+            *d = u32::from_le_bytes(
+                c.bytes[dict_off + j * 4..dict_off + j * 4 + 4].try_into().unwrap(),
+            );
+        }
+        let pay_off = dict_off + dict_used * 4;
+        let mut words = [0u32; WORDS_PER_LINE];
+        for i in 0..WORDS_PER_LINE {
+            let code = (packed[i / 2] >> (4 * (i % 2))) & 0x0F;
+            let kind = Code::from_u8(code & 0b11);
+            let idx = (code >> 2) as usize;
+            let pay = c.bytes[pay_off + i] as u32;
+            words[i] = match kind {
+                Code::Zero => 0,
+                Code::FullMatch => dict[idx],
+                Code::PartialMatch => (dict[idx] & 0xFFFF_FF00) | pay,
+                Code::ZeroExt => pay,
+            };
+        }
+        super::words_line(&words)
+    }
+
+    fn algo(&self) -> Algo {
+        Algo::CPack
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(line: &Line) -> Compressed {
+        let c = CPack.compress(line);
+        assert_eq!(&CPack.decompress(&c), line);
+        c
+    }
+
+    #[test]
+    fn zeros_compress() {
+        let line = [0u8; LINE_BYTES];
+        let c = roundtrip(&line);
+        assert_eq!(c.encoding, 0); // no dictionary entries needed
+        assert_eq!(c.size_bytes(), compressed_size(0)); // 49 bytes
+        assert_eq!(c.bursts(), 2);
+    }
+
+    #[test]
+    fn four_distinct_pointers_compress() {
+        // Typical pointer-heavy line: 4 distinct upper-3-byte groups.
+        let bases = [0x8001_D000u32, 0x8002_0000, 0x9000_1000, 0xA000_0000];
+        let mut line = [0u8; LINE_BYTES];
+        for (i, ch) in line.chunks_exact_mut(4).enumerate() {
+            let w = bases[i % 4] | (i as u32 & 0xFF);
+            ch.copy_from_slice(&w.to_le_bytes());
+        }
+        let c = roundtrip(&line);
+        assert_eq!(c.encoding, 4);
+        assert_eq!(c.size_bytes(), compressed_size(4)); // 65 → 3 bursts
+    }
+
+    #[test]
+    fn five_distinct_groups_fail() {
+        let bases = [
+            0x8001_D000u32,
+            0x8002_0000,
+            0x9000_1000,
+            0xA000_0000,
+            0xB000_0000,
+        ];
+        let mut line = [0u8; LINE_BYTES];
+        for (i, ch) in line.chunks_exact_mut(4).enumerate() {
+            ch.copy_from_slice(&bases[i % 5].to_le_bytes());
+        }
+        let c = roundtrip(&line);
+        assert_eq!(c.encoding, ENC_UNCOMPRESSED);
+        assert_eq!(c.bursts(), 4);
+    }
+
+    #[test]
+    fn zero_extend_words() {
+        let mut line = [0u8; LINE_BYTES];
+        for (i, ch) in line.chunks_exact_mut(4).enumerate() {
+            ch.copy_from_slice(&((i as u32 % 200) + 1).to_le_bytes());
+        }
+        let c = roundtrip(&line);
+        assert!(c.encoding <= 1); // zero / zero-extend words need no dict
+        assert_eq!(c.bursts(), 2);
+    }
+
+    #[test]
+    fn partial_match_byte_recovered() {
+        let mut line = [0u8; LINE_BYTES];
+        let base = 0xDEAD_BE00u32;
+        for (i, ch) in line.chunks_exact_mut(4).enumerate() {
+            ch.copy_from_slice(&(base | (0xFF - i as u32)).to_le_bytes());
+        }
+        let c = roundtrip(&line);
+        assert_eq!(c.encoding, 1); // one dictionary entry
+    }
+
+    #[test]
+    fn random_lines_roundtrip_always() {
+        let mut rng = Rng::new(5);
+        for _ in 0..300 {
+            let mut line = [0u8; LINE_BYTES];
+            for b in line.iter_mut() {
+                *b = rng.next_u32() as u8;
+            }
+            roundtrip(&line);
+        }
+    }
+
+    #[test]
+    fn dict_reuse_prefers_full_match() {
+        // A line of one repeated word must need exactly 1 dict entry.
+        let mut line = [0u8; LINE_BYTES];
+        for ch in line.chunks_exact_mut(4) {
+            ch.copy_from_slice(&0xCAFE_BABEu32.to_le_bytes());
+        }
+        let c = roundtrip(&line);
+        assert_eq!(c.bytes[0], 1); // dict size header
+    }
+}

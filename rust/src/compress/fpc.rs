@@ -1,0 +1,317 @@
+//! Frequent Pattern Compression, segmented variant (paper §5.1.4).
+//!
+//! Original FPC (Alameldeen & Wood) compresses each 4-byte word with an
+//! independent 3-bit prefix, which serializes decompression (word *i*'s
+//! offset depends on words `0..i`). The paper parallelizes it for assist
+//! warps with two modifications we reproduce exactly:
+//!
+//! 1. all word prefixes (metadata) move to the *head* of the line, and
+//! 2. the line is split into fixed segments; all words in a segment share
+//!    one encoding, so every lane can compute its operand address
+//!    independently ("Each segment is compressed independently and all the
+//!    words within each segment are compressed using the same encoding").
+//!
+//! Layout: `[hdr][seg_enc ×N][seg0 payload][seg1 payload]...` where `hdr`
+//! is the segment count and each `seg_enc` is one of [`Pattern`].
+
+use super::{Compressed, Compressor, Algo, Line, LINE_BYTES, WORDS_PER_LINE};
+
+/// Words per segment. 8 words = 32B per segment, 4 segments per line —
+/// the simplicity/compressibility trade-off the paper lands on (ablated in
+/// `cargo bench --bench ablations`).
+pub const DEFAULT_SEGMENT_WORDS: usize = 8;
+
+/// Per-segment encodings, a parallel-friendly subset of FPC's prefixes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// All words zero — 0 payload bytes/word.
+    Zero = 0,
+    /// Each word sign-extends from its low byte — 1 payload byte/word.
+    SignExt1 = 1,
+    /// Each word sign-extends from its low halfword — 2 payload bytes/word.
+    SignExt2 = 2,
+    /// Each word is one byte repeated ×4 — 1 payload byte/word.
+    RepByte = 3,
+    /// Uncompressed — 4 payload bytes/word.
+    Uncompressed = 4,
+}
+
+impl Pattern {
+    pub fn from_u8(v: u8) -> Pattern {
+        match v {
+            0 => Pattern::Zero,
+            1 => Pattern::SignExt1,
+            2 => Pattern::SignExt2,
+            3 => Pattern::RepByte,
+            _ => Pattern::Uncompressed,
+        }
+    }
+
+    /// Payload bytes per word under this pattern.
+    pub fn bytes_per_word(&self) -> usize {
+        match self {
+            Pattern::Zero => 0,
+            Pattern::SignExt1 | Pattern::RepByte => 1,
+            Pattern::SignExt2 => 2,
+            Pattern::Uncompressed => 4,
+        }
+    }
+
+    /// Does `word` fit this pattern?
+    pub fn matches(&self, word: u32) -> bool {
+        match self {
+            Pattern::Zero => word == 0,
+            Pattern::SignExt1 => (word as i32) >= -128 && (word as i32) <= 127,
+            Pattern::SignExt2 => (word as i32) >= -32768 && (word as i32) <= 32767,
+            Pattern::RepByte => {
+                let b = word & 0xFF;
+                word == b | (b << 8) | (b << 16) | (b << 24)
+            }
+            Pattern::Uncompressed => true,
+        }
+    }
+
+    /// Tried in increasing payload-size order (Algorithm 4's encoding loop).
+    pub const CANDIDATES: [Pattern; 5] = [
+        Pattern::Zero,
+        Pattern::SignExt1,
+        Pattern::RepByte,
+        Pattern::SignExt2,
+        Pattern::Uncompressed,
+    ];
+}
+
+/// Assist-warp subroutine lengths (instructions) for FPC, modelled from
+/// Algorithms 3/4: per-segment load + pattern op + store + address update.
+pub fn decompress_subroutine_len(n_segments: usize) -> usize {
+    2 + n_segments * 4
+}
+pub fn compress_subroutine_len(n_segments: usize, encodings_tested: usize) -> usize {
+    2 + n_segments * (2 + encodings_tested * 3)
+}
+
+pub const ENC_UNCOMPRESSED: u8 = 0xFF;
+
+/// Segmented-FPC compressor. `segment_words` is configurable for the
+/// ablation study; use `Fpc::default()` for the paper configuration.
+pub struct Fpc {
+    pub segment_words: usize,
+}
+
+impl Default for Fpc {
+    fn default() -> Self {
+        Fpc { segment_words: DEFAULT_SEGMENT_WORDS }
+    }
+}
+
+impl Fpc {
+    pub fn n_segments(&self) -> usize {
+        WORDS_PER_LINE / self.segment_words
+    }
+
+    fn best_pattern(&self, words: &[u32]) -> Pattern {
+        for p in Pattern::CANDIDATES {
+            if words.iter().all(|&w| p.matches(w)) {
+                return p;
+            }
+        }
+        Pattern::Uncompressed
+    }
+}
+
+impl Compressor for Fpc {
+    fn compress(&self, line: &Line) -> Compressed {
+        let words = super::line_words(line);
+        let n_seg = self.n_segments();
+        let mut encs = Vec::with_capacity(n_seg);
+        let mut payload = Vec::new();
+        for seg in words.chunks_exact(self.segment_words) {
+            let p = self.best_pattern(seg);
+            encs.push(p as u8);
+            for &w in seg {
+                match p {
+                    Pattern::Zero => {}
+                    Pattern::SignExt1 | Pattern::RepByte => payload.push(w as u8),
+                    Pattern::SignExt2 => payload.extend_from_slice(&(w as u16).to_le_bytes()),
+                    Pattern::Uncompressed => payload.extend_from_slice(&w.to_le_bytes()),
+                }
+            }
+        }
+        let size = 1 + n_seg + payload.len();
+        if size >= LINE_BYTES {
+            let mut bytes = vec![ENC_UNCOMPRESSED];
+            bytes.extend_from_slice(line);
+            return Compressed { algo: Algo::Fpc, encoding: ENC_UNCOMPRESSED, bytes };
+        }
+        // Metadata at the head (paper §5.1.4), then payloads in segment order.
+        let mut bytes = Vec::with_capacity(size);
+        bytes.push(n_seg as u8);
+        bytes.extend_from_slice(&encs);
+        bytes.extend_from_slice(&payload);
+        // encoding byte = bitmap of segment patterns packed 2 bits... we use
+        // the count of compressed segments as the AWS subroutine selector.
+        let compressed_segs = encs.iter().filter(|&&e| e != Pattern::Uncompressed as u8).count();
+        Compressed { algo: Algo::Fpc, encoding: compressed_segs as u8, bytes }
+    }
+
+    fn decompress(&self, c: &Compressed) -> Line {
+        assert_eq!(c.algo, Algo::Fpc);
+        if c.encoding == ENC_UNCOMPRESSED {
+            let mut line = [0u8; LINE_BYTES];
+            line.copy_from_slice(&c.bytes[1..1 + LINE_BYTES]);
+            return line;
+        }
+        let n_seg = c.bytes[0] as usize;
+        let seg_words = WORDS_PER_LINE / n_seg;
+        let mut words = [0u32; WORDS_PER_LINE];
+        let mut off = 1 + n_seg;
+        for s in 0..n_seg {
+            let p = Pattern::from_u8(c.bytes[1 + s]);
+            for i in 0..seg_words {
+                let w = match p {
+                    Pattern::Zero => 0,
+                    Pattern::SignExt1 => {
+                        let b = c.bytes[off] as i8;
+                        off += 1;
+                        b as i32 as u32
+                    }
+                    Pattern::RepByte => {
+                        let b = c.bytes[off] as u32;
+                        off += 1;
+                        b | (b << 8) | (b << 16) | (b << 24)
+                    }
+                    Pattern::SignExt2 => {
+                        let h = i16::from_le_bytes([c.bytes[off], c.bytes[off + 1]]);
+                        off += 2;
+                        h as i32 as u32
+                    }
+                    Pattern::Uncompressed => {
+                        let w = u32::from_le_bytes(c.bytes[off..off + 4].try_into().unwrap());
+                        off += 4;
+                        w
+                    }
+                };
+                words[s * seg_words + i] = w;
+            }
+        }
+        super::words_line(&words)
+    }
+
+    fn algo(&self) -> Algo {
+        Algo::Fpc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(line: &Line) -> Compressed {
+        let f = Fpc::default();
+        let c = f.compress(line);
+        assert_eq!(&f.decompress(&c), line);
+        c
+    }
+
+    #[test]
+    fn zeros() {
+        let line = [0u8; LINE_BYTES];
+        let c = roundtrip(&line);
+        assert_eq!(c.size_bytes(), 1 + 4); // hdr + 4 segment encodings
+        assert_eq!(c.bursts(), 1);
+    }
+
+    #[test]
+    fn narrow_values() {
+        let mut line = [0u8; LINE_BYTES];
+        for (i, ch) in line.chunks_exact_mut(4).enumerate() {
+            ch.copy_from_slice(&(i as u32 % 100).to_le_bytes());
+        }
+        let c = roundtrip(&line);
+        // All segments SignExt1: 1 + 4 + 32 = 37 bytes.
+        assert_eq!(c.size_bytes(), 37);
+        assert_eq!(c.bursts(), 2);
+    }
+
+    #[test]
+    fn negative_narrow_values() {
+        let mut line = [0u8; LINE_BYTES];
+        for (i, ch) in line.chunks_exact_mut(4).enumerate() {
+            ch.copy_from_slice(&(-(i as i32) as u32).to_le_bytes());
+        }
+        let c = roundtrip(&line);
+        assert!(c.size_bytes() <= 37);
+    }
+
+    #[test]
+    fn repeated_bytes() {
+        let mut line = [0u8; LINE_BYTES];
+        for (i, ch) in line.chunks_exact_mut(4).enumerate() {
+            let b = (i % 7) as u8 + 1;
+            ch.copy_from_slice(&[b, b, b, b]);
+        }
+        let c = roundtrip(&line);
+        assert_eq!(c.size_bytes(), 37);
+    }
+
+    #[test]
+    fn mixed_segments() {
+        let mut line = [0u8; LINE_BYTES];
+        // Segment 0: zeros. Segment 1: narrow. Segments 2-3: random-ish.
+        for i in 8..16 {
+            line[i * 4..i * 4 + 4].copy_from_slice(&(i as u32).to_le_bytes());
+        }
+        let mut rng = Rng::new(3);
+        for i in 16..32 {
+            line[i * 4..i * 4 + 4].copy_from_slice(&rng.next_u32().to_le_bytes());
+        }
+        let c = roundtrip(&line);
+        // 1 + 4 + (0 + 8 + 32 + 32) = 77
+        assert_eq!(c.size_bytes(), 77);
+        assert_eq!(c.bursts(), 3);
+    }
+
+    #[test]
+    fn incompressible_passthrough() {
+        let mut rng = Rng::new(17);
+        let mut line = [0u8; LINE_BYTES];
+        for b in line.iter_mut() {
+            *b = rng.next_u32() as u8;
+        }
+        let c = roundtrip(&line);
+        assert_eq!(c.encoding, ENC_UNCOMPRESSED);
+        assert_eq!(c.bursts(), 4);
+    }
+
+    #[test]
+    fn segment_size_ablation_roundtrips() {
+        let mut rng = Rng::new(31);
+        for seg_words in [4usize, 8, 16] {
+            let f = Fpc { segment_words: seg_words };
+            for _ in 0..100 {
+                let mut line = [0u8; LINE_BYTES];
+                for ch in line.chunks_exact_mut(4) {
+                    let w = if rng.chance(0.5) { rng.below(200) as u32 } else { rng.next_u32() };
+                    ch.copy_from_slice(&w.to_le_bytes());
+                }
+                let c = f.compress(&line);
+                assert_eq!(f.decompress(&c), line, "seg_words={seg_words}");
+            }
+        }
+    }
+
+    #[test]
+    fn pattern_matches_are_exact() {
+        assert!(Pattern::Zero.matches(0));
+        assert!(!Pattern::Zero.matches(1));
+        assert!(Pattern::SignExt1.matches(127));
+        assert!(Pattern::SignExt1.matches(-128i32 as u32));
+        assert!(!Pattern::SignExt1.matches(128));
+        assert!(!Pattern::SignExt1.matches(-129i32 as u32));
+        assert!(Pattern::SignExt2.matches(32767));
+        assert!(!Pattern::SignExt2.matches(32768));
+        assert!(Pattern::RepByte.matches(0xABABABAB));
+        assert!(!Pattern::RepByte.matches(0xABABAB00));
+    }
+}

@@ -1,0 +1,199 @@
+//! Byte-exact compression substrates: BDI, FPC and C-Pack.
+//!
+//! These are the three algorithms the paper maps onto assist warps
+//! (§5.1.1–§5.1.5). Each is implemented twice in this repo:
+//!
+//! 1. here, in Rust, operating on real cache-line bytes (used by the
+//!    simulator's `NativeOracle` and by the "hardware compressor" designs);
+//! 2. as a JAX/Pallas model (`python/compile/`), AOT-compiled to an HLO
+//!    artifact that the [`crate::runtime`] executes via PJRT (`PjrtOracle`).
+//!
+//! An integration test (`rust/tests/integration_pjrt.rs`) asserts the two
+//! agree on encoding choice and compressed size for random and patterned
+//! lines.
+//!
+//! Compression granularity is one 128-byte cache line (= four 32-byte GDDR5
+//! bursts, the paper's "1–4 bursts" transfer quantum).
+
+pub mod bdi;
+pub mod cpack;
+pub mod fpc;
+pub mod oracle;
+
+/// Cache-line size in bytes. 128B, the GPGPU-Sim / Fermi default; four
+/// 32-byte DRAM bursts per line.
+pub const LINE_BYTES: usize = 128;
+/// Minimum DRAM transfer quantum (one GDDR5 burst).
+pub const BURST_BYTES: usize = 32;
+/// Bursts per uncompressed line.
+pub const LINE_BURSTS: u8 = (LINE_BYTES / BURST_BYTES) as u8;
+/// 4-byte words per line (FPC / C-Pack view).
+pub const WORDS_PER_LINE: usize = LINE_BYTES / 4;
+
+/// One cache line of raw data.
+pub type Line = [u8; LINE_BYTES];
+
+/// Compression algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Bdi,
+    Fpc,
+    CPack,
+    /// Idealized per-line best-of-{BDI,FPC,C-Pack} (paper's CABA-BestOfAll).
+    BestOfAll,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Bdi => "BDI",
+            Algo::Fpc => "FPC",
+            Algo::CPack => "C-Pack",
+            Algo::BestOfAll => "BestOfAll",
+        }
+    }
+
+    /// The three concrete algorithms.
+    pub const CONCRETE: [Algo; 3] = [Algo::Bdi, Algo::Fpc, Algo::CPack];
+}
+
+/// A compressed cache line: the encoding metadata plus the payload bytes.
+///
+/// `encoding` is algorithm-specific (see each module); `bytes` always
+/// includes all metadata needed for standalone decompression, mirroring the
+/// paper's layout choice of putting metadata at the *head* of the line
+/// (§5.1.3) so decompression can be set up upfront.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Compressed {
+    pub algo: Algo,
+    pub encoding: u8,
+    pub bytes: Vec<u8>,
+}
+
+impl Compressed {
+    /// Total compressed size in bytes (metadata included).
+    pub fn size_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// DRAM bursts needed to transfer this line (1–4). A line whose
+    /// compressed form does not save at least one burst is stored
+    /// uncompressed by construction, so this is always `<= LINE_BURSTS`.
+    pub fn bursts(&self) -> u8 {
+        bursts_for(self.size_bytes())
+    }
+
+    /// True if this line is stored in uncompressed form.
+    pub fn is_uncompressed(&self) -> bool {
+        self.size_bytes() >= LINE_BYTES
+    }
+}
+
+/// Bursts needed for `size` bytes, clamped to the line maximum.
+pub fn bursts_for(size: usize) -> u8 {
+    (crate::util::ceil_div(size.max(1), BURST_BYTES) as u8).min(LINE_BURSTS)
+}
+
+/// Common interface over the three algorithms.
+pub trait Compressor {
+    /// Compress one line. Implementations must return an uncompressed
+    /// passthrough (`encoding == <algo>::ENC_UNCOMPRESSED`) rather than ever
+    /// producing `bytes.len() > LINE_BYTES + metadata`.
+    fn compress(&self, line: &Line) -> Compressed;
+
+    /// Exact inverse of [`Compressor::compress`].
+    fn decompress(&self, c: &Compressed) -> Line;
+
+    fn algo(&self) -> Algo;
+}
+
+/// Compress with a specific algorithm.
+pub fn compress(algo: Algo, line: &Line) -> Compressed {
+    match algo {
+        Algo::Bdi => bdi::Bdi.compress(line),
+        Algo::Fpc => fpc::Fpc::default().compress(line),
+        Algo::CPack => cpack::CPack.compress(line),
+        Algo::BestOfAll => {
+            let mut best = bdi::Bdi.compress(line);
+            for c in [
+                fpc::Fpc::default().compress(line),
+                cpack::CPack.compress(line),
+            ] {
+                if c.size_bytes() < best.size_bytes() {
+                    best = c;
+                }
+            }
+            best
+        }
+    }
+}
+
+/// Decompress a line produced by [`compress`].
+pub fn decompress(c: &Compressed) -> Line {
+    match c.algo {
+        Algo::Bdi => bdi::Bdi.decompress(c),
+        Algo::Fpc => fpc::Fpc::default().decompress(c),
+        Algo::CPack => cpack::CPack.decompress(c),
+        Algo::BestOfAll => unreachable!("BestOfAll lines carry a concrete algo"),
+    }
+}
+
+/// View a line as 4-byte little-endian words.
+pub fn line_words(line: &Line) -> [u32; WORDS_PER_LINE] {
+    let mut w = [0u32; WORDS_PER_LINE];
+    for (i, chunk) in line.chunks_exact(4).enumerate() {
+        w[i] = u32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    w
+}
+
+/// Rebuild a line from 4-byte little-endian words.
+pub fn words_line(words: &[u32; WORDS_PER_LINE]) -> Line {
+    let mut line = [0u8; LINE_BYTES];
+    for (i, w) in words.iter().enumerate() {
+        line[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bursts_for_boundaries() {
+        assert_eq!(bursts_for(0), 1);
+        assert_eq!(bursts_for(1), 1);
+        assert_eq!(bursts_for(32), 1);
+        assert_eq!(bursts_for(33), 2);
+        assert_eq!(bursts_for(64), 2);
+        assert_eq!(bursts_for(96), 3);
+        assert_eq!(bursts_for(97), 4);
+        assert_eq!(bursts_for(128), 4);
+        assert_eq!(bursts_for(1000), 4);
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let mut line = [0u8; LINE_BYTES];
+        for (i, b) in line.iter_mut().enumerate() {
+            *b = (i * 7 + 3) as u8;
+        }
+        assert_eq!(words_line(&line_words(&line)), line);
+    }
+
+    #[test]
+    fn best_of_all_never_worse() {
+        let mut rng = crate::util::rng::Rng::new(123);
+        for _ in 0..200 {
+            let mut line = [0u8; LINE_BYTES];
+            for b in line.iter_mut() {
+                *b = rng.next_u32() as u8;
+            }
+            let best = compress(Algo::BestOfAll, &line);
+            for algo in Algo::CONCRETE {
+                assert!(best.size_bytes() <= compress(algo, &line).size_bytes());
+            }
+        }
+    }
+}

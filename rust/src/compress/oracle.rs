@@ -1,0 +1,210 @@
+//! The compression *oracle*: the component that answers "how small does
+//! this line get, and with which encoding?" for the simulator.
+//!
+//! Two implementations exist:
+//!
+//! * [`NativeOracle`] — the Rust compressors in this module tree;
+//! * [`crate::runtime::PjrtOracle`] — the AOT-compiled JAX/Pallas model
+//!   executed through PJRT (the assist-warp compute genuinely running
+//!   through XLA), batched for throughput.
+//!
+//! Both are wrapped by [`MemoOracle`], which caches results by line content
+//! hash — the simulator re-touches the same lines constantly, and the
+//! oracle answer is a pure function of the bytes.
+
+use super::{compress, Algo, Line};
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+/// Oracle verdict for one line under one algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LineVerdict {
+    /// Algorithm-specific encoding byte (selects the AWS subroutine).
+    pub encoding: u8,
+    /// Compressed size in bytes, metadata included.
+    pub size_bytes: u16,
+    /// DRAM bursts to transfer (1–4).
+    pub bursts: u8,
+}
+
+impl LineVerdict {
+    pub fn uncompressed() -> Self {
+        LineVerdict {
+            encoding: 0xFF,
+            size_bytes: super::LINE_BYTES as u16,
+            bursts: super::LINE_BURSTS,
+        }
+    }
+
+    pub fn is_compressed(&self) -> bool {
+        self.bursts < super::LINE_BURSTS
+    }
+}
+
+/// Batch-capable oracle interface. Batching matters for the PJRT backend
+/// (one executable launch amortized over many lines); the native backend
+/// just loops.
+pub trait CompressionOracle {
+    /// Analyze a batch of lines under `algo`.
+    fn analyze(&mut self, algo: Algo, lines: &[Line]) -> Vec<LineVerdict>;
+
+    /// Single-line convenience.
+    fn analyze_one(&mut self, algo: Algo, line: &Line) -> LineVerdict {
+        self.analyze(algo, std::slice::from_ref(line))[0]
+    }
+
+    /// Human-readable backend name for reports.
+    fn backend_name(&self) -> &'static str;
+}
+
+/// Pure-Rust oracle.
+#[derive(Default)]
+pub struct NativeOracle;
+
+impl CompressionOracle for NativeOracle {
+    fn analyze(&mut self, algo: Algo, lines: &[Line]) -> Vec<LineVerdict> {
+        lines
+            .iter()
+            .map(|line| {
+                let c = compress(algo, line);
+                LineVerdict {
+                    encoding: c.encoding,
+                    size_bytes: c.size_bytes() as u16,
+                    bursts: c.bursts(),
+                }
+            })
+            .collect()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+fn line_key(algo: Algo, line: &Line) -> u64 {
+    // FxHash-style multiply-xor over 8-byte chunks; cheap and good enough
+    // for memoization (collisions only cost a wrong verdict in a cache —
+    // we additionally store the first 8 bytes to disambiguate cheaply).
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    algo.hash(&mut h);
+    line.hash(&mut h);
+    h.finish()
+}
+
+/// Content-hash memoization wrapper. This is a *performance* device for the
+/// simulator, not an architectural structure (the MD cache in
+/// `mem::mdcache` models the architecture).
+pub struct MemoOracle<O: CompressionOracle> {
+    inner: O,
+    cache: HashMap<u64, LineVerdict>,
+    pub hits: u64,
+    pub misses: u64,
+    capacity: usize,
+}
+
+impl<O: CompressionOracle> MemoOracle<O> {
+    pub fn new(inner: O) -> Self {
+        MemoOracle {
+            inner,
+            cache: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            capacity: 1 << 20,
+        }
+    }
+
+    pub fn inner_mut(&mut self) -> &mut O {
+        &mut self.inner
+    }
+}
+
+impl<O: CompressionOracle> CompressionOracle for MemoOracle<O> {
+    fn analyze(&mut self, algo: Algo, lines: &[Line]) -> Vec<LineVerdict> {
+        let mut out = vec![LineVerdict::uncompressed(); lines.len()];
+        let mut miss_idx = Vec::new();
+        let mut miss_lines = Vec::new();
+        for (i, line) in lines.iter().enumerate() {
+            match self.cache.get(&line_key(algo, line)) {
+                Some(v) => {
+                    self.hits += 1;
+                    out[i] = *v;
+                }
+                None => {
+                    self.misses += 1;
+                    miss_idx.push(i);
+                    miss_lines.push(*line);
+                }
+            }
+        }
+        if !miss_lines.is_empty() {
+            if self.cache.len() > self.capacity {
+                self.cache.clear(); // crude but rare; keeps memory bounded
+            }
+            let verdicts = self.inner.analyze(algo, &miss_lines);
+            for (k, &i) in miss_idx.iter().enumerate() {
+                self.cache.insert(line_key(algo, &miss_lines[k]), verdicts[k]);
+                out[i] = verdicts[k];
+            }
+        }
+        out
+    }
+
+    fn backend_name(&self) -> &'static str {
+        self.inner.backend_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::LINE_BYTES;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_matches_direct_compress() {
+        let mut rng = Rng::new(8);
+        let mut oracle = NativeOracle;
+        for _ in 0..100 {
+            let mut line = [0u8; LINE_BYTES];
+            for b in line.iter_mut() {
+                *b = if rng.chance(0.5) { 0 } else { rng.next_u32() as u8 };
+            }
+            for algo in Algo::CONCRETE {
+                let v = oracle.analyze_one(algo, &line);
+                let c = compress(algo, &line);
+                assert_eq!(v.size_bytes as usize, c.size_bytes());
+                assert_eq!(v.bursts, c.bursts());
+                assert_eq!(v.encoding, c.encoding);
+            }
+        }
+    }
+
+    #[test]
+    fn memo_oracle_is_transparent() {
+        let mut rng = Rng::new(12);
+        let mut plain = NativeOracle;
+        let mut memo = MemoOracle::new(NativeOracle);
+        let mut lines = Vec::new();
+        for _ in 0..64 {
+            let mut line = [0u8; LINE_BYTES];
+            for b in line.iter_mut() {
+                *b = rng.next_u32() as u8;
+            }
+            lines.push(line);
+        }
+        // First call populates the memo; the repeat must hit it.
+        let a = plain.analyze(Algo::Bdi, &lines);
+        let b1 = memo.analyze(Algo::Bdi, &lines);
+        let b2 = memo.analyze(Algo::Bdi, &lines);
+        assert_eq!(a, b1);
+        assert_eq!(a, b2);
+        assert!(memo.hits >= 64, "hits={}", memo.hits);
+    }
+
+    #[test]
+    fn verdict_uncompressed_constants() {
+        let v = LineVerdict::uncompressed();
+        assert!(!v.is_compressed());
+        assert_eq!(v.bursts, 4);
+    }
+}

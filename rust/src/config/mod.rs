@@ -1,0 +1,362 @@
+//! Simulated-system configuration (the paper's Table 1) plus run controls.
+//!
+//! Defaults reproduce the paper's baseline exactly:
+//! 15 SMs / 32-thread warps / 48 warps per SM / GTO scheduling with 2
+//! schedulers per SM / 32768 registers + 32KB shared memory per SM /
+//! 16KB 4-way L1 / 768KB 16-way L2 / 1 crossbar per direction at 1.4 GHz /
+//! 177.4 GB/s over 6 GDDR5 MCs with FR-FCFS and 16 banks per MC.
+//!
+//! The offline image has no serde/toml, so overrides are parsed from simple
+//! `key=value` pairs (CLI `--set key=value`, files with one pair per line).
+
+use anyhow::{bail, Context, Result};
+
+/// GDDR5 timing parameters in DRAM command cycles (Table 1, Hynix GDDR5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DramTiming {
+    pub t_cl: u32,
+    pub t_rp: u32,
+    pub t_rc: u32,
+    pub t_ras: u32,
+    pub t_rcd: u32,
+    pub t_rrd: u32,
+    pub t_ccd: u32,
+    pub t_wr: u32,
+}
+
+impl Default for DramTiming {
+    fn default() -> Self {
+        DramTiming {
+            t_cl: 12,
+            t_rp: 12,
+            t_rc: 40,
+            t_ras: 28,
+            t_rcd: 12,
+            t_rrd: 6,
+            t_ccd: 5, // Table 1 lists t_CLDR=5; used as burst-to-burst gap
+            t_wr: 12,
+        }
+    }
+}
+
+/// Full simulated-system configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    // --- System overview ---
+    /// Streaming multiprocessors.
+    pub n_sms: usize,
+    /// Threads per warp (SIMT width).
+    pub warp_size: usize,
+    /// Memory channels / controllers.
+    pub n_mcs: usize,
+    /// Core clock in GHz (used only to convert to absolute bandwidth).
+    pub clock_ghz: f64,
+
+    // --- Shader core ---
+    /// Warp schedulers per SM (each issues ≤1 instruction/cycle).
+    pub schedulers_per_sm: usize,
+    /// Hard warp limit per SM.
+    pub max_warps_per_sm: usize,
+    /// Hard CTA (thread block) limit per SM.
+    pub max_ctas_per_sm: usize,
+    /// Hard thread limit per SM.
+    pub max_threads_per_sm: usize,
+    /// Register file size per SM (32-bit registers).
+    pub regfile_per_sm: usize,
+    /// Shared memory per SM in bytes.
+    pub smem_per_sm: usize,
+
+    // --- Pipelines ---
+    /// SP (int/fp ALU) issue slots per SM per cycle.
+    pub sp_units: usize,
+    /// SFU issue slots per SM per cycle.
+    pub sfu_units: usize,
+    /// LSU issue slots per SM per cycle.
+    pub mem_units: usize,
+    /// ALU latency (cycles) for simple int/fp ops.
+    pub alu_latency: u32,
+    /// FMA latency.
+    pub fma_latency: u32,
+    /// SFU latency (tens of cycles — the paper's dmr data-dependence note).
+    pub sfu_latency: u32,
+
+    // --- Caches ---
+    pub l1_bytes: usize,
+    pub l1_assoc: usize,
+    pub l1_hit_latency: u32,
+    pub l1_mshrs: usize,
+    pub l2_bytes: usize,
+    pub l2_assoc: usize,
+    pub l2_hit_latency: u32,
+    /// Latency to detect an L2 miss (tag check only, < hit latency).
+    pub l2_tag_latency: u32,
+    /// Cache line size in bytes (also the compression granularity).
+    pub line_bytes: usize,
+
+    // --- Interconnect ---
+    /// One crossbar per direction; per-port payload bandwidth in
+    /// bytes/core-cycle (32 = one burst per cycle per port).
+    pub icnt_bytes_per_cycle: f64,
+    /// Crossbar traversal latency in cycles.
+    pub icnt_latency: u32,
+
+    // --- DRAM ---
+    /// Peak off-chip bandwidth in GB/s across all MCs (Table 1: 177.4).
+    pub dram_bw_gbps: f64,
+    /// Bandwidth scale knob for the ½×/1×/2× experiments (Figs 2, 14).
+    pub bw_scale: f64,
+    pub banks_per_mc: usize,
+    pub dram_timing: DramTiming,
+    /// Extra fixed latency (command queues, PHY) added to every DRAM access.
+    pub dram_base_latency: u32,
+
+    // --- Compression / CABA ---
+    /// MD (metadata) cache size in bytes per MC (§5.3.2: 8KB, 4-way).
+    pub md_cache_bytes: usize,
+    pub md_cache_assoc: usize,
+    /// Hardware BDI latencies (paper: 1-cycle decompression, 5-cycle
+    /// compression, from the Synopsys implementation of [87]).
+    pub hw_decompress_latency: u32,
+    pub hw_compress_latency: u32,
+    /// Max live assist-warp entries per SM in the Assist Warp Table.
+    pub awt_entries: usize,
+    /// Dedicated low-priority AWB slots in the instruction buffer (§4.3).
+    pub awb_low_prio_slots: usize,
+    /// Enable AWC utilization-feedback throttling (§4.4).
+    pub caba_throttle: bool,
+    /// FU-utilization threshold above which low-priority deployment pauses.
+    pub throttle_util_threshold: f64,
+
+    // --- Run controls ---
+    /// Stop after this many core cycles (safety net).
+    pub max_cycles: u64,
+    /// Stop after this many issued warp-instructions (paper: 1B thread-
+    /// instructions; we default to a scaled-down budget per workload).
+    pub max_warp_insts: u64,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_sms: 15,
+            warp_size: 32,
+            n_mcs: 6,
+            clock_ghz: 1.4,
+            schedulers_per_sm: 2,
+            max_warps_per_sm: 48,
+            max_ctas_per_sm: 8,
+            max_threads_per_sm: 1536,
+            regfile_per_sm: 32768,
+            smem_per_sm: 32 * 1024,
+            sp_units: 2,
+            sfu_units: 1,
+            mem_units: 1,
+            alu_latency: 4,
+            fma_latency: 4,
+            sfu_latency: 32,
+            l1_bytes: 16 * 1024,
+            l1_assoc: 4,
+            l1_hit_latency: 28,
+            l1_mshrs: 64,
+            l2_bytes: 768 * 1024,
+            l2_assoc: 16,
+            l2_hit_latency: 120,
+            l2_tag_latency: 30,
+            line_bytes: crate::compress::LINE_BYTES,
+            icnt_bytes_per_cycle: 28.0,
+            icnt_latency: 8,
+            dram_bw_gbps: 177.4,
+            bw_scale: 1.0,
+            banks_per_mc: 16,
+            dram_timing: DramTiming::default(),
+            dram_base_latency: 80,
+            md_cache_bytes: 8 * 1024,
+            md_cache_assoc: 4,
+            hw_decompress_latency: 1,
+            hw_compress_latency: 5,
+            awt_entries: 32,
+            awb_low_prio_slots: 2,
+            caba_throttle: true,
+            throttle_util_threshold: 0.9,
+            max_cycles: 20_000_000,
+            max_warp_insts: u64::MAX,
+            seed: 0xCABA,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Per-MC data-bus bandwidth in bytes per core cycle, after `bw_scale`.
+    pub fn dram_bytes_per_cycle_per_mc(&self) -> f64 {
+        self.dram_bw_gbps * self.bw_scale / self.n_mcs as f64 / self.clock_ghz
+    }
+
+    /// Core cycles to move one 32B burst over one MC's data bus.
+    pub fn burst_cycles(&self) -> f64 {
+        crate::compress::BURST_BYTES as f64 / self.dram_bytes_per_cycle_per_mc()
+    }
+
+    /// DRAM bursts per uncompressed line.
+    pub fn line_bursts(&self) -> u8 {
+        (self.line_bytes / crate::compress::BURST_BYTES) as u8
+    }
+
+    /// Apply one `key=value` override. Returns an error on unknown keys or
+    /// malformed values — configs fail loudly, never silently.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        macro_rules! parse {
+            () => {
+                value.parse().with_context(|| format!("bad value for {key}: {value:?}"))?
+            };
+        }
+        match key {
+            "n_sms" => self.n_sms = parse!(),
+            "warp_size" => self.warp_size = parse!(),
+            "n_mcs" => self.n_mcs = parse!(),
+            "clock_ghz" => self.clock_ghz = parse!(),
+            "schedulers_per_sm" => self.schedulers_per_sm = parse!(),
+            "max_warps_per_sm" => self.max_warps_per_sm = parse!(),
+            "max_ctas_per_sm" => self.max_ctas_per_sm = parse!(),
+            "max_threads_per_sm" => self.max_threads_per_sm = parse!(),
+            "regfile_per_sm" => self.regfile_per_sm = parse!(),
+            "smem_per_sm" => self.smem_per_sm = parse!(),
+            "sp_units" => self.sp_units = parse!(),
+            "sfu_units" => self.sfu_units = parse!(),
+            "mem_units" => self.mem_units = parse!(),
+            "alu_latency" => self.alu_latency = parse!(),
+            "fma_latency" => self.fma_latency = parse!(),
+            "sfu_latency" => self.sfu_latency = parse!(),
+            "l1_bytes" => self.l1_bytes = parse!(),
+            "l1_assoc" => self.l1_assoc = parse!(),
+            "l1_hit_latency" => self.l1_hit_latency = parse!(),
+            "l1_mshrs" => self.l1_mshrs = parse!(),
+            "l2_bytes" => self.l2_bytes = parse!(),
+            "l2_assoc" => self.l2_assoc = parse!(),
+            "l2_hit_latency" => self.l2_hit_latency = parse!(),
+            "l2_tag_latency" => self.l2_tag_latency = parse!(),
+            "icnt_bytes_per_cycle" => self.icnt_bytes_per_cycle = parse!(),
+            "icnt_latency" => self.icnt_latency = parse!(),
+            "dram_bw_gbps" => self.dram_bw_gbps = parse!(),
+            "bw_scale" => self.bw_scale = parse!(),
+            "banks_per_mc" => self.banks_per_mc = parse!(),
+            "dram_base_latency" => self.dram_base_latency = parse!(),
+            "md_cache_bytes" => self.md_cache_bytes = parse!(),
+            "md_cache_assoc" => self.md_cache_assoc = parse!(),
+            "hw_decompress_latency" => self.hw_decompress_latency = parse!(),
+            "hw_compress_latency" => self.hw_compress_latency = parse!(),
+            "awt_entries" => self.awt_entries = parse!(),
+            "awb_low_prio_slots" => self.awb_low_prio_slots = parse!(),
+            "caba_throttle" => self.caba_throttle = parse!(),
+            "throttle_util_threshold" => self.throttle_util_threshold = parse!(),
+            "max_cycles" => self.max_cycles = parse!(),
+            "max_warp_insts" => self.max_warp_insts = parse!(),
+            "seed" => self.seed = parse!(),
+            _ => bail!("unknown config key: {key}"),
+        }
+        Ok(())
+    }
+
+    /// Apply a batch of `key=value` strings.
+    pub fn apply_overrides<'a>(&mut self, pairs: impl IntoIterator<Item = &'a str>) -> Result<()> {
+        for pair in pairs {
+            let (k, v) = pair
+                .split_once('=')
+                .with_context(|| format!("override must be key=value, got {pair:?}"))?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Render as the paper's Table 1.
+    pub fn table1(&self) -> String {
+        format!(
+            "System Overview    | {} SMs, {} threads/warp, {} memory channels\n\
+             Shader Core Config | {:.1}GHz, GTO scheduler, {} schedulers/SM\n\
+             Resources / SM     | {} warps/SM, {} registers, {}KB Shared Memory\n\
+             L1 Cache           | {}KB, {}-way associative, LRU replacement policy\n\
+             L2 Cache           | {}KB, {}-way associative, LRU replacement policy\n\
+             Interconnect       | 1 crossbar/direction ({} SMs, {} MCs), {:.1}GHz\n\
+             Memory Model       | {:.1}GB/s BW, {} GDDR5 MCs, FR-FCFS, {} banks/MC\n\
+             GDDR5 Timing       | tCL={} tRP={} tRC={} tRAS={} tRCD={} tRRD={} tCCD={} tWR={}",
+            self.n_sms,
+            self.warp_size,
+            self.n_mcs,
+            self.clock_ghz,
+            self.schedulers_per_sm,
+            self.max_warps_per_sm,
+            self.regfile_per_sm,
+            self.smem_per_sm / 1024,
+            self.l1_bytes / 1024,
+            self.l1_assoc,
+            self.l2_bytes / 1024,
+            self.l2_assoc,
+            self.n_sms,
+            self.n_mcs,
+            self.clock_ghz,
+            self.dram_bw_gbps * self.bw_scale,
+            self.n_mcs,
+            self.banks_per_mc,
+            self.dram_timing.t_cl,
+            self.dram_timing.t_rp,
+            self.dram_timing.t_rc,
+            self.dram_timing.t_ras,
+            self.dram_timing.t_rcd,
+            self.dram_timing.t_rrd,
+            self.dram_timing.t_ccd,
+            self.dram_timing.t_wr,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = SimConfig::default();
+        assert_eq!(c.n_sms, 15);
+        assert_eq!(c.warp_size, 32);
+        assert_eq!(c.n_mcs, 6);
+        assert_eq!(c.max_warps_per_sm, 48);
+        assert_eq!(c.regfile_per_sm, 32768);
+        assert_eq!(c.l1_bytes, 16 * 1024);
+        assert_eq!(c.l2_bytes, 768 * 1024);
+        assert_eq!(c.banks_per_mc, 16);
+        assert!((c.dram_bw_gbps - 177.4).abs() < 1e-9);
+        assert_eq!(c.dram_timing, DramTiming::default());
+    }
+
+    #[test]
+    fn bandwidth_math() {
+        let c = SimConfig::default();
+        // 177.4/6/1.4 ≈ 21.12 B/cycle/MC; a 32B burst ≈ 1.51 cycles.
+        assert!((c.dram_bytes_per_cycle_per_mc() - 21.119).abs() < 0.01);
+        assert!((c.burst_cycles() - 1.515).abs() < 0.01);
+        let mut half = c.clone();
+        half.bw_scale = 0.5;
+        assert!((half.burst_cycles() - 2.0 * c.burst_cycles()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overrides_roundtrip() {
+        let mut c = SimConfig::default();
+        c.apply_overrides(["n_sms=8", "bw_scale=2.0", "caba_throttle=false"])
+            .unwrap();
+        assert_eq!(c.n_sms, 8);
+        assert_eq!(c.bw_scale, 2.0);
+        assert!(!c.caba_throttle);
+        assert!(c.set("nonsense_key", "1").is_err());
+        assert!(c.set("n_sms", "not_a_number").is_err());
+    }
+
+    #[test]
+    fn table1_renders() {
+        let t = SimConfig::default().table1();
+        assert!(t.contains("15 SMs"));
+        assert!(t.contains("177.4GB/s"));
+        assert!(t.contains("tCL=12"));
+    }
+}

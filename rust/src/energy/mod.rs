@@ -1,0 +1,206 @@
+//! Event-based energy model (the role GPUWattch + CACTI play in §6).
+//!
+//! Energy = Σ(event count × per-event energy) + static power × time. The
+//! per-event coefficients are drawn from the GPUWattch-class breakdowns for
+//! a Fermi-era 40nm GPU (per-instruction core energy, per-access cache
+//! energies, per-flit NoC energy, per-burst GDDR5 energy and per-activate
+//! row energy). Figures 10–11 compare *relative* energy between designs
+//! sharing these coefficients, which is what the paper's conclusions rest
+//! on; absolute joules are not claimed (DESIGN.md §3).
+
+use crate::stats::SimStats;
+
+/// Per-event energies in nanojoules, plus static power in W.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// One warp instruction through fetch/decode/RF/execute (≈32 lanes).
+    pub core_inst_nj: f64,
+    /// One assist-warp instruction (same pipelines; slightly cheaper —
+    /// no fetch/decode, instructions come from the AWS buffer).
+    pub assist_inst_nj: f64,
+    /// L1 / shared-memory access.
+    pub l1_access_nj: f64,
+    /// L2 slice access.
+    pub l2_access_nj: f64,
+    /// One 32B NoC flit through the crossbar.
+    pub icnt_flit_nj: f64,
+    /// One 32B GDDR5 data burst (I/O + DRAM core read/write).
+    pub dram_burst_nj: f64,
+    /// One row activate+precharge.
+    pub dram_activate_nj: f64,
+    /// MD-cache access (8KB SRAM, CACTI-class).
+    pub md_access_nj: f64,
+    /// Dedicated BDI logic op (Synopsys 65nm → 32nm scaled; paper §6).
+    pub hw_compressor_op_nj: f64,
+    /// Chip static (leakage + constant clocking) power in watts.
+    pub static_w: f64,
+    /// Extra static power of the CABA structures (AWS+AWC+AWB, ~atoms).
+    pub caba_static_w: f64,
+    /// Extra static power of dedicated compressor logic (HW designs).
+    pub hw_static_w: f64,
+    /// Core clock GHz (converts cycles → seconds).
+    pub clock_ghz: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            core_inst_nj: 1.6,
+            assist_inst_nj: 1.3,
+            l1_access_nj: 0.35,
+            l2_access_nj: 0.9,
+            icnt_flit_nj: 0.6,
+            dram_burst_nj: 6.5,
+            dram_activate_nj: 2.2,
+            md_access_nj: 0.02,
+            hw_compressor_op_nj: 0.10,
+            static_w: 42.0,
+            caba_static_w: 0.12,
+            hw_static_w: 0.25,
+            clock_ghz: 1.4,
+        }
+    }
+}
+
+/// Energy breakdown for one run, in millijoules.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub core_mj: f64,
+    pub assist_mj: f64,
+    pub l1_mj: f64,
+    pub l2_mj: f64,
+    pub icnt_mj: f64,
+    pub dram_mj: f64,
+    pub md_mj: f64,
+    pub hw_comp_mj: f64,
+    pub static_mj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_mj(&self) -> f64 {
+        self.core_mj
+            + self.assist_mj
+            + self.l1_mj
+            + self.l2_mj
+            + self.icnt_mj
+            + self.dram_mj
+            + self.md_mj
+            + self.hw_comp_mj
+            + self.static_mj
+    }
+
+    /// DRAM-attributed energy (the paper reports a 29.5% DRAM power
+    /// reduction under CABA-BDI).
+    pub fn dram_total_mj(&self) -> f64 {
+        self.dram_mj
+    }
+
+    /// Average power in watts given the run length.
+    pub fn avg_power_w(&self, cycles: u64, clock_ghz: f64) -> f64 {
+        let seconds = cycles as f64 / (clock_ghz * 1e9);
+        if seconds == 0.0 {
+            0.0
+        } else {
+            self.total_mj() * 1e-3 / seconds
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Evaluate a run. `has_caba`/`has_hw` add the respective structures'
+    /// static power.
+    pub fn evaluate(&self, stats: &SimStats, has_caba: bool, has_hw: bool) -> EnergyBreakdown {
+        let e = &stats.energy_events;
+        let nj = |count: u64, per: f64| count as f64 * per * 1e-6; // nJ → mJ
+        let seconds = stats.cycles as f64 / (self.clock_ghz * 1e9);
+        let static_w = self.static_w
+            + if has_caba { self.caba_static_w } else { 0.0 }
+            + if has_hw { self.hw_static_w } else { 0.0 };
+        EnergyBreakdown {
+            core_mj: nj(e.core_insts, self.core_inst_nj),
+            assist_mj: nj(e.assist_insts, self.assist_inst_nj),
+            l1_mj: nj(e.l1_accesses, self.l1_access_nj),
+            l2_mj: nj(e.l2_accesses, self.l2_access_nj),
+            icnt_mj: nj(e.icnt_flits, self.icnt_flit_nj),
+            dram_mj: nj(e.dram_bursts, self.dram_burst_nj)
+                + nj(e.dram_activates, self.dram_activate_nj),
+            md_mj: nj(e.md_cache_accesses, self.md_access_nj),
+            hw_comp_mj: nj(e.hw_compressor_ops, self.hw_compressor_op_nj),
+            static_mj: static_w * seconds * 1e3,
+        }
+    }
+
+    /// Energy-delay product in mJ·s (Fig. 11 uses normalized values).
+    pub fn edp(&self, stats: &SimStats, has_caba: bool, has_hw: bool) -> f64 {
+        let e = self.evaluate(stats, has_caba, has_hw);
+        let seconds = stats.cycles as f64 / (self.clock_ghz * 1e9);
+        e.total_mj() * seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::EnergyEvents;
+
+    fn stats_with(events: EnergyEvents, cycles: u64) -> SimStats {
+        let mut s = SimStats::default();
+        s.energy_events = events;
+        s.cycles = cycles;
+        s
+    }
+
+    #[test]
+    fn fewer_bursts_less_dram_energy() {
+        let m = EnergyModel::default();
+        let a = stats_with(
+            EnergyEvents { dram_bursts: 1000, ..Default::default() },
+            1000,
+        );
+        let b = stats_with(
+            EnergyEvents { dram_bursts: 400, ..Default::default() },
+            1000,
+        );
+        let ea = m.evaluate(&a, false, false);
+        let eb = m.evaluate(&b, false, false);
+        assert!(eb.dram_mj < ea.dram_mj);
+        assert!(eb.total_mj() < ea.total_mj());
+    }
+
+    #[test]
+    fn shorter_run_less_static_energy() {
+        let m = EnergyModel::default();
+        let long = m.evaluate(&stats_with(Default::default(), 2_000_000), false, false);
+        let short = m.evaluate(&stats_with(Default::default(), 1_000_000), false, false);
+        assert!((long.static_mj / short.static_mj - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn caba_and_hw_static_adders() {
+        let m = EnergyModel::default();
+        let s = stats_with(Default::default(), 1_000_000);
+        let plain = m.evaluate(&s, false, false).total_mj();
+        let caba = m.evaluate(&s, true, false).total_mj();
+        let hw = m.evaluate(&s, false, true).total_mj();
+        assert!(caba > plain);
+        assert!(hw > caba, "dedicated logic costs more static power than CABA");
+    }
+
+    #[test]
+    fn edp_scales_with_delay_squared() {
+        let m = EnergyModel::default();
+        // Same events, double the cycles → >2× EDP (static energy grows too).
+        let e1 = m.edp(&stats_with(Default::default(), 1_000_000), false, false);
+        let e2 = m.edp(&stats_with(Default::default(), 2_000_000), false, false);
+        assert!(e2 > 3.9 * e1, "e1={e1} e2={e2}");
+    }
+
+    #[test]
+    fn avg_power_sane() {
+        let m = EnergyModel::default();
+        let s = stats_with(Default::default(), 1_400_000_000); // 1 second
+        let e = m.evaluate(&s, false, false);
+        let p = e.avg_power_w(s.cycles, m.clock_ghz);
+        assert!((p - m.static_w).abs() < 1.0, "p={p}");
+    }
+}

@@ -1,0 +1,170 @@
+//! The simulator's SIMT micro-ISA.
+//!
+//! Workloads are expressed as warp-level μ-kernels: a loop *body* of typed
+//! instructions executed for a per-warp iteration count. This is the same
+//! abstraction GPGPU-Sim's performance model reduces SASS to — typed ops
+//! with register dependences and memory access descriptors — without
+//! functional semantics we don't need (see DESIGN.md §3: compression
+//! operates on real bytes produced by the data generators, not on computed
+//! values).
+
+use std::sync::Arc;
+
+/// Maximum architectural registers per thread the ISA addresses.
+pub const MAX_REGS: usize = 64;
+
+/// Functional-unit class of an instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FuKind {
+    /// SP pipeline (int/fp ALU, FMA).
+    Sp,
+    /// Special-function unit (transcendentals — tens of cycles).
+    Sfu,
+    /// Load/store pipeline.
+    Mem,
+}
+
+/// How a warp's 32 lanes spread over cache lines for one memory access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    /// All lanes fall in one line; consecutive warp-iterations stream
+    /// through the array. `reuse` = number of consecutive iterations that
+    /// touch the same line (temporal locality knob).
+    Coalesced { reuse: u16 },
+    /// Lanes spread over `lines` consecutive lines (uncoalesced strided
+    /// access; 1 < lines ≤ 32).
+    Strided { lines: u16 },
+    /// Each lane hashes to an arbitrary line within the footprint
+    /// (graph-style gather/scatter); `degree` = distinct lines per warp.
+    Scatter { degree: u16 },
+}
+
+/// A memory operand: which array, how lanes map to lines.
+#[derive(Clone, Copy, Debug)]
+pub struct MemAccess {
+    /// Array index into the workload's array table (base + footprint).
+    pub array: u8,
+    pub kind: AccessKind,
+}
+
+/// Instruction opcode.
+#[derive(Clone, Copy, Debug)]
+pub enum Op {
+    /// Integer ALU op.
+    IAlu,
+    /// FP32 ALU op.
+    FAlu,
+    /// Fused multiply-add.
+    Fma,
+    /// Special-function op (sin/rsqrt/…).
+    Sfu,
+    /// Global load into `dst`.
+    Ld(MemAccess),
+    /// Global store (no dst).
+    St(MemAccess),
+}
+
+impl Op {
+    pub fn fu(&self) -> FuKind {
+        match self {
+            Op::IAlu | Op::FAlu | Op::Fma => FuKind::Sp,
+            Op::Sfu => FuKind::Sfu,
+            Op::Ld(_) | Op::St(_) => FuKind::Mem,
+        }
+    }
+
+    pub fn is_mem(&self) -> bool {
+        matches!(self, Op::Ld(_) | Op::St(_))
+    }
+}
+
+/// One decoded warp instruction with register operands.
+#[derive(Clone, Copy, Debug)]
+pub struct Inst {
+    pub op: Op,
+    /// Destination register (ignored for stores).
+    pub dst: u8,
+    /// Source registers (`MAX_REGS as u8` = unused slot).
+    pub srcs: [u8; 2],
+}
+
+pub const NO_REG: u8 = MAX_REGS as u8;
+
+impl Inst {
+    pub fn new(op: Op, dst: u8, srcs: [u8; 2]) -> Self {
+        Inst { op, dst, srcs }
+    }
+
+    /// Iterate over used source registers.
+    pub fn sources(&self) -> impl Iterator<Item = u8> + '_ {
+        self.srcs.iter().copied().filter(|&r| r != NO_REG)
+    }
+}
+
+/// A warp-level μ-kernel: `body` repeated `iters` times.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub body: Vec<Inst>,
+    pub iters: u32,
+}
+
+pub type ProgramRef = Arc<Program>;
+
+impl Program {
+    pub fn total_insts(&self) -> u64 {
+        self.body.len() as u64 * self.iters as u64
+    }
+
+    /// Static per-instruction position → (iteration, body index).
+    pub fn locate(&self, pc: u64) -> (u32, usize) {
+        let len = self.body.len() as u64;
+        ((pc / len) as u32, (pc % len) as usize)
+    }
+
+    /// Count memory instructions in the body.
+    pub fn mem_insts_per_iter(&self) -> usize {
+        self.body.iter().filter(|i| i.op.is_mem()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ld(array: u8) -> Op {
+        Op::Ld(MemAccess { array, kind: AccessKind::Coalesced { reuse: 1 } })
+    }
+
+    #[test]
+    fn fu_classes() {
+        assert_eq!(Op::IAlu.fu(), FuKind::Sp);
+        assert_eq!(Op::Fma.fu(), FuKind::Sp);
+        assert_eq!(Op::Sfu.fu(), FuKind::Sfu);
+        assert_eq!(ld(0).fu(), FuKind::Mem);
+        assert!(ld(0).is_mem());
+        assert!(!Op::Fma.is_mem());
+    }
+
+    #[test]
+    fn program_accounting() {
+        let p = Program {
+            body: vec![
+                Inst::new(ld(0), 1, [NO_REG, NO_REG]),
+                Inst::new(Op::Fma, 2, [1, 2]),
+            ],
+            iters: 10,
+        };
+        assert_eq!(p.total_insts(), 20);
+        assert_eq!(p.mem_insts_per_iter(), 1);
+        assert_eq!(p.locate(0), (0, 0));
+        assert_eq!(p.locate(3), (1, 1));
+        assert_eq!(p.locate(19), (9, 1));
+    }
+
+    #[test]
+    fn sources_skip_unused() {
+        let i = Inst::new(Op::Fma, 3, [1, NO_REG]);
+        let srcs: Vec<u8> = i.sources().collect();
+        assert_eq!(srcs, vec![1]);
+    }
+}

@@ -1,0 +1,45 @@
+//! # CABA — Core-Assisted Bottleneck Acceleration
+//!
+//! A full reproduction of *"A Framework for Accelerating Bottlenecks in GPU
+//! Execution with Assist Warps"* (Vijaykumar et al., 2016) as a
+//! production-quality Rust + JAX + Pallas stack.
+//!
+//! The crate contains:
+//!
+//! * a **cycle-level GPU simulator** ([`core`], [`mem`], [`sim`]) modelling
+//!   the paper's baseline (Table 1): 15 SMs, GTO warp scheduling, L1/L2
+//!   caches, a crossbar interconnect and GDDR5 memory controllers;
+//! * the **CABA microarchitecture** ([`caba`]): Assist Warp Store,
+//!   Controller, Table and Buffer, with trigger/deploy/kill, priorities
+//!   and dynamic throttling;
+//! * byte-exact **compression substrates** ([`compress`]): BDI, FPC and
+//!   C-Pack, used both as "hardware" compressors and as assist-warp
+//!   subroutines;
+//! * a **PJRT runtime** ([`runtime`]) that loads the AOT-compiled JAX/Pallas
+//!   compression model (`artifacts/*.hlo.txt`) and serves it as a batched
+//!   compression oracle from the Rust hot path — Python is never on the
+//!   request path;
+//! * an **energy model** ([`energy`]), the paper's 27 **workloads**
+//!   ([`workload`]) and the full **evaluation harness** ([`report`],
+//!   `rust/benches/`) regenerating every table and figure.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod caba;
+pub mod compress;
+pub mod config;
+pub mod core;
+pub mod energy;
+pub mod isa;
+pub mod mem;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod util;
+pub mod workload;
+
+pub use config::SimConfig;
+pub use sim::designs::Design;
+pub use sim::Simulator;

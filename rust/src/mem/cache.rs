@@ -1,0 +1,340 @@
+//! Set-associative cache model with LRU replacement and an optional
+//! *compressed-capacity* mode (paper §7.5 / Fig. 15): with `tag_mult` > 1
+//! the cache holds `assoc × tag_mult` tags per set, and lines occupy data
+//! space proportional to their compressed size in 32B sectors, so a set can
+//! hold more (compressed) lines than its nominal associativity — exactly
+//! the "2×/4× the number of tags" design the paper evaluates.
+
+use crate::stats::CacheStats;
+
+/// Per-line metadata.
+#[derive(Clone, Copy, Debug)]
+pub struct Entry {
+    pub tag: u64,
+    pub valid: bool,
+    pub dirty: bool,
+    /// Data-space occupancy in 32B sectors (4 = uncompressed 128B line).
+    pub sectors: u8,
+    /// Transfer size in DRAM bursts when this line moves (compressed size).
+    pub bursts: u8,
+    /// Is the stored copy in compressed form (needs decompression on use)?
+    pub compressed: bool,
+    pub last_use: u64,
+}
+
+const INVALID: Entry = Entry {
+    tag: 0,
+    valid: false,
+    dirty: false,
+    sectors: 0,
+    bursts: 0,
+    compressed: false,
+    last_use: 0,
+};
+
+/// An evicted line that must be written back.
+#[derive(Clone, Copy, Debug)]
+pub struct Eviction {
+    pub line_addr: u64,
+    pub bursts: u8,
+    pub compressed: bool,
+}
+
+/// Set-associative cache over 128B-line addresses (line numbers, not bytes).
+pub struct Cache {
+    n_sets: usize,
+    /// Tag slots per set (assoc × tag_mult).
+    tags_per_set: usize,
+    /// Data budget per set in sectors (assoc × 4).
+    sectors_per_set: usize,
+    sets: Vec<Entry>,
+    pub stats: CacheStats,
+}
+
+impl Cache {
+    /// `bytes`/`assoc` as usual; `tag_mult` = 1 for a normal cache, 2 or 4
+    /// for the compressed-capacity configurations of Fig. 15.
+    pub fn new(bytes: usize, assoc: usize, line_bytes: usize, tag_mult: usize) -> Cache {
+        let n_lines = bytes / line_bytes;
+        let n_sets = (n_lines / assoc).max(1);
+        let tags_per_set = assoc * tag_mult;
+        Cache {
+            n_sets,
+            tags_per_set,
+            sectors_per_set: assoc * (line_bytes / 32),
+            sets: vec![INVALID; n_sets * tags_per_set],
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn set_index(&self, line_addr: u64) -> usize {
+        // Mix the address so the `1<<40` array-stride layout doesn't alias
+        // every array onto the same sets.
+        let mut z = line_addr.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        z ^= z >> 29;
+        (z as usize) % self.n_sets
+    }
+
+    fn set(&mut self, idx: usize) -> &mut [Entry] {
+        let s = idx * self.tags_per_set;
+        &mut self.sets[s..s + self.tags_per_set]
+    }
+
+    /// Look up a line; updates LRU and hit/miss stats. Returns the entry's
+    /// (bursts, compressed) on hit.
+    pub fn probe(&mut self, line_addr: u64, now: u64) -> Option<(u8, bool)> {
+        self.stats.accesses += 1;
+        let idx = self.set_index(line_addr);
+        let mut hit = None;
+        for e in self.set(idx).iter_mut() {
+            if e.valid && e.tag == line_addr {
+                e.last_use = now;
+                hit = Some((e.bursts, e.compressed));
+                break;
+            }
+        }
+        if hit.is_some() {
+            self.stats.hits += 1;
+        } else {
+            self.stats.misses += 1;
+        }
+        hit
+    }
+
+    /// Peek without touching stats or LRU (used by tests and the MD path).
+    pub fn contains(&self, line_addr: u64) -> bool {
+        let idx = self.set_index(line_addr);
+        let s = idx * self.tags_per_set;
+        self.sets[s..s + self.tags_per_set]
+            .iter()
+            .any(|e| e.valid && e.tag == line_addr)
+    }
+
+    /// Mark a resident line dirty (store hit). Returns false if not present.
+    pub fn mark_dirty(&mut self, line_addr: u64, bursts: u8, compressed: bool, now: u64) -> bool {
+        let idx = self.set_index(line_addr);
+        for e in self.set(idx).iter_mut() {
+            if e.valid && e.tag == line_addr {
+                e.dirty = true;
+                e.bursts = bursts;
+                e.compressed = compressed;
+                e.sectors = if compressed { bursts } else { 4 };
+                e.last_use = now;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Insert a line, evicting as needed. In compressed mode a fill may
+    /// evict multiple victims to free enough data sectors; dirty victims
+    /// are returned for writeback.
+    pub fn insert(
+        &mut self,
+        line_addr: u64,
+        dirty: bool,
+        bursts: u8,
+        compressed: bool,
+        now: u64,
+    ) -> Vec<Eviction> {
+        let sectors = if compressed { bursts.max(1) } else { 4 };
+        let idx = self.set_index(line_addr);
+        let sectors_budget = self.sectors_per_set;
+        let set = self.set(idx);
+        let mut evictions = Vec::new();
+
+        // Already present (e.g., refill of an updated line): update in place.
+        if let Some(e) = set.iter_mut().find(|e| e.valid && e.tag == line_addr) {
+            e.dirty |= dirty;
+            e.bursts = bursts;
+            e.compressed = compressed;
+            e.sectors = sectors;
+            e.last_use = now;
+            return evictions;
+        }
+
+        // Evict until both a tag slot and enough data sectors are free.
+        let mut evicted_total = 0u64;
+        loop {
+            let used: u32 = set.iter().filter(|e| e.valid).map(|e| e.sectors as u32).sum();
+            let free_tag = set.iter().any(|e| !e.valid);
+            if free_tag && used + sectors as u32 <= sectors_budget as u32 {
+                break;
+            }
+            // Evict LRU.
+            let victim = set
+                .iter_mut()
+                .filter(|e| e.valid)
+                .min_by_key(|e| e.last_use)
+                .expect("set cannot be empty here");
+            if victim.dirty {
+                evictions.push(Eviction {
+                    line_addr: victim.tag,
+                    bursts: victim.bursts,
+                    compressed: victim.compressed,
+                });
+            }
+            *victim = INVALID;
+            evicted_total += 1;
+        }
+        let slot = set.iter_mut().find(|e| !e.valid).unwrap();
+        *slot = Entry {
+            tag: line_addr,
+            valid: true,
+            dirty,
+            sectors,
+            bursts,
+            compressed,
+            last_use: now,
+        };
+        self.stats.evictions += evicted_total;
+        evictions
+    }
+
+    /// Drop a line if present (write-through no-allocate stores).
+    pub fn invalidate(&mut self, line_addr: u64) {
+        let idx = self.set_index(line_addr);
+        for e in self.set(idx).iter_mut() {
+            if e.valid && e.tag == line_addr {
+                *e = INVALID;
+                return;
+            }
+        }
+    }
+
+    /// Nominal capacity in lines (ignoring compression).
+    pub fn capacity_lines(&self) -> usize {
+        self.n_sets * self.sectors_per_set / 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Cache {
+        // 4 sets × 4 ways of 128B lines = 2KB.
+        Cache::new(2048, 4, 128, 1)
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = small();
+        assert!(c.probe(42, 0).is_none());
+        c.insert(42, false, 4, false, 1);
+        assert_eq!(c.probe(42, 2), Some((4, false)));
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = small();
+        // Fill one set: find 5 addresses in the same set.
+        let mut addrs = Vec::new();
+        let target = {
+            let c2 = small();
+            c2.set_index(1)
+        };
+        let mut a = 0u64;
+        while addrs.len() < 5 {
+            if small().set_index(a) == target {
+                addrs.push(a);
+            }
+            a += 1;
+        }
+        for (t, &addr) in addrs[..4].iter().enumerate() {
+            c.insert(addr, false, 4, false, t as u64);
+        }
+        // Touch addrs[0] so addrs[1] becomes LRU.
+        c.probe(addrs[0], 10);
+        c.insert(addrs[4], false, 4, false, 11);
+        assert!(c.contains(addrs[0]));
+        assert!(!c.contains(addrs[1]), "LRU victim should be evicted");
+        assert!(c.contains(addrs[4]));
+    }
+
+    #[test]
+    fn dirty_eviction_returned() {
+        let mut c = small();
+        let target = small().set_index(7);
+        let mut addrs = Vec::new();
+        let mut a = 0u64;
+        while addrs.len() < 5 {
+            if small().set_index(a) == target {
+                addrs.push(a);
+            }
+            a += 1;
+        }
+        c.insert(addrs[0], true, 3, true, 0);
+        for (t, &addr) in addrs[1..4].iter().enumerate() {
+            c.insert(addr, false, 4, false, 1 + t as u64);
+        }
+        let ev = c.insert(addrs[4], false, 4, false, 10);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].line_addr, addrs[0]);
+        assert_eq!(ev[0].bursts, 3);
+        assert!(ev[0].compressed);
+    }
+
+    #[test]
+    fn compressed_mode_holds_more_lines() {
+        // 1 set × 4 ways, tag_mult 4 → 16 tags, 16 sectors of data.
+        let mut c = Cache::new(512, 4, 128, 4);
+        // 1-sector (fully compressed) lines: 16 should fit where 4 did.
+        for i in 0..16u64 {
+            c.insert(i, false, 1, true, i);
+        }
+        let resident = (0..16u64).filter(|&i| c.contains(i)).count();
+        assert_eq!(resident, 16);
+        // Uncompressed lines: only 4 fit.
+        let mut c2 = Cache::new(512, 4, 128, 4);
+        for i in 0..16u64 {
+            c2.insert(i, false, 4, false, i);
+        }
+        let resident2 = (0..16u64).filter(|&i| c2.contains(i)).count();
+        assert_eq!(resident2, 4);
+    }
+
+    #[test]
+    fn compressed_insert_may_evict_multiple() {
+        let mut c = Cache::new(512, 4, 128, 4); // 16 sectors
+        for i in 0..16u64 {
+            c.insert(i, false, 1, true, i);
+        }
+        // Inserting an uncompressed line (4 sectors) evicts ≥4 victims.
+        c.insert(100, false, 4, false, 100);
+        let resident = (0..16u64).filter(|&i| c.contains(i)).count();
+        assert!(resident <= 12, "resident={resident}");
+        assert!(c.contains(100));
+    }
+
+    #[test]
+    fn mark_dirty_only_if_present() {
+        let mut c = small();
+        assert!(!c.mark_dirty(9, 4, false, 0));
+        c.insert(9, false, 4, false, 0);
+        assert!(c.mark_dirty(9, 2, true, 1));
+        // Evict it and confirm the dirty metadata travels.
+        let set = c.set_index(9);
+        let mut a = 1000u64;
+        let mut n = 0;
+        while n < 8 {
+            if c.set_index(a) == set {
+                c.insert(a, false, 4, false, 10 + a);
+                n += 1;
+            }
+            a += 1;
+        }
+        assert!(!c.contains(9));
+    }
+
+    #[test]
+    fn update_in_place_no_eviction() {
+        let mut c = small();
+        c.insert(5, false, 4, false, 0);
+        let ev = c.insert(5, true, 2, true, 1);
+        assert!(ev.is_empty());
+        assert_eq!(c.probe(5, 2), Some((2, true)));
+    }
+}

@@ -1,0 +1,135 @@
+//! Crossbar interconnect model: one crossbar per direction (Table 1).
+//!
+//! Contention is modelled with per-port reservation: the forward crossbar
+//! serializes at each MC's ingress (many SMs feeding one slice) and the
+//! return crossbar at each SM's ingress. Payloads occupy a port for
+//! `bytes / icnt_bytes_per_cycle` cycles, so compressed responses (fewer
+//! flits) free the port sooner — the interconnect-compression benefit the
+//! paper reports for `bfs`/`mst` (§7.1).
+
+use crate::stats::IcntStats;
+
+/// A bandwidth-reserving port: transfers serialize on `free_at`.
+#[derive(Clone, Debug)]
+pub struct Port {
+    pub free_at: f64,
+    bytes_per_cycle: f64,
+}
+
+impl Port {
+    pub fn new(bytes_per_cycle: f64) -> Port {
+        Port { free_at: 0.0, bytes_per_cycle }
+    }
+
+    /// Reserve the port for `bytes` starting no earlier than `now`;
+    /// returns the completion time.
+    pub fn transfer(&mut self, now: f64, bytes: f64) -> f64 {
+        let start = if now > self.free_at { now } else { self.free_at };
+        let done = start + bytes / self.bytes_per_cycle;
+        self.free_at = done;
+        done
+    }
+
+    /// Utilization probe for throttling decisions.
+    pub fn busy(&self, now: f64) -> bool {
+        self.free_at > now
+    }
+}
+
+/// The two crossbars.
+pub struct Crossbar {
+    /// Forward direction: contention at each MC ingress.
+    fwd: Vec<Port>,
+    /// Return direction, stage 1: each MC's *egress* port — six MCs feed
+    /// fifteen SMs, so responses serialize here first. This is where
+    /// interconnect compression pays off: an uncompressed 128B response
+    /// holds the port 4× longer than a 1-burst compressed one.
+    back_egress: Vec<Port>,
+    /// Return direction, stage 2: each SM's ingress port.
+    back: Vec<Port>,
+    latency: f64,
+    pub stats: IcntStats,
+}
+
+/// A small request/control packet (address + command) in bytes.
+pub const CTRL_BYTES: f64 = 8.0;
+
+impl Crossbar {
+    pub fn new(n_sms: usize, n_mcs: usize, bytes_per_cycle: f64, latency: u32) -> Crossbar {
+        Crossbar {
+            fwd: (0..n_mcs).map(|_| Port::new(bytes_per_cycle)).collect(),
+            back_egress: (0..n_mcs).map(|_| Port::new(bytes_per_cycle)).collect(),
+            back: (0..n_sms).map(|_| Port::new(bytes_per_cycle)).collect(),
+            latency: latency as f64,
+            stats: IcntStats::default(),
+        }
+    }
+
+    /// SM → MC packet carrying `payload_bytes` of data (0 for a read
+    /// request). Returns arrival time at the MC.
+    pub fn send_fwd(&mut self, now: f64, mc: usize, payload_bytes: f64) -> f64 {
+        self.stats.packets_fwd += 1;
+        self.stats.flits_fwd += 1 + (payload_bytes / 32.0).ceil() as u64;
+        let done = self.fwd[mc].transfer(now, CTRL_BYTES + payload_bytes);
+        done + self.latency
+    }
+
+    /// MC → SM response carrying `payload_bytes` (store-and-forward through
+    /// the MC egress port, then the SM ingress port). Returns arrival.
+    pub fn send_back(&mut self, now: f64, mc: usize, sm: usize, payload_bytes: f64) -> f64 {
+        self.stats.packets_back += 1;
+        self.stats.flits_back += 1 + (payload_bytes / 32.0).ceil() as u64;
+        let t1 = self.back_egress[mc].transfer(now, CTRL_BYTES + payload_bytes);
+        let done = self.back[sm].transfer(t1, CTRL_BYTES + payload_bytes);
+        done + self.latency
+    }
+
+    /// Mean forward-port backlog in cycles (AWC feedback input).
+    pub fn fwd_backlog(&self, now: f64) -> f64 {
+        let sum: f64 = self.fwd.iter().map(|p| (p.free_at - now).max(0.0)).sum();
+        sum / self.fwd.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn port_serializes() {
+        let mut p = Port::new(32.0);
+        let t1 = p.transfer(0.0, 128.0); // 4 cycles
+        let t2 = p.transfer(0.0, 128.0); // queued behind
+        assert!((t1 - 4.0).abs() < 1e-9);
+        assert!((t2 - 8.0).abs() < 1e-9);
+        // After a gap, no queuing.
+        let t3 = p.transfer(100.0, 32.0);
+        assert!((t3 - 101.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compressed_payload_frees_port_sooner() {
+        let mut x = Crossbar::new(2, 2, 32.0, 8);
+        let full = x.send_back(0.0, 0, 0, 128.0);
+        let mut y = Crossbar::new(2, 2, 32.0, 8);
+        let comp = y.send_back(0.0, 0, 0, 32.0);
+        assert!(comp < full);
+    }
+
+    #[test]
+    fn independent_ports_no_contention() {
+        let mut x = Crossbar::new(2, 2, 32.0, 8);
+        let a = x.send_fwd(0.0, 0, 128.0);
+        let b = x.send_fwd(0.0, 1, 128.0);
+        assert!((a - b).abs() < 1e-9, "different MCs must not contend");
+    }
+
+    #[test]
+    fn flit_accounting() {
+        let mut x = Crossbar::new(1, 1, 32.0, 8);
+        x.send_fwd(0.0, 0, 0.0); // read request: 1 ctrl flit
+        x.send_back(0.0, 0, 0, 128.0); // response: 1 ctrl + 4 data flits
+        assert_eq!(x.stats.flits_fwd, 1);
+        assert_eq!(x.stats.flits_back, 5);
+    }
+}

@@ -1,0 +1,42 @@
+//! Shared harness for the `harness = false` bench binaries (criterion is
+//! unavailable in the offline image — DESIGN.md §3).
+//!
+//! Every bench regenerates one paper table/figure, printing the figure and
+//! its wall time. `CABA_BENCH_SCALE` sets the workload scale (default 0.1;
+//! use 0.25–1.0 for publication-fidelity runs). `--quick` in the bench args
+//! drops to 0.03 for smoke runs.
+
+use std::time::Instant;
+
+/// Workload scale for bench runs.
+pub fn bench_scale() -> f64 {
+    if std::env::args().any(|a| a == "--quick") {
+        return 0.03;
+    }
+    std::env::var("CABA_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1)
+}
+
+/// Run one named figure generator and report timing.
+pub fn run_bench(name: &str, f: impl FnOnce(f64) -> String) {
+    let scale = bench_scale();
+    eprintln!("[{name}] generating at scale {scale} ...");
+    let t0 = Instant::now();
+    let out = f(scale);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{out}");
+    println!("[{name}] regenerated in {dt:.2}s (scale {scale})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_scale_parses() {
+        let s = bench_scale();
+        assert!(s > 0.0 && s <= 1.0);
+    }
+}

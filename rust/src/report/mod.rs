@@ -1,0 +1,139 @@
+//! Report formatting: markdown tables for the figure/table regenerators,
+//! normalized-metric helpers (geomean speedups, etc.).
+
+pub mod benchutil;
+pub mod figures;
+
+use crate::util::{geomean, mean};
+
+/// A simple column-aligned markdown table builder.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: impl IntoIterator<Item = S>) -> Table {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: impl IntoIterator<Item = S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {:<width$} |", c, width = w));
+            }
+            s
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with fixed decimals.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, v)
+}
+
+/// Format a ratio as a percentage delta ("+41.7%").
+pub fn pct_delta(ratio: f64) -> String {
+    format!("{:+.1}%", (ratio - 1.0) * 100.0)
+}
+
+/// Summary row helpers for per-app × per-design matrices.
+pub struct Series {
+    pub label: String,
+    pub values: Vec<f64>,
+}
+
+/// Render a figure-style matrix: one row per app, one column per series,
+/// with GMean and Mean summary rows (the paper's figures report averages
+/// over the app set).
+pub fn figure_matrix(app_names: &[&str], series: &[Series], decimals: usize) -> String {
+    let mut header = vec!["app".to_string()];
+    header.extend(series.iter().map(|s| s.label.clone()));
+    let mut t = Table::new(header);
+    for (i, app) in app_names.iter().enumerate() {
+        let mut row = vec![app.to_string()];
+        row.extend(series.iter().map(|s| f(s.values[i], decimals)));
+        t.row(row);
+    }
+    let mut gm = vec!["GMean".to_string()];
+    gm.extend(series.iter().map(|s| f(geomean(&s.values), decimals)));
+    t.row(gm);
+    let mut am = vec!["Mean".to_string()];
+    am.extend(series.iter().map(|s| f(mean(&s.values), decimals)));
+    t.row(am);
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(["app", "ipc"]);
+        t.row(["PVC", "1.23"]);
+        t.row(["longer-name", "0.5"]);
+        let s = t.render();
+        assert!(s.contains("| app         | ipc  |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn matrix_includes_summaries() {
+        let s = figure_matrix(
+            &["x", "y"],
+            &[Series { label: "speedup".into(), values: vec![1.0, 4.0] }],
+            2,
+        );
+        assert!(s.contains("GMean"));
+        assert!(s.contains("2.00")); // geomean(1,4)
+        assert!(s.contains("2.50")); // mean(1,4)
+    }
+
+    #[test]
+    fn pct_delta_formats() {
+        assert_eq!(pct_delta(1.417), "+41.7%");
+        assert_eq!(pct_delta(0.9), "-10.0%");
+    }
+}

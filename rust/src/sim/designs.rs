@@ -1,0 +1,234 @@
+//! The evaluated system designs (§7): Base, HW-BDI-Mem, HW-BDI, CABA-*,
+//! Ideal-BDI, plus the Fig. 15 cache-compression and Fig. 16 optimization
+//! variants.
+
+use crate::compress::Algo;
+
+/// Who performs (de)compression and at what cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mechanism {
+    /// No compression anywhere.
+    None,
+    /// Dedicated logic: fixed 1-cycle decompression / 5-cycle compression
+    /// (paper's Synopsys BDI implementation).
+    Hardware,
+    /// Assist warps on the cores (the paper's contribution): subroutines
+    /// occupy real issue slots and pipelines.
+    Caba,
+    /// Compression benefits with zero latency/energy overhead (upper bound).
+    Ideal,
+}
+
+/// A complete design point.
+#[derive(Clone, Copy, Debug)]
+pub struct Design {
+    pub name: &'static str,
+    pub algo: Algo,
+    pub mechanism: Mechanism,
+    /// DRAM link transfers compressed bursts.
+    pub mem_compression: bool,
+    /// Interconnect data payloads travel compressed.
+    pub icnt_compression: bool,
+    /// L2 keeps lines in compressed form (default for icnt-compressed
+    /// designs; `false` = Fig. 16's "Uncompressed L2" option).
+    pub l2_holds_compressed: bool,
+    /// Fig. 16 "Direct-Load": the coalescer extracts only needed words, so
+    /// L1 keeps the compressed form and every L1 hit pays decompression.
+    pub direct_load: bool,
+    /// Fig. 15 cache-capacity compression: tag multiplier (1 = off).
+    pub l1_tag_mult: usize,
+    pub l2_tag_mult: usize,
+    /// §8.2 extension: stride-prefetching assist warps.
+    pub prefetch: bool,
+    /// §8.1 extension: memoization assist warps for SFU computations.
+    pub memoization: bool,
+}
+
+impl Design {
+    pub const fn base() -> Design {
+        Design {
+            name: "Base",
+            algo: Algo::Bdi,
+            mechanism: Mechanism::None,
+            mem_compression: false,
+            icnt_compression: false,
+            l2_holds_compressed: false,
+            direct_load: false,
+            l1_tag_mult: 1,
+            l2_tag_mult: 1,
+            prefetch: false,
+            memoization: false,
+        }
+    }
+
+    /// §8.2: assist-warp prefetching, no compression — the framework's
+    /// memory-latency use case.
+    pub const fn caba_prefetch() -> Design {
+        Design {
+            name: "CABA-Prefetch",
+            mechanism: Mechanism::Caba,
+            prefetch: true,
+            ..Design::base()
+        }
+    }
+
+    /// §8.1: assist-warp memoization, no compression — the framework's
+    /// compute-bottleneck use case (converts computation into storage).
+    pub const fn caba_memo() -> Design {
+        Design {
+            name: "CABA-Memo",
+            mechanism: Mechanism::Caba,
+            memoization: true,
+            ..Design::base()
+        }
+    }
+
+    /// HW-BDI-Mem: dedicated logic at the MCs; DRAM link only (prior work
+    /// [100]-style). Data crosses the interconnect uncompressed.
+    pub const fn hw_bdi_mem() -> Design {
+        Design {
+            name: "HW-BDI-Mem",
+            mechanism: Mechanism::Hardware,
+            mem_compression: true,
+            ..Design::base()
+        }
+    }
+
+    /// HW-BDI: dedicated logic at the cores; both interconnect and DRAM.
+    pub const fn hw_bdi() -> Design {
+        Design {
+            name: "HW-BDI",
+            mechanism: Mechanism::Hardware,
+            mem_compression: true,
+            icnt_compression: true,
+            l2_holds_compressed: true,
+            ..Design::base()
+        }
+    }
+
+    /// CABA with a given algorithm: assist warps at the cores; both
+    /// interconnect and DRAM compressed.
+    pub const fn caba(algo: Algo) -> Design {
+        Design {
+            name: match algo {
+                Algo::Bdi => "CABA-BDI",
+                Algo::Fpc => "CABA-FPC",
+                Algo::CPack => "CABA-CPack",
+                Algo::BestOfAll => "CABA-BestOfAll",
+            },
+            algo,
+            mechanism: Mechanism::Caba,
+            mem_compression: true,
+            icnt_compression: true,
+            l2_holds_compressed: true,
+            ..Design::base()
+        }
+    }
+
+    /// Ideal-BDI: compression benefits with no overheads.
+    pub const fn ideal_bdi() -> Design {
+        Design {
+            name: "Ideal-BDI",
+            mechanism: Mechanism::Ideal,
+            mem_compression: true,
+            icnt_compression: true,
+            l2_holds_compressed: true,
+            ..Design::base()
+        }
+    }
+
+    /// Fig. 16 "Uncompressed L2" variant of CABA-BDI.
+    pub const fn caba_uncompressed_l2() -> Design {
+        Design {
+            name: "CABA-BDI-UncompL2",
+            l2_holds_compressed: false,
+            ..Design::caba(Algo::Bdi)
+        }
+    }
+
+    /// Fig. 16 "Direct-Load" variant of CABA-BDI.
+    pub const fn caba_direct_load() -> Design {
+        Design {
+            name: "CABA-BDI-DirectLoad",
+            direct_load: true,
+            ..Design::caba(Algo::Bdi)
+        }
+    }
+
+    /// Fig. 15 cache-capacity compression on top of CABA-BDI.
+    pub const fn caba_cache_compressed(l1_mult: usize, l2_mult: usize) -> Design {
+        Design {
+            name: match (l1_mult, l2_mult) {
+                (2, 1) => "CABA-BDI-L1-2x",
+                (4, 1) => "CABA-BDI-L1-4x",
+                (1, 2) => "CABA-BDI-L2-2x",
+                (1, 4) => "CABA-BDI-L2-4x",
+                _ => "CABA-BDI-cache",
+            },
+            l1_tag_mult: l1_mult,
+            l2_tag_mult: l2_mult,
+            ..Design::caba(Algo::Bdi)
+        }
+    }
+
+    /// The five headline designs of Figs. 8–11.
+    pub fn headline() -> [Design; 5] {
+        [
+            Design::base(),
+            Design::hw_bdi_mem(),
+            Design::hw_bdi(),
+            Design::caba(Algo::Bdi),
+            Design::ideal_bdi(),
+        ]
+    }
+
+    /// Does any compression happen at all?
+    pub fn compression_enabled(&self) -> bool {
+        self.mem_compression || self.icnt_compression || self.l1_tag_mult > 1 || self.l2_tag_mult > 1
+    }
+
+    /// Does this design run assist warps at all?
+    pub fn uses_assist_warps(&self) -> bool {
+        self.mechanism == Mechanism::Caba
+            && (self.compression_enabled() || self.prefetch || self.memoization)
+    }
+
+    /// Does the L1 store compressed lines (Fig. 15 L1 capacity mode or
+    /// Fig. 16 direct-load)?
+    pub fn l1_holds_compressed(&self) -> bool {
+        self.l1_tag_mult > 1 || self.direct_load
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_names() {
+        let names: Vec<_> = Design::headline().iter().map(|d| d.name).collect();
+        assert_eq!(names, ["Base", "HW-BDI-Mem", "HW-BDI", "CABA-BDI", "Ideal-BDI"]);
+    }
+
+    #[test]
+    fn base_has_no_compression() {
+        let b = Design::base();
+        assert!(!b.compression_enabled());
+        assert_eq!(b.mechanism, Mechanism::None);
+    }
+
+    #[test]
+    fn hw_bdi_mem_leaves_icnt_uncompressed() {
+        let d = Design::hw_bdi_mem();
+        assert!(d.mem_compression && !d.icnt_compression && !d.l2_holds_compressed);
+    }
+
+    #[test]
+    fn caba_variants() {
+        assert_eq!(Design::caba(Algo::Fpc).name, "CABA-FPC");
+        assert!(!Design::caba_uncompressed_l2().l2_holds_compressed);
+        assert!(Design::caba_direct_load().l1_holds_compressed());
+        assert!(Design::caba_cache_compressed(2, 1).l1_holds_compressed());
+        assert_eq!(Design::caba_cache_compressed(1, 4).l2_tag_mult, 4);
+    }
+}

@@ -1,0 +1,366 @@
+//! The top-level simulator: wires the SMs, memory system, CABA controllers,
+//! data model and workload into a cycle loop, and produces [`SimStats`].
+
+pub mod designs;
+
+use crate::compress::oracle::{CompressionOracle, LineVerdict, MemoOracle, NativeOracle};
+use crate::compress::Algo;
+use crate::config::SimConfig;
+use crate::core::{Core, CycleCtx};
+use crate::mem::MemSystem;
+use crate::stats::SimStats;
+use crate::workload::{apps::AppSpec, Workload};
+use designs::{Design, Mechanism};
+use std::collections::{HashMap, HashSet};
+
+/// Extra registers per thread reserved for assist-warp contexts when CABA
+/// is enabled (§4.2.2: each enabled subroutine's register need is added to
+/// the per-block requirement). The subroutines are short vector sequences
+/// needing ~2 registers per lane; they draw first on the statically
+/// unallocated registers (Fig. 3), so occupancy drops only for apps with a
+/// nearly fully-allocated register file — the effect §4.2.2 warns about.
+pub const CABA_EXTRA_REGS: u32 = 2;
+
+/// The simulator's view of memory *contents*: line data is a pure function
+/// of (address, epoch), so stores only bump epochs; the compression oracle
+/// verdict is cached per (line, epoch).
+pub struct DataModel {
+    oracle: Box<dyn CompressionOracle>,
+    epochs: HashMap<u64, u32>,
+    /// Lines whose DRAM image is uncompressed (compression skipped at
+    /// store time: throttle / AWT full / buffer overflow).
+    stored_uncompressed: HashSet<u64>,
+    verdict_cache: HashMap<u64, (u32, LineVerdict)>,
+}
+
+impl DataModel {
+    pub fn new(oracle: Box<dyn CompressionOracle>) -> DataModel {
+        DataModel {
+            oracle,
+            epochs: HashMap::new(),
+            stored_uncompressed: HashSet::new(),
+            verdict_cache: HashMap::new(),
+        }
+    }
+
+    /// Compression verdict for the line's *stored* DRAM image.
+    pub fn verdict(&mut self, wl: &Workload, algo: Algo, line: u64) -> LineVerdict {
+        if self.stored_uncompressed.contains(&line) {
+            return LineVerdict::uncompressed();
+        }
+        let epoch = self.epochs.get(&line).copied().unwrap_or(0);
+        if let Some(&(e, v)) = self.verdict_cache.get(&line) {
+            if e == epoch {
+                return v;
+            }
+        }
+        let data = wl.line_data(line, epoch);
+        let v = self.oracle.analyze_one(algo, &data);
+        self.verdict_cache.insert(line, (epoch, v));
+        v
+    }
+
+    /// Encoding from the most recent verdict for this line (drives the
+    /// decompression-subroutine shape; falls back to a mid-cost encoding).
+    pub fn cached_encoding(&self, line: u64) -> u8 {
+        self.verdict_cache
+            .get(&line)
+            .map(|&(_, v)| v.encoding)
+            .unwrap_or(crate::compress::bdi::ENC_B8D1)
+    }
+
+    /// A store rewrote this line.
+    pub fn bump_epoch(&mut self, line: u64) {
+        *self.epochs.entry(line).or_insert(0) += 1;
+    }
+
+    /// Record whether the DRAM image of this line is compressed.
+    pub fn set_stored_compressed(&mut self, line: u64, compressed: bool) {
+        if compressed {
+            self.stored_uncompressed.remove(&line);
+        } else {
+            self.stored_uncompressed.insert(line);
+        }
+    }
+
+    pub fn oracle_backend(&self) -> &'static str {
+        self.oracle.backend_name()
+    }
+}
+
+/// A complete simulation instance.
+pub struct Simulator {
+    pub cfg: SimConfig,
+    pub design: Design,
+    pub wl: Workload,
+    cores: Vec<Core>,
+    mem: MemSystem,
+    data: DataModel,
+    /// Next CTA id to dispatch.
+    next_cta: u64,
+    /// (core, group) slots awaiting a CTA.
+    pub stats: SimStats,
+}
+
+impl Simulator {
+    /// Build with the default (memoized native) oracle.
+    pub fn new(cfg: SimConfig, design: Design, app: &'static AppSpec, scale: f64) -> Simulator {
+        Self::with_oracle(
+            cfg,
+            design,
+            app,
+            scale,
+            Box::new(MemoOracle::new(NativeOracle)),
+        )
+    }
+
+    /// Build with an explicit oracle backend (e.g. the PJRT oracle).
+    pub fn with_oracle(
+        cfg: SimConfig,
+        design: Design,
+        app: &'static AppSpec,
+        scale: f64,
+        oracle: Box<dyn CompressionOracle>,
+    ) -> Simulator {
+        let extra_regs = if design.mechanism == Mechanism::Caba {
+            CABA_EXTRA_REGS
+        } else {
+            0
+        };
+        let wl = Workload::build_with_extra_regs(app, &cfg, scale, extra_regs);
+        let cores = (0..cfg.n_sms).map(|i| Core::new(i, &cfg, &design)).collect();
+        let mem = MemSystem::new(&cfg, &design);
+        Simulator {
+            cores,
+            mem,
+            data: DataModel::new(oracle),
+            next_cta: 0,
+            stats: SimStats::default(),
+            cfg,
+            design,
+            wl,
+        }
+    }
+
+    /// Should this app run with compression at all? The paper disables
+    /// CABA for apps the profiler finds incompressible / compute-bound
+    /// (§6: "we rely on static profiling ... disable CABA-based
+    /// compression for the others"); they see neither gain nor loss.
+    pub fn compression_profitable(app: &AppSpec) -> bool {
+        app.in_eval_set
+    }
+
+    fn dispatch_ctas(&mut self) {
+        let groups = self.wl.occ.ctas_per_sm as usize;
+        for core in &mut self.cores {
+            for g in 0..groups {
+                if self.next_cta >= self.wl.total_ctas as u64 {
+                    return;
+                }
+                if core.group_done(g, &self.wl) && core.warps[g * self.wl.occ.warps_per_cta as usize].uid == u64::MAX
+                {
+                    core.launch_cta(g, self.next_cta, &self.wl);
+                    self.next_cta += 1;
+                }
+            }
+        }
+    }
+
+    fn refill_ctas(&mut self) -> bool {
+        if self.next_cta >= self.wl.total_ctas as u64 {
+            return false;
+        }
+        let mut launched = false;
+        let groups = self.wl.occ.ctas_per_sm as usize;
+        let wpc = self.wl.occ.warps_per_cta as usize;
+        for core in &mut self.cores {
+            for g in 0..groups {
+                if self.next_cta >= self.wl.total_ctas as u64 {
+                    return launched;
+                }
+                let base = g * wpc;
+                let slot_free = core.warps[base].uid == u64::MAX
+                    || core.warps[base..base + wpc].iter().all(|w| w.done);
+                if slot_free && core.group_done(g, &self.wl) {
+                    core.launch_cta(g, self.next_cta, &self.wl);
+                    self.stats.ctas_done += 1;
+                    self.next_cta += 1;
+                    launched = true;
+                }
+            }
+        }
+        launched
+    }
+
+    /// Run to completion (or the cycle/instruction budget) and return the
+    /// collected statistics.
+    pub fn run(&mut self) -> SimStats {
+        self.dispatch_ctas();
+        let mut now: u64 = 0;
+        loop {
+            // Tick every SM.
+            let mut all_idle = true;
+            let mut min_next = u64::MAX;
+            for i in 0..self.cores.len() {
+                let core = &mut self.cores[i];
+                let mut ctx = CycleCtx {
+                    cfg: &self.cfg,
+                    design: &self.design,
+                    wl: &self.wl,
+                    mem: &mut self.mem,
+                    data: &mut self.data,
+                    stats: &mut self.stats,
+                };
+                core.cycle(now, &mut ctx);
+                if core.any_live() {
+                    all_idle = false;
+                }
+                min_next = min_next.min(core.next_event);
+            }
+            let launched = self.refill_ctas();
+
+            now += 1;
+            // Fast-forward over cycles where no core can make progress
+            // (every warp is waiting on a known future ready time). The
+            // skipped scheduler slots are charged as data-dependence stalls,
+            // which is exactly what those cycles are (Fig. 2 taxonomy).
+            if !launched && min_next > now && min_next != u64::MAX {
+                let skip = (min_next - now).min(100_000);
+                if skip > 0 {
+                    let sched_slots = self.cfg.schedulers_per_sm as u64 * self.cores.len() as u64;
+                    self.stats.issue.data_stall += skip * sched_slots;
+                    now += skip;
+                }
+            }
+
+            let drained = all_idle && self.next_cta >= self.wl.total_ctas as u64;
+            if drained || now >= self.cfg.max_cycles || self.stats.warp_insts >= self.cfg.max_warp_insts
+            {
+                self.stats.finished = drained;
+                break;
+            }
+        }
+        self.collect(now);
+        self.stats.clone()
+    }
+
+    fn collect(&mut self, now: u64) {
+        let s = &mut self.stats;
+        s.cycles = now;
+        for core in &self.cores {
+            s.issue.active += core.issue.active;
+            s.issue.compute_stall += core.issue.compute_stall;
+            s.issue.memory_stall += core.issue.memory_stall;
+            s.issue.data_stall += core.issue.data_stall;
+            s.issue.idle += core.issue.idle;
+            s.l1.accesses += core.l1.stats.accesses;
+            s.l1.hits += core.l1.stats.hits;
+            s.l1.misses += core.l1.stats.misses;
+            s.caba.decompress_warps += core.awc.stats.decompress_warps;
+            s.caba.compress_warps += core.awc.stats.compress_warps;
+            s.caba.assist_insts_issued += core.awc.stats.assist_insts_issued;
+            s.caba.assist_insts_idle_slots += core.awc.stats.assist_insts_idle_slots;
+            s.caba.compress_skipped += core.awc.stats.compress_skipped;
+            s.caba.throttled_deploys += core.awc.stats.throttled_deploys;
+            s.caba.killed += core.awc.stats.killed;
+            s.caba.prefetches_issued += core.awc.stats.prefetches_issued;
+            s.caba.memo_lookups += core.awc.stats.memo_lookups;
+            s.caba.memo_hits += core.awc.stats.memo_hits;
+        }
+        for d in &self.mem.dram {
+            s.dram.reads += d.stats.reads;
+            s.dram.writes += d.stats.writes;
+            s.dram.row_hits += d.stats.row_hits;
+            s.dram.row_misses += d.stats.row_misses;
+            s.dram.bursts += d.stats.bursts;
+            s.dram.bursts_uncompressed += d.stats.bursts_uncompressed;
+            s.dram.bus_busy_cycles += d.stats.bus_busy_cycles;
+            s.dram.md_accesses += d.stats.md_accesses;
+        }
+        for m in &self.mem.md {
+            s.md.accesses += m.stats.accesses;
+            s.md.hits += m.stats.hits;
+        }
+        s.icnt = self.mem.icnt.stats;
+        // Energy events.
+        s.energy_events.assist_insts = s.caba.assist_insts_issued;
+        s.energy_events.l2_accesses = self.mem.l2_accesses;
+        s.energy_events.icnt_flits = s.icnt.flits_fwd + s.icnt.flits_back;
+        s.energy_events.dram_bursts = s.dram.bursts;
+        s.energy_events.dram_activates = s.dram.row_misses;
+        s.energy_events.md_cache_accesses = s.md.accesses;
+        s.energy_events.hw_compressor_ops += self.mem.hw_compressor_ops;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::apps;
+
+    fn tiny_cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.n_sms = 2;
+        c.max_cycles = 200_000;
+        c
+    }
+
+    #[test]
+    fn base_run_completes_and_counts() {
+        let app = apps::find("SLA").unwrap();
+        let mut sim = Simulator::new(tiny_cfg(), Design::base(), app, 0.02);
+        let stats = sim.run();
+        assert!(stats.finished, "run did not drain");
+        assert!(stats.warp_insts > 1000);
+        assert!(stats.cycles > 100);
+        assert!(stats.ipc() > 0.0);
+        // Issue accounting covers every scheduler slot (fast-forward
+        // included).
+        assert_eq!(
+            stats.issue.total(),
+            stats.cycles * 2 * 2, // n_sms × schedulers
+        );
+        assert_eq!(stats.dram.compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn caba_reduces_dram_bursts_on_compressible_app() {
+        let app = apps::find("PVC").unwrap(); // LowDynRange: very compressible
+        let base = Simulator::new(tiny_cfg(), Design::base(), app, 0.02).run();
+        let caba = Simulator::new(tiny_cfg(), Design::caba(Algo::Bdi), app, 0.02).run();
+        assert!(caba.finished && base.finished);
+        assert!(
+            caba.dram.compression_ratio() > 1.5,
+            "ratio={}",
+            caba.dram.compression_ratio()
+        );
+        assert!(caba.caba.decompress_warps > 0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let app = apps::find("MM").unwrap();
+        let a = Simulator::new(tiny_cfg(), Design::caba(Algo::Bdi), app, 0.01).run();
+        let b = Simulator::new(tiny_cfg(), Design::caba(Algo::Bdi), app, 0.01).run();
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.warp_insts, b.warp_insts);
+        assert_eq!(a.dram.bursts, b.dram.bursts);
+    }
+
+    #[test]
+    fn incompressible_app_unaffected_by_compression() {
+        // Paper §6: the profiler disables CABA for incompressible apps, so
+        // they run the Base design and see no degradation at all. Forcing
+        // CABA on anyway (below) must still keep the overhead bounded —
+        // the cost is occupancy (assist-warp registers) plus assist-warp
+        // issue slots, which throttling contains.
+        let app = apps::find("SCP").unwrap(); // Random data
+        assert!(!Simulator::compression_profitable(app));
+        let base = Simulator::new(tiny_cfg(), Design::base(), app, 0.02).run();
+        let caba = Simulator::new(tiny_cfg(), Design::caba(Algo::Bdi), app, 0.02).run();
+        let ratio = caba.dram.compression_ratio();
+        assert!(ratio < 1.1, "random data must not compress: {ratio}");
+        let slowdown = base.ipc() / caba.ipc();
+        assert!(slowdown < 1.35, "forced-CABA slowdown too large: {slowdown}");
+    }
+}

@@ -1,0 +1,262 @@
+//! Simulation statistics: the issue-cycle taxonomy of Fig. 2, cache /
+//! interconnect / DRAM counters, compression effectiveness, CABA activity,
+//! and the energy event counts consumed by [`crate::energy`].
+
+/// Why a scheduler slot failed to issue this cycle (Fig. 2's taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StallKind {
+    /// ALU-pipeline structural stall (backed-up compute pipelines).
+    Compute,
+    /// Memory-pipeline structural stall (LSU/MSHR/queues full).
+    Memory,
+    /// All warps blocked on operands of in-flight long-latency ops.
+    DataDependence,
+    /// No warp had a decodable instruction (empty IB / drained / barrier).
+    Idle,
+}
+
+/// Per-scheduler-slot issue-cycle breakdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IssueBreakdown {
+    pub active: u64,
+    pub compute_stall: u64,
+    pub memory_stall: u64,
+    pub data_stall: u64,
+    pub idle: u64,
+}
+
+impl IssueBreakdown {
+    pub fn total(&self) -> u64 {
+        self.active + self.compute_stall + self.memory_stall + self.data_stall + self.idle
+    }
+
+    pub fn record_stall(&mut self, kind: StallKind) {
+        match kind {
+            StallKind::Compute => self.compute_stall += 1,
+            StallKind::Memory => self.memory_stall += 1,
+            StallKind::DataDependence => self.data_stall += 1,
+            StallKind::Idle => self.idle += 1,
+        }
+    }
+
+    /// Fractions in paper order: (compute, memory, data, idle, active).
+    pub fn fractions(&self) -> (f64, f64, f64, f64, f64) {
+        let t = self.total().max(1) as f64;
+        (
+            self.compute_stall as f64 / t,
+            self.memory_stall as f64 / t,
+            self.data_stall as f64 / t,
+            self.idle as f64 / t,
+            self.active as f64 / t,
+        )
+    }
+}
+
+/// Cache counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub accesses: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub writebacks: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// DRAM counters (per run, aggregated over MCs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DramStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    /// 32B bursts actually transferred (compressed traffic shrinks this).
+    pub bursts: u64,
+    /// Bursts an uncompressed system would have moved for the same accesses.
+    pub bursts_uncompressed: u64,
+    /// Core-cycles the data bus was busy (summed over MCs).
+    pub bus_busy_cycles: f64,
+    /// Extra DRAM accesses for compression metadata (MD-cache misses).
+    pub md_accesses: u64,
+}
+
+impl DramStats {
+    /// Paper metric: fraction of DRAM cycles the data bus is busy.
+    pub fn bandwidth_utilization(&self, cycles: u64, n_mcs: usize) -> f64 {
+        if cycles == 0 {
+            0.0
+        } else {
+            (self.bus_busy_cycles / (cycles as f64 * n_mcs as f64)).min(1.0)
+        }
+    }
+
+    /// Paper metric: bursts uncompressed / bursts compressed.
+    pub fn compression_ratio(&self) -> f64 {
+        if self.bursts == 0 {
+            1.0
+        } else {
+            self.bursts_uncompressed as f64 / self.bursts as f64
+        }
+    }
+}
+
+/// Interconnect counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IcntStats {
+    pub packets_fwd: u64,
+    pub packets_back: u64,
+    /// 32B flits in each direction (compression shrinks the data flits).
+    pub flits_fwd: u64,
+    pub flits_back: u64,
+}
+
+/// CABA framework activity.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CabaStats {
+    pub decompress_warps: u64,
+    pub compress_warps: u64,
+    pub assist_insts_issued: u64,
+    /// Assist instructions issued into otherwise-idle issue slots.
+    pub assist_insts_idle_slots: u64,
+    /// Compression skipped (AWT full / throttled) → line sent uncompressed.
+    pub compress_skipped: u64,
+    /// Deployments deferred by the utilization-feedback throttle.
+    pub throttled_deploys: u64,
+    /// Assist warps killed (e.g., line arrived uncompressed).
+    pub killed: u64,
+    /// §8.2 prefetching: lines prefetched by assist warps.
+    pub prefetches_issued: u64,
+    /// §8.1 memoization: LUT lookups and hits.
+    pub memo_lookups: u64,
+    pub memo_hits: u64,
+}
+
+/// MD cache (per-MC compression metadata cache, §5.3.2).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MdCacheStats {
+    pub accesses: u64,
+    pub hits: u64,
+}
+
+impl MdCacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            1.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// Energy-relevant event counts (consumed by [`crate::energy::EnergyModel`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyEvents {
+    /// Parent-warp instructions issued (each ≈ fetch+decode+RF+ALU).
+    pub core_insts: u64,
+    /// Assist-warp instructions issued.
+    pub assist_insts: u64,
+    pub l1_accesses: u64,
+    pub l2_accesses: u64,
+    pub icnt_flits: u64,
+    pub dram_bursts: u64,
+    pub dram_activates: u64,
+    pub md_cache_accesses: u64,
+    /// Dedicated-logic (de)compression operations (HW designs only).
+    pub hw_compressor_ops: u64,
+}
+
+/// Everything a single simulation run produces.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    pub cycles: u64,
+    /// Issued warp-instructions (parent warps only).
+    pub warp_insts: u64,
+    /// Issued thread-instructions (warp_insts × active lanes).
+    pub thread_insts: u64,
+    pub issue: IssueBreakdown,
+    pub l1: CacheStats,
+    pub l2: CacheStats,
+    pub dram: DramStats,
+    pub icnt: IcntStats,
+    pub caba: CabaStats,
+    pub md: MdCacheStats,
+    pub energy_events: EnergyEvents,
+    /// CTAs retired.
+    pub ctas_done: u64,
+    /// All launched warps finished their program.
+    pub finished: bool,
+}
+
+impl SimStats {
+    /// Paper headline metric: warp-instructions per cycle across the chip.
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.warp_insts as f64 / self.cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let mut b = IssueBreakdown::default();
+        b.active = 50;
+        b.record_stall(StallKind::Compute);
+        b.record_stall(StallKind::Memory);
+        b.record_stall(StallKind::DataDependence);
+        b.record_stall(StallKind::Idle);
+        for _ in 0..46 {
+            b.record_stall(StallKind::Memory);
+        }
+        assert_eq!(b.total(), 100);
+        let (c, m, d, i, a) = b.fractions();
+        assert!((c + m + d + i + a - 1.0).abs() < 1e-12);
+        assert!((a - 0.5).abs() < 1e-12);
+        assert!((m - 0.47).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compression_ratio_identity_when_uncompressed() {
+        let d = DramStats {
+            bursts: 100,
+            bursts_uncompressed: 100,
+            ..Default::default()
+        };
+        assert_eq!(d.compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn bw_utilization_bounds() {
+        let d = DramStats {
+            bus_busy_cycles: 600.0,
+            ..Default::default()
+        };
+        let u = d.bandwidth_utilization(100, 6);
+        assert!((u - 1.0).abs() < 1e-12);
+        assert_eq!(d.bandwidth_utilization(0, 6), 0.0);
+    }
+
+    #[test]
+    fn ipc_zero_cycles() {
+        assert_eq!(SimStats::default().ipc(), 0.0);
+    }
+
+    #[test]
+    fn md_hit_rate_empty_is_one() {
+        assert_eq!(MdCacheStats::default().hit_rate(), 1.0);
+    }
+}

@@ -1,0 +1,56 @@
+//! Small self-contained utilities: a deterministic PRNG, a mini
+//! property-testing harness (the offline image has no `proptest`), and
+//! math helpers shared across the simulator and the report generators.
+
+pub mod miniprop;
+pub mod rng;
+
+/// Geometric mean of a slice of positive values. Returns 1.0 for an empty
+/// slice (the natural identity for a normalized-speedup geomean).
+pub fn geomean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 1.0;
+    }
+    let log_sum: f64 = values.iter().map(|v| v.max(1e-12).ln()).sum();
+    (log_sum / values.len() as f64).exp()
+}
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 1.0);
+    }
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 32), 0);
+        assert_eq!(ceil_div(1, 32), 1);
+        assert_eq!(ceil_div(32, 32), 1);
+        assert_eq!(ceil_div(33, 32), 2);
+        assert_eq!(ceil_div(128, 32), 4);
+    }
+}

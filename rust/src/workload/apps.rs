@@ -1,0 +1,491 @@
+//! The paper's 27-application workload pool (§6: CUDA SDK, Rodinia, Mars,
+//! Lonestar), expressed as μ-kernel profiles.
+//!
+//! Each profile captures the observable behaviour the evaluation depends
+//! on: instruction mix (compute vs memory vs SFU), coalescing behaviour,
+//! working-set size and reuse, occupancy-determining resources
+//! (registers/thread, CTA geometry, shared memory — Fig. 3), the paper's
+//! memory-bound/compute-bound classification (Fig. 2), and a data-pattern
+//! assignment reproducing each app's compressibility profile (Fig. 13).
+//!
+//! Parameters were set from the app's published characterizations (suite
+//! papers + GPGPU-Sim studies) and then calibrated so the figure *shapes*
+//! match the paper; see EXPERIMENTS.md.
+
+use super::datagen::DataPattern;
+use crate::isa::AccessKind;
+
+/// Benchmark suite of origin (Table of §6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Suite {
+    CudaSdk,
+    Rodinia,
+    Mars,
+    Lonestar,
+}
+
+/// One array the kernel touches.
+#[derive(Clone, Copy, Debug)]
+pub struct ArraySpec {
+    /// Working set in 128B lines.
+    pub footprint_lines: u64,
+    /// Value-distribution class for this array's contents.
+    pub pattern: DataPattern,
+}
+
+/// A memory operand in the loop body.
+#[derive(Clone, Copy, Debug)]
+pub struct MemOp {
+    /// Index into [`AppSpec::arrays`].
+    pub array: u8,
+    pub kind: AccessKind,
+}
+
+/// Loop-body instruction mix.
+#[derive(Clone, Copy, Debug)]
+pub struct BodySpec {
+    pub loads: &'static [MemOp],
+    pub stores: &'static [MemOp],
+    pub ialu: u8,
+    pub falu: u8,
+    pub fma: u8,
+    pub sfu: u8,
+}
+
+impl BodySpec {
+    pub fn insts_per_iter(&self) -> usize {
+        self.loads.len()
+            + self.stores.len()
+            + (self.ialu + self.falu + self.fma + self.sfu) as usize
+    }
+}
+
+/// Full application profile.
+#[derive(Clone, Copy, Debug)]
+pub struct AppSpec {
+    pub name: &'static str,
+    pub suite: Suite,
+    /// Paper's primary-bottleneck classification (§3: 17/27 memory-bound).
+    pub memory_bound: bool,
+    /// In the bandwidth-sensitive + compressible evaluation set of
+    /// Figs. 8–16 (paper: ≥10% bandwidth compressibility).
+    pub in_eval_set: bool,
+    pub regs_per_thread: u32,
+    pub threads_per_cta: u32,
+    pub smem_per_cta: u32,
+    pub total_ctas: u32,
+    /// Loop iterations per warp.
+    pub iters: u32,
+    pub body: BodySpec,
+    pub arrays: &'static [ArraySpec],
+}
+
+// --- shared pattern constants (Mix needs 'static refs) ---
+static ZERO_HEAVY_HI: DataPattern = DataPattern::ZeroHeavy { p_zero: 0.65 };
+static ZERO_HEAVY_LO: DataPattern = DataPattern::ZeroHeavy { p_zero: 0.4 };
+static LDR8: DataPattern = DataPattern::LowDynRange { value_bytes: 8, delta_bytes: 1 };
+static LDR4: DataPattern = DataPattern::LowDynRange { value_bytes: 4, delta_bytes: 1 };
+static LDR4W: DataPattern = DataPattern::LowDynRange { value_bytes: 4, delta_bytes: 2 };
+static NARROW: DataPattern = DataPattern::NarrowInt { max: 120 };
+#[allow(dead_code)] // retained for future per-app tuning
+static NARROW16: DataPattern = DataPattern::NarrowInt { max: 30000 };
+static PTR4: DataPattern = DataPattern::PointerLike { n_bases: 4 };
+static PTR3: DataPattern = DataPattern::PointerLike { n_bases: 3 };
+static REP: DataPattern = DataPattern::RepBytes;
+static SPARSE: DataPattern = DataPattern::SparseNarrow { p_nonzero: 0.25 };
+static SPARSE_DENSER: DataPattern = DataPattern::SparseNarrow { p_nonzero: 0.45 };
+static FGRID: DataPattern = DataPattern::FloatGrid { exp: 120 };
+static RANDOM: DataPattern = DataPattern::Random;
+static MIX_ZL: DataPattern = DataPattern::Mix { p: 0.5, a: &ZERO_HEAVY_HI, b: &LDR4 };
+static MIX_GRAPH: DataPattern = DataPattern::Mix { p: 0.25, a: &PTR4, b: &MIX_ZL };
+static MIX_TEXT: DataPattern = DataPattern::Mix { p: 0.7, a: &SPARSE_DENSER, b: &REP };
+static MIX_IMG: DataPattern = DataPattern::Mix { p: 0.55, a: &REP, b: &NARROW };
+static MIX_FLOAT: DataPattern = DataPattern::Mix { p: 0.55, a: &FGRID, b: &LDR4 };
+static MIX_HALF_RANDOM: DataPattern = DataPattern::Mix { p: 0.5, a: &LDR4, b: &RANDOM };
+
+const fn co(array: u8) -> MemOp {
+    MemOp { array, kind: AccessKind::Coalesced { reuse: 1 } }
+}
+const fn co_reuse(array: u8, reuse: u16) -> MemOp {
+    MemOp { array, kind: AccessKind::Coalesced { reuse } }
+}
+const fn strided(array: u8, lines: u16) -> MemOp {
+    MemOp { array, kind: AccessKind::Strided { lines } }
+}
+const fn scatter(array: u8, degree: u16) -> MemOp {
+    MemOp { array, kind: AccessKind::Scatter { degree } }
+}
+
+macro_rules! app {
+    ($name:expr, $suite:expr, mem=$mb:expr, eval=$ev:expr, regs=$regs:expr,
+     tpc=$tpc:expr, smem=$smem:expr, ctas=$ctas:expr, iters=$iters:expr,
+     loads=$loads:expr, stores=$stores:expr,
+     ialu=$ialu:expr, falu=$falu:expr, fma=$fma:expr, sfu=$sfu:expr,
+     arrays=$arrays:expr) => {
+        AppSpec {
+            name: $name,
+            suite: $suite,
+            memory_bound: $mb,
+            in_eval_set: $ev,
+            regs_per_thread: $regs,
+            threads_per_cta: $tpc,
+            smem_per_cta: $smem,
+            total_ctas: $ctas,
+            iters: $iters,
+            body: BodySpec {
+                loads: $loads,
+                stores: $stores,
+                ialu: $ialu,
+                falu: $falu,
+                fma: $fma,
+                sfu: $sfu,
+            },
+            arrays: $arrays,
+        }
+    };
+}
+
+/// All 27 applications.
+pub static APPS: &[AppSpec] = &[
+    // ---------------- CUDA SDK ----------------
+    // BFS: frontier-based graph traversal; scattered index loads, mostly
+    // narrow/zero data; interconnect-sensitive (paper §3).
+    app!("BFS", Suite::CudaSdk, mem = true, eval = true, regs = 18, tpc = 512, smem = 0,
+        ctas = 360, iters = 96,
+        loads = &[co(0), scatter(1, 8)], stores = &[co(2)],
+        ialu = 4, falu = 0, fma = 0, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 15, pattern: ZERO_HEAVY_LO },
+            ArraySpec { footprint_lines: 1 << 16, pattern: MIX_GRAPH },
+            ArraySpec { footprint_lines: 1 << 15, pattern: NARROW },
+        ]),
+    // CONS: convolution-separable; streaming coalesced FP with reuse.
+    app!("CONS", Suite::CudaSdk, mem = true, eval = true, regs = 23, tpc = 256, smem = 8192,
+        ctas = 400, iters = 128,
+        loads = &[co_reuse(0, 2), co(1)], stores = &[co(2)],
+        ialu = 1, falu = 2, fma = 3, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 16, pattern: MIX_FLOAT },
+            ArraySpec { footprint_lines: 1 << 14, pattern: LDR4 },
+            ArraySpec { footprint_lines: 1 << 16, pattern: MIX_FLOAT },
+        ]),
+    // JPEG: DCT/quantization; byte-plane data, repeated bytes + narrow ints
+    // (FPC-friendly, Fig. 13).
+    app!("JPEG", Suite::CudaSdk, mem = true, eval = true, regs = 28, tpc = 256, smem = 4096,
+        ctas = 360, iters = 112,
+        loads = &[co(0), co(1)], stores = &[co(2)],
+        ialu = 3, falu = 1, fma = 2, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 16, pattern: MIX_IMG },
+            ArraySpec { footprint_lines: 1 << 13, pattern: NARROW },
+            ArraySpec { footprint_lines: 1 << 16, pattern: MIX_IMG },
+        ]),
+    // LPS: 3D Laplace solver; stencil loads, sparse-narrow grid halos
+    // (compresses better with FPC than BDI — paper §7.3).
+    app!("LPS", Suite::CudaSdk, mem = true, eval = true, regs = 30, tpc = 128, smem = 6144,
+        ctas = 480, iters = 128,
+        loads = &[co(0), strided(0, 2), co(1)], stores = &[co(2)],
+        ialu = 1, falu = 3, fma = 2, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 16, pattern: SPARSE },
+            ArraySpec { footprint_lines: 1 << 13, pattern: SPARSE_DENSER },
+            ArraySpec { footprint_lines: 1 << 16, pattern: SPARSE },
+        ]),
+    // MUM: MUMmer sequence matching; pointer-chasing through suffix tree
+    // (text-like data, C-Pack/FPC-friendly).
+    app!("MUM", Suite::CudaSdk, mem = true, eval = true, regs = 22, tpc = 256, smem = 0,
+        ctas = 360, iters = 96,
+        loads = &[scatter(0, 8), co(1)], stores = &[co(2)],
+        ialu = 5, falu = 0, fma = 0, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 15, pattern: MIX_TEXT },
+            ArraySpec { footprint_lines: 1 << 14, pattern: MIX_GRAPH },
+            ArraySpec { footprint_lines: 1 << 14, pattern: NARROW },
+        ]),
+    // RAY: ray tracing; SFU-heavy compute-bound but compressible scene data.
+    app!("RAY", Suite::CudaSdk, mem = false, eval = true, regs = 40, tpc = 128, smem = 0,
+        ctas = 240, iters = 112,
+        loads = &[co_reuse(0, 4)], stores = &[co(1)],
+        ialu = 2, falu = 4, fma = 4, sfu = 2,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 12, pattern: MIX_FLOAT },
+            ArraySpec { footprint_lines: 1 << 14, pattern: FGRID },
+        ]),
+    // SLA: scan large array; pure streaming, narrow partial sums.
+    app!("SLA", Suite::CudaSdk, mem = true, eval = true, regs = 16, tpc = 256, smem = 2048,
+        ctas = 480, iters = 144,
+        loads = &[co(0)], stores = &[co(1)],
+        ialu = 3, falu = 0, fma = 0, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 17, pattern: NARROW },
+            ArraySpec { footprint_lines: 1 << 17, pattern: NARROW },
+        ]),
+    // TRA: matrix transpose; strided (uncoalesced) on one side.
+    app!("TRA", Suite::CudaSdk, mem = true, eval = true, regs = 19, tpc = 256, smem = 4224,
+        ctas = 400, iters = 96,
+        loads = &[strided(0, 8)], stores = &[co(1)],
+        ialu = 2, falu = 0, fma = 0, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 16, pattern: LDR4 },
+            ArraySpec { footprint_lines: 1 << 16, pattern: LDR4 },
+        ]),
+    // SCP: scalar products; FP-dense, data incompressible (paper: excluded,
+    // no benefit and no degradation).
+    app!("SCP", Suite::CudaSdk, mem = false, eval = false, regs = 24, tpc = 256, smem = 4096,
+        ctas = 300, iters = 128,
+        loads = &[co(0), co(1)], stores = &[co(2)],
+        ialu = 1, falu = 2, fma = 6, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 15, pattern: RANDOM },
+            ArraySpec { footprint_lines: 1 << 15, pattern: RANDOM },
+            ArraySpec { footprint_lines: 1 << 15, pattern: RANDOM },
+        ]),
+    // FWT: fast Walsh transform; butterfly strides, compute-leaning.
+    app!("FWT", Suite::CudaSdk, mem = false, eval = false, regs = 22, tpc = 256, smem = 8192,
+        ctas = 360, iters = 112,
+        loads = &[strided(0, 4)], stores = &[strided(0, 4)],
+        ialu = 2, falu = 3, fma = 1, sfu = 0,
+        arrays = &[ArraySpec { footprint_lines: 1 << 16, pattern: MIX_HALF_RANDOM }]),
+    // STO: store GPU; long hash chains per datum over a cache-resident
+    // working set — the archetypal compute-bound kernel.
+    app!("STO", Suite::CudaSdk, mem = false, eval = false, regs = 36, tpc = 128, smem = 0,
+        ctas = 240, iters = 128,
+        loads = &[co_reuse(0, 4)], stores = &[co(1)],
+        ialu = 28, falu = 0, fma = 0, sfu = 1,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 11, pattern: RANDOM },
+            ArraySpec { footprint_lines: 1 << 12, pattern: RANDOM },
+        ]),
+
+    // ---------------- Rodinia ----------------
+    // hs (hotspot): stencil, FP grid; compute-leaning but compressible.
+    app!("hs", Suite::Rodinia, mem = false, eval = true, regs = 32, tpc = 256, smem = 12288,
+        ctas = 300, iters = 112,
+        loads = &[co_reuse(0, 2), co(1)], stores = &[co(2)],
+        ialu = 1, falu = 5, fma = 4, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 13, pattern: MIX_FLOAT },
+            ArraySpec { footprint_lines: 1 << 13, pattern: FGRID },
+            ArraySpec { footprint_lines: 1 << 13, pattern: MIX_FLOAT },
+        ]),
+    // nw (Needleman-Wunsch): DP wavefront; narrow score matrix
+    // (FPC-friendly per Fig. 13), L1-unfriendly diagonal walk.
+    app!("nw", Suite::Rodinia, mem = true, eval = true, regs = 20, tpc = 128, smem = 8448,
+        ctas = 420, iters = 96,
+        loads = &[co(0), strided(0, 2), co(1)], stores = &[co(0)],
+        ialu = 4, falu = 0, fma = 0, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 16, pattern: SPARSE_DENSER },
+            ArraySpec { footprint_lines: 1 << 13, pattern: NARROW },
+        ]),
+    // sc (streamcluster): distance computation; incompressible coordinates
+    // (paper: excluded from eval set).
+    app!("sc", Suite::Rodinia, mem = false, eval = false, regs = 26, tpc = 256, smem = 0,
+        ctas = 300, iters = 112,
+        loads = &[co(0), co_reuse(1, 8)], stores = &[co(2)],
+        ialu = 1, falu = 3, fma = 4, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 16, pattern: RANDOM },
+            ArraySpec { footprint_lines: 1 << 10, pattern: RANDOM },
+            ArraySpec { footprint_lines: 1 << 13, pattern: RANDOM },
+        ]),
+    // bp (backprop): dense layers; FP weights, moderate.
+    app!("bp", Suite::Rodinia, mem = false, eval = false, regs = 28, tpc = 256, smem = 4096,
+        ctas = 300, iters = 120,
+        loads = &[co(0), co_reuse(1, 4)], stores = &[co(2)],
+        ialu = 1, falu = 2, fma = 6, sfu = 1,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 14, pattern: MIX_FLOAT },
+            ArraySpec { footprint_lines: 1 << 12, pattern: FGRID },
+            ArraySpec { footprint_lines: 1 << 14, pattern: MIX_FLOAT },
+        ]),
+    // sr (srad): diffusion; FP grid, SFU exp().
+    app!("sr", Suite::Rodinia, mem = false, eval = false, regs = 34, tpc = 256, smem = 6144,
+        ctas = 300, iters = 104,
+        loads = &[co(0), co(1)], stores = &[co(2)],
+        ialu = 1, falu = 4, fma = 3, sfu = 2,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 14, pattern: FGRID },
+            ArraySpec { footprint_lines: 1 << 14, pattern: FGRID },
+            ArraySpec { footprint_lines: 1 << 14, pattern: FGRID },
+        ]),
+
+    // ---------------- Mars (MapReduce) ----------------
+    // KM (k-means): centroid distances; narrow cluster ids + float points.
+    app!("KM", Suite::Mars, mem = true, eval = true, regs = 24, tpc = 256, smem = 2048,
+        ctas = 400, iters = 120,
+        loads = &[co(0), co_reuse(1, 16)], stores = &[co(2)],
+        ialu = 2, falu = 2, fma = 3, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 17, pattern: MIX_FLOAT },
+            ArraySpec { footprint_lines: 1 << 9, pattern: LDR4 },
+            ArraySpec { footprint_lines: 1 << 15, pattern: NARROW },
+        ]),
+    // MM (matrix multiply): tiled GEMM; low-dynamic-range integer matrices
+    // (BDI's best case, Fig. 13).
+    app!("MM", Suite::Mars, mem = true, eval = true, regs = 28, tpc = 256, smem = 8192,
+        ctas = 360, iters = 128,
+        loads = &[co_reuse(0, 2), co_reuse(1, 2)], stores = &[co(2)],
+        ialu = 1, falu = 0, fma = 4, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 16, pattern: LDR4 },
+            ArraySpec { footprint_lines: 1 << 16, pattern: LDR4 },
+            ArraySpec { footprint_lines: 1 << 16, pattern: LDR4W },
+        ]),
+    // PVC (page-view count): URL keys — 8-byte pointers with small deltas,
+    // the paper's Fig. 6 example app. Strongly BDI.
+    app!("PVC", Suite::Mars, mem = true, eval = true, regs = 19, tpc = 256, smem = 1024,
+        ctas = 480, iters = 144,
+        loads = &[co(0), co(1)], stores = &[co(2)],
+        ialu = 4, falu = 0, fma = 0, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 17, pattern: LDR8 },
+            ArraySpec { footprint_lines: 1 << 15, pattern: LDR8 },
+            ArraySpec { footprint_lines: 1 << 15, pattern: LDR8 },
+        ]),
+    // PVR (page-view rank): like PVC with rank floats.
+    app!("PVR", Suite::Mars, mem = true, eval = true, regs = 22, tpc = 256, smem = 1024,
+        ctas = 440, iters = 128,
+        loads = &[co(0), co(1)], stores = &[co(2)],
+        ialu = 3, falu = 1, fma = 0, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 17, pattern: LDR8 },
+            ArraySpec { footprint_lines: 1 << 15, pattern: MIX_FLOAT },
+            ArraySpec { footprint_lines: 1 << 15, pattern: LDR8 },
+        ]),
+    // SS (similarity score): document vectors; narrow counts.
+    app!("SS", Suite::Mars, mem = true, eval = true, regs = 24, tpc = 256, smem = 2048,
+        ctas = 400, iters = 120,
+        loads = &[co(0), co(1)], stores = &[co(2)],
+        ialu = 2, falu = 2, fma = 2, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 16, pattern: NARROW },
+            ArraySpec { footprint_lines: 1 << 16, pattern: NARROW },
+            ArraySpec { footprint_lines: 1 << 14, pattern: MIX_FLOAT },
+        ]),
+
+    // ---------------- Lonestar ----------------
+    // bfs: worklist graph traversal; scattered, zero-heavy frontier +
+    // pointer adjacency. Interconnect-sensitive + L1-capacity-sensitive
+    // (Fig. 15).
+    app!("bfs", Suite::Lonestar, mem = true, eval = true, regs = 18, tpc = 256, smem = 0,
+        ctas = 420, iters = 96,
+        loads = &[co(0), scatter(1, 10)], stores = &[scatter(2, 4)],
+        ialu = 4, falu = 0, fma = 0, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 14, pattern: ZERO_HEAVY_HI },
+            ArraySpec { footprint_lines: 1 << 15, pattern: MIX_GRAPH },
+            ArraySpec { footprint_lines: 1 << 14, pattern: NARROW },
+        ]),
+    // bh (Barnes-Hut): tree walk + force computation; compute-leaning.
+    app!("bh", Suite::Lonestar, mem = false, eval = true, regs = 38, tpc = 256, smem = 2048,
+        ctas = 280, iters = 104,
+        loads = &[scatter(0, 6), co_reuse(1, 4)], stores = &[co(2)],
+        ialu = 2, falu = 3, fma = 4, sfu = 1,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 14, pattern: PTR3 },
+            ArraySpec { footprint_lines: 1 << 12, pattern: MIX_FLOAT },
+            ArraySpec { footprint_lines: 1 << 13, pattern: FGRID },
+        ]),
+    // mst: minimum spanning tree; component ids are zero-heavy narrow ints;
+    // strongly bandwidth-bound (paper calls out mst for icnt benefit).
+    app!("mst", Suite::Lonestar, mem = true, eval = true, regs = 19, tpc = 256, smem = 0,
+        ctas = 440, iters = 112,
+        loads = &[co(0), scatter(1, 8), co(2)], stores = &[co(2)],
+        ialu = 4, falu = 0, fma = 0, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 16, pattern: ZERO_HEAVY_HI },
+            ArraySpec { footprint_lines: 1 << 15, pattern: MIX_GRAPH },
+            ArraySpec { footprint_lines: 1 << 15, pattern: ZERO_HEAVY_LO },
+        ]),
+    // sp (survey propagation): belief floats + clause graph.
+    app!("sp", Suite::Lonestar, mem = true, eval = true, regs = 26, tpc = 256, smem = 0,
+        ctas = 360, iters = 112,
+        loads = &[scatter(0, 6), co(1)], stores = &[co(1)],
+        ialu = 2, falu = 3, fma = 1, sfu = 1,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 15, pattern: MIX_GRAPH },
+            ArraySpec { footprint_lines: 1 << 15, pattern: MIX_FLOAT },
+        ]),
+    // sssp: delta-stepping shortest paths; distance array zero/narrow-heavy;
+    // L1-capacity-sensitive (Fig. 15).
+    app!("sssp", Suite::Lonestar, mem = true, eval = true, regs = 19, tpc = 256, smem = 0,
+        ctas = 420, iters = 104,
+        loads = &[co(0), scatter(1, 8)], stores = &[scatter(0, 4)],
+        ialu = 4, falu = 0, fma = 0, sfu = 0,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 14, pattern: ZERO_HEAVY_LO },
+            ArraySpec { footprint_lines: 1 << 15, pattern: MIX_GRAPH },
+        ]),
+    // dmr (Delaunay mesh refinement): SFU-heavy, data-dependence-stall
+    // dominated (paper §3 calls out dmr's SFU stalls).
+    app!("dmr", Suite::Lonestar, mem = false, eval = false, regs = 42, tpc = 128, smem = 0,
+        ctas = 240, iters = 104,
+        loads = &[scatter(0, 4)], stores = &[co(1)],
+        ialu = 2, falu = 2, fma = 2, sfu = 4,
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 14, pattern: MIX_FLOAT },
+            ArraySpec { footprint_lines: 1 << 13, pattern: FGRID },
+        ]),
+];
+
+/// Look up an app by (case-sensitive) name.
+pub fn find(name: &str) -> Option<&'static AppSpec> {
+    APPS.iter().find(|a| a.name == name)
+}
+
+/// The bandwidth-sensitive evaluation set used in Figs. 8–16.
+pub fn eval_set() -> Vec<&'static AppSpec> {
+    APPS.iter().filter(|a| a.in_eval_set).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_matches_paper_counts() {
+        assert_eq!(APPS.len(), 27, "paper studies 27 applications");
+        let mem_bound = APPS.iter().filter(|a| a.memory_bound).count();
+        assert_eq!(mem_bound, 17, "paper: 17 of 27 are memory-bound");
+        assert_eq!(eval_set().len(), 20);
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = APPS.iter().map(|a| a.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), APPS.len());
+    }
+
+    #[test]
+    fn array_refs_in_range() {
+        for app in APPS {
+            for m in app.body.loads.iter().chain(app.body.stores) {
+                assert!(
+                    (m.array as usize) < app.arrays.len(),
+                    "{}: array {} out of range",
+                    app.name,
+                    m.array
+                );
+            }
+            assert!(app.body.insts_per_iter() > 0);
+            assert!(app.iters > 0 && app.total_ctas > 0);
+        }
+    }
+
+    #[test]
+    fn find_works() {
+        assert!(find("PVC").is_some());
+        assert!(find("nope").is_none());
+        assert_eq!(find("MM").unwrap().suite, Suite::Mars);
+    }
+
+    #[test]
+    fn incompressible_apps_excluded_from_eval() {
+        for name in ["SCP", "sc", "STO"] {
+            assert!(!find(name).unwrap().in_eval_set, "{name}");
+        }
+    }
+}

@@ -1,0 +1,382 @@
+//! Workload construction: turns an [`apps::AppSpec`] profile into a
+//! runnable μ-kernel ([`crate::isa::Program`]), computes the occupancy
+//! (CTAs/SM, warps, register allocation — Fig. 3), and generates memory
+//! addresses and line contents for the simulator.
+
+pub mod apps;
+pub mod datagen;
+
+use crate::config::SimConfig;
+use crate::compress::Line;
+use crate::isa::{AccessKind, Inst, MemAccess, Op, Program, ProgramRef, NO_REG};
+use crate::util::rng::Rng;
+use apps::AppSpec;
+use datagen::DataPattern;
+use std::sync::Arc;
+
+/// Array placement: arrays live `1<<40` lines apart, so a line address
+/// uniquely identifies (array, index).
+const ARRAY_STRIDE: u64 = 1 << 40;
+
+/// One materialized array.
+#[derive(Clone, Debug)]
+pub struct ArrayInfo {
+    pub base_line: u64,
+    pub footprint_lines: u64,
+    pub pattern: DataPattern,
+}
+
+/// Static occupancy calculation (the quantities behind Fig. 3).
+#[derive(Clone, Copy, Debug)]
+pub struct Occupancy {
+    pub ctas_per_sm: u32,
+    pub warps_per_cta: u32,
+    pub warps_per_sm: u32,
+    pub regs_allocated: u32,
+    /// Fraction of the register file left statically unallocated (Fig. 3).
+    pub unallocated_reg_frac: f64,
+    /// What capped the occupancy: "threads" | "ctas" | "regs" | "smem".
+    pub limiter: &'static str,
+}
+
+/// Compute occupancy for `spec` with `extra_regs_per_thread` reserved for
+/// assist-warp contexts (§4.2.2: the per-block register requirement grows
+/// by each enabled helper subroutine's register need; 0 for non-CABA).
+pub fn occupancy(spec: &AppSpec, cfg: &SimConfig, extra_regs_per_thread: u32) -> Occupancy {
+    let tpc = spec.threads_per_cta;
+    let regs_per_cta = (spec.regs_per_thread + extra_regs_per_thread) * tpc;
+    let by_threads = cfg.max_threads_per_sm as u32 / tpc;
+    let by_ctas = cfg.max_ctas_per_sm as u32;
+    let by_regs = (cfg.regfile_per_sm as u32 / regs_per_cta).max(0);
+    let by_smem = if spec.smem_per_cta == 0 {
+        u32::MAX
+    } else {
+        (cfg.smem_per_sm / spec.smem_per_cta as usize) as u32
+    };
+    let ctas = by_threads.min(by_ctas).min(by_regs).min(by_smem).max(1);
+    let limiter = if ctas == by_regs && by_regs <= by_threads && by_regs <= by_ctas && by_regs <= by_smem {
+        "regs"
+    } else if ctas == by_smem && by_smem <= by_threads && by_smem <= by_ctas {
+        "smem"
+    } else if ctas == by_threads && by_threads <= by_ctas {
+        "threads"
+    } else {
+        "ctas"
+    };
+    let warps_per_cta = tpc / cfg.warp_size as u32;
+    let regs_allocated = (ctas * regs_per_cta).min(cfg.regfile_per_sm as u32);
+    Occupancy {
+        ctas_per_sm: ctas,
+        warps_per_cta,
+        warps_per_sm: (ctas * warps_per_cta).min(cfg.max_warps_per_sm as u32),
+        regs_allocated,
+        unallocated_reg_frac: 1.0 - regs_allocated as f64 / cfg.regfile_per_sm as f64,
+        limiter,
+    }
+}
+
+/// A fully built workload, ready for simulation.
+#[derive(Clone)]
+pub struct Workload {
+    pub spec: &'static AppSpec,
+    pub program: ProgramRef,
+    pub arrays: Vec<ArrayInfo>,
+    pub occ: Occupancy,
+    pub total_ctas: u32,
+    pub seed: u64,
+}
+
+impl Workload {
+    /// Build a workload. `scale` shrinks the run (iterations and CTA count)
+    /// for fast tests/benches; 1.0 = the full profile.
+    pub fn build(spec: &'static AppSpec, cfg: &SimConfig, scale: f64) -> Workload {
+        Self::build_with_extra_regs(spec, cfg, scale, 0)
+    }
+
+    /// Like [`Workload::build`] with assist-warp register provisioning.
+    pub fn build_with_extra_regs(
+        spec: &'static AppSpec,
+        cfg: &SimConfig,
+        scale: f64,
+        extra_regs_per_thread: u32,
+    ) -> Workload {
+        let occ = occupancy(spec, cfg, extra_regs_per_thread);
+        let iters = ((spec.iters as f64 * scale).ceil() as u32).max(1);
+        let total_ctas = ((spec.total_ctas as f64 * scale.sqrt()).ceil() as u32).max(1);
+        let program = Arc::new(build_program(spec, iters));
+        let arrays = spec
+            .arrays
+            .iter()
+            .enumerate()
+            .map(|(i, a)| ArrayInfo {
+                base_line: (i as u64 + 1) * ARRAY_STRIDE,
+                footprint_lines: a.footprint_lines,
+                pattern: a.pattern,
+            })
+            .collect();
+        Workload {
+            spec,
+            program,
+            arrays,
+            occ,
+            total_ctas,
+            seed: cfg.seed ^ name_hash(spec.name),
+        }
+    }
+
+    /// Total warps launched over the run.
+    pub fn total_warps(&self) -> u64 {
+        self.total_ctas as u64 * self.occ.warps_per_cta as u64
+    }
+
+    /// Distinct line addresses touched by one warp memory instruction.
+    /// `slot` is the instruction's index within the body (decorrelates
+    /// multiple accesses per iteration).
+    pub fn access_lines(&self, mem: &MemAccess, warp_uid: u64, iter: u32, slot: usize, out: &mut Vec<u64>) {
+        out.clear();
+        let arr = &self.arrays[mem.array as usize];
+        let fp = arr.footprint_lines;
+        let pos = warp_uid
+            .wrapping_mul(self.program.iters as u64)
+            .wrapping_add(iter as u64);
+        match mem.kind {
+            AccessKind::Coalesced { reuse } => {
+                let idx = (pos / reuse.max(1) as u64).wrapping_add(slot as u64 * 7919) % fp;
+                out.push(arr.base_line + idx);
+            }
+            AccessKind::Strided { lines } => {
+                let n = lines.max(1) as u64;
+                let start = (pos.wrapping_mul(n)).wrapping_add(slot as u64 * 7919) % fp;
+                for j in 0..n {
+                    out.push(arr.base_line + (start + j) % fp);
+                }
+            }
+            AccessKind::Scatter { degree } => {
+                // Graph/tree gathers are irregular but *regionally* local:
+                // a warp works within a neighbourhood (tree top levels,
+                // frontier chunk) for several iterations before moving on.
+                // Uniform-random scatter would be the pathological case no
+                // real workload exhibits (and would thrash the MD cache far
+                // beyond the paper's measured 85% hit rate).
+                let n = degree.max(1) as u64;
+                let region_lines = fp.min(4096);
+                let n_regions = (fp / region_lines).max(1);
+                let region = mix64(
+                    self.seed ^ warp_uid.wrapping_mul(0xA24B_AED4_963E_E407) ^ (iter as u64 / 8),
+                ) % n_regions;
+                let region_base = region * region_lines;
+                for j in 0..n {
+                    let h = mix64(
+                        self.seed
+                            ^ pos.wrapping_mul(0x2545_F491_4F6C_DD1D)
+                            ^ ((slot as u64) << 56)
+                            ^ j.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    out.push(arr.base_line + region_base + h % region_lines);
+                }
+            }
+        }
+    }
+
+    /// Which array does a line address belong to?
+    pub fn array_of(&self, line_addr: u64) -> &ArrayInfo {
+        let idx = (line_addr / ARRAY_STRIDE) as usize - 1;
+        &self.arrays[idx.min(self.arrays.len() - 1)]
+    }
+
+    /// Generate the contents of a line at store-generation `epoch`.
+    pub fn line_data(&self, line_addr: u64, epoch: u32) -> Line {
+        let arr = self.array_of(line_addr);
+        datagen::line_data(&arr.pattern, self.seed, line_addr, epoch)
+    }
+}
+
+fn name_hash(name: &str) -> u64 {
+    name.bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x1000_0000_01b3))
+}
+
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Build the loop body from the instruction mix: loads first (results
+/// feeding the compute chain), compute interleaved with dependences on
+/// recent results, stores of the final values — the structure GPGPU kernels
+/// reduce to once control flow is regularized.
+fn build_program(spec: &AppSpec, iters: u32) -> Program {
+    let mut rng = Rng::new(name_hash(spec.name));
+    let mut body = Vec::with_capacity(spec.body.insts_per_iter());
+    let mut next_reg: u8 = 1; // r0 = thread index, always ready
+    let mut live: Vec<u8> = vec![0];
+
+    let alloc = |live: &mut Vec<u8>, next_reg: &mut u8| -> u8 {
+        let r = *next_reg;
+        *next_reg = (*next_reg % 62) + 1; // wrap within MAX_REGS
+        live.push(r);
+        if live.len() > 12 {
+            live.remove(0);
+        }
+        r
+    };
+
+    for (slot, ld) in spec.body.loads.iter().enumerate() {
+        let dst = alloc(&mut live, &mut next_reg);
+        let addr_src = live[slot % live.len().max(1)];
+        body.push(Inst::new(
+            Op::Ld(MemAccess { array: ld.array, kind: ld.kind }),
+            dst,
+            [addr_src, NO_REG],
+        ));
+    }
+
+    // Compute chain: each op sources one recent value (usually a load
+    // result) and one older value, recreating the load→use dependences
+    // behind the paper's Data Dependence Stalls.
+    let emit_compute = |op: Op, count: u8, live: &mut Vec<u8>, next_reg: &mut u8, rng: &mut Rng| {
+        let mut insts = Vec::new();
+        for _ in 0..count {
+            let s1 = *rng.pick(&live[live.len().saturating_sub(4)..]);
+            let s2 = *rng.pick(live);
+            let dst = alloc(live, next_reg);
+            insts.push(Inst::new(op, dst, [s1, s2]));
+        }
+        insts
+    };
+
+    let mut compute = Vec::new();
+    compute.extend(emit_compute(Op::IAlu, spec.body.ialu, &mut live, &mut next_reg, &mut rng));
+    compute.extend(emit_compute(Op::FAlu, spec.body.falu, &mut live, &mut next_reg, &mut rng));
+    compute.extend(emit_compute(Op::Fma, spec.body.fma, &mut live, &mut next_reg, &mut rng));
+    compute.extend(emit_compute(Op::Sfu, spec.body.sfu, &mut live, &mut next_reg, &mut rng));
+    // Deterministic shuffle so FU classes interleave.
+    let mut shuffled = Vec::with_capacity(compute.len());
+    while !compute.is_empty() {
+        let i = rng.range(0, compute.len());
+        shuffled.push(compute.remove(i));
+    }
+    body.extend(shuffled);
+
+    for st in spec.body.stores.iter() {
+        let src = *live.last().unwrap();
+        body.push(Inst::new(
+            Op::St(MemAccess { array: st.array, kind: st.kind }),
+            NO_REG,
+            [src, NO_REG],
+        ));
+    }
+
+    Program { body, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    #[test]
+    fn occupancy_thread_limited() {
+        let spec = apps::find("SLA").unwrap(); // 16 regs, 256 tpc
+        let occ = occupancy(spec, &cfg(), 0);
+        // 1536/256 = 6 CTAs; regs 16*256*6 = 24576 ≤ 32768 → thread-limited.
+        assert_eq!(occ.ctas_per_sm, 6);
+        assert_eq!(occ.warps_per_sm, 48);
+        assert_eq!(occ.limiter, "threads");
+        assert!((occ.unallocated_reg_frac - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn occupancy_reg_limited() {
+        let spec = apps::find("RAY").unwrap(); // 40 regs, 128 tpc
+        let occ = occupancy(spec, &cfg(), 0);
+        // regs: 32768/(40*128)=6.4 → 6 CTAs; threads: 1536/128=12; ctas cap 8.
+        assert_eq!(occ.ctas_per_sm, 6);
+        assert_eq!(occ.limiter, "regs");
+    }
+
+    #[test]
+    fn extra_regs_can_reduce_occupancy() {
+        let spec = apps::find("RAY").unwrap();
+        let base = occupancy(spec, &cfg(), 0);
+        let caba = occupancy(spec, &cfg(), 8);
+        assert!(caba.ctas_per_sm <= base.ctas_per_sm);
+    }
+
+    #[test]
+    fn fig3_average_unallocated_in_paper_range() {
+        // Paper: on average 24% of the register file is unallocated.
+        let avg: f64 = apps::APPS
+            .iter()
+            .map(|a| occupancy(a, &cfg(), 0).unallocated_reg_frac)
+            .sum::<f64>()
+            / apps::APPS.len() as f64;
+        assert!(
+            (0.10..0.45).contains(&avg),
+            "avg unallocated register fraction {avg:.3} out of plausible range"
+        );
+    }
+
+    #[test]
+    fn program_structure() {
+        let spec = apps::find("MM").unwrap();
+        let w = Workload::build(spec, &cfg(), 1.0);
+        assert_eq!(w.program.body.len(), spec.body.insts_per_iter());
+        assert_eq!(w.program.mem_insts_per_iter(), spec.body.loads.len() + spec.body.stores.len());
+        // Deterministic across builds.
+        let w2 = Workload::build(spec, &cfg(), 1.0);
+        assert_eq!(w.program.body.len(), w2.program.body.len());
+        assert_eq!(w.seed, w2.seed);
+    }
+
+    #[test]
+    fn access_lines_properties() {
+        let spec = apps::find("BFS").unwrap();
+        let w = Workload::build(spec, &cfg(), 1.0);
+        let mut out = Vec::new();
+        // Coalesced → 1 line, within footprint.
+        let co = &spec.body.loads[0];
+        w.access_lines(&MemAccess { array: co.array, kind: co.kind }, 3, 5, 0, &mut out);
+        assert_eq!(out.len(), 1);
+        let arr = &w.arrays[co.array as usize];
+        assert!(out[0] >= arr.base_line && out[0] < arr.base_line + arr.footprint_lines);
+        // Scatter → `degree` lines, all in footprint.
+        let sc = &spec.body.loads[1];
+        w.access_lines(&MemAccess { array: sc.array, kind: sc.kind }, 3, 5, 1, &mut out);
+        if let AccessKind::Scatter { degree } = sc.kind {
+            assert_eq!(out.len(), degree as usize);
+        }
+        for &l in &out {
+            let arr = w.array_of(l);
+            assert!(l >= arr.base_line && l < arr.base_line + arr.footprint_lines);
+        }
+        // Deterministic.
+        let mut out2 = Vec::new();
+        w.access_lines(&MemAccess { array: sc.array, kind: sc.kind }, 3, 5, 1, &mut out2);
+        assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn line_data_routes_to_array_pattern() {
+        let spec = apps::find("SCP").unwrap(); // all arrays Random
+        let w = Workload::build(spec, &cfg(), 1.0);
+        let a = w.line_data(w.arrays[0].base_line + 5, 0);
+        let b = w.line_data(w.arrays[0].base_line + 5, 0);
+        assert_eq!(a, b);
+        let c = w.line_data(w.arrays[0].base_line + 5, 1);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn scale_shrinks_work() {
+        let spec = apps::find("MM").unwrap();
+        let full = Workload::build(spec, &cfg(), 1.0);
+        let small = Workload::build(spec, &cfg(), 0.1);
+        assert!(small.program.iters < full.program.iters);
+        assert!(small.total_ctas < full.total_ctas);
+    }
+}

@@ -1,0 +1,185 @@
+//! Cross-design invariants: the orderings the paper's evaluation rests on
+//! must hold on this simulator for compressible, bandwidth-bound workloads.
+
+use caba::compress::Algo;
+use caba::sim::designs::Design;
+use caba::sim::Simulator;
+use caba::workload::apps;
+use caba::SimConfig;
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::default();
+    // Shrink the chip but keep the paper's compute:bandwidth balance —
+    // with 4 of 15 SMs and full bandwidth nothing is bandwidth-bound and
+    // compression has nothing to accelerate.
+    c.n_sms = 4;
+    c.bw_scale = 4.0 / 15.0;
+    c.max_cycles = 2_000_000;
+    c
+}
+
+fn ipc(app: &'static caba::workload::apps::AppSpec, d: Design) -> f64 {
+    Simulator::new(cfg(), d, app, 0.02).run().ipc()
+}
+
+#[test]
+fn compression_speeds_up_bandwidth_bound_compressible_apps() {
+    for name in ["PVC", "MM", "SLA", "LPS"] {
+        let app = apps::find(name).unwrap();
+        let base = ipc(app, Design::base());
+        let caba_ipc = ipc(app, Design::caba(Algo::Bdi));
+        assert!(
+            caba_ipc > base * 1.05,
+            "{name}: CABA-BDI {caba_ipc:.3} vs Base {base:.3}"
+        );
+    }
+}
+
+#[test]
+fn ideal_upper_bounds_caba() {
+    for name in ["PVC", "LPS"] {
+        let app = apps::find(name).unwrap();
+        let ideal = ipc(app, Design::ideal_bdi());
+        let caba_ipc = ipc(app, Design::caba(Algo::Bdi));
+        // Paper: CABA within 2.8% of Ideal on average; tolerate slack on a
+        // single app, but Ideal must never lose to CABA by more than noise.
+        assert!(
+            ideal >= caba_ipc * 0.97,
+            "{name}: Ideal {ideal:.3} < CABA {caba_ipc:.3}"
+        );
+    }
+}
+
+#[test]
+fn caba_close_to_hardware_designs() {
+    // Paper §7.1: CABA-BDI within a few % of HW-BDI.
+    let app = apps::find("PVC").unwrap();
+    let hw = ipc(app, Design::hw_bdi());
+    let caba_ipc = ipc(app, Design::caba(Algo::Bdi));
+    let gap = (hw - caba_ipc) / hw;
+    assert!(gap < 0.15, "CABA {caba_ipc:.3} vs HW {hw:.3} gap {gap:.3}");
+    assert!(caba_ipc <= hw * 1.05, "CABA should not beat dedicated HW by much");
+}
+
+#[test]
+fn compressed_designs_cut_dram_traffic() {
+    let app = apps::find("PVC").unwrap();
+    for d in [
+        Design::hw_bdi_mem(),
+        Design::hw_bdi(),
+        Design::caba(Algo::Bdi),
+        Design::ideal_bdi(),
+    ] {
+        let stats = Simulator::new(cfg(), d, app, 0.02).run();
+        assert!(
+            stats.dram.compression_ratio() > 2.0,
+            "{}: ratio {}",
+            d.name,
+            stats.dram.compression_ratio()
+        );
+    }
+}
+
+#[test]
+fn caba_assist_warps_actually_run() {
+    let app = apps::find("PVC").unwrap();
+    let stats = Simulator::new(cfg(), Design::caba(Algo::Bdi), app, 0.02).run();
+    assert!(stats.caba.decompress_warps > 100);
+    assert!(stats.caba.compress_warps > 10);
+    assert!(stats.caba.assist_insts_issued > stats.caba.decompress_warps);
+    // Low-priority work must overwhelmingly use idle slots.
+    assert!(stats.caba.assist_insts_idle_slots > 0);
+    // Hardware designs never run assist warps.
+    let hw = Simulator::new(cfg(), Design::hw_bdi(), app, 0.02).run();
+    assert_eq!(hw.caba.decompress_warps, 0);
+    assert_eq!(hw.caba.assist_insts_issued, 0);
+}
+
+#[test]
+fn algorithms_differ_by_data_pattern() {
+    // Fig. 13: MM/PVC (low-dynamic-range) favour BDI; LPS (sparse-narrow)
+    // favours FPC's compression ratio.
+    let pvc = apps::find("PVC").unwrap();
+    let bdi = Simulator::new(cfg(), Design::caba(Algo::Bdi), pvc, 0.02).run();
+    let fpc = Simulator::new(cfg(), Design::caba(Algo::Fpc), pvc, 0.02).run();
+    assert!(
+        bdi.dram.compression_ratio() > fpc.dram.compression_ratio(),
+        "PVC: BDI {} vs FPC {}",
+        bdi.dram.compression_ratio(),
+        fpc.dram.compression_ratio()
+    );
+    let lps = apps::find("LPS").unwrap();
+    let bdi = Simulator::new(cfg(), Design::caba(Algo::Bdi), lps, 0.02).run();
+    let fpc = Simulator::new(cfg(), Design::caba(Algo::Fpc), lps, 0.02).run();
+    assert!(
+        fpc.dram.compression_ratio() > bdi.dram.compression_ratio(),
+        "LPS: FPC {} vs BDI {}",
+        fpc.dram.compression_ratio(),
+        bdi.dram.compression_ratio()
+    );
+}
+
+#[test]
+fn best_of_all_ratio_dominates() {
+    let app = apps::find("JPEG").unwrap();
+    let best = Simulator::new(cfg(), Design::caba(Algo::BestOfAll), app, 0.02).run();
+    for algo in Algo::CONCRETE {
+        let one = Simulator::new(cfg(), Design::caba(algo), app, 0.02).run();
+        assert!(
+            best.dram.compression_ratio() >= one.dram.compression_ratio() * 0.98,
+            "BestOfAll {} < {algo:?} {}",
+            best.dram.compression_ratio(),
+            one.dram.compression_ratio()
+        );
+    }
+}
+
+#[test]
+fn energy_drops_with_compression() {
+    // Fig. 10: compression cuts DRAM traffic and runtime → lower energy.
+    let app = apps::find("PVC").unwrap();
+    let em = caba::energy::EnergyModel::default();
+    let base = Simulator::new(cfg(), Design::base(), app, 0.02).run();
+    let caba_stats = Simulator::new(cfg(), Design::caba(Algo::Bdi), app, 0.02).run();
+    let e_base = em.evaluate(&base, false, false).total_mj();
+    let e_caba = em.evaluate(&caba_stats, true, false).total_mj();
+    assert!(e_caba < e_base, "energy {e_caba} !< {e_base}");
+    // DRAM component specifically (paper: −29.5% DRAM power).
+    let d_base = em.evaluate(&base, false, false).dram_total_mj();
+    let d_caba = em.evaluate(&caba_stats, true, false).dram_total_mj();
+    assert!(d_caba < d_base * 0.7, "dram energy {d_caba} vs {d_base}");
+}
+
+#[test]
+fn fig16_variants_run_and_stay_sane() {
+    let app = apps::find("MM").unwrap();
+    let caba_ipc = ipc(app, Design::caba(Algo::Bdi));
+    for d in [Design::caba_uncompressed_l2(), Design::caba_direct_load()] {
+        let v = ipc(app, d);
+        assert!(
+            v > caba_ipc * 0.7 && v < caba_ipc * 1.4,
+            "{}: {v:.3} vs CABA {caba_ipc:.3}",
+            d.name
+        );
+    }
+}
+
+#[test]
+fn fig15_l1_compression_can_hurt() {
+    // The paper: L1 cache compression "can severely degrade the
+    // performance of some applications" (every hit pays decompression)
+    // while capacity-sensitive apps benefit — i.e. the effect is mixed,
+    // with at least one loser among reuse-heavy apps.
+    let mut worst = f64::INFINITY;
+    let mut best = 0.0f64;
+    for name in ["MM", "hs", "KM", "RAY"] {
+        let app = apps::find(name).unwrap();
+        let plain = ipc(app, Design::caba(Algo::Bdi));
+        let l1c = ipc(app, Design::caba_cache_compressed(4, 1));
+        let rel = l1c / plain;
+        worst = worst.min(rel);
+        best = best.max(rel);
+    }
+    assert!(worst < 1.0, "no app hurt by L1 compression (worst rel {worst:.3})");
+    assert!(best > 0.95, "L1 compression should not hurt everyone (best {best:.3})");
+}

@@ -1,0 +1,160 @@
+//! The three-layer contract: the AOT-compiled JAX/Pallas compression model
+//! (artifacts/*.hlo.txt), executed through PJRT by the Rust runtime, must
+//! agree bit-for-bit with the native Rust compressors on every line.
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message) if
+//! the artifacts are absent so `cargo test` stays runnable standalone.
+
+use caba::compress::oracle::{CompressionOracle, NativeOracle};
+use caba::compress::{Algo, Line, LINE_BYTES};
+use caba::runtime::{artifacts_available, PjrtOracle};
+use caba::util::rng::Rng;
+use caba::workload::datagen::{line_data, DataPattern};
+
+fn pjrt() -> Option<PjrtOracle> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return None;
+    }
+    Some(PjrtOracle::from_default_dir().expect("artifact load"))
+}
+
+fn patterned_lines(n: usize) -> Vec<Line> {
+    let patterns = [
+        DataPattern::ZeroHeavy { p_zero: 0.5 },
+        DataPattern::LowDynRange { value_bytes: 8, delta_bytes: 1 },
+        DataPattern::LowDynRange { value_bytes: 4, delta_bytes: 2 },
+        DataPattern::NarrowInt { max: 120 },
+        DataPattern::PointerLike { n_bases: 4 },
+        DataPattern::RepBytes,
+        DataPattern::SparseNarrow { p_nonzero: 0.3 },
+        DataPattern::FloatGrid { exp: 120 },
+        DataPattern::Random,
+    ];
+    (0..n)
+        .map(|i| line_data(&patterns[i % patterns.len()], 99, i as u64, 0))
+        .collect()
+}
+
+fn random_lines(n: usize, seed: u64) -> Vec<Line> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut line = [0u8; LINE_BYTES];
+            for b in line.iter_mut() {
+                *b = rng.next_u32() as u8;
+            }
+            line
+        })
+        .collect()
+}
+
+fn assert_oracles_agree(pjrt: &mut PjrtOracle, lines: &[Line], algo: Algo, what: &str) {
+    let mut native = NativeOracle;
+    let n = native.analyze(algo, lines);
+    let p = pjrt.analyze(algo, lines);
+    assert_eq!(n.len(), p.len());
+    for (i, (nv, pv)) in n.iter().zip(&p).enumerate() {
+        assert_eq!(
+            nv.size_bytes, pv.size_bytes,
+            "{what}: {algo:?} line {i} size mismatch (native {nv:?} vs pjrt {pv:?})"
+        );
+        assert_eq!(nv.bursts, pv.bursts, "{what}: {algo:?} line {i} bursts");
+        assert_eq!(
+            nv.encoding, pv.encoding,
+            "{what}: {algo:?} line {i} encoding (native {nv:?} vs pjrt {pv:?})"
+        );
+    }
+}
+
+#[test]
+fn pjrt_matches_native_on_patterned_lines() {
+    let Some(mut oracle) = pjrt() else { return };
+    let lines = patterned_lines(512);
+    for algo in Algo::CONCRETE {
+        assert_oracles_agree(&mut oracle, &lines, algo, "patterned");
+    }
+}
+
+#[test]
+fn pjrt_matches_native_on_random_lines() {
+    let Some(mut oracle) = pjrt() else { return };
+    for seed in [1u64, 2, 3] {
+        let lines = random_lines(256, seed);
+        for algo in Algo::CONCRETE {
+            assert_oracles_agree(&mut oracle, &lines, algo, "random");
+        }
+    }
+}
+
+#[test]
+fn pjrt_best_of_all_matches_native() {
+    let Some(mut oracle) = pjrt() else { return };
+    let lines = patterned_lines(256);
+    let mut native = NativeOracle;
+    let n = native.analyze(Algo::BestOfAll, &lines);
+    let p = oracle.analyze(Algo::BestOfAll, &lines);
+    for (i, (nv, pv)) in n.iter().zip(&p).enumerate() {
+        assert_eq!(nv.size_bytes, pv.size_bytes, "best line {i}");
+        assert_eq!(nv.bursts, pv.bursts, "best line {i}");
+    }
+}
+
+#[test]
+fn pjrt_handles_partial_batches() {
+    let Some(mut oracle) = pjrt() else { return };
+    // Non-multiple-of-BATCH sizes exercise the padding path.
+    for n in [1usize, 7, 255, 257, 300] {
+        let lines = patterned_lines(n);
+        let v = oracle.analyze(Algo::Bdi, &lines);
+        assert_eq!(v.len(), n);
+        let mut native = NativeOracle;
+        let nv = native.analyze(Algo::Bdi, &lines);
+        assert_eq!(v, nv, "n={n}");
+    }
+}
+
+#[test]
+fn simulator_runs_with_pjrt_oracle() {
+    // End-to-end: the simulator's request path served by the AOT artifact.
+    let Some(oracle) = pjrt() else { return };
+    let app = caba::workload::apps::find("PVC").unwrap();
+    let mut cfg = caba::SimConfig::default();
+    cfg.n_sms = 2;
+    cfg.max_cycles = 100_000;
+    let design = caba::sim::designs::Design::caba(Algo::Bdi);
+    let memo = caba::compress::oracle::MemoOracle::new(oracle);
+    let mut sim =
+        caba::sim::Simulator::with_oracle(cfg.clone(), design, app, 0.004, Box::new(memo));
+    let pjrt_stats = sim.run();
+    assert!(pjrt_stats.finished);
+    // Must be cycle-identical to the native-oracle run (the oracle is a
+    // pure function; the backend cannot change timing).
+    let mut native_sim = caba::sim::Simulator::new(cfg, design, app, 0.004);
+    let native_stats = native_sim.run();
+    assert_eq!(pjrt_stats.cycles, native_stats.cycles);
+    assert_eq!(pjrt_stats.dram.bursts, native_stats.dram.bursts);
+}
+
+#[test]
+fn corrupt_artifact_fails_loudly() {
+    // Failure injection: a malformed artifact must produce an error at
+    // load time, never a silent mis-compile.
+    let dir = std::env::temp_dir().join("caba_corrupt_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bdi.hlo.txt"), "HloModule garbage !!! not hlo").unwrap();
+    let res = PjrtOracle::load(&dir);
+    assert!(res.is_err(), "corrupt artifact must not load");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn empty_artifact_dir_is_an_error() {
+    let dir = std::env::temp_dir().join("caba_empty_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let res = PjrtOracle::load(&dir);
+    assert!(res.is_err());
+    let msg = format!("{:#}", res.err().unwrap());
+    assert!(msg.contains("make artifacts"), "error must tell the user the fix: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

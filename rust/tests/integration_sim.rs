@@ -1,0 +1,141 @@
+//! End-to-end simulator integration: every app runs to completion under the
+//! baseline, stall accounting is conserved, and the memory hierarchy
+//! numbers are internally consistent.
+
+use caba::sim::designs::Design;
+use caba::sim::Simulator;
+use caba::workload::apps;
+use caba::SimConfig;
+
+fn small_cfg() -> SimConfig {
+    let mut c = SimConfig::default();
+    // Shrink the chip but keep the paper's compute:bandwidth balance.
+    c.n_sms = 4;
+    c.bw_scale = 4.0 / 15.0;
+    c.max_cycles = 2_000_000;
+    c
+}
+
+#[test]
+fn all_27_apps_complete_under_base() {
+    for app in apps::APPS {
+        let stats = Simulator::new(small_cfg(), Design::base(), app, 0.01).run();
+        assert!(stats.finished, "{} did not finish", app.name);
+        assert!(stats.warp_insts > 0, "{}", app.name);
+        // Issue-slot conservation: every scheduler slot of every cycle is
+        // accounted as exactly one category (Fig. 2 must sum to 100%).
+        assert_eq!(
+            stats.issue.total(),
+            stats.cycles * (small_cfg().n_sms * small_cfg().schedulers_per_sm) as u64,
+            "{}: issue slots not conserved",
+            app.name
+        );
+        // Cache identities.
+        assert_eq!(stats.l1.accesses, stats.l1.hits + stats.l1.misses, "{}", app.name);
+        assert_eq!(stats.l2.accesses, stats.l2.hits + stats.l2.misses, "{}", app.name);
+        // Uncompressed baseline moves exactly 4 bursts per line.
+        assert_eq!(stats.dram.compression_ratio(), 1.0, "{}", app.name);
+    }
+}
+
+#[test]
+fn memory_bound_apps_stall_on_memory() {
+    // The paper's Fig. 2 claim: memory-bound apps spend most non-active
+    // slots on memory-structural + data-dependence stalls.
+    let app = apps::find("SLA").unwrap();
+    let stats = Simulator::new(small_cfg(), Design::base(), app, 0.02).run();
+    let (c, m, d, _i, a) = stats.issue.fractions();
+    assert!(m + d > 0.5, "mem+data = {}", m + d);
+    assert!(a < 0.5);
+    assert!(c < 0.2);
+}
+
+#[test]
+fn compute_bound_app_insensitive_to_bandwidth() {
+    // Fig. 2 / §3: doubling bandwidth barely moves compute-bound apps.
+    let app = apps::find("STO").unwrap();
+    let base = Simulator::new(small_cfg(), Design::base(), app, 0.02).run();
+    let mut cfg2 = small_cfg();
+    cfg2.bw_scale *= 2.0;
+    let doubled = Simulator::new(cfg2, Design::base(), app, 0.02).run();
+    let speedup = base.cycles as f64 / doubled.cycles as f64;
+    assert!(
+        speedup < 1.10,
+        "compute-bound app sped up {speedup}x from 2x bandwidth"
+    );
+}
+
+#[test]
+fn memory_bound_app_sensitive_to_bandwidth() {
+    let app = apps::find("PVC").unwrap();
+    let mut half = small_cfg();
+    half.bw_scale *= 0.5;
+    let halved = Simulator::new(half, Design::base(), app, 0.02).run();
+    let base = Simulator::new(small_cfg(), Design::base(), app, 0.02).run();
+    let slowdown = halved.cycles as f64 / base.cycles as f64;
+    assert!(slowdown > 1.3, "halving BW only cost {slowdown}x");
+}
+
+#[test]
+fn bandwidth_utilization_bounded_and_high_when_bound() {
+    let app = apps::find("PVC").unwrap();
+    let stats = Simulator::new(small_cfg(), Design::base(), app, 0.02).run();
+    let util = stats
+        .dram
+        .bandwidth_utilization(stats.cycles, small_cfg().n_mcs);
+    assert!(util > 0.5, "memory-bound app should saturate: {util}");
+    assert!(util <= 1.0);
+}
+
+#[test]
+fn occupancy_limits_respected() {
+    let cfg = SimConfig::default();
+    for app in apps::APPS {
+        let occ = caba::workload::occupancy(app, &cfg, 0);
+        assert!(occ.warps_per_sm <= cfg.max_warps_per_sm as u32, "{}", app.name);
+        assert!(occ.ctas_per_sm <= cfg.max_ctas_per_sm as u32, "{}", app.name);
+        assert!(
+            occ.ctas_per_sm as usize * app.threads_per_cta as usize
+                <= cfg.max_threads_per_sm,
+            "{}",
+            app.name
+        );
+        assert!(occ.regs_allocated <= cfg.regfile_per_sm as u32, "{}", app.name);
+        assert!((0.0..=1.0).contains(&occ.unallocated_reg_frac), "{}", app.name);
+    }
+}
+
+#[test]
+fn md_cache_hit_rate_in_paper_range() {
+    // §5.3.2: 8KB 4-way MD cache averages 85% (many apps > 99%).
+    let app = apps::find("PVC").unwrap();
+    let stats = Simulator::new(
+        small_cfg(),
+        Design::caba(caba::compress::Algo::Bdi),
+        app,
+        0.02,
+    )
+    .run();
+    assert!(
+        stats.md.hit_rate() > 0.7,
+        "MD hit rate {} below plausible range",
+        stats.md.hit_rate()
+    );
+}
+
+#[test]
+fn more_bandwidth_never_hurts() {
+    for name in ["PVC", "SLA", "MM"] {
+        let app = apps::find(name).unwrap();
+        let base = Simulator::new(small_cfg(), Design::base(), app, 0.01).run();
+        let mut cfg2 = small_cfg();
+        cfg2.bw_scale *= 2.0;
+        let doubled = Simulator::new(cfg2, Design::base(), app, 0.01).run();
+        assert!(
+            doubled.cycles <= base.cycles + base.cycles / 20,
+            "{name}: 2x BW made it slower ({} -> {})",
+            base.cycles,
+            doubled.cycles
+        );
+    }
+}

@@ -1,0 +1,277 @@
+//! Property tests over the compression substrates and coordinator
+//! invariants (mini-prop harness; `proptest` is unavailable offline —
+//! see DESIGN.md §3). Replay a failure with CABA_PROP_SEED=<seed>.
+
+use caba::compress::oracle::{CompressionOracle, MemoOracle, NativeOracle};
+use caba::compress::{bursts_for, compress, decompress, Algo, Line, LINE_BYTES};
+use caba::prop_assert;
+use caba::util::miniprop::{default_cases, forall};
+use caba::util::rng::Rng;
+use caba::workload::datagen::{line_data, DataPattern};
+
+fn arb_line(rng: &mut Rng) -> Line {
+    // Mix raw-random lines with structured ones so every encoding path is
+    // exercised, not just the uncompressed fallback.
+    let patterns = [
+        DataPattern::ZeroHeavy { p_zero: 0.5 },
+        DataPattern::LowDynRange { value_bytes: 8, delta_bytes: 1 },
+        DataPattern::LowDynRange { value_bytes: 2, delta_bytes: 1 },
+        DataPattern::NarrowInt { max: 200 },
+        DataPattern::PointerLike { n_bases: 3 },
+        DataPattern::RepBytes,
+        DataPattern::SparseNarrow { p_nonzero: 0.4 },
+        DataPattern::Random,
+    ];
+    if rng.chance(0.3) {
+        let mut line = [0u8; LINE_BYTES];
+        for b in line.iter_mut() {
+            *b = rng.next_u32() as u8;
+        }
+        line
+    } else {
+        let p = patterns[rng.range(0, patterns.len())];
+        line_data(&p, rng.next_u64(), rng.next_u64() % 10_000, 0)
+    }
+}
+
+#[test]
+fn prop_roundtrip_all_algorithms() {
+    forall("roundtrip", default_cases() * 4, arb_line, |line| {
+        for algo in Algo::CONCRETE {
+            let c = compress(algo, line);
+            let back = decompress(&c);
+            prop_assert!(
+                &back == line,
+                "{algo:?} enc={} failed roundtrip",
+                c.encoding
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compressed_size_bounded() {
+    forall("size-bound", default_cases() * 2, arb_line, |line| {
+        for algo in Algo::CONCRETE {
+            let c = compress(algo, line);
+            prop_assert!(
+                c.size_bytes() <= LINE_BYTES + 1,
+                "{algo:?}: size {} exceeds passthrough",
+                c.size_bytes()
+            );
+            prop_assert!(
+                (1..=4).contains(&c.bursts()),
+                "{algo:?}: bursts {}",
+                c.bursts()
+            );
+            prop_assert!(
+                c.bursts() == bursts_for(c.size_bytes()),
+                "{algo:?}: burst accounting"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_best_of_all_is_minimum() {
+    forall("best-min", default_cases(), arb_line, |line| {
+        let best = compress(Algo::BestOfAll, line);
+        for algo in Algo::CONCRETE {
+            let c = compress(algo, line);
+            prop_assert!(
+                best.size_bytes() <= c.size_bytes(),
+                "best {} > {algo:?} {}",
+                best.size_bytes(),
+                c.size_bytes()
+            );
+        }
+        // And BestOfAll lines must still decompress via their carried algo.
+        let back = decompress(&best);
+        prop_assert!(&back == line, "best roundtrip");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memo_oracle_transparent() {
+    let mut memo = MemoOracle::new(NativeOracle);
+    let mut native = NativeOracle;
+    forall("memo", default_cases(), arb_line, move |line| {
+        for algo in Algo::CONCRETE {
+            let a = memo.analyze_one(algo, line);
+            let b = native.analyze_one(algo, line);
+            prop_assert!(a == b, "{algo:?}: memo {a:?} != native {b:?}");
+            // Second query must hit the memo and agree.
+            let c = memo.analyze_one(algo, line);
+            prop_assert!(a == c, "{algo:?}: memo unstable");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_verdict_matches_compressor() {
+    let mut oracle = NativeOracle;
+    forall("verdict", default_cases(), arb_line, move |line| {
+        for algo in Algo::CONCRETE {
+            let v = oracle.analyze_one(algo, line);
+            let c = compress(algo, line);
+            prop_assert!(v.size_bytes as usize == c.size_bytes(), "{algo:?} size");
+            prop_assert!(v.encoding == c.encoding, "{algo:?} encoding");
+            prop_assert!(v.bursts == c.bursts(), "{algo:?} bursts");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_datagen_deterministic_and_epoch_sensitive() {
+    forall(
+        "datagen",
+        default_cases(),
+        |rng: &mut Rng| (rng.next_u64(), rng.next_u64() % 1000),
+        |&(seed, addr)| {
+            let p = DataPattern::LowDynRange { value_bytes: 4, delta_bytes: 1 };
+            let a = line_data(&p, seed, addr, 0);
+            let b = line_data(&p, seed, addr, 0);
+            prop_assert!(a == b, "not deterministic");
+            let c = line_data(&p, seed, addr, 1);
+            prop_assert!(a != c, "epoch ignored");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_insert_then_probe_hits() {
+    use caba::mem::cache::Cache;
+    forall(
+        "cache-hit",
+        default_cases(),
+        |rng: &mut Rng| {
+            let addrs: Vec<u64> = (0..16).map(|_| rng.next_u64() % 4096).collect();
+            addrs
+        },
+        |addrs| {
+            let mut c = Cache::new(16 * 1024, 4, 128, 1);
+            for (t, &a) in addrs.iter().enumerate() {
+                c.insert(a, false, 4, false, t as u64);
+                prop_assert!(c.contains(a), "inserted line missing");
+            }
+            // The most recent insert always survives.
+            prop_assert!(c.contains(*addrs.last().unwrap()), "MRU evicted");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulation_deterministic() {
+    use caba::sim::designs::Design;
+    use caba::sim::Simulator;
+    // Two runs with identical seeds must agree exactly — across apps and
+    // designs (routing/batching/state management determinism).
+    let apps = ["PVC", "BFS", "MM"];
+    forall(
+        "sim-determinism",
+        3,
+        {
+            let mut i = 0;
+            move |_rng: &mut Rng| {
+                let name = apps[i % apps.len()];
+                i += 1;
+                name
+            }
+        },
+        |name| {
+            let app = caba::workload::apps::find(name).unwrap();
+            let mut cfg = caba::SimConfig::default();
+            cfg.n_sms = 2;
+            cfg.max_cycles = 300_000;
+            let d = Design::caba(Algo::Bdi);
+            let a = Simulator::new(cfg.clone(), d, app, 0.005).run();
+            let b = Simulator::new(cfg, d, app, 0.005).run();
+            prop_assert!(a.cycles == b.cycles, "cycles differ");
+            prop_assert!(a.warp_insts == b.warp_insts, "insts differ");
+            prop_assert!(a.dram.bursts == b.dram.bursts, "bursts differ");
+            prop_assert!(
+                a.caba.decompress_warps == b.caba.decompress_warps,
+                "assist warps differ"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_icnt_port_times_monotone() {
+    use caba::mem::icnt::Port;
+    forall(
+        "icnt-monotone",
+        default_cases(),
+        |rng: &mut Rng| {
+            (0..16)
+                .map(|_| (rng.below(1000) as f64, 32.0 + rng.below(128) as f64))
+                .collect::<Vec<(f64, f64)>>()
+        },
+        |xfers| {
+            let mut p = Port::new(32.0);
+            let mut last_done = 0.0f64;
+            let mut sorted = xfers.clone();
+            sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for &(now, bytes) in &sorted {
+                let done = p.transfer(now, bytes);
+                prop_assert!(done >= now, "completion before start");
+                prop_assert!(done >= last_done, "port reordered transfers");
+                prop_assert!(
+                    done - now.max(last_done) >= bytes / 32.0 - 1e-9,
+                    "transfer faster than port bandwidth"
+                );
+                last_done = done;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_energy_monotone_in_events() {
+    use caba::energy::EnergyModel;
+    use caba::stats::SimStats;
+    forall(
+        "energy-monotone",
+        default_cases(),
+        |rng: &mut Rng| (rng.below(1_000_000), rng.below(1_000_000), rng.below(100_000) + 1),
+        |&(bursts, insts, cycles)| {
+            let em = EnergyModel::default();
+            let mut a = SimStats::default();
+            a.cycles = cycles;
+            a.energy_events.dram_bursts = bursts;
+            a.energy_events.core_insts = insts;
+            let mut b = a.clone();
+            b.energy_events.dram_bursts += 1000;
+            let ea = em.evaluate(&a, false, false).total_mj();
+            let eb = em.evaluate(&b, false, false).total_mj();
+            prop_assert!(eb > ea, "more DRAM bursts must cost more energy");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bursts_for_monotone_and_bounded() {
+    forall(
+        "bursts-monotone",
+        default_cases(),
+        |rng: &mut Rng| rng.below(256) as usize,
+        |&size| {
+            let b = bursts_for(size);
+            let b2 = bursts_for(size + 1);
+            prop_assert!(b2 >= b, "bursts not monotone in size");
+            prop_assert!((1..=4).contains(&b), "bursts out of range");
+            Ok(())
+        },
+    );
+}

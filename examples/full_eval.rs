@@ -20,6 +20,7 @@ use caba::runtime::{artifacts_available, PjrtOracle};
 use caba::sim::designs::{Design, Mechanism};
 use caba::sim::Simulator;
 use caba::stats::SimStats;
+use caba::sweep::{resolve_jobs, SweepEngine, SweepJob};
 use caba::util::geomean;
 use caba::workload::apps;
 use caba::SimConfig;
@@ -30,6 +31,11 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.1);
+    let jobs: usize = std::env::var("CABA_JOBS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    eprintln!("[full_eval] scale {scale}, {} sweep worker(s)", resolve_jobs(jobs));
     let t0 = Instant::now();
 
     // ---- Layer contract check: PJRT artifact vs native substrate ----
@@ -85,16 +91,21 @@ fn main() {
     let designs = Design::headline();
     let em = EnergyModel::default();
 
-    let mut all: Vec<Vec<SimStats>> = Vec::new();
-    for app in &set {
-        let mut row = Vec::new();
-        for d in designs.iter() {
-            row.push(Simulator::new(SimConfig::default(), *d, app, scale).run());
-        }
-        all.push(row);
-        eprint!(".");
-    }
-    eprintln!();
+    // One deduplicated parallel pass over the whole (app × design) matrix.
+    let engine = SweepEngine::shared(jobs);
+    let matrix: Vec<SweepJob> = set
+        .iter()
+        .flat_map(|app| {
+            designs
+                .iter()
+                .map(move |d| SweepJob::new(app, *d, SimConfig::default(), scale))
+        })
+        .collect();
+    let flat = engine.run(&matrix);
+    let all: Vec<Vec<SimStats>> = flat
+        .chunks(designs.len())
+        .map(|row| row.to_vec())
+        .collect();
 
     let metric = |f: &dyn Fn(&SimStats, &Design) -> f64| -> Vec<Series> {
         designs
@@ -143,21 +154,27 @@ fn main() {
         Design::caba(Algo::CPack),
         Design::caba(Algo::BestOfAll),
     ];
+    let algo_matrix: Vec<SweepJob> = algo_designs
+        .iter()
+        .flat_map(|d| {
+            set.iter()
+                .map(move |app| SweepJob::new(app, *d, SimConfig::default(), scale))
+        })
+        .collect();
+    let algo_flat = engine.run(&algo_matrix);
     let mut speed = Vec::new();
     let mut ratio = Vec::new();
-    for d in algo_designs.iter() {
-        let mut sv = Vec::new();
-        let mut rv = Vec::new();
-        for (i, app) in set.iter().enumerate() {
-            let s = Simulator::new(SimConfig::default(), *d, app, scale).run();
-            sv.push(s.ipc() / base_ipc[i]);
-            rv.push(s.dram.compression_ratio());
-        }
-        speed.push(Series { label: d.name.to_string(), values: sv });
-        ratio.push(Series { label: d.name.to_string(), values: rv });
-        eprint!("+");
+    for (di, d) in algo_designs.iter().enumerate() {
+        let row = &algo_flat[di * set.len()..(di + 1) * set.len()];
+        speed.push(Series {
+            label: d.name.to_string(),
+            values: row.iter().enumerate().map(|(i, s)| s.ipc() / base_ipc[i]).collect(),
+        });
+        ratio.push(Series {
+            label: d.name.to_string(),
+            values: row.iter().map(|s| s.dram.compression_ratio()).collect(),
+        });
     }
-    eprintln!();
     println!("# Fig. 12 — speedup per algorithm (paper: FPC +20.7% BDI +41.7% C-Pack +35.2%)\n{}",
         figure_matrix(&names, &speed, 3));
     println!("# Fig. 13 — compression ratio (paper avg: BDI 2.1x)\n{}",

@@ -1,4 +1,4 @@
 //! Fig. 3: fraction of statically unallocated registers.
 fn main() {
-    caba::report::benchutil::run_bench("fig03", |_| caba::report::figures::fig03_unallocated_regs());
+    caba::report::benchutil::run_bench("fig03", caba::report::figures::fig03_unallocated_regs);
 }

@@ -88,4 +88,50 @@ fn main() {
             dt
         );
     }
+
+    // --- Sweep-engine scaling (the EXPERIMENTS.md wall-clock table) ---
+    // The Fig. 8 matrix (eval set × five headline designs) at a small
+    // scale, executed with 1/2/4/... workers on *private* caches so every
+    // run re-simulates. Results are asserted bit-identical across worker
+    // counts while we're at it.
+    use caba::sweep::{resolve_jobs, SweepEngine, SweepJob};
+    println!();
+    let set = apps::eval_set();
+    let jobs: Vec<SweepJob> = set
+        .iter()
+        .flat_map(|app| {
+            Design::headline()
+                .into_iter()
+                .map(move |d| SweepJob::new(app, d, SimConfig::default(), 0.02))
+        })
+        .collect();
+    let mut serial_dt = None;
+    let mut reference = None;
+    let max_workers = resolve_jobs(0);
+    let mut w = 1;
+    while w <= max_workers {
+        let engine = SweepEngine::new(w);
+        let t0 = Instant::now();
+        let out = engine.run(&jobs);
+        let dt = t0.elapsed().as_secs_f64();
+        match reference.take() {
+            None => reference = Some(out),
+            Some(r) => {
+                assert_eq!(r, out, "sweep results diverge at {w} workers");
+                reference = Some(r);
+            }
+        }
+        let speedup = serial_dt.get_or_insert(dt);
+        println!(
+            "sweep fig8-matrix ({} jobs) --jobs {:<3} {:>6.2}s  ({:.2}x vs serial)",
+            jobs.len(),
+            w,
+            dt,
+            *speedup / dt
+        );
+        if w == max_workers {
+            break;
+        }
+        w = (w * 2).min(max_workers);
+    }
 }

@@ -44,7 +44,12 @@ impl LineVerdict {
 /// Batch-capable oracle interface. Batching matters for the PJRT backend
 /// (one executable launch amortized over many lines); the native backend
 /// just loops.
-pub trait CompressionOracle {
+///
+/// `Send` is a supertrait so a whole [`crate::sim::Simulator`] (which owns
+/// its oracle) can be moved onto a sweep-engine worker thread
+/// ([`crate::sweep`]). Oracles are still used single-threaded — one per
+/// simulation — so no `Sync` is required.
+pub trait CompressionOracle: Send {
     /// Analyze a batch of lines under `algo`.
     fn analyze(&mut self, algo: Algo, lines: &[Line]) -> Vec<LineVerdict>;
 

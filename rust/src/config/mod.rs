@@ -40,7 +40,7 @@ impl Default for DramTiming {
 }
 
 /// Full simulated-system configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
     // --- System overview ---
     /// Streaming multiprocessors.
@@ -203,6 +203,100 @@ impl SimConfig {
         (self.line_bytes / crate::compress::BURST_BYTES) as u8
     }
 
+    /// A stable 64-bit digest over **every** configuration field (floats
+    /// by bit pattern). This is the run-cache key component that makes two
+    /// configurations distinguishable: any `--set` override changes the
+    /// fingerprint, so cached [`crate::stats::SimStats`] are never returned
+    /// for a different configuration (the sweep engine and
+    /// `report::figures` key on it).
+    ///
+    /// Keep this in sync with the field list — the `fingerprint_covers_
+    /// every_field` test below walks all `set()` keys to enforce it.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        let SimConfig {
+            n_sms,
+            warp_size,
+            n_mcs,
+            clock_ghz,
+            schedulers_per_sm,
+            max_warps_per_sm,
+            max_ctas_per_sm,
+            max_threads_per_sm,
+            regfile_per_sm,
+            smem_per_sm,
+            sp_units,
+            sfu_units,
+            mem_units,
+            alu_latency,
+            fma_latency,
+            sfu_latency,
+            l1_bytes,
+            l1_assoc,
+            l1_hit_latency,
+            l1_mshrs,
+            l2_bytes,
+            l2_assoc,
+            l2_hit_latency,
+            l2_tag_latency,
+            line_bytes,
+            icnt_bytes_per_cycle,
+            icnt_latency,
+            dram_bw_gbps,
+            bw_scale,
+            banks_per_mc,
+            dram_timing,
+            dram_base_latency,
+            md_cache_bytes,
+            md_cache_assoc,
+            hw_decompress_latency,
+            hw_compress_latency,
+            awt_entries,
+            awb_low_prio_slots,
+            caba_throttle,
+            throttle_util_threshold,
+            max_cycles,
+            max_warp_insts,
+            seed,
+        } = self; // exhaustive destructuring: adding a field breaks this
+        macro_rules! feed {
+            ($($v:expr),* $(,)?) => { $( $v.hash(&mut h); )* };
+        }
+        feed!(
+            n_sms, warp_size, n_mcs, clock_ghz.to_bits(), schedulers_per_sm,
+            max_warps_per_sm, max_ctas_per_sm, max_threads_per_sm,
+            regfile_per_sm, smem_per_sm, sp_units, sfu_units, mem_units,
+            alu_latency, fma_latency, sfu_latency, l1_bytes, l1_assoc,
+            l1_hit_latency, l1_mshrs, l2_bytes, l2_assoc, l2_hit_latency,
+            l2_tag_latency, line_bytes, icnt_bytes_per_cycle.to_bits(),
+            icnt_latency, dram_bw_gbps.to_bits(), bw_scale.to_bits(),
+            banks_per_mc, dram_base_latency, md_cache_bytes, md_cache_assoc,
+            hw_decompress_latency, hw_compress_latency, awt_entries,
+            awb_low_prio_slots, caba_throttle,
+            throttle_util_threshold.to_bits(), max_cycles, max_warp_insts,
+            seed,
+        );
+        let DramTiming { t_cl, t_rp, t_rc, t_ras, t_rcd, t_rrd, t_ccd, t_wr } = dram_timing;
+        feed!(t_cl, t_rp, t_rc, t_ras, t_rcd, t_rrd, t_ccd, t_wr);
+        h.finish()
+    }
+
+    /// Every key accepted by [`SimConfig::set`] (used by tests and docs).
+    pub const KEYS: [&'static str; 41] = [
+        "n_sms", "warp_size", "n_mcs", "clock_ghz", "schedulers_per_sm",
+        "max_warps_per_sm", "max_ctas_per_sm", "max_threads_per_sm",
+        "regfile_per_sm", "smem_per_sm", "sp_units", "sfu_units",
+        "mem_units", "alu_latency", "fma_latency", "sfu_latency",
+        "l1_bytes", "l1_assoc", "l1_hit_latency", "l1_mshrs", "l2_bytes",
+        "l2_assoc", "l2_hit_latency", "l2_tag_latency",
+        "icnt_bytes_per_cycle", "icnt_latency", "dram_bw_gbps", "bw_scale",
+        "banks_per_mc", "dram_base_latency", "md_cache_bytes",
+        "md_cache_assoc", "hw_decompress_latency", "hw_compress_latency",
+        "awt_entries", "awb_low_prio_slots", "caba_throttle",
+        "throttle_util_threshold", "max_cycles", "max_warp_insts", "seed",
+    ];
+
     /// Apply one `key=value` override. Returns an error on unknown keys or
     /// malformed values — configs fail loudly, never silently.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
@@ -350,6 +444,36 @@ mod tests {
         assert!(!c.caba_throttle);
         assert!(c.set("nonsense_key", "1").is_err());
         assert!(c.set("n_sms", "not_a_number").is_err());
+    }
+
+    #[test]
+    fn fingerprint_covers_every_field() {
+        // Changing any settable key must change the fingerprint — this is
+        // the property that makes the sweep/figure run cache sound under
+        // `--set` overrides.
+        let base = SimConfig::default();
+        for key in SimConfig::KEYS {
+            let mut c = base.clone();
+            // A value different from every default for that key.
+            let val = match key {
+                "caba_throttle" => "false".to_string(),
+                "clock_ghz" | "icnt_bytes_per_cycle" | "dram_bw_gbps"
+                | "bw_scale" | "throttle_util_threshold" => "123.456".to_string(),
+                _ => "77".to_string(),
+            };
+            c.set(key, &val).unwrap();
+            assert_ne!(
+                c.fingerprint(),
+                base.fingerprint(),
+                "fingerprint ignores key {key}"
+            );
+        }
+        // Timing fields are covered too.
+        let mut c = base.clone();
+        c.dram_timing.t_cl = 99;
+        assert_ne!(c.fingerprint(), base.fingerprint());
+        // And it is stable for equal configs.
+        assert_eq!(base.fingerprint(), SimConfig::default().fingerprint());
     }
 
     #[test]

@@ -692,13 +692,43 @@ impl Core {
         ctx.wl.access_lines(mem, uid, iter, body_idx, &mut lines);
         self.lsu_free_at = now + lines.len() as u64;
 
+        // Pass 1 — per-line write-through bookkeeping (order-independent:
+        // invalidation is idempotent, the counter commutative).
         for &line in &lines {
             ctx.stats.energy_events.l1_accesses += 1;
-            // Write-through, no-allocate L1: drop any stale copy.
             self.l1.invalidate(line);
-            ctx.data.bump_epoch(line);
+        }
 
-            let compression_on = ctx.design.mem_compression || ctx.design.icnt_compression;
+        let compression_on = ctx.design.mem_compression || ctx.design.icnt_compression;
+        // A transaction that touches the same line twice (possible for
+        // Scatter stores) must bump and analyze strictly in line order —
+        // the first dispatch's verdict reflects epoch e+1, not e+2. Batch
+        // only duplicate-free transactions (the overwhelmingly common
+        // case); duplicates keep the interleaved bump/verdict ordering.
+        let interleave = compression_on
+            && lines.len() > 1
+            && (1..lines.len()).any(|i| lines[..i].contains(&lines[i]));
+        if !interleave {
+            for &line in &lines {
+                ctx.data.bump_epoch(line);
+            }
+            if compression_on {
+                // All of this store's pending lines need a compression
+                // verdict below — compute them in ONE oracle call (§5.2.2:
+                // the AWC dispatches per line, but analysis batches; this
+                // is what the PJRT backend's batched executable exists
+                // for).
+                ctx.data.warm_verdicts(ctx.wl, ctx.design.algo, &lines);
+            }
+        }
+
+        // Pass 2 — dispatch each line (same line order as before, so the
+        // reservation-based memory contention model sees identical
+        // request sequences).
+        for &line in &lines {
+            if interleave {
+                ctx.data.bump_epoch(line);
+            }
             if !compression_on {
                 ctx.mem.store(now, self.sm_id, line, ctx.design, None);
                 continue;

@@ -21,10 +21,16 @@
 //!   request path;
 //! * an **energy model** ([`energy`]), the paper's 27 **workloads**
 //!   ([`workload`]) and the full **evaluation harness** ([`report`],
-//!   `rust/benches/`) regenerating every table and figure.
+//!   `rust/benches/`) regenerating every table and figure;
+//! * a deterministic **parallel sweep engine** ([`sweep`]) that executes
+//!   the `(app × design × bw_scale)` evaluation matrices on a scoped
+//!   `std::thread` worker pool — `caba fig 8 --jobs N` is bit-identical
+//!   to `--jobs 1`, just faster.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the system inventory and
+//! `EXPERIMENTS.md` for paper-vs-measured results and the sweep-engine
+//! wall-clock methodology. `README.md` has the quickstart and the full
+//! CLI reference.
 
 pub mod caba;
 pub mod compress;
@@ -37,6 +43,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod sweep;
 pub mod util;
 pub mod workload;
 

@@ -8,15 +8,25 @@
 //! caba run --app PVC --design CABA-BDI [--scale 0.1]
 //!          [--oracle native|pjrt] [--set key=value]...
 //! caba fig <2|3|8|9|10|11|12|13|14|15|16|md> [--scale 0.1]
+//!          [--jobs N] [--set key=value]...
+//! caba sweep [--apps PVC,MM|eval|all] [--designs Base,CABA-BDI|headline]
+//!            [--bw 0.5,1.0,2.0] [--scale 0.1] [--jobs N] [--set k=v]...
 //! ```
+//!
+//! `--jobs N` sets the sweep-engine worker count (default: one per
+//! available core). Results are bit-identical for any worker count —
+//! every simulation point is deterministic and self-contained.
 
 use anyhow::{anyhow, bail, Result};
 use caba::compress::Algo;
-use caba::report::figures;
+use caba::report::figures::{self, RunCtx};
+use caba::report::{figure_matrix, Series};
 use caba::sim::designs::Design;
 use caba::sim::Simulator;
-use caba::workload::apps;
+use caba::sweep::{resolve_jobs, SweepEngine, SweepJob};
+use caba::workload::apps::{self, AppSpec};
 use caba::SimConfig;
+use std::time::Instant;
 
 fn main() {
     if let Err(e) = run() {
@@ -70,6 +80,16 @@ impl Args {
     fn scale(&self) -> f64 {
         self.flag("scale").and_then(|s| s.parse().ok()).unwrap_or(0.25)
     }
+
+    /// Sweep worker count: `--jobs N`; 0/absent = one per available core.
+    fn jobs(&self) -> Result<usize> {
+        match self.flag("jobs") {
+            None => Ok(0),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--jobs expects a non-negative integer, got {v:?}")),
+        }
+    }
 }
 
 fn design_by_name(name: &str) -> Result<Design> {
@@ -95,6 +115,28 @@ fn design_by_name(name: &str) -> Result<Design> {
         .find(|d| d.name.eq_ignore_ascii_case(name))
         .copied()
         .ok_or_else(|| anyhow!("unknown design {name:?}; see `caba list`"))
+}
+
+/// Parse the `sweep --apps` selector.
+fn apps_by_selector(sel: &str) -> Result<Vec<&'static AppSpec>> {
+    match sel {
+        "all" => Ok(apps::APPS.iter().collect()),
+        "eval" => Ok(apps::eval_set()),
+        list => list
+            .split(',')
+            .map(|n| {
+                apps::find(n.trim()).ok_or_else(|| anyhow!("unknown app {n:?}; see `caba list`"))
+            })
+            .collect(),
+    }
+}
+
+/// Parse the `sweep --designs` selector.
+fn designs_by_selector(sel: &str) -> Result<Vec<Design>> {
+    match sel {
+        "headline" => Ok(Design::headline().to_vec()),
+        list => list.split(',').map(|n| design_by_name(n.trim())).collect(),
+    }
 }
 
 fn run() -> Result<()> {
@@ -152,30 +194,97 @@ fn run() -> Result<()> {
                 .positional
                 .get(1)
                 .ok_or_else(|| anyhow!("fig requires a figure id (2..16, md)"))?;
-            let scale = args.scale();
+            let ctx = RunCtx::with_cfg(args.config()?, args.scale(), args.jobs()?);
+            let t0 = Instant::now();
             let out = match which.as_str() {
-                "2" => figures::fig02_cycle_breakdown(scale),
-                "3" => figures::fig03_unallocated_regs(),
-                "8" => figures::fig08_performance(scale),
-                "9" => figures::fig09_bandwidth_utilization(scale),
-                "10" => figures::fig10_energy(scale),
-                "11" => figures::fig11_edp(scale),
-                "12" => figures::fig12_algorithms(scale),
-                "13" => figures::fig13_compression_ratio(scale),
-                "14" => figures::fig14_bw_sensitivity(scale),
-                "15" => figures::fig15_cache_compression(scale),
-                "16" => figures::fig16_optimizations(scale),
-                "md" => figures::md_cache_hitrate(scale),
+                "2" => figures::fig02_cycle_breakdown(&ctx),
+                "3" => figures::fig03_unallocated_regs(&ctx),
+                "8" => figures::fig08_performance(&ctx),
+                "9" => figures::fig09_bandwidth_utilization(&ctx),
+                "10" => figures::fig10_energy(&ctx),
+                "11" => figures::fig11_edp(&ctx),
+                "12" => figures::fig12_algorithms(&ctx),
+                "13" => figures::fig13_compression_ratio(&ctx),
+                "14" => figures::fig14_bw_sensitivity(&ctx),
+                "15" => figures::fig15_cache_compression(&ctx),
+                "16" => figures::fig16_optimizations(&ctx),
+                "md" => figures::md_cache_hitrate(&ctx),
                 other => bail!("unknown figure {other:?}"),
             };
             println!("{out}");
+            eprintln!(
+                "[fig {which}] {:.2}s at scale {} with {} worker(s)",
+                t0.elapsed().as_secs_f64(),
+                ctx.scale,
+                resolve_jobs(ctx.jobs)
+            );
+            Ok(())
+        }
+        Some("sweep") => {
+            let set = apps_by_selector(args.flag("apps").unwrap_or("eval"))?;
+            let designs = designs_by_selector(args.flag("designs").unwrap_or("headline"))?;
+            let bws: Vec<f64> = args
+                .flag("bw")
+                .unwrap_or("1.0")
+                .split(',')
+                .map(|v| {
+                    v.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--bw expects comma-separated floats, got {v:?}"))
+                })
+                .collect::<Result<_>>()?;
+            let cfg = args.config()?;
+            let scale = args.scale();
+            let jobs = args.jobs()?;
+
+            // Build the deduplicated job matrix and execute it in one
+            // parallel pass; rendering below is all cache hits.
+            let mut matrix = Vec::new();
+            for app in &set {
+                for d in &designs {
+                    for &bw in &bws {
+                        matrix.push(SweepJob::with_bw(app, *d, &cfg, bw, scale));
+                    }
+                }
+            }
+            let engine = SweepEngine::shared(jobs);
+            let t0 = Instant::now();
+            engine.run(&matrix);
+            let dt = t0.elapsed().as_secs_f64();
+
+            let names: Vec<&str> = set.iter().map(|a| a.name).collect();
+            for &bw in &bws {
+                let mut ipc = Vec::new();
+                let mut ratio = Vec::new();
+                for d in &designs {
+                    let mut iv = Vec::new();
+                    let mut rv = Vec::new();
+                    for app in &set {
+                        let s = engine.run_one(&SweepJob::with_bw(app, *d, &cfg, bw, scale));
+                        iv.push(s.ipc());
+                        rv.push(s.dram.compression_ratio());
+                    }
+                    ipc.push(Series { label: d.name.to_string(), values: iv });
+                    ratio.push(Series { label: d.name.to_string(), values: rv });
+                }
+                println!("# Sweep — IPC at {bw}x bandwidth (scale {scale})");
+                println!("{}", figure_matrix(&names, &ipc, 3));
+                println!("# Sweep — DRAM compression ratio at {bw}x bandwidth");
+                println!("{}", figure_matrix(&names, &ratio, 2));
+            }
+            eprintln!(
+                "[sweep] {} point(s) in {dt:.2}s with {} worker(s)",
+                matrix.len(),
+                resolve_jobs(jobs)
+            );
             Ok(())
         }
         _ => {
             eprintln!(
-                "usage: caba <list|table1|run|fig> [...]\n  \
+                "usage: caba <list|table1|run|fig|sweep> [...]\n  \
                  caba run --app PVC --design CABA-BDI [--scale 0.25] [--oracle native|pjrt]\n  \
-                 caba fig 8 [--scale 0.25]"
+                 caba fig 8 [--scale 0.25] [--jobs N] [--set key=value]\n  \
+                 caba sweep --apps eval --designs headline --bw 0.5,1.0,2.0 [--jobs N]"
             );
             Ok(())
         }

@@ -1,11 +1,18 @@
 //! Shared harness for the `harness = false` bench binaries (criterion is
 //! unavailable in the offline image — DESIGN.md §3).
 //!
-//! Every bench regenerates one paper table/figure, printing the figure and
-//! its wall time. `CABA_BENCH_SCALE` sets the workload scale (default 0.1;
-//! use 0.25–1.0 for publication-fidelity runs). `--quick` in the bench args
-//! drops to 0.03 for smoke runs.
+//! Every bench regenerates one paper table/figure through the parallel
+//! sweep engine, printing the figure and its wall time.
+//!
+//! Knobs (env var or bench arg):
+//! * `CABA_BENCH_SCALE` — workload scale (default 0.1; 0.25–1.0 for
+//!   publication-fidelity runs); `--quick` drops to 0.03 for smoke runs.
+//! * `CABA_JOBS` / `--jobs N` — sweep worker count (default: one per
+//!   available core; `1` reproduces the old serial behaviour,
+//!   bit-identically).
 
+use super::figures::RunCtx;
+use crate::SimConfig;
 use std::time::Instant;
 
 /// Workload scale for bench runs.
@@ -19,15 +26,45 @@ pub fn bench_scale() -> f64 {
         .unwrap_or(0.1)
 }
 
+/// Sweep worker count for bench runs (`0` = one per available core).
+/// Malformed values fail loudly — a silently ignored `--jobs` would
+/// record the EXPERIMENTS.md wall-clock table under the wrong count.
+pub fn bench_jobs() -> usize {
+    let parse_loudly = |what: &str, v: &str| -> usize {
+        v.parse()
+            .unwrap_or_else(|_| panic!("{what} expects a non-negative integer, got {v:?}"))
+    };
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--jobs" {
+            let v = args.next().unwrap_or_default();
+            return parse_loudly("--jobs", &v);
+        }
+    }
+    match std::env::var("CABA_JOBS") {
+        Ok(v) => parse_loudly("CABA_JOBS", &v),
+        Err(_) => 0,
+    }
+}
+
+/// The [`RunCtx`] a bench binary should regenerate its figure with.
+pub fn bench_ctx() -> RunCtx {
+    RunCtx::with_cfg(SimConfig::default(), bench_scale(), bench_jobs())
+}
+
 /// Run one named figure generator and report timing.
-pub fn run_bench(name: &str, f: impl FnOnce(f64) -> String) {
-    let scale = bench_scale();
-    eprintln!("[{name}] generating at scale {scale} ...");
+pub fn run_bench(name: &str, f: impl FnOnce(&RunCtx) -> String) {
+    let ctx = bench_ctx();
+    let jobs = crate::sweep::resolve_jobs(ctx.jobs);
+    eprintln!("[{name}] generating at scale {} with {jobs} worker(s) ...", ctx.scale);
     let t0 = Instant::now();
-    let out = f(scale);
+    let out = f(&ctx);
     let dt = t0.elapsed().as_secs_f64();
     println!("{out}");
-    println!("[{name}] regenerated in {dt:.2}s (scale {scale})");
+    println!(
+        "[{name}] regenerated in {dt:.2}s (scale {}, {jobs} worker(s))",
+        ctx.scale
+    );
 }
 
 #[cfg(test)]
@@ -38,5 +75,12 @@ mod tests {
     fn default_scale_parses() {
         let s = bench_scale();
         assert!(s > 0.0 && s <= 1.0);
+    }
+
+    #[test]
+    fn default_jobs_parse() {
+        // 0 (auto) unless the test runner's env says otherwise.
+        let _ = bench_jobs();
+        assert!(crate::sweep::resolve_jobs(bench_jobs()) >= 1);
     }
 }

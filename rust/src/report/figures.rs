@@ -2,53 +2,68 @@
 //! paper's evaluation (§3, §7). Each runs the required (app × design)
 //! simulations and renders the same rows/series the paper plots.
 //!
-//! Used by both the CLI (`caba fig N`) and the bench binaries
-//! (`cargo bench --bench figNN_*`). Results are cached per-process so
-//! figures sharing runs (8–11) don't re-simulate.
+//! Used by both the CLI (`caba fig N [--jobs N] [--set k=v]`) and the
+//! bench binaries (`cargo bench --bench figNN_*`). Every regenerator
+//! first *warms* the process-wide run cache through the parallel
+//! [`crate::sweep::SweepEngine`] — the whole (app × design × bw) matrix
+//! executes concurrently, deterministically — then composes its table
+//! from cache hits. Figures sharing runs (8–11) still simulate each point
+//! once per process.
+//!
+//! The cache is keyed on the **full** [`SimConfig`] fingerprint (plus
+//! app/design/scale), so `--set` overrides can never be served stale
+//! stats from a different configuration — the old cache keyed only on
+//! `(bw_scale, scale)` and silently ignored overrides.
 
 use super::{figure_matrix, Series};
 use crate::compress::Algo;
 use crate::energy::EnergyModel;
 use crate::sim::designs::{Design, Mechanism};
-use crate::sim::Simulator;
 use crate::stats::SimStats;
+use crate::sweep::{SweepEngine, SweepJob};
 use crate::workload::apps::{self, AppSpec};
 use crate::SimConfig;
-use std::collections::HashMap;
-use std::sync::Mutex;
-use std::sync::OnceLock;
 
-fn run_cache() -> &'static Mutex<HashMap<(String, String, u64, u64), SimStats>> {
-    static CACHE: OnceLock<Mutex<HashMap<(String, String, u64, u64), SimStats>>> = OnceLock::new();
-    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+/// Everything a figure regeneration needs: the base configuration (before
+/// per-figure `bw_scale` adjustments), the workload scale, and the sweep
+/// worker count (`0` = one per available core).
+#[derive(Clone)]
+pub struct RunCtx {
+    pub cfg: SimConfig,
+    pub scale: f64,
+    pub jobs: usize,
 }
 
-/// Run (or fetch) one simulation.
-pub fn run(app: &'static AppSpec, design: Design, bw_scale: f64, scale: f64) -> SimStats {
-    let key = (
-        app.name.to_string(),
-        design.name.to_string(),
-        bw_scale.to_bits(),
-        scale.to_bits(),
-    );
-    if let Some(s) = run_cache().lock().unwrap().get(&key) {
-        return s.clone();
+impl RunCtx {
+    /// Default configuration at `scale`, auto parallelism.
+    pub fn new(scale: f64) -> RunCtx {
+        RunCtx { cfg: SimConfig::default(), scale, jobs: 0 }
     }
-    let mut cfg = SimConfig::default();
-    cfg.bw_scale = bw_scale;
-    // The paper profiles apps and disables compression where unprofitable
-    // (§6); Base behaviour for those apps.
-    let design = if design.compression_enabled() && !Simulator::compression_profitable(app) {
-        Design::base()
-    } else {
-        design
-    };
-    let stats = Simulator::new(cfg, design, app, scale).run();
-    run_cache()
-        .lock()
-        .unwrap()
-        .insert(key, stats.clone());
-    stats
+
+    /// Explicit configuration (CLI `--set` overrides) and worker count.
+    pub fn with_cfg(cfg: SimConfig, scale: f64, jobs: usize) -> RunCtx {
+        RunCtx { cfg, scale, jobs }
+    }
+
+    fn engine(&self) -> SweepEngine {
+        SweepEngine::shared(self.jobs)
+    }
+
+    /// Execute all `(app, design, bw_scale)` points concurrently into the
+    /// shared cache (deduplicated; already-cached points are free).
+    pub fn warm(&self, points: &[(&'static AppSpec, Design, f64)]) {
+        let jobs: Vec<SweepJob> = points
+            .iter()
+            .map(|&(app, design, bw)| SweepJob::with_bw(app, design, &self.cfg, bw, self.scale))
+            .collect();
+        self.engine().run(&jobs);
+    }
+
+    /// Run (or fetch) one simulation point.
+    pub fn point(&self, app: &'static AppSpec, design: Design, bw_scale: f64) -> SimStats {
+        self.engine()
+            .run_one(&SweepJob::with_bw(app, design, &self.cfg, bw_scale, self.scale))
+    }
 }
 
 fn eval_apps() -> Vec<&'static AppSpec> {
@@ -57,6 +72,24 @@ fn eval_apps() -> Vec<&'static AppSpec> {
 
 fn names(set: &[&'static AppSpec]) -> Vec<&'static str> {
     set.iter().map(|a| a.name).collect()
+}
+
+/// Cross-product helper: every app × every design at the given bandwidth
+/// points.
+fn matrix(
+    set: &[&'static AppSpec],
+    designs: &[Design],
+    bws: &[f64],
+) -> Vec<(&'static AppSpec, Design, f64)> {
+    let mut points = Vec::with_capacity(set.len() * designs.len() * bws.len());
+    for &app in set {
+        for &d in designs {
+            for &bw in bws {
+                points.push((app, d, bw));
+            }
+        }
+    }
+    points
 }
 
 fn energy_of(stats: &SimStats, design: &Design) -> f64 {
@@ -72,7 +105,9 @@ fn energy_of(stats: &SimStats, design: &Design) -> f64 {
 // ---------------------------------------------------------------- Fig. 2
 
 /// Issue-cycle breakdown for all 27 apps at ½×/1×/2× memory bandwidth.
-pub fn fig02_cycle_breakdown(scale: f64) -> String {
+pub fn fig02_cycle_breakdown(ctx: &RunCtx) -> String {
+    let all: Vec<&'static AppSpec> = apps::APPS.iter().collect();
+    ctx.warm(&matrix(&all, &[Design::base()], &[0.5, 1.0, 2.0]));
     let mut out = String::from("# Fig. 2 — breakdown of total issue cycles (Base design)\n");
     for bw in [0.5, 1.0, 2.0] {
         out.push_str(&format!("\n## {}x baseline bandwidth\n", bw));
@@ -82,7 +117,7 @@ pub fn fig02_cycle_breakdown(scale: f64) -> String {
         let mut mem_md_sum = 0.0;
         let mut n_mem = 0;
         for app in apps::APPS {
-            let s = run(app, Design::base(), bw, scale);
+            let s = ctx.point(app, Design::base(), bw);
             let (c, m, d, i, a) = s.issue.fractions();
             if app.memory_bound {
                 mem_md_sum += m + d;
@@ -112,12 +147,12 @@ pub fn fig02_cycle_breakdown(scale: f64) -> String {
 
 /// Fraction of statically unallocated registers per app (pure occupancy
 /// arithmetic; no simulation needed).
-pub fn fig03_unallocated_regs() -> String {
-    let cfg = SimConfig::default();
+pub fn fig03_unallocated_regs(ctx: &RunCtx) -> String {
+    let cfg = &ctx.cfg;
     let mut t = super::Table::new(["app", "regs/thread", "CTAs/SM", "limiter", "unallocated%"]);
     let mut sum = 0.0;
     for app in apps::APPS {
-        let occ = crate::workload::occupancy(app, &cfg, 0);
+        let occ = crate::workload::occupancy(app, cfg, 0);
         sum += occ.unallocated_reg_frac;
         t.row([
             app.name.to_string(),
@@ -128,8 +163,9 @@ pub fn fig03_unallocated_regs() -> String {
         ]);
     }
     format!(
-        "# Fig. 3 — statically unallocated registers (128KB register file/SM)\n{}\
+        "# Fig. 3 — statically unallocated registers ({}KB register file/SM)\n{}\
          average unallocated: {:.1}% (paper: 24%)\n",
+        cfg.regfile_per_sm * 4 / 1024,
         t.render(),
         sum / apps::APPS.len() as f64 * 100.0
     )
@@ -137,16 +173,20 @@ pub fn fig03_unallocated_regs() -> String {
 
 // ------------------------------------------------------------- Figs. 8-11
 
-fn headline_series(scale: f64, metric: impl Fn(&SimStats, &Design) -> f64) -> (Vec<&'static str>, Vec<Series>) {
+fn headline_series(
+    ctx: &RunCtx,
+    metric: impl Fn(&SimStats, &Design) -> f64,
+) -> (Vec<&'static str>, Vec<Series>) {
     let set = eval_apps();
     let designs = Design::headline();
+    ctx.warm(&matrix(&set, &designs, &[1.0]));
     let mut series: Vec<Series> = designs
         .iter()
         .map(|d| Series { label: d.name.to_string(), values: Vec::new() })
         .collect();
     for app in &set {
         for (di, d) in designs.iter().enumerate() {
-            let s = run(app, *d, 1.0, scale);
+            let s = ctx.point(app, *d, 1.0);
             series[di].values.push(metric(&s, d));
         }
     }
@@ -154,13 +194,14 @@ fn headline_series(scale: f64, metric: impl Fn(&SimStats, &Design) -> f64) -> (V
 }
 
 /// Normalized performance of the five designs (vs Base).
-pub fn fig08_performance(scale: f64) -> String {
+pub fn fig08_performance(ctx: &RunCtx) -> String {
     let set = eval_apps();
+    ctx.warm(&matrix(&set, &Design::headline(), &[1.0]));
     let base: Vec<f64> = set
         .iter()
-        .map(|a| run(a, Design::base(), 1.0, scale).ipc())
+        .map(|a| ctx.point(a, Design::base(), 1.0).ipc())
         .collect();
-    let (names, mut series) = headline_series(scale, |s, _| s.ipc());
+    let (names, mut series) = headline_series(ctx, |s, _| s.ipc());
     for s in &mut series {
         for (i, v) in s.values.iter_mut().enumerate() {
             *v /= base[i];
@@ -175,9 +216,9 @@ pub fn fig08_performance(scale: f64) -> String {
 }
 
 /// Memory bandwidth utilization of the five designs.
-pub fn fig09_bandwidth_utilization(scale: f64) -> String {
-    let n_mcs = SimConfig::default().n_mcs;
-    let (names, series) = headline_series(scale, move |s, _| {
+pub fn fig09_bandwidth_utilization(ctx: &RunCtx) -> String {
+    let n_mcs = ctx.cfg.n_mcs;
+    let (names, series) = headline_series(ctx, move |s, _| {
         s.dram.bandwidth_utilization(s.cycles, n_mcs) * 100.0
     });
     format!(
@@ -188,16 +229,17 @@ pub fn fig09_bandwidth_utilization(scale: f64) -> String {
 }
 
 /// Normalized energy of the five designs (vs Base).
-pub fn fig10_energy(scale: f64) -> String {
+pub fn fig10_energy(ctx: &RunCtx) -> String {
     let set = eval_apps();
+    ctx.warm(&matrix(&set, &Design::headline(), &[1.0]));
     let base: Vec<f64> = set
         .iter()
         .map(|a| {
-            let s = run(a, Design::base(), 1.0, scale);
+            let s = ctx.point(a, Design::base(), 1.0);
             energy_of(&s, &Design::base())
         })
         .collect();
-    let (names, mut series) = headline_series(scale, |s, d| energy_of(s, d));
+    let (names, mut series) = headline_series(ctx, |s, d| energy_of(s, d));
     for s in &mut series {
         for (i, v) in s.values.iter_mut().enumerate() {
             *v /= base[i];
@@ -207,8 +249,8 @@ pub fn fig10_energy(scale: f64) -> String {
     let mut dram_base = 0.0;
     let mut dram_caba = 0.0;
     for app in &set {
-        let b = run(app, Design::base(), 1.0, scale);
-        let c = run(app, Design::caba(Algo::Bdi), 1.0, scale);
+        let b = ctx.point(app, Design::base(), 1.0);
+        let c = ctx.point(app, Design::caba(Algo::Bdi), 1.0);
         let em = EnergyModel::default();
         dram_base += em.evaluate(&b, false, false).dram_total_mj() / (b.cycles as f64);
         dram_caba += em.evaluate(&c, true, false).dram_total_mj() / (c.cycles as f64);
@@ -223,9 +265,10 @@ pub fn fig10_energy(scale: f64) -> String {
 }
 
 /// Normalized energy-delay product.
-pub fn fig11_edp(scale: f64) -> String {
+pub fn fig11_edp(ctx: &RunCtx) -> String {
     let em = EnergyModel::default();
     let set = eval_apps();
+    ctx.warm(&matrix(&set, &Design::headline(), &[1.0]));
     let edp = |s: &SimStats, d: &Design| {
         em.edp(
             s,
@@ -235,9 +278,9 @@ pub fn fig11_edp(scale: f64) -> String {
     };
     let base: Vec<f64> = set
         .iter()
-        .map(|a| edp(&run(a, Design::base(), 1.0, scale), &Design::base()))
+        .map(|a| edp(&ctx.point(a, Design::base(), 1.0), &Design::base()))
         .collect();
-    let (names, mut series) = headline_series(scale, edp);
+    let (names, mut series) = headline_series(ctx, edp);
     for s in &mut series {
         for (i, v) in s.values.iter_mut().enumerate() {
             *v /= base[i];
@@ -253,7 +296,7 @@ pub fn fig11_edp(scale: f64) -> String {
 // ------------------------------------------------------------ Figs. 12-13
 
 /// Speedup with different compression algorithms under CABA.
-pub fn fig12_algorithms(scale: f64) -> String {
+pub fn fig12_algorithms(ctx: &RunCtx) -> String {
     let set = eval_apps();
     let designs = [
         Design::caba(Algo::Fpc),
@@ -261,9 +304,12 @@ pub fn fig12_algorithms(scale: f64) -> String {
         Design::caba(Algo::CPack),
         Design::caba(Algo::BestOfAll),
     ];
+    let mut all = designs.to_vec();
+    all.push(Design::base());
+    ctx.warm(&matrix(&set, &all, &[1.0]));
     let base: Vec<f64> = set
         .iter()
-        .map(|a| run(a, Design::base(), 1.0, scale).ipc())
+        .map(|a| ctx.point(a, Design::base(), 1.0).ipc())
         .collect();
     let series: Vec<Series> = designs
         .iter()
@@ -272,7 +318,7 @@ pub fn fig12_algorithms(scale: f64) -> String {
             values: set
                 .iter()
                 .enumerate()
-                .map(|(i, a)| run(a, *d, 1.0, scale).ipc() / base[i])
+                .map(|(i, a)| ctx.point(a, *d, 1.0).ipc() / base[i])
                 .collect(),
         })
         .collect();
@@ -284,15 +330,20 @@ pub fn fig12_algorithms(scale: f64) -> String {
 }
 
 /// Compression ratio of each algorithm (DRAM bursts saved).
-pub fn fig13_compression_ratio(scale: f64) -> String {
+pub fn fig13_compression_ratio(ctx: &RunCtx) -> String {
     let set = eval_apps();
+    let designs: Vec<Design> = [Algo::Fpc, Algo::Bdi, Algo::CPack, Algo::BestOfAll]
+        .iter()
+        .map(|&a| Design::caba(a))
+        .collect();
+    ctx.warm(&matrix(&set, &designs, &[1.0]));
     let series: Vec<Series> = [Algo::Fpc, Algo::Bdi, Algo::CPack, Algo::BestOfAll]
         .iter()
         .map(|&algo| Series {
             label: format!("CABA-{}", algo.name()),
             values: set
                 .iter()
-                .map(|a| run(a, Design::caba(algo), 1.0, scale).dram.compression_ratio())
+                .map(|a| ctx.point(a, Design::caba(algo), 1.0).dram.compression_ratio())
                 .collect(),
         })
         .collect();
@@ -307,11 +358,16 @@ pub fn fig13_compression_ratio(scale: f64) -> String {
 // ---------------------------------------------------------------- Fig. 14
 
 /// Sensitivity to ½×/1×/2× peak DRAM bandwidth.
-pub fn fig14_bw_sensitivity(scale: f64) -> String {
+pub fn fig14_bw_sensitivity(ctx: &RunCtx) -> String {
     let set = eval_apps();
+    ctx.warm(&matrix(
+        &set,
+        &[Design::base(), Design::caba(Algo::Bdi)],
+        &[0.5, 1.0, 2.0],
+    ));
     let base1: Vec<f64> = set
         .iter()
-        .map(|a| run(a, Design::base(), 1.0, scale).ipc())
+        .map(|a| ctx.point(a, Design::base(), 1.0).ipc())
         .collect();
     let mut series = Vec::new();
     for bw in [0.5, 1.0, 2.0] {
@@ -321,7 +377,7 @@ pub fn fig14_bw_sensitivity(scale: f64) -> String {
                 values: set
                     .iter()
                     .enumerate()
-                    .map(|(i, a)| run(a, d, bw, scale).ipc() / base1[i])
+                    .map(|(i, a)| ctx.point(a, d, bw).ipc() / base1[i])
                     .collect(),
             });
         }
@@ -336,7 +392,7 @@ pub fn fig14_bw_sensitivity(scale: f64) -> String {
 // ---------------------------------------------------------------- Fig. 15
 
 /// Cache-capacity compression (L1/L2, 2×/4× tags) on top of CABA-BDI.
-pub fn fig15_cache_compression(scale: f64) -> String {
+pub fn fig15_cache_compression(ctx: &RunCtx) -> String {
     let set = eval_apps();
     let designs = [
         Design::caba(Algo::Bdi),
@@ -345,9 +401,12 @@ pub fn fig15_cache_compression(scale: f64) -> String {
         Design::caba_cache_compressed(1, 2),
         Design::caba_cache_compressed(1, 4),
     ];
+    let mut all = designs.to_vec();
+    all.push(Design::base());
+    ctx.warm(&matrix(&set, &all, &[1.0]));
     let base: Vec<f64> = set
         .iter()
-        .map(|a| run(a, Design::base(), 1.0, scale).ipc())
+        .map(|a| ctx.point(a, Design::base(), 1.0).ipc())
         .collect();
     let series: Vec<Series> = designs
         .iter()
@@ -356,7 +415,7 @@ pub fn fig15_cache_compression(scale: f64) -> String {
             values: set
                 .iter()
                 .enumerate()
-                .map(|(i, a)| run(a, *d, 1.0, scale).ipc() / base[i])
+                .map(|(i, a)| ctx.point(a, *d, 1.0).ipc() / base[i])
                 .collect(),
         })
         .collect();
@@ -371,16 +430,19 @@ pub fn fig15_cache_compression(scale: f64) -> String {
 // ---------------------------------------------------------------- Fig. 16
 
 /// The Uncompressed-L2 and Direct-Load optimizations.
-pub fn fig16_optimizations(scale: f64) -> String {
+pub fn fig16_optimizations(ctx: &RunCtx) -> String {
     let set = eval_apps();
     let designs = [
         Design::caba(Algo::Bdi),
         Design::caba_uncompressed_l2(),
         Design::caba_direct_load(),
     ];
+    let mut all = designs.to_vec();
+    all.push(Design::base());
+    ctx.warm(&matrix(&set, &all, &[1.0]));
     let base: Vec<f64> = set
         .iter()
-        .map(|a| run(a, Design::base(), 1.0, scale).ipc())
+        .map(|a| ctx.point(a, Design::base(), 1.0).ipc())
         .collect();
     let series: Vec<Series> = designs
         .iter()
@@ -389,7 +451,7 @@ pub fn fig16_optimizations(scale: f64) -> String {
             values: set
                 .iter()
                 .enumerate()
-                .map(|(i, a)| run(a, *d, 1.0, scale).ipc() / base[i])
+                .map(|(i, a)| ctx.point(a, *d, 1.0).ipc() / base[i])
                 .collect(),
         })
         .collect();
@@ -404,13 +466,14 @@ pub fn fig16_optimizations(scale: f64) -> String {
 // ---------------------------------------------------------------- §5.3.2
 
 /// MD-cache hit rate across the eval set.
-pub fn md_cache_hitrate(scale: f64) -> String {
+pub fn md_cache_hitrate(ctx: &RunCtx) -> String {
     let set = eval_apps();
+    ctx.warm(&matrix(&set, &[Design::caba(Algo::Bdi)], &[1.0]));
     let series = vec![Series {
         label: "MD hit rate %".to_string(),
         values: set
             .iter()
-            .map(|a| run(a, Design::caba(Algo::Bdi), 1.0, scale).md.hit_rate() * 100.0)
+            .map(|a| ctx.point(a, Design::caba(Algo::Bdi), 1.0).md.hit_rate() * 100.0)
             .collect(),
     }];
     format!(

@@ -1,0 +1,162 @@
+//! The real PJRT oracle (compiled only with `--features pjrt`; requires
+//! the vendored `xla` bindings crate — see `runtime/mod.rs`).
+//!
+//! Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits
+//! 64-bit instruction ids that the image's xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Python runs only at build time; at runtime the artifacts are compiled
+//! by the in-process PJRT CPU client and executed directly.
+
+use super::{default_artifacts_dir, BATCH};
+use crate::compress::oracle::{CompressionOracle, LineVerdict};
+use crate::compress::{bursts_for, Algo, Line, WORDS_PER_LINE};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled compression-analysis executable for one algorithm.
+struct AlgoExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT-backed oracle: batches line batches through the AOT-compiled
+/// JAX/Pallas model.
+pub struct PjrtOracle {
+    _client: xla::PjRtClient,
+    exes: HashMap<&'static str, AlgoExe>,
+}
+
+// The oracle is owned by exactly one `Simulator` and used from one thread
+// at a time; the `Send` bound (required so a whole simulation can move to
+// a sweep worker) is sound because the PJRT CPU client is only ever
+// driven through `&mut self` here.
+unsafe impl Send for PjrtOracle {}
+
+fn algo_key(algo: Algo) -> &'static str {
+    match algo {
+        Algo::Bdi => "bdi",
+        Algo::Fpc => "fpc",
+        Algo::CPack => "cpack",
+        Algo::BestOfAll => "best",
+    }
+}
+
+impl PjrtOracle {
+    /// Load and compile all artifacts from `dir`.
+    pub fn load(dir: &Path) -> Result<PjrtOracle> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut exes = HashMap::new();
+        for key in ["bdi", "fpc", "cpack", "best"] {
+            let path = dir.join(format!("{key}.hlo.txt"));
+            if !path.exists() {
+                continue;
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+            exes.insert(key, AlgoExe { exe });
+        }
+        if exes.is_empty() {
+            return Err(anyhow!(
+                "no compression artifacts found in {dir:?}; run `make artifacts`"
+            ));
+        }
+        Ok(PjrtOracle { _client: client, exes })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn from_default_dir() -> Result<PjrtOracle> {
+        Self::load(&default_artifacts_dir())
+    }
+
+    /// Execute one padded batch: returns (encoding, size_bytes) per line.
+    fn run_batch(&self, algo: Algo, lines: &[Line]) -> Result<Vec<(u8, u16)>> {
+        let exe = self
+            .exes
+            .get(algo_key(algo))
+            .ok_or_else(|| anyhow!("no artifact for {algo:?}"))?;
+        debug_assert!(lines.len() <= BATCH);
+        // Pack into u32 words, pad with zero lines.
+        let mut words = vec![0u32; BATCH * WORDS_PER_LINE];
+        for (i, line) in lines.iter().enumerate() {
+            for (j, chunk) in line.chunks_exact(4).enumerate() {
+                words[i * WORDS_PER_LINE + j] = u32::from_le_bytes(chunk.try_into().unwrap());
+            }
+        }
+        let input = xla::Literal::vec1(&words)
+            .reshape(&[BATCH as i64, WORDS_PER_LINE as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → ((enc, size),).
+        let tuple = result.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        let (enc_lit, size_lit) = match tuple.len() {
+            2 => {
+                let mut it = tuple.into_iter();
+                (it.next().unwrap(), it.next().unwrap())
+            }
+            1 => {
+                let inner = tuple.into_iter().next().unwrap();
+                inner
+                    .to_tuple2()
+                    .map_err(|e| anyhow!("inner tuple: {e:?}"))?
+            }
+            n => return Err(anyhow!("unexpected tuple arity {n}")),
+        };
+        let encs = enc_lit.to_vec::<i32>().map_err(|e| anyhow!("enc vec: {e:?}"))?;
+        let sizes = size_lit.to_vec::<i32>().map_err(|e| anyhow!("size vec: {e:?}"))?;
+        Ok(lines
+            .iter()
+            .enumerate()
+            .map(|(i, _)| (encs[i] as u8, sizes[i] as u16))
+            .collect())
+    }
+}
+
+impl CompressionOracle for PjrtOracle {
+    fn analyze(&mut self, algo: Algo, lines: &[Line]) -> Vec<LineVerdict> {
+        let mut out = Vec::with_capacity(lines.len());
+        for chunk in lines.chunks(BATCH) {
+            let res = self
+                .run_batch(algo, chunk)
+                .expect("PJRT oracle execution failed");
+            out.extend(res.into_iter().map(|(encoding, size_bytes)| LineVerdict {
+                encoding,
+                size_bytes,
+                bursts: bursts_for(size_bytes as usize),
+            }));
+        }
+        out
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_keys_distinct() {
+        let keys: Vec<_> = [Algo::Bdi, Algo::Fpc, Algo::CPack, Algo::BestOfAll]
+            .iter()
+            .map(|&a| algo_key(a))
+            .collect();
+        let mut uniq = keys.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), keys.len());
+    }
+}

@@ -60,6 +60,49 @@ impl DataModel {
         v
     }
 
+    /// Batch-compute verdicts for all of `lines` in **one** oracle call
+    /// (`CompressionOracle::analyze`), priming the per-line cache so the
+    /// per-line [`DataModel::verdict`] lookups that follow are hits.
+    ///
+    /// This is the hot-path batching the PJRT oracle is built for: a store
+    /// instruction's pending lines (up to `Scatter::degree`) become one
+    /// executable launch instead of N. Purely a performance device — the
+    /// verdict for each line is the same pure function of (line, epoch)
+    /// either way, so timing and stats are unchanged.
+    pub fn warm_verdicts(&mut self, wl: &Workload, algo: Algo, lines: &[u64]) {
+        if lines.len() <= 1 {
+            return; // nothing to batch; verdict() handles singles
+        }
+        // Lazy allocation: fully-cached batches (the common steady state)
+        // never allocate.
+        let mut pending: Vec<(u64, u32)> = Vec::new();
+        let mut datas: Vec<crate::compress::Line> = Vec::new();
+        for &line in lines {
+            if self.stored_uncompressed.contains(&line) {
+                continue; // verdict() short-circuits these
+            }
+            let epoch = self.epochs.get(&line).copied().unwrap_or(0);
+            if let Some(&(e, _)) = self.verdict_cache.get(&line) {
+                if e == epoch {
+                    continue; // already fresh
+                }
+            }
+            if pending.iter().any(|&(l, _)| l == line) {
+                continue; // duplicate within this batch
+            }
+            pending.push((line, epoch));
+            datas.push(wl.line_data(line, epoch));
+        }
+        if pending.is_empty() {
+            return;
+        }
+        let verdicts = self.oracle.analyze(algo, &datas);
+        debug_assert_eq!(verdicts.len(), pending.len());
+        for ((line, epoch), v) in pending.into_iter().zip(verdicts) {
+            self.verdict_cache.insert(line, (epoch, v));
+        }
+    }
+
     /// Encoding from the most recent verdict for this line (drives the
     /// decompression-subroutine shape; falls back to a mid-cost encoding).
     pub fn cached_encoding(&self, line: u64) -> u8 {
@@ -101,6 +144,15 @@ pub struct Simulator {
     /// (core, group) slots awaiting a CTA.
     pub stats: SimStats,
 }
+
+// The sweep engine moves whole simulations onto worker threads; this
+// compile-time assertion keeps the property from regressing (any non-Send
+// field — an `Rc`, a raw pointer, a non-Send oracle — fails here, not at a
+// distant spawn site).
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<Simulator>()
+};
 
 impl Simulator {
     /// Build with the default (memoized native) oracle.
@@ -345,6 +397,34 @@ mod tests {
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.warp_insts, b.warp_insts);
         assert_eq!(a.dram.bursts, b.dram.bursts);
+    }
+
+    #[test]
+    fn warm_verdicts_matches_individual_lookups() {
+        // Batched (one analyze() call) and per-line verdict computation
+        // must agree — the batching is purely a throughput device.
+        let app = apps::find("PVC").unwrap();
+        let cfg = tiny_cfg();
+        let wl = Workload::build(app, &cfg, 0.01);
+        let mut warmed = DataModel::new(Box::new(MemoOracle::new(NativeOracle)));
+        let mut lazy = DataModel::new(Box::new(MemoOracle::new(NativeOracle)));
+        let lines: Vec<u64> = (0..16).map(|i| wl.arrays[0].base_line + i).collect();
+        warmed.warm_verdicts(&wl, Algo::Bdi, &lines);
+        for &l in &lines {
+            assert_eq!(
+                warmed.verdict(&wl, Algo::Bdi, l),
+                lazy.verdict(&wl, Algo::Bdi, l),
+                "line {l}"
+            );
+        }
+        // Epoch bumps invalidate warmed entries like any other.
+        warmed.bump_epoch(lines[0]);
+        lazy.bump_epoch(lines[0]);
+        warmed.warm_verdicts(&wl, Algo::Bdi, &lines);
+        assert_eq!(
+            warmed.verdict(&wl, Algo::Bdi, lines[0]),
+            lazy.verdict(&wl, Algo::Bdi, lines[0])
+        );
     }
 
     #[test]

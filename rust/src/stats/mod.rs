@@ -16,7 +16,7 @@ pub enum StallKind {
 }
 
 /// Per-scheduler-slot issue-cycle breakdown.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct IssueBreakdown {
     pub active: u64,
     pub compute_stall: u64,
@@ -53,7 +53,7 @@ impl IssueBreakdown {
 }
 
 /// Cache counters.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CacheStats {
     pub accesses: u64,
     pub hits: u64,
@@ -73,7 +73,7 @@ impl CacheStats {
 }
 
 /// DRAM counters (per run, aggregated over MCs).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct DramStats {
     pub reads: u64,
     pub writes: u64,
@@ -110,7 +110,7 @@ impl DramStats {
 }
 
 /// Interconnect counters.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct IcntStats {
     pub packets_fwd: u64,
     pub packets_back: u64,
@@ -120,7 +120,7 @@ pub struct IcntStats {
 }
 
 /// CABA framework activity.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CabaStats {
     pub decompress_warps: u64,
     pub compress_warps: u64,
@@ -141,7 +141,7 @@ pub struct CabaStats {
 }
 
 /// MD cache (per-MC compression metadata cache, §5.3.2).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MdCacheStats {
     pub accesses: u64,
     pub hits: u64,
@@ -158,7 +158,7 @@ impl MdCacheStats {
 }
 
 /// Energy-relevant event counts (consumed by [`crate::energy::EnergyModel`]).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct EnergyEvents {
     /// Parent-warp instructions issued (each ≈ fetch+decode+RF+ALU).
     pub core_insts: u64,
@@ -175,7 +175,7 @@ pub struct EnergyEvents {
 }
 
 /// Everything a single simulation run produces.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SimStats {
     pub cycles: u64,
     /// Issued warp-instructions (parent warps only).

@@ -1,0 +1,321 @@
+//! # The parallel sweep engine
+//!
+//! CABA's evaluation (§7) is a large `(app × design × bw_scale)` matrix —
+//! 27 workloads against Base, HW-BDI, CABA-{BDI,FPC,C-Pack} and more. Each
+//! point is an independent, fully deterministic cycle-level simulation, so
+//! the matrix is embarrassingly parallel — exactly the kind of idle-core
+//! work the paper itself harvests with assist warps. This module puts the
+//! *host's* idle cores to work the same way.
+//!
+//! ## Architecture
+//!
+//! * [`SweepJob`] — one simulation point: `(app, design, cfg, scale)`. The
+//!   configuration is carried **whole**; the job key is derived from
+//!   [`crate::SimConfig::fingerprint`], which digests every field, so two
+//!   jobs differing in any `--set` override never alias (this fixed a
+//!   latent cache-poisoning bug where the old figure cache keyed only on
+//!   `(app, design, bw_scale, scale)`).
+//! * [`RunCache`] — a sharded `(key → SimStats)` map. Sharding by key hash
+//!   keeps lock hold times to a single bucket operation; workers touching
+//!   different shards never contend (the old cache was one global
+//!   `Mutex<HashMap>` around the *whole* run loop's results).
+//! * [`SweepEngine`] — deduplicates the requested jobs against the cache,
+//!   executes the misses on a scoped `std::thread` worker pool (no
+//!   external deps), and returns results in request order.
+//!
+//! ## Determinism
+//!
+//! Parallel execution is **bit-identical** to serial execution because no
+//! simulation state is shared between jobs:
+//!
+//! * each job owns its `Simulator` (cores, memory system, oracle, data
+//!   model) — the `Send` bound on [`crate::compress::oracle::
+//!   CompressionOracle`] lets the whole bundle move to a worker thread;
+//! * every random stream is seeded per job from the configuration:
+//!   workload construction derives its RNG seed as
+//!   `cfg.seed ^ hash(app.name)` ([`crate::workload::Workload`]), and the
+//!   program build uses `hash(app.name)` — nothing depends on wall clock,
+//!   thread id, or execution order;
+//! * workers only *write* finished `SimStats` into their job's dedicated
+//!   slot; the work queue is an atomic index, which affects scheduling but
+//!   not results.
+//!
+//! `tests/integration_sweep.rs` asserts `--jobs 1` ≡ `--jobs 4` on a small
+//! matrix, field for field.
+
+use crate::config::SimConfig;
+use crate::sim::designs::Design;
+use crate::sim::Simulator;
+use crate::stats::SimStats;
+use crate::workload::apps::AppSpec;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// One point of an evaluation sweep: a complete, self-contained
+/// simulation request.
+#[derive(Clone)]
+pub struct SweepJob {
+    pub app: &'static AppSpec,
+    pub design: Design,
+    /// The **full** configuration (including `bw_scale` and any `--set`
+    /// overrides) — all of it participates in the cache key.
+    pub cfg: SimConfig,
+    /// Workload scale factor (iterations / CTA count shrink).
+    pub scale: f64,
+}
+
+/// Cache key: app and design are identified by their unique static names;
+/// the configuration by its full-field fingerprint. A fingerprint
+/// collision between two *different* configs is a 64-bit hash collision —
+/// negligible against the handful of configs a process ever sweeps.
+pub type JobKey = (&'static str, &'static str, u64, u64);
+
+impl SweepJob {
+    pub fn new(app: &'static AppSpec, design: Design, cfg: SimConfig, scale: f64) -> SweepJob {
+        SweepJob { app, design, cfg, scale }
+    }
+
+    /// Convenience for the figure sweeps: `base_cfg` with `bw_scale`
+    /// applied on top (the ½×/1×/2× experiments of Figs. 2 and 14).
+    pub fn with_bw(
+        app: &'static AppSpec,
+        design: Design,
+        base_cfg: &SimConfig,
+        bw_scale: f64,
+        scale: f64,
+    ) -> SweepJob {
+        let mut cfg = base_cfg.clone();
+        cfg.bw_scale = bw_scale;
+        SweepJob { app, design, cfg, scale }
+    }
+
+    /// The design that will actually execute: the paper's profiler
+    /// disables compression for apps where it is unprofitable (§6), so
+    /// those points collapse onto Base — normalizing *before* keying makes
+    /// them share one cache entry.
+    fn effective_design(&self) -> Design {
+        if self.design.compression_enabled() && !Simulator::compression_profitable(self.app) {
+            Design::base()
+        } else {
+            self.design
+        }
+    }
+
+    fn key(&self) -> JobKey {
+        (
+            self.app.name,
+            self.effective_design().name,
+            self.cfg.fingerprint(),
+            self.scale.to_bits(),
+        )
+    }
+
+    fn execute(&self) -> SimStats {
+        Simulator::new(self.cfg.clone(), self.effective_design(), self.app, self.scale).run()
+    }
+}
+
+/// Number of cache shards. Far more than any realistic worker count, so
+/// two workers completing jobs at the same instant almost never queue on
+/// the same lock.
+const N_SHARDS: usize = 16;
+
+/// A sharded run cache: `key → SimStats`, split over [`N_SHARDS`]
+/// independently locked maps. Locks are held only for single map
+/// operations (simulations run entirely outside them).
+pub struct RunCache {
+    shards: [Mutex<HashMap<JobKey, SimStats>>; N_SHARDS],
+}
+
+impl Default for RunCache {
+    fn default() -> Self {
+        RunCache { shards: std::array::from_fn(|_| Mutex::new(HashMap::new())) }
+    }
+}
+
+impl RunCache {
+    pub fn new() -> RunCache {
+        RunCache::default()
+    }
+
+    fn shard(&self, key: &JobKey) -> &Mutex<HashMap<JobKey, SimStats>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % N_SHARDS]
+    }
+
+    pub fn get(&self, key: &JobKey) -> Option<SimStats> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    pub fn insert(&self, key: JobKey, stats: SimStats) {
+        self.shard(&key).lock().unwrap().insert(key, stats);
+    }
+
+    pub fn contains(&self, key: &JobKey) -> bool {
+        self.shard(key).lock().unwrap().contains_key(key)
+    }
+
+    /// Total cached entries (diagnostics).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The process-wide cache shared by all figure regenerators (figures 8–11
+/// reuse each other's runs, exactly as before — but now keyed on the full
+/// configuration and sharded).
+pub fn shared_cache() -> &'static Arc<RunCache> {
+    static CACHE: OnceLock<Arc<RunCache>> = OnceLock::new();
+    CACHE.get_or_init(|| Arc::new(RunCache::new()))
+}
+
+/// Resolve a `--jobs` request: `0` means "one worker per available core".
+pub fn resolve_jobs(jobs: usize) -> usize {
+    if jobs > 0 {
+        jobs
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Deterministic parallel executor for sweep matrices.
+pub struct SweepEngine {
+    jobs: usize,
+    cache: Arc<RunCache>,
+}
+
+impl SweepEngine {
+    /// An engine with its own private cache (tests, one-shot sweeps).
+    pub fn new(jobs: usize) -> SweepEngine {
+        SweepEngine { jobs: resolve_jobs(jobs), cache: Arc::new(RunCache::new()) }
+    }
+
+    /// An engine backed by the process-wide [`shared_cache`] (the figure
+    /// regenerators, so figures sharing runs don't re-simulate).
+    pub fn shared(jobs: usize) -> SweepEngine {
+        SweepEngine { jobs: resolve_jobs(jobs), cache: Arc::clone(shared_cache()) }
+    }
+
+    /// Worker count this engine resolves to.
+    pub fn worker_count(&self) -> usize {
+        self.jobs
+    }
+
+    /// Run every job, returning stats in request order. Duplicate and
+    /// already-cached points are simulated exactly once; the misses run on
+    /// a scoped worker pool of `min(jobs, misses)` threads.
+    pub fn run(&self, jobs: &[SweepJob]) -> Vec<SimStats> {
+        let keys: Vec<JobKey> = jobs.iter().map(SweepJob::key).collect();
+
+        // Dedup the misses, preserving first-seen order (keeps serial
+        // execution order identical to the pre-engine code paths).
+        let mut todo: Vec<&SweepJob> = Vec::new();
+        let mut todo_keys: Vec<JobKey> = Vec::new();
+        for (job, key) in jobs.iter().zip(&keys) {
+            if !todo_keys.contains(key) && !self.cache.contains(key) {
+                todo.push(job);
+                todo_keys.push(*key);
+            }
+        }
+
+        let workers = self.jobs.min(todo.len()).max(1);
+        if workers <= 1 {
+            for (job, key) in todo.iter().zip(&todo_keys) {
+                self.cache.insert(*key, job.execute());
+            }
+        } else {
+            // Scoped worker pool over an atomic work index: each worker
+            // claims the next un-run job, simulates it without holding any
+            // lock, and publishes the result under its precomputed key.
+            let next = AtomicUsize::new(0);
+            let cache = &self.cache;
+            let todo = &todo;
+            let todo_keys = &todo_keys;
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= todo.len() {
+                            break;
+                        }
+                        let stats = todo[i].execute();
+                        cache.insert(todo_keys[i], stats);
+                    });
+                }
+            });
+        }
+
+        keys.iter()
+            .map(|k| self.cache.get(k).expect("sweep job executed but not cached"))
+            .collect()
+    }
+
+    /// Run (or fetch) a single point.
+    pub fn run_one(&self, job: &SweepJob) -> SimStats {
+        let key = job.key();
+        if let Some(s) = self.cache.get(&key) {
+            return s;
+        }
+        let stats = job.execute();
+        self.cache.insert(key, stats.clone());
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Algo;
+    use crate::workload::apps;
+
+    fn tiny_cfg() -> SimConfig {
+        let mut c = SimConfig::default();
+        c.n_sms = 2;
+        c.max_cycles = 150_000;
+        c
+    }
+
+    #[test]
+    fn dedup_and_order_preserved() {
+        let app = apps::find("SLA").unwrap();
+        let j = SweepJob::new(app, Design::base(), tiny_cfg(), 0.01);
+        let engine = SweepEngine::new(2);
+        let out = engine.run(&[j.clone(), j.clone(), j.clone()]);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], out[1]);
+        assert_eq!(out[1], out[2]);
+        // All three collapsed to one cache entry.
+        assert_eq!(engine.cache.len(), 1);
+    }
+
+    #[test]
+    fn unprofitable_app_normalizes_to_base_key() {
+        let app = apps::find("SCP").unwrap(); // profiler-disabled (§6)
+        let caba = SweepJob::new(app, Design::caba(Algo::Bdi), tiny_cfg(), 0.01);
+        let base = SweepJob::new(app, Design::base(), tiny_cfg(), 0.01);
+        assert_eq!(caba.key(), base.key());
+    }
+
+    #[test]
+    fn cache_key_distinguishes_configs() {
+        let app = apps::find("SLA").unwrap();
+        let a = SweepJob::new(app, Design::base(), tiny_cfg(), 0.01);
+        let mut cfg2 = tiny_cfg();
+        cfg2.set("l2_bytes", "131072").unwrap();
+        let b = SweepJob::new(app, Design::base(), cfg2, 0.01);
+        assert_ne!(a.key(), b.key());
+    }
+
+    #[test]
+    fn resolve_jobs_defaults_to_parallelism() {
+        assert!(resolve_jobs(0) >= 1);
+        assert_eq!(resolve_jobs(3), 3);
+    }
+}

@@ -1,0 +1,125 @@
+//! The sweep engine's two contracts:
+//!
+//! 1. **Determinism** — a parallel sweep (`--jobs 4`) produces `SimStats`
+//!    bit-identical to a serial sweep (`--jobs 1`) of the same matrix,
+//!    field for field. Every simulation point is self-contained and its
+//!    RNG streams are seeded from `(cfg.seed, app)` only, so worker
+//!    scheduling cannot leak into results.
+//! 2. **Cache soundness** — the run cache keys on the *full*
+//!    `SimConfig` fingerprint, so two sweeps differing only in a `--set`
+//!    override never alias (the pre-engine cache keyed only on
+//!    `(app, design, bw_scale, scale)` and would return stale stats).
+
+use caba::compress::Algo;
+use caba::report::figures::RunCtx;
+use caba::sim::designs::Design;
+use caba::sim::Simulator;
+use caba::sweep::{SweepEngine, SweepJob};
+use caba::workload::apps;
+use caba::SimConfig;
+
+fn tiny_cfg() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.n_sms = 2;
+    c.max_cycles = 200_000;
+    c
+}
+
+/// A small but heterogeneous (app × design) matrix: one very compressible
+/// app, one matrix kernel, one incompressible (profiler-disabled) app,
+/// under the baseline and two CABA variants.
+fn small_matrix() -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
+    for name in ["PVC", "MM", "SCP"] {
+        let app = apps::find(name).unwrap();
+        for design in [Design::base(), Design::caba(Algo::Bdi), Design::caba(Algo::Fpc)] {
+            jobs.push(SweepJob::new(app, design, tiny_cfg(), 0.015));
+        }
+    }
+    jobs
+}
+
+#[test]
+fn parallel_sweep_bit_identical_to_serial() {
+    let jobs = small_matrix();
+    // Private caches: each engine must actually execute its own runs.
+    let serial = SweepEngine::new(1).run(&jobs);
+    let parallel = SweepEngine::new(4).run(&jobs);
+    assert_eq!(serial.len(), parallel.len());
+    for (i, (s, p)) in serial.iter().zip(&parallel).enumerate() {
+        // SimStats derives PartialEq over every counter (cycles, issue
+        // breakdown, caches, DRAM, CABA activity, energy events...), so
+        // this is a field-for-field bit-identity check.
+        assert_eq!(s, p, "job {i}: serial and parallel stats diverge");
+    }
+    // And the sweep engine matches direct Simulator invocation.
+    let app = apps::find("PVC").unwrap();
+    let direct = Simulator::new(tiny_cfg(), Design::caba(Algo::Bdi), app, 0.015).run();
+    let via_engine = SweepEngine::new(2)
+        .run(&[SweepJob::new(app, Design::caba(Algo::Bdi), tiny_cfg(), 0.015)]);
+    assert_eq!(direct, via_engine[0]);
+}
+
+#[test]
+fn parallel_sweep_is_repeatable() {
+    let jobs = small_matrix();
+    let a = SweepEngine::new(4).run(&jobs);
+    let b = SweepEngine::new(4).run(&jobs);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn cache_key_regression_set_overrides_are_not_aliased() {
+    // The historical bug: the figure cache keyed on (app, design,
+    // bw_scale, scale) only, so a run with a `--set` override could be
+    // served stats simulated under a *different* configuration. With the
+    // full-fingerprint key, the same (app, design, bw, scale) under two
+    // configs must produce two distinct results from one shared cache.
+    let app = apps::find("PVC").unwrap();
+    let engine = SweepEngine::new(2); // one engine == one shared cache
+
+    let cfg_a = tiny_cfg();
+    let mut cfg_b = tiny_cfg();
+    cfg_b.set("n_sms", "1").unwrap(); // a --set override
+
+    let a = engine.run(&[SweepJob::new(app, Design::base(), cfg_a.clone(), 0.015)]);
+    let b = engine.run(&[SweepJob::new(app, Design::base(), cfg_b.clone(), 0.015)]);
+    // Fewer SMs must change the simulation outcome; a stale cache hit
+    // would have returned `a` verbatim.
+    assert_ne!(a[0], b[0], "cache served stale stats across --set override");
+
+    // Lookups under the original configs still hit their own entries.
+    let a2 = engine.run(&[SweepJob::new(app, Design::base(), cfg_a, 0.015)]);
+    let b2 = engine.run(&[SweepJob::new(app, Design::base(), cfg_b, 0.015)]);
+    assert_eq!(a[0], a2[0]);
+    assert_eq!(b[0], b2[0]);
+}
+
+#[test]
+fn figure_ctx_honors_config_overrides() {
+    // End-to-end through the figure path: the same point under two RunCtx
+    // configs must not alias in the process-wide shared cache.
+    let app = apps::find("PVC").unwrap();
+    let mut ctx_a = RunCtx::new(0.015);
+    ctx_a.cfg = tiny_cfg();
+    let mut ctx_b = RunCtx::new(0.015);
+    ctx_b.cfg = tiny_cfg();
+    // Every PVC miss pays this, so the override must change the outcome.
+    ctx_b.cfg.set("dram_base_latency", "400").unwrap();
+    let a = ctx_a.point(app, Design::caba(Algo::Bdi), 1.0);
+    let b = ctx_b.point(app, Design::caba(Algo::Bdi), 1.0);
+    assert_ne!(a, b, "figure cache aliased two configurations");
+    // Repeat lookups are cache hits with unchanged values.
+    assert_eq!(a, ctx_a.point(app, Design::caba(Algo::Bdi), 1.0));
+}
+
+#[test]
+fn duplicate_jobs_simulate_once_and_fan_out() {
+    let app = apps::find("SLA").unwrap();
+    let job = SweepJob::new(app, Design::base(), tiny_cfg(), 0.01);
+    let out = SweepEngine::new(4).run(&vec![job.clone(); 8]);
+    assert_eq!(out.len(), 8);
+    for s in &out[1..] {
+        assert_eq!(&out[0], s);
+    }
+}

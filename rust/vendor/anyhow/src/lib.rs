@@ -1,0 +1,176 @@
+//! Minimal, offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so the repo vendors the small
+//! slice of anyhow it actually uses:
+//!
+//! * [`Error`] — an opaque error value carrying a message and a cause
+//!   chain; `{e}` prints the outermost message, `{e:#}` the full chain.
+//! * [`Result`] — `Result<T, Error>` with a defaultable error type.
+//! * [`Context`] — `.context(msg)` / `.with_context(|| msg)` on both
+//!   `Result` and `Option`.
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` impl coherent.
+
+use std::fmt;
+
+/// An opaque error: an outermost message plus the `Display` renderings of
+/// the source chain it was built from (or wrapped around via `context`).
+pub struct Error {
+    /// Outermost message first, root cause last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message (the new outermost error).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, anyhow-style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error carried by a `Result` or to a `None`.
+pub trait Context<T> {
+    /// Wrap any error with `context` as the new outermost message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_u32(s: &str) -> Result<u32> {
+        let v = s.parse::<u32>().with_context(|| format!("bad value: {s:?}"))?;
+        Ok(v)
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let err = parse_u32("zonk").unwrap_err();
+        assert_eq!(format!("{err}"), "bad value: \"zonk\"");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("bad value: \"zonk\": "), "{full}");
+        assert!(full.contains("invalid digit"), "{full}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        let err = none.context("missing thing").unwrap_err();
+        assert_eq!(format!("{err}"), "missing thing");
+
+        fn fails() -> Result<()> {
+            bail!("code {}", 7);
+        }
+        let err = fails().unwrap_err();
+        assert_eq!(format!("{err}"), "code 7");
+        let e2 = anyhow!("x={}", 1);
+        assert_eq!(format!("{e2:#}"), "x=1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let v: u32 = "12".parse()?;
+            Ok(v)
+        }
+        assert_eq!(inner().unwrap(), 12);
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let err = parse_u32("x").unwrap_err();
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+}

@@ -95,7 +95,7 @@ fn main() {
     let engine = SweepEngine::shared(jobs);
     let matrix: Vec<SweepJob> = set
         .iter()
-        .flat_map(|app| {
+        .flat_map(|&app| {
             designs
                 .iter()
                 .map(move |d| SweepJob::new(app, *d, SimConfig::default(), scale))
@@ -158,7 +158,7 @@ fn main() {
         .iter()
         .flat_map(|d| {
             set.iter()
-                .map(move |app| SweepJob::new(app, *d, SimConfig::default(), scale))
+                .map(move |&app| SweepJob::new(app, *d, SimConfig::default(), scale))
         })
         .collect();
     let algo_flat = engine.run(&algo_matrix);

@@ -89,6 +89,48 @@ fn main() {
         );
     }
 
+    // --- Trace replay throughput (lines/sec through the trace subsystem) ---
+    // Record a CABA-BDI run, then measure how fast the replayer feeds the
+    // same access stream back through the full pipeline.
+    {
+        use caba::trace::replay::TraceData;
+        use std::sync::Arc;
+        let app = apps::find("PVC").unwrap();
+        let design = Design::caba(Algo::Bdi);
+        let path = std::env::temp_dir()
+            .join(format!("caba_perf_replay_{}.cabatrace", std::process::id()));
+        let path_s = path.to_str().unwrap();
+        let t0 = Instant::now();
+        let mut rec_sim = Simulator::new(SimConfig::default(), design, app, 0.05);
+        rec_sim.record_to(path_s).expect("attach recorder");
+        let rec_stats = rec_sim.run();
+        let rec_dt = t0.elapsed().as_secs_f64();
+        let trace = TraceData::load(path_s).expect("load trace");
+        let t0 = Instant::now();
+        let rep_stats = Simulator::from_trace(SimConfig::default(), design, Arc::clone(&trace))
+            .expect("build replay")
+            .run();
+        let rep_dt = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            rep_stats.memory_signature(),
+            rec_stats.memory_signature(),
+            "replay diverged from recording"
+        );
+        println!(
+            "\ntrace record PVC/CABA-BDI  {:>7.2} Mlines/s captured  ({} accesses, host {:.2}s)",
+            trace.total_lines as f64 / rec_dt / 1e6,
+            trace.n_access_records,
+            rec_dt
+        );
+        println!(
+            "trace replay PVC/CABA-BDI  {:>7.2} Mlines/s replayed  ({:.2} Mcycles/s, host {:.2}s)",
+            trace.replayed_lines() as f64 / rep_dt / 1e6,
+            rep_stats.cycles as f64 / rep_dt / 1e6,
+            rep_dt
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
     // --- Sweep-engine scaling (the EXPERIMENTS.md wall-clock table) ---
     // The Fig. 8 matrix (eval set × five headline designs) at a small
     // scale, executed with 1/2/4/... workers on *private* caches so every
@@ -99,7 +141,7 @@ fn main() {
     let set = apps::eval_set();
     let jobs: Vec<SweepJob> = set
         .iter()
-        .flat_map(|app| {
+        .flat_map(|&app| {
             Design::headline()
                 .into_iter()
                 .map(move |d| SweepJob::new(app, d, SimConfig::default(), 0.02))

@@ -135,6 +135,14 @@ pub struct SimConfig {
     pub max_warp_insts: u64,
     /// RNG seed for workload generation.
     pub seed: u64,
+    /// When non-empty: record this run's memory-access/payload streams to
+    /// the given `.cabatrace` path (see `crate::trace`). A run control,
+    /// not a simulated parameter — it never changes simulation results,
+    /// and it is the one field **excluded** from [`SimConfig::fingerprint`]
+    /// (so recording never fragments the run cache, and a trace's recorded
+    /// fingerprint matches the same effective config on replay). The sweep
+    /// engine additionally strips it: sweep jobs never record.
+    pub trace_record: String,
 }
 
 impl Default for SimConfig {
@@ -183,6 +191,7 @@ impl Default for SimConfig {
             max_cycles: 20_000_000,
             max_warp_insts: u64::MAX,
             seed: 0xCABA,
+            trace_record: String::new(),
         }
     }
 }
@@ -259,6 +268,7 @@ impl SimConfig {
             max_cycles,
             max_warp_insts,
             seed,
+            trace_record,
         } = self; // exhaustive destructuring: adding a field breaks this
         macro_rules! feed {
             ($($v:expr),* $(,)?) => { $( $v.hash(&mut h); )* };
@@ -277,13 +287,17 @@ impl SimConfig {
             throttle_util_threshold.to_bits(), max_cycles, max_warp_insts,
             seed,
         );
+        // Deliberately NOT fed: `trace_record` is a pure run control (see
+        // its field doc) — the same simulation recorded to two different
+        // paths must fingerprint (and cache) identically.
+        let _ = trace_record;
         let DramTiming { t_cl, t_rp, t_rc, t_ras, t_rcd, t_rrd, t_ccd, t_wr } = dram_timing;
         feed!(t_cl, t_rp, t_rc, t_ras, t_rcd, t_rrd, t_ccd, t_wr);
         h.finish()
     }
 
     /// Every key accepted by [`SimConfig::set`] (used by tests and docs).
-    pub const KEYS: [&'static str; 41] = [
+    pub const KEYS: [&'static str; 42] = [
         "n_sms", "warp_size", "n_mcs", "clock_ghz", "schedulers_per_sm",
         "max_warps_per_sm", "max_ctas_per_sm", "max_threads_per_sm",
         "regfile_per_sm", "smem_per_sm", "sp_units", "sfu_units",
@@ -295,6 +309,7 @@ impl SimConfig {
         "md_cache_assoc", "hw_decompress_latency", "hw_compress_latency",
         "awt_entries", "awb_low_prio_slots", "caba_throttle",
         "throttle_util_threshold", "max_cycles", "max_warp_insts", "seed",
+        "trace_record",
     ];
 
     /// Apply one `key=value` override. Returns an error on unknown keys or
@@ -347,6 +362,7 @@ impl SimConfig {
             "max_cycles" => self.max_cycles = parse!(),
             "max_warp_insts" => self.max_warp_insts = parse!(),
             "seed" => self.seed = parse!(),
+            "trace_record" => self.trace_record = value.to_string(),
             _ => bail!("unknown config key: {key}"),
         }
         Ok(())
@@ -462,6 +478,16 @@ mod tests {
                 _ => "77".to_string(),
             };
             c.set(key, &val).unwrap();
+            if key == "trace_record" {
+                // The one deliberate exception: a pure run control that
+                // must NOT fragment the run cache or trace fingerprints.
+                assert_eq!(
+                    c.fingerprint(),
+                    base.fingerprint(),
+                    "trace_record must not affect the fingerprint"
+                );
+                continue;
+            }
             assert_ne!(
                 c.fingerprint(),
                 base.fingerprint(),

@@ -520,6 +520,7 @@ impl Core {
         ctx: &mut CycleCtx,
     ) {
         let uid = self.warps[w].uid;
+        ctx.wl.trace_note_cycle(now); // trace-capture timestamp span
         let mut lines = std::mem::take(&mut self.lines_scratch);
         ctx.wl.access_lines(mem, uid, iter, body_idx, &mut lines);
         // The LSU processes one line transaction per cycle.
@@ -688,6 +689,7 @@ impl Core {
         ctx: &mut CycleCtx,
     ) {
         let uid = self.warps[w].uid;
+        ctx.wl.trace_note_cycle(now); // trace-capture timestamp span
         let mut lines = std::mem::take(&mut self.lines_scratch);
         ctx.wl.access_lines(mem, uid, iter, body_idx, &mut lines);
         self.lsu_free_at = now + lines.len() as u64;

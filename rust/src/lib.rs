@@ -25,7 +25,14 @@
 //! * a deterministic **parallel sweep engine** ([`sweep`]) that executes
 //!   the `(app × design × bw_scale)` evaluation matrices on a scoped
 //!   `std::thread` worker pool — `caba fig 8 --jobs N` is bit-identical
-//!   to `--jobs 1`, just faster.
+//!   to `--jobs 1`, just faster;
+//! * a **trace capture & replay subsystem** ([`trace`]): `caba trace
+//!   record` streams a run's warp-level memory accesses and line payloads
+//!   into a compact versioned binary format, `caba trace replay` drives
+//!   the full pipeline from such a file (bit-identical memory-side
+//!   statistics), and `caba trace import` converts accelsim-style text
+//!   dumps — trace-driven jobs participate in sweeps, cache-keyed on the
+//!   trace's content digest.
 //!
 //! See `DESIGN.md` (repo root) for the system inventory and
 //! `EXPERIMENTS.md` for paper-vs-measured results and the sweep-engine
@@ -44,6 +51,7 @@ pub mod runtime;
 pub mod sim;
 pub mod stats;
 pub mod sweep;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -11,6 +11,11 @@
 //!          [--jobs N] [--set key=value]...
 //! caba sweep [--apps PVC,MM|eval|all] [--designs Base,CABA-BDI|headline]
 //!            [--bw 0.5,1.0,2.0] [--scale 0.1] [--jobs N] [--set k=v]...
+//!            [--trace file.cabatrace]
+//! caba trace record <app> [--design D] [--scale S] [--out file] [--set...]
+//! caba trace replay <file.cabatrace> [--design D] [--set k=v]...
+//! caba trace info <file.cabatrace>
+//! caba trace import <dump.txt> [--out file] [--pattern random|zero|...]
 //! ```
 //!
 //! `--jobs N` sets the sweep-engine worker count (default: one per
@@ -20,12 +25,14 @@
 use anyhow::{anyhow, bail, Result};
 use caba::compress::Algo;
 use caba::report::figures::{self, RunCtx};
-use caba::report::{figure_matrix, Series};
+use caba::report::{figure_matrix, trace_summary, Series};
 use caba::sim::designs::Design;
 use caba::sim::Simulator;
 use caba::sweep::{resolve_jobs, SweepEngine, SweepJob};
+use caba::trace::{import as trace_import, replay::TraceData, TraceKind};
 use caba::workload::apps::{self, AppSpec};
 use caba::SimConfig;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
@@ -221,7 +228,25 @@ fn run() -> Result<()> {
             Ok(())
         }
         Some("sweep") => {
-            let set = apps_by_selector(args.flag("apps").unwrap_or("eval"))?;
+            // `--trace FILE` swaps the app axis for one trace-driven
+            // workload; everything else (designs × bw, caching, workers)
+            // is identical — trace jobs are first-class sweep citizens.
+            let trace = match args.flag("trace") {
+                Some(f) => Some(TraceData::load(f)?),
+                None => None,
+            };
+            if trace.is_some() {
+                if args.flag("apps").is_some() {
+                    eprintln!("[sweep] note: --apps is ignored with --trace (the trace is the workload)");
+                }
+                if args.flag("scale").is_some() {
+                    eprintln!("[sweep] note: --scale is ignored with --trace (pinned to the recorded scale)");
+                }
+            }
+            let set: Vec<&'static AppSpec> = match &trace {
+                Some(t) => vec![t.spec()],
+                None => apps_by_selector(args.flag("apps").unwrap_or("eval"))?,
+            };
             let designs = designs_by_selector(args.flag("designs").unwrap_or("headline"))?;
             let bws: Vec<f64> = args
                 .flag("bw")
@@ -234,16 +259,29 @@ fn run() -> Result<()> {
                 })
                 .collect::<Result<_>>()?;
             let cfg = args.config()?;
-            let scale = args.scale();
+            let scale = match &trace {
+                Some(t) => t.meta.scale, // replay geometry is pinned
+                None => args.scale(),
+            };
             let jobs = args.jobs()?;
+            let job_for = |app: &'static AppSpec, d: Design, bw: f64| -> SweepJob {
+                match &trace {
+                    Some(t) => {
+                        let mut c = cfg.clone();
+                        c.bw_scale = bw;
+                        SweepJob::replay(t, d, c)
+                    }
+                    None => SweepJob::with_bw(app, d, &cfg, bw, scale),
+                }
+            };
 
             // Build the deduplicated job matrix and execute it in one
             // parallel pass; rendering below is all cache hits.
             let mut matrix = Vec::new();
-            for app in &set {
+            for &app in &set {
                 for d in &designs {
                     for &bw in &bws {
-                        matrix.push(SweepJob::with_bw(app, *d, &cfg, bw, scale));
+                        matrix.push(job_for(app, *d, bw));
                     }
                 }
             }
@@ -259,8 +297,8 @@ fn run() -> Result<()> {
                 for d in &designs {
                     let mut iv = Vec::new();
                     let mut rv = Vec::new();
-                    for app in &set {
-                        let s = engine.run_one(&SweepJob::with_bw(app, *d, &cfg, bw, scale));
+                    for &app in &set {
+                        let s = engine.run_one(&job_for(app, *d, bw));
                         iv.push(s.ipc());
                         rv.push(s.dram.compression_ratio());
                     }
@@ -272,6 +310,13 @@ fn run() -> Result<()> {
                 println!("# Sweep — DRAM compression ratio at {bw}x bandwidth");
                 println!("{}", figure_matrix(&names, &ratio, 2));
             }
+            if let Some(t) = &trace {
+                eprintln!(
+                    "[sweep] trace-driven: digest {:#018x}, {} accesses served",
+                    t.digest,
+                    t.replayed_accesses()
+                );
+            }
             eprintln!(
                 "[sweep] {} point(s) in {dt:.2}s with {} worker(s)",
                 matrix.len(),
@@ -279,15 +324,112 @@ fn run() -> Result<()> {
             );
             Ok(())
         }
+        Some("trace") => run_trace(&args),
         _ => {
             eprintln!(
-                "usage: caba <list|table1|run|fig|sweep> [...]\n  \
+                "usage: caba <list|table1|run|fig|sweep|trace> [...]\n  \
                  caba run --app PVC --design CABA-BDI [--scale 0.25] [--oracle native|pjrt]\n  \
                  caba fig 8 [--scale 0.25] [--jobs N] [--set key=value]\n  \
-                 caba sweep --apps eval --designs headline --bw 0.5,1.0,2.0 [--jobs N]"
+                 caba sweep --apps eval --designs headline --bw 0.5,1.0,2.0 [--jobs N]\n  \
+                 caba sweep --trace run.cabatrace --designs headline [--bw 0.5,1.0,2.0]\n  \
+                 caba trace record PVC [--design CABA-BDI] [--scale 0.25] [--out PVC.cabatrace]\n  \
+                 caba trace replay run.cabatrace [--design CABA-BDI] [--set key=value]\n  \
+                 caba trace info run.cabatrace\n  \
+                 caba trace import dump.txt [--out dump.cabatrace] [--pattern random]"
             );
             Ok(())
         }
+    }
+}
+
+/// The `caba trace <record|replay|info|import>` verb family.
+fn run_trace(args: &Args) -> Result<()> {
+    let usage = || {
+        anyhow!(
+            "usage: caba trace <record <app> | replay <file> | info <file> | import <txt>> [...]"
+        )
+    };
+    match args.positional.get(1).map(String::as_str) {
+        Some("record") => {
+            let app_name = args.positional.get(2).map(String::as_str).ok_or_else(usage)?;
+            let app = apps::find(app_name)
+                .ok_or_else(|| anyhow!("unknown app {app_name:?}; see `caba list`"))?;
+            let design = design_by_name(args.flag("design").unwrap_or("CABA-BDI"))?;
+            let cfg = args.config()?;
+            if !cfg.trace_record.is_empty() {
+                // Catch this before Simulator::new attaches a recorder to
+                // the --set path (which the record_to below would then
+                // reject, stranding a header-only file on disk).
+                bail!("pass the destination as --out OR --set trace_record, not both");
+            }
+            let scale = args.scale();
+            let out = args
+                .flag("out")
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("{}.cabatrace", app.name));
+            let mut sim = Simulator::new(cfg, design, app, scale);
+            sim.record_to(&out)?;
+            let stats = sim.run();
+            print_run(app.name, design.name, &stats, &sim);
+            println!(
+                "trace: wrote {out} ({} access records, {} payload entries)",
+                stats.trace.accesses_recorded, stats.trace.payloads_recorded
+            );
+            Ok(())
+        }
+        Some("replay") => {
+            let file = args.positional.get(2).map(String::as_str).ok_or_else(usage)?;
+            let trace = TraceData::load(file)?;
+            let cfg = args.config()?;
+            if !trace.complete {
+                eprintln!(
+                    "[trace] note: the recorded run hit its cycle/instruction budget before \
+                     draining — this trace covers a prefix of the workload"
+                );
+            }
+            if trace.meta.kind == TraceKind::Recorded && cfg.fingerprint() != trace.meta.fingerprint
+            {
+                eprintln!(
+                    "[trace] note: replaying under a different configuration than the recording \
+                     ({:#018x} vs {:#018x}) — trace-driven what-if, not a bit-identity check",
+                    cfg.fingerprint(),
+                    trace.meta.fingerprint
+                );
+            }
+            let design = design_by_name(args.flag("design").unwrap_or("CABA-BDI"))?;
+            let mut sim = Simulator::from_trace(cfg, design, Arc::clone(&trace))?;
+            let stats = sim.run();
+            print_run(sim.wl.spec.name, design.name, &stats, &sim);
+            println!(
+                "replay: {} accesses served ({} lines), {} payloads from file, {} regenerated",
+                trace.replayed_accesses(),
+                trace.replayed_lines(),
+                trace.payload_hits_count(),
+                trace.payload_fallbacks_count()
+            );
+            Ok(())
+        }
+        Some("info") => {
+            let file = args.positional.get(2).map(String::as_str).ok_or_else(usage)?;
+            let trace = TraceData::load(file)?;
+            println!("# Trace {file}");
+            println!("{}", trace_summary(&trace));
+            Ok(())
+        }
+        Some("import") => {
+            let input = args.positional.get(2).map(String::as_str).ok_or_else(usage)?;
+            let out = args
+                .flag("out")
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("{input}.cabatrace"));
+            let pattern = args.flag("pattern").unwrap_or("random");
+            let trace = trace_import::import_file(input, &out, pattern)?;
+            println!("# Imported {input} -> {out}");
+            println!("{}", trace_summary(&trace));
+            println!("replay it with: caba trace replay {out} --design CABA-BDI");
+            Ok(())
+        }
+        _ => Err(usage()),
     }
 }
 

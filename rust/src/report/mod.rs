@@ -98,6 +98,52 @@ pub fn figure_matrix(app_names: &[&str], series: &[Series], decimals: usize) -> 
     t.render()
 }
 
+/// The `caba trace info` report: header metadata plus stream statistics
+/// of a loaded trace.
+pub fn trace_summary(t: &crate::trace::replay::TraceData) -> String {
+    use crate::trace::TraceKind;
+    let m = &t.meta;
+    let mut tbl = Table::new(["field", "value"]);
+    let kind = match m.kind {
+        TraceKind::Recorded if t.complete => "recorded app run",
+        TraceKind::Recorded => "recorded app run (budget-truncated, partial coverage)",
+        TraceKind::Imported => "imported text dump",
+    };
+    tbl.row(["kind".to_string(), kind.to_string()]);
+    tbl.row(["app".to_string(), m.app.clone()]);
+    tbl.row(["workload scale".to_string(), f(m.scale, 3)]);
+    tbl.row(["config fingerprint".to_string(), format!("{:#018x}", m.fingerprint)]);
+    tbl.row(["workload seed".to_string(), format!("{:#x}", m.seed)]);
+    tbl.row(["content digest".to_string(), format!("{:#018x}", t.digest)]);
+    tbl.row([
+        "geometry".to_string(),
+        format!(
+            "{} CTAs x {} threads, {} regs/thread, {} iters/warp",
+            m.total_ctas, m.threads_per_cta, m.regs_per_thread, m.iters
+        ),
+    ]);
+    for (i, &(fp, code)) in m.arrays.iter().enumerate() {
+        tbl.row([format!("array {i}"), format!("{fp} lines (pattern code {code:#04x})")]);
+    }
+    tbl.row([
+        "access records".to_string(),
+        format!(
+            "{} ({} loads, {} stores, {} lines)",
+            t.n_access_records, t.n_loads, t.n_stores, t.total_lines
+        ),
+    ]);
+    let defs = t.payload_defs_count();
+    let dedup = if defs == 0 { 1.0 } else { t.n_payload_entries as f64 / defs as f64 };
+    tbl.row([
+        "payload entries".to_string(),
+        format!("{} ({} distinct lines, {dedup:.2}x dedup)", t.n_payload_entries, defs),
+    ]);
+    if t.first_cycle != u64::MAX {
+        tbl.row(["issue-cycle span".to_string(), format!("{}..{}", t.first_cycle, t.last_cycle)]);
+    }
+    tbl.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -9,9 +9,12 @@ use crate::config::SimConfig;
 use crate::core::{Core, CycleCtx};
 use crate::mem::MemSystem;
 use crate::stats::SimStats;
-use crate::workload::{apps::AppSpec, Workload};
+use crate::trace::{record::TraceRecorder, replay::TraceData, TraceKind, TraceMeta, PATTERN_FROM_SPEC};
+use crate::workload::{apps::AppSpec, TraceRole, Workload};
+use anyhow::{bail, Result};
 use designs::{Design, Mechanism};
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 /// Extra registers per thread reserved for assist-warp contexts when CABA
 /// is enabled (§4.2.2: each enabled subroutine's register need is added to
@@ -136,6 +139,9 @@ pub struct Simulator {
     pub cfg: SimConfig,
     pub design: Design,
     pub wl: Workload,
+    /// Workload scale factor this instance was built at (recorded into
+    /// trace headers so replays rebuild the same skeleton).
+    pub scale: f64,
     cores: Vec<Core>,
     mem: MemSystem,
     data: DataModel,
@@ -182,7 +188,7 @@ impl Simulator {
         let wl = Workload::build_with_extra_regs(app, &cfg, scale, extra_regs);
         let cores = (0..cfg.n_sms).map(|i| Core::new(i, &cfg, &design)).collect();
         let mem = MemSystem::new(&cfg, &design);
-        Simulator {
+        let mut sim = Simulator {
             cores,
             mem,
             data: DataModel::new(oracle),
@@ -191,7 +197,108 @@ impl Simulator {
             cfg,
             design,
             wl,
+            scale,
+        };
+        // Recording requested through the configuration: attach now. The
+        // config channel has no Result path, so a failure to open the
+        // requested file is a panic — recording was asked for explicitly
+        // and must not be dropped silently.
+        if !sim.cfg.trace_record.is_empty() {
+            let path = sim.cfg.trace_record.clone();
+            if let Err(e) = sim.record_to(&path) {
+                panic!("trace_record={path:?}: {e:#}");
+            }
         }
+        sim
+    }
+
+    /// Attach a trace recorder writing to `path` (call before [`run`]).
+    /// The recorder captures every generated memory access and line
+    /// payload; [`Simulator::run`] finalizes the file.
+    ///
+    /// [`run`]: Simulator::run
+    pub fn record_to(&mut self, path: &str) -> Result<()> {
+        match self.wl.source {
+            // A second attachment would silently abandon the first file
+            // half-written (header, no trailer).
+            TraceRole::Record(_) => bail!(
+                "a trace recorder is already attached (combined `trace record` \
+                 with --set trace_record=...? pass one destination only)"
+            ),
+            // Overwriting the replay source would silently run synthetic
+            // generation while claiming to replay the trace.
+            TraceRole::Replay(_) => {
+                bail!("cannot attach a recorder to a trace-driven simulator")
+            }
+            TraceRole::Synthetic => {}
+        }
+        let meta = TraceMeta {
+            kind: TraceKind::Recorded,
+            fingerprint: self.cfg.fingerprint(),
+            seed: self.wl.seed,
+            scale: self.scale,
+            app: self.wl.spec.name.to_string(),
+            regs_per_thread: self.wl.spec.regs_per_thread,
+            threads_per_cta: self.wl.spec.threads_per_cta,
+            smem_per_cta: self.wl.spec.smem_per_cta,
+            total_ctas: self.wl.total_ctas,
+            iters: self.wl.program.iters,
+            arrays: self
+                .wl
+                .arrays
+                .iter()
+                .map(|a| (a.footprint_lines, PATTERN_FROM_SPEC))
+                .collect(),
+        };
+        let rec = TraceRecorder::create(path, &meta)?;
+        self.wl.source = TraceRole::Record(Arc::new(rec));
+        Ok(())
+    }
+
+    /// Build a **trace-driven** simulator: the workload side is served
+    /// from `tracedata` (see `crate::trace`) instead of the synthetic
+    /// generators; design and configuration are free to differ from the
+    /// recording run (trace-driven what-if exploration).
+    pub fn from_trace(cfg: SimConfig, design: Design, tracedata: Arc<TraceData>) -> Result<Simulator> {
+        Self::from_trace_with_oracle(cfg, design, tracedata, Box::new(MemoOracle::new(NativeOracle)))
+    }
+
+    /// [`Simulator::from_trace`] with an explicit oracle backend.
+    pub fn from_trace_with_oracle(
+        cfg: SimConfig,
+        design: Design,
+        tracedata: Arc<TraceData>,
+        oracle: Box<dyn CompressionOracle>,
+    ) -> Result<Simulator> {
+        if !cfg.trace_record.is_empty() {
+            // An explicit recording request must never vanish silently —
+            // and a trace-driven run has nothing new to record (the trace
+            // file already IS the recording).
+            bail!(
+                "trace_record={:?} is not supported for trace-driven runs",
+                cfg.trace_record
+            );
+        }
+        let extra_regs = if design.mechanism == Mechanism::Caba {
+            CABA_EXTRA_REGS
+        } else {
+            0
+        };
+        let scale = tracedata.meta.scale;
+        let wl = Workload::build_replay(&tracedata, &cfg, extra_regs)?;
+        let cores = (0..cfg.n_sms).map(|i| Core::new(i, &cfg, &design)).collect();
+        let mem = MemSystem::new(&cfg, &design);
+        Ok(Simulator {
+            cores,
+            mem,
+            data: DataModel::new(oracle),
+            next_cta: 0,
+            stats: SimStats::default(),
+            cfg,
+            design,
+            wl,
+            scale,
+        })
     }
 
     /// Should this app run with compression at all? The paper disables
@@ -293,6 +400,18 @@ impl Simulator {
             }
         }
         self.collect(now);
+        // Seal an attached trace recorder (idempotent). A write failure is
+        // fatal here — the user explicitly asked for the trace, and the
+        // alternative is a silently unusable file.
+        if let TraceRole::Record(rec) = &self.wl.source {
+            match rec.finish(self.stats.finished) {
+                Ok((a, p)) => {
+                    self.stats.trace.accesses_recorded = a;
+                    self.stats.trace.payloads_recorded = p;
+                }
+                Err(e) => panic!("trace recording failed: {e:#}"),
+            }
+        }
         self.stats.clone()
     }
 

@@ -174,6 +174,19 @@ pub struct EnergyEvents {
     pub hw_compressor_ops: u64,
 }
 
+/// Trace-capture activity (see `crate::trace`). Only *recording* counters
+/// live here: they are a deterministic function of the run. Replay-side
+/// counters (cache hits, generator fallbacks) are cumulative per loaded
+/// trace and deliberately stay on `trace::replay::TraceData`, so cached
+/// sweep results remain a pure function of the simulation inputs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraceStats {
+    /// Deduplicated warp-level access records captured.
+    pub accesses_recorded: u64,
+    /// Deduplicated (line, epoch) payload entries captured.
+    pub payloads_recorded: u64,
+}
+
 /// Everything a single simulation run produces.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct SimStats {
@@ -190,6 +203,7 @@ pub struct SimStats {
     pub caba: CabaStats,
     pub md: MdCacheStats,
     pub energy_events: EnergyEvents,
+    pub trace: TraceStats,
     /// CTAs retired.
     pub ctas_done: u64,
     /// All launched warps finished their program.
@@ -204,6 +218,17 @@ impl SimStats {
         } else {
             self.warp_insts as f64 / self.cycles as f64
         }
+    }
+
+    /// The memory-side counters a trace replay must reproduce
+    /// **bit-identically** (the `trace record` → `trace replay` regression
+    /// contract): caches, DRAM, interconnect, MD cache and CABA activity.
+    /// Excludes [`SimStats::trace`] (a record run counts captures, a
+    /// replay run doesn't) — everything else here must match exactly.
+    pub fn memory_signature(
+        &self,
+    ) -> (CacheStats, CacheStats, DramStats, IcntStats, MdCacheStats, CabaStats) {
+        (self.l1, self.l2, self.dram, self.icnt, self.md, self.caba)
     }
 }
 
@@ -258,5 +283,16 @@ mod tests {
     #[test]
     fn md_hit_rate_empty_is_one() {
         assert_eq!(MdCacheStats::default().hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn memory_signature_ignores_trace_counters_only() {
+        let mut a = SimStats::default();
+        let mut b = a.clone();
+        b.trace.accesses_recorded = 99; // a record run vs its replay
+        assert_ne!(a, b);
+        assert_eq!(a.memory_signature(), b.memory_signature());
+        a.dram.bursts = 1; // any memory-side divergence must show
+        assert_ne!(a.memory_signature(), b.memory_signature());
     }
 }

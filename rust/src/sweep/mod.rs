@@ -23,6 +23,11 @@
 //!   executes the misses on a scoped `std::thread` worker pool (no
 //!   external deps), and returns results in request order.
 //!
+//! Jobs are synthetic by default; [`SweepJob::replay`] makes a point
+//! **trace-driven** (`crate::trace`) — the key then also carries the
+//! trace's content digest, so re-sweeping the same trace file is pure
+//! cache hits while distinct traces never alias.
+//!
 //! ## Determinism
 //!
 //! Parallel execution is **bit-identical** to serial execution because no
@@ -47,6 +52,7 @@ use crate::config::SimConfig;
 use crate::sim::designs::Design;
 use crate::sim::Simulator;
 use crate::stats::SimStats;
+use crate::trace::replay::TraceData;
 use crate::workload::apps::AppSpec;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -54,27 +60,36 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// One point of an evaluation sweep: a complete, self-contained
-/// simulation request.
+/// simulation request — synthetic (`app` drives generation) or
+/// trace-driven (`trace` replays a recorded/imported access stream).
 #[derive(Clone)]
 pub struct SweepJob {
     pub app: &'static AppSpec,
     pub design: Design,
     /// The **full** configuration (including `bw_scale` and any `--set`
-    /// overrides) — all of it participates in the cache key.
+    /// overrides) — all of it participates in the cache key. The
+    /// constructors strip `trace_record`: sweep jobs never record, and a
+    /// recording path must not fragment the cache.
     pub cfg: SimConfig,
     /// Workload scale factor (iterations / CTA count shrink).
     pub scale: f64,
+    /// Replay source; `None` = synthetic workload.
+    pub trace: Option<Arc<TraceData>>,
 }
 
 /// Cache key: app and design are identified by their unique static names;
-/// the configuration by its full-field fingerprint. A fingerprint
-/// collision between two *different* configs is a 64-bit hash collision —
-/// negligible against the handful of configs a process ever sweeps.
-pub type JobKey = (&'static str, &'static str, u64, u64);
+/// the configuration by its full-field fingerprint; a trace-driven job
+/// additionally by the trace's **content digest** (last element, 0 for
+/// synthetic jobs) — two different trace files never alias, and the same
+/// file re-loaded (or re-recorded deterministically) hits the cache. A
+/// collision between two *different* configs/traces is a 64-bit hash
+/// collision — negligible against what a process ever sweeps.
+pub type JobKey = (&'static str, &'static str, u64, u64, u64);
 
 impl SweepJob {
-    pub fn new(app: &'static AppSpec, design: Design, cfg: SimConfig, scale: f64) -> SweepJob {
-        SweepJob { app, design, cfg, scale }
+    pub fn new(app: &'static AppSpec, design: Design, mut cfg: SimConfig, scale: f64) -> SweepJob {
+        cfg.trace_record = String::new();
+        SweepJob { app, design, cfg, scale, trace: None }
     }
 
     /// Convenience for the figure sweeps: `base_cfg` with `bw_scale`
@@ -88,7 +103,17 @@ impl SweepJob {
     ) -> SweepJob {
         let mut cfg = base_cfg.clone();
         cfg.bw_scale = bw_scale;
-        SweepJob { app, design, cfg, scale }
+        Self::new(app, design, cfg, scale)
+    }
+
+    /// A **trace-driven** point: replay `trace` under `design` and `cfg`.
+    /// The workload scale is pinned to the trace's recorded scale (the
+    /// access keys only cover that geometry).
+    pub fn replay(trace: &Arc<TraceData>, design: Design, cfg: SimConfig) -> SweepJob {
+        let scale = trace.meta.scale;
+        let mut job = Self::new(trace.spec(), design, cfg, scale);
+        job.trace = Some(Arc::clone(trace));
+        job
     }
 
     /// The design that will actually execute: the paper's profiler
@@ -109,11 +134,20 @@ impl SweepJob {
             self.effective_design().name,
             self.cfg.fingerprint(),
             self.scale.to_bits(),
+            self.trace.as_ref().map_or(0, |t| t.digest),
         )
     }
 
     fn execute(&self) -> SimStats {
-        Simulator::new(self.cfg.clone(), self.effective_design(), self.app, self.scale).run()
+        match &self.trace {
+            Some(t) => Simulator::from_trace(self.cfg.clone(), self.effective_design(), Arc::clone(t))
+                .unwrap_or_else(|e| {
+                    panic!("trace-driven sweep job ({}, {}): {e:#}", self.app.name, self.design.name)
+                })
+                .run(),
+            None => Simulator::new(self.cfg.clone(), self.effective_design(), self.app, self.scale)
+                .run(),
+        }
     }
 }
 
@@ -206,6 +240,12 @@ impl SweepEngine {
     /// Worker count this engine resolves to.
     pub fn worker_count(&self) -> usize {
         self.jobs
+    }
+
+    /// Entries in this engine's run cache (tests assert re-runs of a
+    /// matrix — including trace-driven ones — are pure cache hits).
+    pub fn cache_entries(&self) -> usize {
+        self.cache.len()
     }
 
     /// Run every job, returning stats in request order. Duplicate and
@@ -311,6 +351,20 @@ mod tests {
         cfg2.set("l2_bytes", "131072").unwrap();
         let b = SweepJob::new(app, Design::base(), cfg2, 0.01);
         assert_ne!(a.key(), b.key());
+    }
+
+    #[test]
+    fn trace_record_path_never_fragments_the_cache() {
+        // Recording is a run control, not a simulated parameter: two jobs
+        // differing only in `trace_record` must share one cache entry (and
+        // sweep jobs must never actually record).
+        let app = apps::find("SLA").unwrap();
+        let a = SweepJob::new(app, Design::base(), tiny_cfg(), 0.01);
+        let mut cfg2 = tiny_cfg();
+        cfg2.set("trace_record", "/tmp/should_not_be_written.cabatrace").unwrap();
+        let b = SweepJob::new(app, Design::base(), cfg2, 0.01);
+        assert_eq!(a.key(), b.key());
+        assert!(b.cfg.trace_record.is_empty(), "constructor must strip trace_record");
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Low-level trace codec primitives: LEB128 varints, zigzag signed
+//! deltas, run-length-encoded line payloads, and a bounds-checked byte
+//! cursor. Every decode path returns an error instead of panicking — a
+//! corrupt or truncated trace must fail loudly, never mis-parse.
+
+use crate::compress::{Line, LINE_BYTES};
+use anyhow::{bail, Result};
+
+/// Append `v` as an LEB128 varint (7 bits per byte, MSB = continuation).
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Zigzag-map a signed delta onto an unsigned varint payload.
+pub fn zigzag_encode(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+pub fn zigzag_decode(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// Append a zigzag'd signed value as a varint.
+pub fn put_zigzag(out: &mut Vec<u8>, v: i64) {
+    put_varint(out, zigzag_encode(v));
+}
+
+/// Run-length-encode one 128-byte line payload.
+///
+/// Encoding: a sequence of `(run_len ≥ 1, byte)` pairs covering exactly
+/// [`LINE_BYTES`] bytes — or, when the pair form would be larger than the
+/// raw line, a single `0x00` marker followed by the 128 raw bytes.
+pub fn rle_encode_line(line: &Line, out: &mut Vec<u8>) {
+    let mut runs: Vec<(u8, u8)> = Vec::new();
+    let mut i = 0;
+    while i < LINE_BYTES {
+        let b = line[i];
+        let mut n = 1usize;
+        while i + n < LINE_BYTES && line[i + n] == b && n < 255 {
+            n += 1;
+        }
+        runs.push((n as u8, b));
+        i += n;
+    }
+    if runs.len() * 2 <= LINE_BYTES {
+        for (n, b) in runs {
+            out.push(n);
+            out.push(b);
+        }
+    } else {
+        out.push(0);
+        out.extend_from_slice(line);
+    }
+}
+
+/// Decode one RLE line payload from the cursor.
+pub fn rle_decode_line(r: &mut Reader) -> Result<Line> {
+    let mut line = [0u8; LINE_BYTES];
+    let first = r.u8()?;
+    if first == 0 {
+        line.copy_from_slice(r.bytes(LINE_BYTES)?);
+        return Ok(line);
+    }
+    let mut pos = 0usize;
+    let mut run = first;
+    loop {
+        let b = r.u8()?;
+        let n = run as usize;
+        if pos + n > LINE_BYTES {
+            bail!("corrupt trace: RLE run overflows the line ({} > {LINE_BYTES})", pos + n);
+        }
+        line[pos..pos + n].fill(b);
+        pos += n;
+        if pos == LINE_BYTES {
+            return Ok(line);
+        }
+        run = r.u8()?;
+        if run == 0 {
+            bail!("corrupt trace: raw-payload marker inside an RLE run sequence");
+        }
+    }
+}
+
+/// A bounds-checked cursor over a byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        match self.buf.get(self.pos) {
+            Some(&b) => {
+                self.pos += 1;
+                Ok(b)
+            }
+            None => bail!("truncated trace: unexpected end of data at byte {}", self.pos),
+        }
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated trace: need {n} bytes at offset {}, only {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32_le(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64_le(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift >= 64 {
+                bail!("corrupt trace: varint longer than 64 bits");
+            }
+            // The 10th byte only has room for bit 63: anything beyond it
+            // would be silently shifted out — that's corruption, not data.
+            if shift == 63 && (b & 0x7E) != 0 {
+                bail!("corrupt trace: varint overflows 64 bits");
+            }
+            v |= ((b & 0x7F) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    pub fn zigzag(&mut self) -> Result<i64> {
+        Ok(zigzag_decode(self.varint()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip_edges() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX - 1, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut r = Reader::new(&buf);
+            assert_eq!(r.varint().unwrap(), v);
+            assert_eq!(r.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn zigzag_roundtrip_edges() {
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(zigzag_decode(zigzag_encode(v)), v);
+        }
+    }
+
+    #[test]
+    fn rle_all_zero_line_is_tiny() {
+        let line = [0u8; LINE_BYTES];
+        let mut buf = Vec::new();
+        rle_encode_line(&line, &mut buf);
+        assert!(buf.len() <= 4, "zero line encoded to {} bytes", buf.len());
+        let mut r = Reader::new(&buf);
+        assert_eq!(rle_decode_line(&mut r).unwrap(), line);
+    }
+
+    #[test]
+    fn rle_incompressible_falls_back_to_raw() {
+        let mut line = [0u8; LINE_BYTES];
+        for (i, b) in line.iter_mut().enumerate() {
+            *b = i as u8; // no runs
+        }
+        let mut buf = Vec::new();
+        rle_encode_line(&line, &mut buf);
+        assert_eq!(buf.len(), 1 + LINE_BYTES);
+        assert_eq!(buf[0], 0);
+        let mut r = Reader::new(&buf);
+        assert_eq!(rle_decode_line(&mut r).unwrap(), line);
+    }
+
+    #[test]
+    fn truncated_reads_fail() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u64::MAX); // 10-byte varint
+        buf.truncate(3);
+        let mut r = Reader::new(&buf);
+        assert!(r.varint().is_err());
+        let mut r2 = Reader::new(&[0x80, 0x80]); // never-terminating varint
+        assert!(r2.varint().is_err());
+        // 10th byte with bits beyond bit 63 set: overflow, not silent drop.
+        let overlong = [0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x7F];
+        assert!(Reader::new(&overlong).varint().is_err());
+        let mut r3 = Reader::new(&[5u8]); // RLE run with no byte
+        assert!(rle_decode_line(&mut r3).is_err());
+    }
+
+    #[test]
+    fn rle_overrun_detected() {
+        // Two runs of 255 overflow a 128-byte line.
+        let buf = [255u8, 7, 255, 7];
+        let mut r = Reader::new(&buf);
+        assert!(rle_decode_line(&mut r).is_err());
+    }
+}

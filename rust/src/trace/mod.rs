@@ -1,0 +1,322 @@
+//! # Trace capture & replay
+//!
+//! This subsystem decouples *what the GPU executes* from *how we
+//! synthesized it*. A [`record::TraceRecorder`] attached to a running
+//! [`crate::workload::Workload`] streams every warp-level memory access and
+//! every generated line payload into a compact, versioned, deterministic
+//! binary file; a [`replay::TraceData`] serves that file back as the
+//! workload side of the simulator, so recorded runs — or externally
+//! authored accelsim-style dumps converted by [`import`] — drive the full
+//! CABA pipeline (compression, assist warps, DRAM) without the synthetic
+//! generators (trace-driven simulation, as in gpucachesim/accel-sim).
+//!
+//! ## File format (`.cabatrace`, version 1)
+//!
+//! ```text
+//! header:
+//!   magic       8 bytes  b"CABATRC\0"
+//!   version     u32 le   (= 1)
+//!   kind        u8       (0 = recorded app run, 1 = imported)
+//!   fingerprint u64 le   SimConfig::fingerprint() of the recording run
+//!   seed        u64 le   Workload seed (drives the payload generators)
+//!   scale       u64 le   f64 bit pattern of the workload scale factor
+//!   app         varint len + UTF-8 app name
+//!   geometry    varints: regs/thread, threads/CTA, smem/CTA, total CTAs,
+//!               iterations per warp
+//!   arrays      varint count, then per array: footprint varint +
+//!               data-pattern code u8 (0xFF = "use the app spec's pattern")
+//! chunks (repeated):
+//!   tag u8 ('A' access | 'P' payload), byte-length varint, record-count
+//!   varint, then the record bytes
+//! trailer:
+//!   tag 'T', then u64 le ×6: access records, payload entries, payload
+//!   definitions, first issue cycle, last issue cycle, flags (bit 0 =
+//!   the recorded run drained; 0 marks a budget-truncated recording)
+//! ```
+//!
+//! Access records (stream state persists across 'A' chunks): zigzag-varint
+//! warp-uid delta, zigzag iteration delta, slot varint, flags u8 (bit 0 =
+//! store), line-count varint, then the line addresses — the first as a
+//! zigzag delta against the previous record's first line, the rest as
+//! zigzag deltas against their predecessor within the record.
+//!
+//! Payload entries ('P' chunks): zigzag line-address delta, epoch varint,
+//! then a reference varint — `id + 1` pointing at an earlier payload
+//! definition, or `0` introducing the next definition inline as an
+//! RLE-coded 128-byte line ([`codec::rle_encode_line`]). Identical line
+//! images are stored once and referenced thereafter.
+//!
+//! The byte stream is **deterministic**: records are emitted in first-
+//! encounter order of the (deterministic) simulation, never from hash-map
+//! iteration, so recording the same run twice produces identical files and
+//! identical content digests.
+
+pub mod codec;
+pub mod import;
+pub mod record;
+pub mod replay;
+
+use crate::workload::datagen::DataPattern;
+use anyhow::{bail, Result};
+use codec::{put_varint, Reader};
+
+/// File magic ("bad magic" failures name this).
+pub const MAGIC: [u8; 8] = *b"CABATRC\0";
+/// Current format version.
+pub const VERSION: u32 = 1;
+
+/// Chunk tags.
+pub const TAG_ACCESS: u8 = b'A';
+pub const TAG_PAYLOAD: u8 = b'P';
+pub const TAG_TRAILER: u8 = b'T';
+
+/// Pattern code marking "take the data pattern from the app spec" (used by
+/// recorded traces, whose replay falls back to the original generators).
+pub const PATTERN_FROM_SPEC: u8 = 0xFF;
+
+/// Where a trace came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Recorded from a synthetic-app simulation; replay can regenerate any
+    /// payload the file does not carry (same pure generator functions).
+    Recorded,
+    /// Converted from an external text dump; payloads come from the
+    /// import-assigned data pattern.
+    Imported,
+}
+
+/// Everything the header carries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMeta {
+    pub kind: TraceKind,
+    /// `SimConfig::fingerprint()` of the recording run (0 for imports).
+    pub fingerprint: u64,
+    /// Workload seed — replay reuses it so generator-fallback payloads are
+    /// bit-identical to the recording run's.
+    pub seed: u64,
+    /// Workload scale factor of the recording run.
+    pub scale: f64,
+    /// App name (an `apps::APPS` entry, or "TRACE" for imports).
+    pub app: String,
+    pub regs_per_thread: u32,
+    pub threads_per_cta: u32,
+    pub smem_per_cta: u32,
+    pub total_ctas: u32,
+    /// Loop iterations per warp.
+    pub iters: u32,
+    /// Per array: footprint in lines + data-pattern code.
+    pub arrays: Vec<(u64, u8)>,
+}
+
+impl TraceMeta {
+    /// Serialize the header.
+    pub fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(match self.kind {
+            TraceKind::Recorded => 0,
+            TraceKind::Imported => 1,
+        });
+        out.extend_from_slice(&self.fingerprint.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.scale.to_bits().to_le_bytes());
+        put_varint(out, self.app.len() as u64);
+        out.extend_from_slice(self.app.as_bytes());
+        for v in [
+            self.regs_per_thread,
+            self.threads_per_cta,
+            self.smem_per_cta,
+            self.total_ctas,
+            self.iters,
+        ] {
+            put_varint(out, v as u64);
+        }
+        put_varint(out, self.arrays.len() as u64);
+        for &(fp, code) in &self.arrays {
+            put_varint(out, fp);
+            out.push(code);
+        }
+    }
+
+    /// Parse the header (magic + version are validated here, loudly).
+    pub fn parse(r: &mut Reader) -> Result<TraceMeta> {
+        let magic = r.bytes(8)?;
+        if magic != &MAGIC[..] {
+            bail!("bad magic: not a CABA trace file (got {magic:02x?})");
+        }
+        let version = r.u32_le()?;
+        if version != VERSION {
+            bail!("unsupported trace version {version} (this build reads version {VERSION})");
+        }
+        let kind = match r.u8()? {
+            0 => TraceKind::Recorded,
+            1 => TraceKind::Imported,
+            k => bail!("corrupt trace: unknown kind byte {k}"),
+        };
+        let fingerprint = r.u64_le()?;
+        let seed = r.u64_le()?;
+        let scale = f64::from_bits(r.u64_le()?);
+        let app_len = r.varint()? as usize;
+        if app_len > 256 {
+            bail!("corrupt trace: app name length {app_len}");
+        }
+        let app = std::str::from_utf8(r.bytes(app_len)?)
+            .map_err(|_| anyhow::anyhow!("corrupt trace: app name is not UTF-8"))?
+            .to_string();
+        let mut geom = [0u32; 5];
+        for g in geom.iter_mut() {
+            let v = r.varint()?;
+            if v > u32::MAX as u64 {
+                bail!("corrupt trace: geometry value {v} out of range");
+            }
+            *g = v as u32;
+        }
+        let n_arrays = r.varint()? as usize;
+        if n_arrays > 64 {
+            bail!("corrupt trace: {n_arrays} arrays");
+        }
+        let mut arrays = Vec::with_capacity(n_arrays);
+        for _ in 0..n_arrays {
+            let fp = r.varint()?;
+            let code = r.u8()?;
+            arrays.push((fp, code));
+        }
+        Ok(TraceMeta {
+            kind,
+            fingerprint,
+            seed,
+            scale,
+            app,
+            regs_per_thread: geom[0],
+            threads_per_cta: geom[1],
+            smem_per_cta: geom[2],
+            total_ctas: geom[3],
+            iters: geom[4],
+            arrays,
+        })
+    }
+}
+
+// --- import data patterns -------------------------------------------------
+// Imported traces carry no payload bytes; replay synthesizes line contents
+// from one of these named distribution classes (see workload::datagen).
+
+static P_RANDOM: DataPattern = DataPattern::Random;
+static P_ZERO: DataPattern = DataPattern::ZeroHeavy { p_zero: 0.65 };
+static P_LOWDYN: DataPattern = DataPattern::LowDynRange { value_bytes: 4, delta_bytes: 1 };
+static P_NARROW: DataPattern = DataPattern::NarrowInt { max: 120 };
+static P_POINTER: DataPattern = DataPattern::PointerLike { n_bases: 4 };
+static P_REP: DataPattern = DataPattern::RepBytes;
+static P_SPARSE: DataPattern = DataPattern::SparseNarrow { p_nonzero: 0.25 };
+static P_FLOAT: DataPattern = DataPattern::FloatGrid { exp: 120 };
+
+/// Named pattern table for the import CLI (`--pattern <name>`).
+pub const PATTERN_NAMES: [(&str, u8); 8] = [
+    ("random", 0),
+    ("zero", 1),
+    ("lowdyn", 2),
+    ("narrow", 3),
+    ("pointer", 4),
+    ("rep", 5),
+    ("sparse", 6),
+    ("float", 7),
+];
+
+/// Resolve a pattern code from the trace header.
+pub fn pattern_by_code(code: u8) -> Option<&'static DataPattern> {
+    Some(match code {
+        0 => &P_RANDOM,
+        1 => &P_ZERO,
+        2 => &P_LOWDYN,
+        3 => &P_NARROW,
+        4 => &P_POINTER,
+        5 => &P_REP,
+        6 => &P_SPARSE,
+        7 => &P_FLOAT,
+        _ => return None,
+    })
+}
+
+/// Resolve a pattern name (import CLI) to its code.
+pub fn pattern_code_by_name(name: &str) -> Option<u8> {
+    PATTERN_NAMES
+        .iter()
+        .find(|(n, _)| n.eq_ignore_ascii_case(name))
+        .map(|&(_, c)| c)
+}
+
+/// FNV-style 64-bit byte fold — the trace's content digest (sweep cache
+/// key component for trace-driven jobs; also shown by `caba trace info`).
+/// Same fold as `workload`'s app-name hash (FNV offset basis, widened
+/// multiplier); only collision resistance for cache keying matters here,
+/// not the exact FNV-1a constants.
+pub fn content_digest(bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x1000_0000_01b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            kind: TraceKind::Recorded,
+            fingerprint: 0xDEAD_BEEF,
+            seed: 42,
+            scale: 0.25,
+            app: "PVC".into(),
+            regs_per_thread: 16,
+            threads_per_cta: 256,
+            smem_per_cta: 0,
+            total_ctas: 30,
+            iters: 12,
+            arrays: vec![(4096, PATTERN_FROM_SPEC), (128, PATTERN_FROM_SPEC)],
+        }
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let m = meta();
+        let mut buf = Vec::new();
+        m.write(&mut buf);
+        let mut r = Reader::new(&buf);
+        let back = TraceMeta::parse(&mut r).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn bad_magic_and_version_fail() {
+        let mut buf = Vec::new();
+        meta().write(&mut buf);
+        let mut garbled = buf.clone();
+        garbled[0] = b'X';
+        let err = TraceMeta::parse(&mut Reader::new(&garbled)).unwrap_err();
+        assert!(format!("{err}").contains("bad magic"), "{err}");
+        let mut newer = buf.clone();
+        newer[8] = 99; // version low byte
+        let err = TraceMeta::parse(&mut Reader::new(&newer)).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+        // Truncation inside the header.
+        buf.truncate(16);
+        assert!(TraceMeta::parse(&mut Reader::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn pattern_names_resolve() {
+        for (name, code) in PATTERN_NAMES {
+            assert_eq!(pattern_code_by_name(name), Some(code));
+            assert!(pattern_by_code(code).is_some());
+        }
+        assert_eq!(pattern_code_by_name("nonsense"), None);
+        assert!(pattern_by_code(200).is_none());
+    }
+
+    #[test]
+    fn digest_is_order_sensitive() {
+        assert_ne!(content_digest(b"ab"), content_digest(b"ba"));
+        assert_eq!(content_digest(b"xyz"), content_digest(b"xyz"));
+    }
+}

@@ -1,0 +1,353 @@
+//! Trace recording: a streaming, chunked encoder plus the thread-safe
+//! [`TraceRecorder`] the workload layer attaches to a live simulation.
+//!
+//! The recorder is *non-invasive*: it observes the address/payload streams
+//! the generators produce and never feeds anything back, so a recording
+//! run's simulation results (timing, caches, DRAM — everything except the
+//! `SimStats::trace` capture counters themselves) are bit-identical to an
+//! unrecorded run's. Records are
+//! deduplicated by key — `(warp uid, iteration, body slot)` for accesses,
+//! `(line, epoch)` for payloads — because the simulator may legitimately
+//! evaluate the same access function twice (e.g. the §8.2 stride
+//! prefetcher recomputes a future demand access).
+
+use super::codec::{put_varint, put_zigzag, rle_encode_line};
+use super::TraceMeta;
+use crate::compress::Line;
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::sync::Mutex;
+
+/// Flush an access/payload chunk once its record buffer reaches this size
+/// (streaming writes: memory stays bounded by the dedup sets, not the
+/// encoded stream).
+const CHUNK_FLUSH_BYTES: usize = 48 * 1024;
+
+/// The streaming trace encoder. Generic over the sink so the recorder can
+/// stream to a file while tests and the text importer encode into memory.
+pub struct Encoder<W: Write> {
+    w: W,
+    a_buf: Vec<u8>,
+    a_count: u64,
+    prev_uid: u64,
+    prev_iter: u32,
+    prev_first_line: u64,
+    p_buf: Vec<u8>,
+    p_count: u64,
+    prev_p_line: u64,
+    payload_ids: HashMap<Line, u32>,
+    n_access: u64,
+    n_payload: u64,
+    n_defs: u64,
+    first_cycle: u64,
+    last_cycle: u64,
+    complete: bool,
+}
+
+impl<W: Write> Encoder<W> {
+    /// Write the header and return a ready encoder.
+    pub fn new(mut w: W, meta: &TraceMeta) -> io::Result<Encoder<W>> {
+        let mut head = Vec::new();
+        meta.write(&mut head);
+        w.write_all(&head)?;
+        Ok(Encoder {
+            w,
+            a_buf: Vec::new(),
+            a_count: 0,
+            prev_uid: 0,
+            prev_iter: 0,
+            prev_first_line: 0,
+            p_buf: Vec::new(),
+            p_count: 0,
+            prev_p_line: 0,
+            payload_ids: HashMap::new(),
+            n_access: 0,
+            n_payload: 0,
+            n_defs: 0,
+            first_cycle: u64::MAX,
+            last_cycle: 0,
+            complete: true,
+        })
+    }
+
+    /// Mark whether the recorded run drained (`SimStats::finished`). A
+    /// trace of a truncated run (cycle/instruction budget hit) covers only
+    /// a prefix of the workload; the replayer relaxes its miss handling
+    /// for such traces instead of treating gaps as corruption.
+    pub fn set_complete(&mut self, complete: bool) {
+        self.complete = complete;
+    }
+
+    /// Append one access record (caller has already deduplicated by key).
+    pub fn access(
+        &mut self,
+        uid: u64,
+        iter: u32,
+        slot: u32,
+        is_store: bool,
+        lines: &[u64],
+    ) -> io::Result<()> {
+        put_zigzag(&mut self.a_buf, (uid as i64).wrapping_sub(self.prev_uid as i64));
+        put_zigzag(&mut self.a_buf, iter as i64 - self.prev_iter as i64);
+        put_varint(&mut self.a_buf, slot as u64);
+        self.a_buf.push(is_store as u8);
+        put_varint(&mut self.a_buf, lines.len() as u64);
+        let mut prev = self.prev_first_line;
+        for (i, &l) in lines.iter().enumerate() {
+            put_zigzag(&mut self.a_buf, (l as i64).wrapping_sub(prev as i64));
+            if i == 0 {
+                self.prev_first_line = l;
+            }
+            prev = l;
+        }
+        self.prev_uid = uid;
+        self.prev_iter = iter;
+        self.a_count += 1;
+        self.n_access += 1;
+        if self.a_buf.len() >= CHUNK_FLUSH_BYTES {
+            self.flush_chunk(super::TAG_ACCESS)?;
+        }
+        Ok(())
+    }
+
+    /// Append one payload entry; identical line images become references.
+    pub fn payload(&mut self, line: u64, epoch: u32, data: &Line) -> io::Result<()> {
+        put_zigzag(&mut self.p_buf, (line as i64).wrapping_sub(self.prev_p_line as i64));
+        self.prev_p_line = line;
+        put_varint(&mut self.p_buf, epoch as u64);
+        match self.payload_ids.get(data) {
+            Some(&id) => put_varint(&mut self.p_buf, id as u64 + 1),
+            None => {
+                let id = self.payload_ids.len() as u32;
+                self.payload_ids.insert(*data, id);
+                put_varint(&mut self.p_buf, 0);
+                rle_encode_line(data, &mut self.p_buf);
+                self.n_defs += 1;
+            }
+        }
+        self.p_count += 1;
+        self.n_payload += 1;
+        if self.p_buf.len() >= CHUNK_FLUSH_BYTES {
+            self.flush_chunk(super::TAG_PAYLOAD)?;
+        }
+        Ok(())
+    }
+
+    /// Note an issue cycle (trace-info timestamp span only).
+    pub fn note_cycle(&mut self, now: u64) {
+        self.first_cycle = self.first_cycle.min(now);
+        self.last_cycle = self.last_cycle.max(now);
+    }
+
+    /// (access records, payload entries) emitted so far.
+    pub fn counts(&self) -> (u64, u64) {
+        (self.n_access, self.n_payload)
+    }
+
+    fn flush_chunk(&mut self, tag: u8) -> io::Result<()> {
+        let (buf, count) = match tag {
+            super::TAG_ACCESS => (&mut self.a_buf, &mut self.a_count),
+            _ => (&mut self.p_buf, &mut self.p_count),
+        };
+        if buf.is_empty() {
+            return Ok(());
+        }
+        let mut head = vec![tag];
+        put_varint(&mut head, buf.len() as u64);
+        put_varint(&mut head, *count);
+        self.w.write_all(&head)?;
+        self.w.write_all(buf)?;
+        buf.clear();
+        *count = 0;
+        Ok(())
+    }
+
+    /// Flush pending chunks, write the trailer, and hand the sink back.
+    pub fn finish(mut self) -> io::Result<W> {
+        self.flush_chunk(super::TAG_ACCESS)?;
+        self.flush_chunk(super::TAG_PAYLOAD)?;
+        let mut tail = vec![super::TAG_TRAILER];
+        let flags = u64::from(self.complete);
+        for v in [
+            self.n_access,
+            self.n_payload,
+            self.n_defs,
+            self.first_cycle,
+            self.last_cycle,
+            flags,
+        ] {
+            tail.extend_from_slice(&v.to_le_bytes());
+        }
+        self.w.write_all(&tail)?;
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+/// Encode a complete trace into memory — the importer's and the property
+/// tests' entry point (the recorder streams to a file instead).
+pub fn encode_in_memory(
+    meta: &TraceMeta,
+    accesses: &[(u64, u32, u32, bool, Vec<u64>)],
+    payloads: &[(u64, u32, Line)],
+) -> Result<Vec<u8>> {
+    let mut enc = Encoder::new(Vec::new(), meta).context("encode trace header")?;
+    for &(uid, iter, slot, is_store, ref lines) in accesses {
+        enc.access(uid, iter, slot, is_store, lines)?;
+    }
+    for &(line, epoch, ref data) in payloads {
+        enc.payload(line, epoch, data)?;
+    }
+    Ok(enc.finish()?)
+}
+
+struct RecInner {
+    enc: Option<Encoder<BufWriter<File>>>,
+    seen_access: HashSet<(u64, u32, u32)>,
+    seen_payload: HashSet<(u64, u32)>,
+    /// First write error, latched; reported by [`TraceRecorder::finish`].
+    err: Option<String>,
+    /// Counts captured at finish time (the encoder is gone afterwards).
+    final_counts: Option<(u64, u64)>,
+}
+
+/// Thread-safe streaming recorder, attached to a [`crate::workload::
+/// Workload`] via `TraceRole::Record`. All methods are `&self` (the
+/// workload is shared immutably across the cycle loop); a mutex serializes
+/// the encoder. Write errors are latched and surface at `finish()` — the
+/// simulation itself is never perturbed mid-run.
+pub struct TraceRecorder {
+    inner: Mutex<RecInner>,
+}
+
+impl TraceRecorder {
+    /// Create the output file and write the header.
+    pub fn create(path: &str, meta: &TraceMeta) -> Result<TraceRecorder> {
+        let f = File::create(path).with_context(|| format!("create trace file {path:?}"))?;
+        let enc = Encoder::new(BufWriter::new(f), meta)
+            .with_context(|| format!("write trace header to {path:?}"))?;
+        Ok(TraceRecorder {
+            inner: Mutex::new(RecInner {
+                enc: Some(enc),
+                seen_access: HashSet::new(),
+                seen_payload: HashSet::new(),
+                err: None,
+                final_counts: None,
+            }),
+        })
+    }
+
+    /// Record one warp-level access (first sighting of its key wins).
+    pub fn record_access(&self, uid: u64, iter: u32, slot: usize, is_store: bool, lines: &[u64]) {
+        let mut guard = self.inner.lock().unwrap();
+        let g = &mut *guard;
+        let Some(enc) = g.enc.as_mut() else { return };
+        if !g.seen_access.insert((uid, iter, slot as u32)) {
+            return;
+        }
+        if let Err(e) = enc.access(uid, iter, slot as u32, is_store, lines) {
+            g.err = Some(e.to_string());
+            g.enc = None;
+        }
+    }
+
+    /// Record one generated line payload (first sighting of (line, epoch)).
+    pub fn record_payload(&self, line: u64, epoch: u32, data: &Line) {
+        let mut guard = self.inner.lock().unwrap();
+        let g = &mut *guard;
+        let Some(enc) = g.enc.as_mut() else { return };
+        if !g.seen_payload.insert((line, epoch)) {
+            return;
+        }
+        if let Err(e) = enc.payload(line, epoch, data) {
+            g.err = Some(e.to_string());
+            g.enc = None;
+        }
+    }
+
+    /// Note a memory-instruction issue cycle (trace-info span).
+    pub fn note_cycle(&self, now: u64) {
+        let mut guard = self.inner.lock().unwrap();
+        if let Some(enc) = guard.enc.as_mut() {
+            enc.note_cycle(now);
+        }
+    }
+
+    /// Flush everything and seal the file. `complete` records whether the
+    /// simulated run drained (`SimStats::finished`). Idempotent; returns
+    /// the final (access, payload) counts, or the latched write error.
+    pub fn finish(&self, complete: bool) -> Result<(u64, u64)> {
+        let mut guard = self.inner.lock().unwrap();
+        let g = &mut *guard;
+        if let Some(e) = g.err.take() {
+            g.enc = None;
+            bail!("trace write failed mid-run: {e}");
+        }
+        if let Some(mut enc) = g.enc.take() {
+            let counts = enc.counts();
+            enc.set_complete(complete);
+            enc.finish().context("finalize trace file")?;
+            g.final_counts = Some(counts);
+        }
+        g.final_counts.context("trace recorder finished without writing anything")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{TraceKind, TraceMeta, PATTERN_FROM_SPEC};
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            kind: TraceKind::Recorded,
+            fingerprint: 1,
+            seed: 2,
+            scale: 0.5,
+            app: "MM".into(),
+            regs_per_thread: 20,
+            threads_per_cta: 128,
+            smem_per_cta: 0,
+            total_ctas: 4,
+            iters: 8,
+            arrays: vec![(64, PATTERN_FROM_SPEC)],
+        }
+    }
+
+    #[test]
+    fn encode_is_deterministic() {
+        let accesses = vec![
+            (0u64, 0u32, 0u32, false, vec![100, 101, 102]),
+            (1, 0, 0, false, vec![103]),
+            (0, 1, 2, true, vec![50]),
+        ];
+        let payloads = vec![(100u64, 0u32, [7u8; 128]), (101, 0, [7u8; 128]), (50, 1, [9u8; 128])];
+        let a = encode_in_memory(&meta(), &accesses, &payloads).unwrap();
+        let b = encode_in_memory(&meta(), &accesses, &payloads).unwrap();
+        assert_eq!(a, b);
+        // Identical payload bytes are stored once (second entry is a ref):
+        // making the duplicate line distinct must grow the file.
+        let distinct = vec![(100u64, 0u32, [7u8; 128]), (101, 0, [8u8; 128]), (50, 1, [9u8; 128])];
+        let c = encode_in_memory(&meta(), &accesses, &distinct).unwrap();
+        assert!(a.len() < c.len(), "payload dedup saved nothing: {} vs {}", a.len(), c.len());
+    }
+
+    #[test]
+    fn recorder_dedups_keys() {
+        let path = std::env::temp_dir().join(format!("caba_rec_test_{}.cabatrace", std::process::id()));
+        let rec = TraceRecorder::create(path.to_str().unwrap(), &meta()).unwrap();
+        rec.record_access(3, 1, 0, false, &[10, 11]);
+        rec.record_access(3, 1, 0, false, &[10, 11]); // duplicate key
+        rec.record_payload(10, 0, &[1u8; 128]);
+        rec.record_payload(10, 0, &[1u8; 128]); // duplicate key
+        rec.note_cycle(5);
+        rec.note_cycle(90);
+        let (a, p) = rec.finish(true).unwrap();
+        assert_eq!((a, p), (1, 1));
+        // finish() is idempotent.
+        assert_eq!(rec.finish(true).unwrap(), (1, 1));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

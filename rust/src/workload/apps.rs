@@ -439,6 +439,27 @@ pub fn eval_set() -> Vec<&'static AppSpec> {
     APPS.iter().filter(|a| a.in_eval_set).collect()
 }
 
+/// Placeholder profile for **imported trace-driven** workloads (`caba
+/// trace import`): not part of [`APPS`], never reachable via [`find`].
+/// The program body, arrays and occupancy geometry all come from the
+/// trace header (`crate::trace`), so the fields here are only the
+/// defaults the header overrides plus the identity the reports print.
+/// `in_eval_set` is true so compression is considered profitable —
+/// whether a trace's data compresses is decided by its assigned pattern.
+pub static TRACE_SPEC: AppSpec = AppSpec {
+    name: "TRACE",
+    suite: Suite::CudaSdk,
+    memory_bound: true,
+    in_eval_set: true,
+    regs_per_thread: 16,
+    threads_per_cta: 256,
+    smem_per_cta: 0,
+    total_ctas: 8,
+    iters: 32,
+    body: BodySpec { loads: &[], stores: &[], ialu: 2, falu: 0, fma: 0, sfu: 0 },
+    arrays: &[],
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;

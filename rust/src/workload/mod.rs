@@ -2,6 +2,14 @@
 //! runnable μ-kernel ([`crate::isa::Program`]), computes the occupancy
 //! (CTAs/SM, warps, register allocation — Fig. 3), and generates memory
 //! addresses and line contents for the simulator.
+//!
+//! A workload's address/payload streams can additionally be **captured**
+//! (every generated access and line image copied to a
+//! [`crate::trace::record::TraceRecorder`]) or **replayed** (served from a
+//! loaded [`crate::trace::replay::TraceData`] instead of the generators) —
+//! see [`TraceRole`]. Both paths go through the same two functions
+//! ([`Workload::access_lines`], [`Workload::line_data`]), so the simulator
+//! proper is oblivious to where its workload comes from.
 
 pub mod apps;
 pub mod datagen;
@@ -9,14 +17,17 @@ pub mod datagen;
 use crate::config::SimConfig;
 use crate::compress::Line;
 use crate::isa::{AccessKind, Inst, MemAccess, Op, Program, ProgramRef, NO_REG};
+use crate::trace::{self, record::TraceRecorder, replay::TraceData, TraceKind};
 use crate::util::rng::Rng;
+use anyhow::{bail, Result};
 use apps::AppSpec;
 use datagen::DataPattern;
 use std::sync::Arc;
 
 /// Array placement: arrays live `1<<40` lines apart, so a line address
-/// uniquely identifies (array, index).
-const ARRAY_STRIDE: u64 = 1 << 40;
+/// uniquely identifies (array, index). Public because trace import rebases
+/// external addresses into this layout.
+pub const ARRAY_STRIDE: u64 = 1 << 40;
 
 /// One materialized array.
 #[derive(Clone, Debug)]
@@ -75,6 +86,18 @@ pub fn occupancy(spec: &AppSpec, cfg: &SimConfig, extra_regs_per_thread: u32) ->
     }
 }
 
+/// Where this workload's memory accesses and line payloads come from.
+#[derive(Clone)]
+pub enum TraceRole {
+    /// Pure synthetic generation (the default).
+    Synthetic,
+    /// Synthetic generation, with every access/payload streamed to a
+    /// trace recorder (non-invasive: simulation results are unchanged).
+    Record(Arc<TraceRecorder>),
+    /// Accesses (and payloads, where present) served from a loaded trace.
+    Replay(Arc<TraceData>),
+}
+
 /// A fully built workload, ready for simulation.
 #[derive(Clone)]
 pub struct Workload {
@@ -84,6 +107,8 @@ pub struct Workload {
     pub occ: Occupancy,
     pub total_ctas: u32,
     pub seed: u64,
+    /// Trace capture/replay attachment.
+    pub source: TraceRole,
 }
 
 impl Workload {
@@ -121,6 +146,80 @@ impl Workload {
             occ,
             total_ctas,
             seed: cfg.seed ^ name_hash(spec.name),
+            source: TraceRole::Synthetic,
+        }
+    }
+
+    /// Build the workload side of a **trace replay**.
+    ///
+    /// For a recorded app trace the synthetic skeleton (program, arrays,
+    /// occupancy) is rebuilt from the app spec at the trace's recorded
+    /// scale — and cross-checked against the header geometry, so a spec
+    /// that drifted since recording fails loudly instead of replaying
+    /// garbage. For an imported trace the skeleton is synthesized from the
+    /// header alone (`trace::import::trace_program` + one rebased array).
+    /// Either way `source` is set to [`TraceRole::Replay`], which routes
+    /// [`Workload::access_lines`] and (where the file carries payloads)
+    /// [`Workload::line_data`] through the trace.
+    pub fn build_replay(
+        tracedata: &Arc<TraceData>,
+        cfg: &SimConfig,
+        extra_regs_per_thread: u32,
+    ) -> Result<Workload> {
+        let m = &tracedata.meta;
+        let spec = tracedata.spec();
+        match m.kind {
+            TraceKind::Recorded => {
+                let mut wl = Self::build_with_extra_regs(spec, cfg, m.scale, extra_regs_per_thread);
+                if wl.program.iters != m.iters || wl.total_ctas != m.total_ctas {
+                    bail!(
+                        "trace geometry mismatch for app {:?}: trace has iters={} ctas={}, \
+                         rebuild produced iters={} ctas={} — app profiles changed since recording?",
+                        m.app,
+                        m.iters,
+                        m.total_ctas,
+                        wl.program.iters,
+                        wl.total_ctas
+                    );
+                }
+                if wl.arrays.len() != m.arrays.len()
+                    || wl.arrays.iter().zip(&m.arrays).any(|(a, &(fp, _))| a.footprint_lines != fp)
+                {
+                    bail!("trace array table mismatch for app {:?}", m.app);
+                }
+                // The recording run's seed, not the replay config's: the
+                // payload generator fallback must reproduce recorded data.
+                wl.seed = m.seed;
+                wl.source = TraceRole::Replay(Arc::clone(tracedata));
+                Ok(wl)
+            }
+            TraceKind::Imported => {
+                let mut geom = *spec;
+                geom.regs_per_thread = m.regs_per_thread;
+                geom.threads_per_cta = m.threads_per_cta;
+                geom.smem_per_cta = m.smem_per_cta;
+                let occ = occupancy(&geom, cfg, extra_regs_per_thread);
+                let mut arrays = Vec::with_capacity(m.arrays.len());
+                for (i, &(fp, code)) in m.arrays.iter().enumerate() {
+                    let Some(pattern) = trace::pattern_by_code(code) else {
+                        bail!("imported trace carries unresolvable data-pattern code {code}");
+                    };
+                    arrays.push(ArrayInfo {
+                        base_line: (i as u64 + 1) * ARRAY_STRIDE,
+                        footprint_lines: fp,
+                        pattern: *pattern,
+                    });
+                }
+                Ok(Workload {
+                    spec,
+                    program: Arc::new(trace::import::trace_program(m.iters)),
+                    arrays,
+                    occ,
+                    total_ctas: m.total_ctas,
+                    seed: m.seed,
+                    source: TraceRole::Replay(Arc::clone(tracedata)),
+                })
+            }
         }
     }
 
@@ -133,6 +232,10 @@ impl Workload {
     /// `slot` is the instruction's index within the body (decorrelates
     /// multiple accesses per iteration).
     pub fn access_lines(&self, mem: &MemAccess, warp_uid: u64, iter: u32, slot: usize, out: &mut Vec<u64>) {
+        if let TraceRole::Replay(t) = &self.source {
+            t.access_into(warp_uid, iter, slot, out);
+            return;
+        }
         out.clear();
         let arr = &self.arrays[mem.array as usize];
         let fp = arr.footprint_lines;
@@ -176,6 +279,11 @@ impl Workload {
                 }
             }
         }
+        if let TraceRole::Record(rec) = &self.source {
+            let is_store =
+                self.program.body.get(slot).is_some_and(|i| matches!(i.op, Op::St(_)));
+            rec.record_access(warp_uid, iter, slot, is_store, out);
+        }
     }
 
     /// Which array does a line address belong to?
@@ -184,10 +292,34 @@ impl Workload {
         &self.arrays[idx.min(self.arrays.len() - 1)]
     }
 
-    /// Generate the contents of a line at store-generation `epoch`.
+    /// Contents of a line at store-generation `epoch`: replayed from the
+    /// trace when one is attached and carries this `(line, epoch)`, else
+    /// generated (and, when recording, captured). The generator is a pure
+    /// function of `(pattern, seed, line, epoch)`, so for recorded traces
+    /// the two paths yield identical bytes — the fallback exists so a
+    /// trace recorded under one design replays faithfully under another
+    /// (different load/store interleavings sample different epochs).
     pub fn line_data(&self, line_addr: u64, epoch: u32) -> Line {
+        if let TraceRole::Replay(t) = &self.source {
+            if let Some(line) = t.payload(line_addr, epoch) {
+                return line;
+            }
+            t.note_payload_fallback();
+        }
         let arr = self.array_of(line_addr);
-        datagen::line_data(&arr.pattern, self.seed, line_addr, epoch)
+        let data = datagen::line_data(&arr.pattern, self.seed, line_addr, epoch);
+        if let TraceRole::Record(rec) = &self.source {
+            rec.record_payload(line_addr, epoch, &data);
+        }
+        data
+    }
+
+    /// Forward a memory-instruction issue cycle to an attached recorder
+    /// (trace-info timestamp span; no-op otherwise).
+    pub fn trace_note_cycle(&self, now: u64) {
+        if let TraceRole::Record(rec) = &self.source {
+            rec.note_cycle(now);
+        }
     }
 }
 

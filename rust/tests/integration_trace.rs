@@ -1,0 +1,264 @@
+//! The trace subsystem's contracts, end to end:
+//!
+//! 1. **Replay identity** — `trace record` followed by `trace replay`
+//!    under the same config/design reproduces the original run's
+//!    memory-side `SimStats` (and, same-design, its full timing)
+//!    bit-identically.
+//! 2. **Recording is non-invasive** — a recording run's stats equal an
+//!    unrecorded run's, and recording the same run twice produces
+//!    byte-identical files (deterministic format).
+//! 3. **Cross-design replay** — a trace recorded under `Base` replays
+//!    under `CABA-BDI` with exactly the stats of a direct `CABA-BDI` run
+//!    (the payload-generator fallback is bit-faithful).
+//! 4. **Sweep integration** — trace-driven jobs participate in cached
+//!    sweeps keyed on the trace's content digest: re-running a matrix is
+//!    pure cache hits, and re-loading the same file aliases correctly.
+//! 5. **Loud failure** — bad magic, truncation and garbage never parse.
+
+use caba::compress::Algo;
+use caba::sim::designs::Design;
+use caba::sim::Simulator;
+use caba::sweep::{SweepEngine, SweepJob};
+use caba::trace::{import, replay::TraceData, TraceKind};
+use caba::workload::apps;
+use caba::SimConfig;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn tiny_cfg() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.n_sms = 2;
+    c.max_cycles = 200_000;
+    c
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("caba_trace_it_{}_{name}", std::process::id()))
+}
+
+fn record(app_name: &str, design: Design, path: &Path) -> caba::stats::SimStats {
+    let app = apps::find(app_name).unwrap();
+    let mut sim = Simulator::new(tiny_cfg(), design, app, 0.02);
+    sim.record_to(path.to_str().unwrap()).expect("attach recorder");
+    sim.run()
+}
+
+#[test]
+fn record_then_replay_is_bit_identical() {
+    let app = apps::find("PVC").unwrap();
+    let design = Design::caba(Algo::Bdi);
+    let baseline = Simulator::new(tiny_cfg(), design, app, 0.02).run();
+    assert!(baseline.finished);
+
+    let path = tmp("identity.cabatrace");
+    let recorded = record("PVC", design, &path);
+
+    // Recording must not perturb the simulation.
+    assert_eq!(recorded.memory_signature(), baseline.memory_signature());
+    assert_eq!(recorded.cycles, baseline.cycles);
+    assert!(recorded.trace.accesses_recorded > 0, "no accesses captured");
+    assert!(recorded.trace.payloads_recorded > 0, "no payloads captured");
+
+    // The format is deterministic: recording the same run twice gives
+    // byte-identical files (and therefore equal content digests).
+    let path2 = tmp("identity2.cabatrace");
+    record("PVC", design, &path2);
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        std::fs::read(&path2).unwrap(),
+        "recording is not deterministic"
+    );
+
+    let trace = TraceData::load(path.to_str().unwrap()).expect("load trace");
+    assert_eq!(trace.meta.kind, TraceKind::Recorded);
+    assert_eq!(trace.meta.app, "PVC");
+    assert_eq!(trace.meta.fingerprint, tiny_cfg().fingerprint());
+    assert_eq!(trace.n_access_records, recorded.trace.accesses_recorded);
+
+    // The acceptance contract: replayed memory-side stats are
+    // bit-identical — and same-design replay reproduces full timing too.
+    let replayed = Simulator::from_trace(tiny_cfg(), design, Arc::clone(&trace))
+        .expect("build replay")
+        .run();
+    assert!(replayed.finished);
+    assert_eq!(replayed.memory_signature(), baseline.memory_signature());
+    assert_eq!(replayed.cycles, baseline.cycles);
+    assert_eq!(replayed.warp_insts, baseline.warp_insts);
+    assert_eq!(replayed.issue, baseline.issue);
+    assert!(trace.replayed_accesses() > 0);
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&path2).ok();
+}
+
+#[test]
+fn cross_design_replay_matches_direct_run() {
+    // Record under Base (no compression → no payloads are even sampled),
+    // replay under CABA-BDI: the generator fallback must reproduce the
+    // exact data a direct CABA-BDI run generates.
+    let app = apps::find("PVC").unwrap();
+    let path = tmp("cross.cabatrace");
+    let recorded = record("PVC", Design::base(), &path);
+    assert_eq!(recorded.trace.payloads_recorded, 0, "Base run should sample no payloads");
+
+    let trace = TraceData::load(path.to_str().unwrap()).unwrap();
+    let caba_design = Design::caba(Algo::Bdi);
+    let direct = Simulator::new(tiny_cfg(), caba_design, app, 0.02).run();
+    let replayed = Simulator::from_trace(tiny_cfg(), caba_design, Arc::clone(&trace))
+        .unwrap()
+        .run();
+    assert_eq!(replayed.memory_signature(), direct.memory_signature());
+    assert_eq!(replayed.cycles, direct.cycles);
+    assert!(trace.payload_fallbacks_count() > 0, "fallback path never exercised");
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn trace_jobs_sweep_with_cache_hits() {
+    let path = tmp("sweep.cabatrace");
+    record("PVC", Design::caba(Algo::Bdi), &path);
+    let trace = TraceData::load(path.to_str().unwrap()).unwrap();
+
+    let engine = SweepEngine::new(2);
+    let mut matrix = Vec::new();
+    for design in [Design::base(), Design::caba(Algo::Bdi)] {
+        for bw in [0.5, 1.0] {
+            let mut cfg = tiny_cfg();
+            cfg.bw_scale = bw;
+            matrix.push(SweepJob::replay(&trace, design, cfg));
+        }
+    }
+    let first = engine.run(&matrix);
+    let entries = engine.cache_entries();
+    assert_eq!(entries, 4, "4 distinct trace-driven points expected");
+
+    // Re-running the matrix must be pure cache hits.
+    let second = engine.run(&matrix);
+    assert_eq!(first, second);
+    assert_eq!(engine.cache_entries(), entries, "re-run executed new simulations");
+
+    // Re-loading the same file (a different Arc, same content digest)
+    // must alias into the same cache entries.
+    let reloaded = TraceData::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(reloaded.digest, trace.digest);
+    let via_reload = engine.run_one(&SweepJob::replay(&reloaded, Design::base(), {
+        let mut c = tiny_cfg();
+        c.bw_scale = 0.5;
+        c
+    }));
+    assert_eq!(via_reload, first[0]);
+    assert_eq!(engine.cache_entries(), entries, "reloaded trace missed the cache");
+
+    // Replay must differ across designs (the sweep is measuring something).
+    assert_ne!(first[0], first[2], "Base and CABA-BDI replays identical?");
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_run_trace_replays_without_panicking() {
+    // Record under a cycle budget the run cannot finish in, then replay
+    // under a design/bandwidth where the simulation progresses *further*
+    // than the recording did: misses past the recording horizon must
+    // yield empty accesses, not panics (the sweep-over-trace use case).
+    let app = apps::find("PVC").unwrap();
+    let mut cfg = tiny_cfg();
+    cfg.max_cycles = 3_000; // far too small to drain
+    let path = tmp("partial.cabatrace");
+    let mut sim = Simulator::new(cfg.clone(), Design::base(), app, 0.02);
+    sim.record_to(path.to_str().unwrap()).unwrap();
+    let recorded = sim.run();
+    assert!(!recorded.finished, "budget was supposed to truncate the run");
+
+    let trace = TraceData::load(path.to_str().unwrap()).unwrap();
+    assert!(!trace.complete, "trailer must mark the run as truncated");
+
+    // Full budget + a different design: runs past the recording horizon.
+    let replayed = Simulator::from_trace(tiny_cfg(), Design::caba(Algo::Bdi), Arc::clone(&trace))
+        .unwrap()
+        .run();
+    assert!(replayed.warp_insts > 0);
+
+    // A second recorder on the same simulator must be refused, not
+    // silently swapped in (it would abandon a half-written file).
+    let mut sim2 = Simulator::new(cfg, Design::base(), app, 0.02);
+    sim2.record_to(path.to_str().unwrap()).unwrap();
+    assert!(sim2.record_to(path.to_str().unwrap()).is_err());
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn imported_text_trace_drives_the_pipeline() {
+    // A synthetic accelsim-style dump: streaming loads plus periodic
+    // stores over a ~200-line footprint.
+    let mut txt = String::from("# synthetic dump\n");
+    for i in 0u64..300 {
+        let addr = 0x10000 + (i % 64) * 128 + (i / 64) * 4096;
+        if i % 3 == 0 {
+            txt.push_str(&format!("st 0x{addr:x} 128\n"));
+        } else {
+            txt.push_str(&format!("ld 0x{addr:x} 128 0xffffffff\n"));
+        }
+    }
+    let txt_path = tmp("dump.txt");
+    let trc_path = tmp("dump.cabatrace");
+    std::fs::write(&txt_path, &txt).unwrap();
+
+    let trace =
+        import::import_file(txt_path.to_str().unwrap(), trc_path.to_str().unwrap(), "lowdyn")
+            .expect("import");
+    assert_eq!(trace.meta.kind, TraceKind::Imported);
+    assert_eq!(trace.n_loads + trace.n_stores, 300);
+    let info = caba::report::trace_summary(&trace);
+    assert!(info.contains("imported text dump"), "{info}");
+
+    let stats = Simulator::from_trace(tiny_cfg(), Design::caba(Algo::Bdi), Arc::clone(&trace))
+        .expect("replay imported")
+        .run();
+    assert!(stats.finished, "imported replay did not drain");
+    assert!(stats.warp_insts > 0);
+    assert!(stats.l1.accesses > 0, "no memory traffic from the trace");
+    assert!(stats.dram.bursts > 0);
+    // lowdyn data is compressible; the pipeline must see that.
+    assert!(
+        stats.dram.compression_ratio() > 1.0,
+        "ratio={}",
+        stats.dram.compression_ratio()
+    );
+
+    // Determinism end to end.
+    let again = Simulator::from_trace(tiny_cfg(), Design::caba(Algo::Bdi), Arc::clone(&trace))
+        .unwrap()
+        .run();
+    assert_eq!(stats, again);
+
+    std::fs::remove_file(&txt_path).ok();
+    std::fs::remove_file(&trc_path).ok();
+}
+
+#[test]
+fn corrupt_traces_fail_loudly() {
+    // Not a trace at all.
+    let junk = tmp("junk.cabatrace");
+    std::fs::write(&junk, b"definitely not a trace file").unwrap();
+    let err = TraceData::load(junk.to_str().unwrap()).unwrap_err();
+    assert!(format!("{err:#}").contains("bad magic"), "{err:#}");
+
+    // A real trace, truncated at many offsets: every prefix must error.
+    let path = tmp("trunc.cabatrace");
+    record("PVC", Design::caba(Algo::Bdi), &path);
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(TraceData::from_bytes(&bytes).is_ok());
+    for cut in [4, 17, 40, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            TraceData::from_bytes(&bytes[..cut]).is_err(),
+            "truncation at {cut}/{} parsed successfully",
+            bytes.len()
+        );
+    }
+
+    std::fs::remove_file(&junk).ok();
+    std::fs::remove_file(&path).ok();
+}

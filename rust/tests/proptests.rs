@@ -261,6 +261,134 @@ fn prop_energy_monotone_in_events() {
 }
 
 #[test]
+fn prop_trace_varint_zigzag_roundtrip() {
+    use caba::trace::codec::{put_varint, put_zigzag, Reader};
+    forall(
+        "trace-varint",
+        default_cases() * 4,
+        |rng: &mut Rng| {
+            // Bias toward interesting magnitudes: small, medium, full-width.
+            let shift = rng.below(64) as u32;
+            (rng.next_u64() >> shift, rng.next_u64() as i64 >> shift)
+        },
+        |&(u, s)| {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, u);
+            put_zigzag(&mut buf, s);
+            let mut r = Reader::new(&buf);
+            prop_assert!(r.varint().unwrap() == u, "varint roundtrip {u}");
+            prop_assert!(r.zigzag().unwrap() == s, "zigzag roundtrip {s}");
+            prop_assert!(r.remaining() == 0, "stray bytes");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_trace_rle_line_roundtrip() {
+    use caba::trace::codec::{rle_decode_line, rle_encode_line, Reader};
+    forall("trace-rle", default_cases() * 2, arb_line, |line| {
+        let mut buf = Vec::new();
+        rle_encode_line(line, &mut buf);
+        prop_assert!(buf.len() <= 1 + LINE_BYTES, "RLE expanded past raw fallback");
+        let mut r = Reader::new(&buf);
+        let back = rle_decode_line(&mut r).map_err(|e| format!("{e:#}"))?;
+        prop_assert!(&back == line, "RLE roundtrip mismatch");
+        prop_assert!(r.remaining() == 0, "stray bytes after line");
+        Ok(())
+    });
+}
+
+/// Generated trace content for the stream-level round-trip: deduplicated
+/// access records over coalesced / strided / scatter address shapes, plus
+/// payload entries.
+type TraceContent = (Vec<(u64, u32, u32, bool, Vec<u64>)>, Vec<(u64, u32, Line)>);
+
+fn arb_trace_content(rng: &mut Rng) -> TraceContent {
+    use std::collections::HashSet;
+    let base = 1u64 << 40; // workload array base
+    let mut accesses = Vec::new();
+    let mut keys = HashSet::new();
+    for _ in 0..1 + rng.below(40) {
+        let key = (rng.below(1 << 20), rng.below(1 << 10) as u32, rng.below(8) as u32);
+        if !keys.insert(key) {
+            continue;
+        }
+        let lines: Vec<u64> = match rng.below(3) {
+            // Coalesced: one line.
+            0 => vec![base + rng.below(1 << 16)],
+            // Strided: consecutive lines.
+            1 => {
+                let s = base + rng.below(1 << 16);
+                (0..2 + rng.below(7)).map(|j| s + j).collect()
+            }
+            // Scatter: arbitrary lines (duplicates allowed, order matters).
+            _ => (0..1 + rng.below(6)).map(|_| base + rng.below(1 << 16)).collect(),
+        };
+        accesses.push((key.0, key.1, key.2, rng.chance(0.3), lines));
+    }
+    let mut payloads = Vec::new();
+    let mut pkeys = HashSet::new();
+    for _ in 0..rng.below(16) {
+        let key = (base + rng.below(1 << 12), rng.below(4) as u32);
+        if pkeys.insert(key) {
+            payloads.push((key.0, key.1, arb_line(rng)));
+        }
+    }
+    (accesses, payloads)
+}
+
+#[test]
+fn prop_trace_stream_roundtrip_and_truncation() {
+    use caba::trace::record::encode_in_memory;
+    use caba::trace::replay::TraceData;
+    use caba::trace::{TraceKind, TraceMeta, PATTERN_FROM_SPEC};
+    let meta = TraceMeta {
+        kind: TraceKind::Recorded,
+        fingerprint: 0xF00D,
+        seed: 7,
+        scale: 0.25,
+        app: "PVC".into(),
+        regs_per_thread: 16,
+        threads_per_cta: 256,
+        smem_per_cta: 0,
+        total_ctas: 4,
+        iters: 1024,
+        arrays: vec![(1 << 16, PATTERN_FROM_SPEC)],
+    };
+    forall("trace-stream", default_cases() / 4, arb_trace_content, move |content| {
+        let (accesses, payloads) = content;
+        let bytes = encode_in_memory(&meta, accesses, payloads).map_err(|e| format!("{e:#}"))?;
+        let t = TraceData::from_bytes(&bytes).map_err(|e| format!("{e:#}"))?;
+        // encode → decode == identity, including line order within records.
+        let mut out = Vec::new();
+        for &(uid, iter, slot, _, ref lines) in accesses {
+            t.access_into(uid, iter, slot as usize, &mut out);
+            prop_assert!(&out == lines, "access ({uid},{iter},{slot}) mismatch");
+        }
+        for &(line, epoch, ref data) in payloads {
+            let got = t.payload(line, epoch);
+            prop_assert!(got.as_ref() == Some(data), "payload ({line},{epoch}) mismatch");
+        }
+        prop_assert!(
+            t.n_access_records == accesses.len() as u64,
+            "record count {} != {}",
+            t.n_access_records,
+            accesses.len()
+        );
+        // Every strict prefix must fail loudly, never mis-parse.
+        for cut in [bytes.len() / 4, bytes.len() / 2, bytes.len() - 1] {
+            prop_assert!(
+                TraceData::from_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} parsed",
+                bytes.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_bursts_for_monotone_and_bounded() {
     forall(
         "bursts-monotone",

@@ -1,0 +1,447 @@
+//! `caba bench` — the hot-path performance suite in calibrated,
+//! machine-readable form.
+//!
+//! Runs the same three measurement families as `cargo bench --bench
+//! perf_hotpath` (compression-substrate throughput, oracle memoization,
+//! end-to-end simulator throughput), but:
+//!
+//! * emits a **JSON report** (`BENCH_pr3.json` by default; schema
+//!   documented in EXPERIMENTS.md §Perf) so the perf trajectory is
+//!   tracked in-repo from PR 3 onward;
+//! * optionally checks the numbers against a committed **floors file**
+//!   (`key=value` lines, same offline-friendly format as `SimConfig`
+//!   overrides) and reports violations — the CI `bench-smoke` job fails
+//!   on any regression below floor;
+//! * has a `--quick` mode sized for CI smoke (seconds, not minutes).
+//!
+//! All measurements are wall-clock on the current host; the JSON embeds
+//! the mode and corpus sizes so numbers are only ever compared
+//! like-for-like.
+
+use crate::compress::oracle::{CompressionOracle, MemoOracle, NativeOracle};
+use crate::compress::{measure, Algo, Line, LINE_BYTES};
+use crate::sim::designs::Design;
+use crate::sim::Simulator;
+use crate::workload::apps;
+use crate::workload::datagen::{line_data, DataPattern};
+use crate::SimConfig;
+use anyhow::{anyhow, Context, Result};
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// CLI options for `caba bench`.
+pub struct BenchOpts {
+    /// CI smoke sizing (smaller corpus, fewer sim points, scale 0.03).
+    pub quick: bool,
+    /// JSON output path.
+    pub out: String,
+    /// Optional floors file (`key=value` lines); violations fail the run.
+    pub floors: Option<String>,
+}
+
+/// One compression-substrate measurement.
+pub struct CompressPoint {
+    pub algo: &'static str,
+    pub mlines_per_s: f64,
+    pub mb_per_s: f64,
+    /// Sum of measured sizes — a determinism check across hosts.
+    pub size_checksum: u64,
+}
+
+/// One end-to-end simulator measurement.
+pub struct SimPoint {
+    pub app: &'static str,
+    pub design: &'static str,
+    pub cycles: u64,
+    pub warp_insts: u64,
+    pub kcycles_per_s: f64,
+    pub kinsts_per_s: f64,
+    /// Oracle memo hit rate over the whole run (None if the oracle keeps
+    /// no counters).
+    pub memo_hit_rate: Option<f64>,
+}
+
+/// The full report; `to_json` renders it.
+pub struct BenchReport {
+    pub mode: &'static str,
+    pub corpus_lines: usize,
+    pub sim_scale: f64,
+    pub compress: Vec<CompressPoint>,
+    pub memo_cold_mlines_per_s: f64,
+    pub memo_warm_mlines_per_s: f64,
+    pub memo_hit_rate: f64,
+    pub sim: Vec<SimPoint>,
+    pub violations: Vec<String>,
+}
+
+/// The mixed-pattern corpus every substrate measurement runs over
+/// (compressible, incompressible and sparse thirds — the same mix as
+/// `perf_hotpath`).
+fn corpus(n_per_pattern: usize) -> Vec<Line> {
+    let patterns = [
+        DataPattern::LowDynRange { value_bytes: 8, delta_bytes: 1 },
+        DataPattern::Random,
+        DataPattern::SparseNarrow { p_nonzero: 0.3 },
+    ];
+    let mut lines = Vec::with_capacity(3 * n_per_pattern);
+    for p in patterns {
+        for i in 0..n_per_pattern {
+            lines.push(line_data(&p, 3, i as u64, 0));
+        }
+    }
+    lines
+}
+
+fn measure_compress(lines: &[Line]) -> Vec<CompressPoint> {
+    Algo::CONCRETE
+        .iter()
+        .map(|&algo| {
+            let t0 = Instant::now();
+            let mut checksum = 0u64;
+            for line in lines {
+                checksum += measure(algo, line).1 as u64;
+            }
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            CompressPoint {
+                algo: algo.name(),
+                mlines_per_s: lines.len() as f64 / dt / 1e6,
+                mb_per_s: lines.len() as f64 * LINE_BYTES as f64 / dt / 1e6,
+                size_checksum: checksum,
+            }
+        })
+        .collect()
+}
+
+fn measure_memo(lines: &[Line]) -> (f64, f64, f64) {
+    let mut memo = MemoOracle::new(NativeOracle);
+    let t0 = Instant::now();
+    memo.analyze(Algo::Bdi, lines);
+    let cold = t0.elapsed().as_secs_f64().max(1e-9);
+    let t0 = Instant::now();
+    memo.analyze(Algo::Bdi, lines);
+    let warm = t0.elapsed().as_secs_f64().max(1e-9);
+    let hit_rate = memo.hits as f64 / (memo.hits + memo.misses).max(1) as f64;
+    (
+        lines.len() as f64 / cold / 1e6,
+        lines.len() as f64 / warm / 1e6,
+        hit_rate,
+    )
+}
+
+fn measure_sim(pairs: &[(&'static str, Design)], scale: f64) -> Result<Vec<SimPoint>> {
+    let mut out = Vec::new();
+    for &(app_name, design) in pairs {
+        let app = apps::find(app_name)
+            .ok_or_else(|| anyhow!("bench references unknown app {app_name:?}"))?;
+        let t0 = Instant::now();
+        let mut sim = Simulator::new(SimConfig::default(), design, app, scale);
+        let stats = sim.run();
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        out.push(SimPoint {
+            app: app.name,
+            design: design.name,
+            cycles: stats.cycles,
+            warp_insts: stats.warp_insts,
+            kcycles_per_s: stats.cycles as f64 / dt / 1e3,
+            kinsts_per_s: stats.warp_insts as f64 / dt / 1e3,
+            memo_hit_rate: sim
+                .oracle_memo_stats()
+                .map(|(h, m)| h as f64 / (h + m).max(1) as f64),
+        });
+    }
+    Ok(out)
+}
+
+/// Parse a floors file: `key=value` lines, `#` comments. Known keys:
+/// `min_compress_mlines_per_s`, `min_memo_warm_mlines_per_s`,
+/// `min_memo_hit_rate`, `min_sim_kcycles_per_s`.
+fn parse_floors(text: &str) -> Result<Vec<(String, f64)>> {
+    let mut floors = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("floors line {} is not key=value: {line:?}", ln + 1))?;
+        let val: f64 = v
+            .trim()
+            .parse()
+            .with_context(|| format!("floors line {}: bad value {v:?}", ln + 1))?;
+        floors.push((k.trim().to_string(), val));
+    }
+    Ok(floors)
+}
+
+fn check_floors(report: &mut BenchReport, floors: &[(String, f64)]) {
+    for (key, floor) in floors {
+        let worst: Option<f64> = match key.as_str() {
+            "min_compress_mlines_per_s" => report
+                .compress
+                .iter()
+                .map(|c| c.mlines_per_s)
+                .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.min(v)))),
+            "min_memo_warm_mlines_per_s" => Some(report.memo_warm_mlines_per_s),
+            "min_memo_hit_rate" => Some(report.memo_hit_rate),
+            "min_sim_kcycles_per_s" => report
+                .sim
+                .iter()
+                .map(|s| s.kcycles_per_s)
+                .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.min(v)))),
+            other => {
+                report
+                    .violations
+                    .push(format!("unknown floor key {other:?} (typo in floors file?)"));
+                continue;
+            }
+        };
+        match worst {
+            Some(w) if w < *floor => report
+                .violations
+                .push(format!("{key}: measured {w:.3} < floor {floor:.3}")),
+            None => report
+                .violations
+                .push(format!("{key}: no measurements to check")),
+            _ => {}
+        }
+    }
+}
+
+impl BenchReport {
+    /// Hand-rolled JSON (the offline image has no serde). All keys are
+    /// fixed identifiers and app/design names are `[A-Za-z0-9_-]`, so no
+    /// escaping is needed.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"caba-bench-v1\",\n");
+        let _ = writeln!(s, "  \"mode\": \"{}\",", self.mode);
+        let _ = writeln!(s, "  \"corpus_lines\": {},", self.corpus_lines);
+        let _ = writeln!(s, "  \"sim_scale\": {},", self.sim_scale);
+        s.push_str("  \"compress\": [\n");
+        for (i, c) in self.compress.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "    {{\"algo\": \"{}\", \"mlines_per_s\": {:.3}, \"mb_per_s\": {:.1}, \"size_checksum\": {}}}{}",
+                c.algo,
+                c.mlines_per_s,
+                c.mb_per_s,
+                c.size_checksum,
+                if i + 1 < self.compress.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  ],\n");
+        let _ = writeln!(
+            s,
+            "  \"oracle_memo\": {{\"cold_mlines_per_s\": {:.3}, \"warm_mlines_per_s\": {:.3}, \"hit_rate\": {:.4}}},",
+            self.memo_cold_mlines_per_s, self.memo_warm_mlines_per_s, self.memo_hit_rate
+        );
+        s.push_str("  \"sim\": [\n");
+        for (i, p) in self.sim.iter().enumerate() {
+            let memo = match p.memo_hit_rate {
+                Some(r) => format!("{r:.4}"),
+                None => "null".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "    {{\"app\": \"{}\", \"design\": \"{}\", \"cycles\": {}, \"warp_insts\": {}, \
+                 \"kcycles_per_s\": {:.1}, \"kinsts_per_s\": {:.1}, \"memo_hit_rate\": {}}}{}",
+                p.app,
+                p.design,
+                p.cycles,
+                p.warp_insts,
+                p.kcycles_per_s,
+                p.kinsts_per_s,
+                memo,
+                if i + 1 < self.sim.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"floor_violations\": [");
+        for (i, v) in self.violations.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            // Violation strings contain only our own formatting plus
+            // floor-file keys; escape the quotes/backslashes defensively.
+            let esc: String = v
+                .chars()
+                .flat_map(|c| match c {
+                    '"' => vec!['\\', '"'],
+                    '\\' => vec!['\\', '\\'],
+                    c => vec![c],
+                })
+                .collect();
+            let _ = write!(s, "\"{esc}\"");
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+
+    /// Terminal summary mirroring `perf_hotpath`'s style.
+    pub fn human_summary(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "# caba bench ({} mode, corpus {} lines)\n", self.mode, self.corpus_lines);
+        for c in &self.compress {
+            let _ = writeln!(
+                s,
+                "compress {:<7} {:>8.1} Mlines/s  ({:>7.1} MB/s, checksum {})",
+                c.algo, c.mlines_per_s, c.mb_per_s, c.size_checksum
+            );
+        }
+        let _ = writeln!(
+            s,
+            "\noracle memo: cold {:.1} Mlines/s, warm {:.1} Mlines/s, hit rate {:.1}%",
+            self.memo_cold_mlines_per_s,
+            self.memo_warm_mlines_per_s,
+            self.memo_hit_rate * 100.0
+        );
+        s.push('\n');
+        for p in &self.sim {
+            let _ = writeln!(
+                s,
+                "sim {:>4}/{:<12} {:>9.1} kcycles/s  {:>9.1} kinsts/s  (cycles {}, memo hit {})",
+                p.app,
+                p.design,
+                p.kcycles_per_s,
+                p.kinsts_per_s,
+                p.cycles,
+                match p.memo_hit_rate {
+                    Some(r) => format!("{:.1}%", r * 100.0),
+                    None => "n/a".to_string(),
+                }
+            );
+        }
+        for v in &self.violations {
+            let _ = writeln!(s, "\nFLOOR VIOLATION: {v}");
+        }
+        s
+    }
+}
+
+/// Run the suite, write the JSON, and return the report (callers decide
+/// what a non-empty `violations` list means; the CLI exits non-zero).
+pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
+    let (n_per_pattern, sim_scale, mode) = if opts.quick {
+        (1024, 0.03, "quick")
+    } else {
+        (4096, 0.1, "full")
+    };
+    let lines = corpus(n_per_pattern);
+
+    let compress = measure_compress(&lines);
+    let (cold, warm, hit_rate) = measure_memo(&lines);
+
+    let pairs: Vec<(&'static str, Design)> = if opts.quick {
+        vec![("PVC", Design::base()), ("PVC", Design::caba(Algo::Bdi))]
+    } else {
+        vec![
+            ("PVC", Design::base()),
+            ("PVC", Design::caba(Algo::Bdi)),
+            ("MM", Design::caba(Algo::Bdi)),
+            ("TRA", Design::caba(Algo::Fpc)),
+        ]
+    };
+    let sim = measure_sim(&pairs, sim_scale)?;
+
+    let mut report = BenchReport {
+        mode,
+        corpus_lines: lines.len(),
+        sim_scale,
+        compress,
+        memo_cold_mlines_per_s: cold,
+        memo_warm_mlines_per_s: warm,
+        memo_hit_rate: hit_rate,
+        sim,
+        violations: Vec::new(),
+    };
+
+    if let Some(path) = &opts.floors {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading floors file {path:?}"))?;
+        let floors = parse_floors(&text)?;
+        check_floors(&mut report, &floors);
+    }
+
+    std::fs::write(&opts.out, report.to_json())
+        .with_context(|| format!("writing bench report to {:?}", opts.out))?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floors_parse_and_check() {
+        let floors = parse_floors(
+            "# comment\n\nmin_memo_hit_rate=0.4\nmin_sim_kcycles_per_s = 1.0\n",
+        )
+        .unwrap();
+        assert_eq!(floors.len(), 2);
+        let mut report = BenchReport {
+            mode: "quick",
+            corpus_lines: 0,
+            sim_scale: 0.03,
+            compress: vec![],
+            memo_cold_mlines_per_s: 1.0,
+            memo_warm_mlines_per_s: 10.0,
+            memo_hit_rate: 0.5,
+            sim: vec![SimPoint {
+                app: "PVC",
+                design: "Base",
+                cycles: 1000,
+                warp_insts: 2000,
+                kcycles_per_s: 0.5, // below floor
+                kinsts_per_s: 1.0,
+                memo_hit_rate: None,
+            }],
+            violations: Vec::new(),
+        };
+        check_floors(&mut report, &floors);
+        assert_eq!(report.violations.len(), 1);
+        assert!(report.violations[0].contains("min_sim_kcycles_per_s"));
+        // Unknown keys are flagged, not ignored.
+        check_floors(&mut report, &[("min_typo".to_string(), 1.0)]);
+        assert_eq!(report.violations.len(), 2);
+    }
+
+    #[test]
+    fn floors_reject_malformed_lines() {
+        assert!(parse_floors("not a pair").is_err());
+        assert!(parse_floors("min_memo_hit_rate=abc").is_err());
+    }
+
+    #[test]
+    fn json_shape_is_wellformed_enough() {
+        let report = BenchReport {
+            mode: "quick",
+            corpus_lines: 3,
+            sim_scale: 0.03,
+            compress: vec![CompressPoint {
+                algo: "BDI",
+                mlines_per_s: 1.5,
+                mb_per_s: 192.0,
+                size_checksum: 42,
+            }],
+            memo_cold_mlines_per_s: 1.0,
+            memo_warm_mlines_per_s: 2.0,
+            memo_hit_rate: 0.75,
+            sim: vec![],
+            violations: vec!["min_x: measured 1 < floor 2".to_string()],
+        };
+        let j = report.to_json();
+        assert!(j.contains("\"schema\": \"caba-bench-v1\""));
+        assert!(j.contains("\"algo\": \"BDI\""));
+        assert!(j.contains("floor_violations"));
+        // Balanced braces/brackets (cheap well-formedness probe).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        assert_eq!(corpus(4), corpus(4));
+    }
+}

@@ -24,7 +24,7 @@
 //! The bitmask marks values encoded against the implicit zero base (paper:
 //! "an implicit zero value base"); deltas are signed two's complement.
 
-use super::{Compressed, Compressor, Algo, Line, LINE_BYTES};
+use super::{Compressed, Compressor, Algo, Line, LINE_BYTES, WORDS64_PER_LINE};
 
 pub const ENC_ZEROS: u8 = 0;
 pub const ENC_REPEAT: u8 = 1;
@@ -87,12 +87,77 @@ pub fn decompress_subroutine_len(enc: u8) -> usize {
     }
 }
 
-fn read_value(line: &Line, idx: usize, size: usize) -> u64 {
-    let mut v = 0u64;
-    for b in 0..size {
-        v |= (line[idx * size + b] as u64) << (8 * b);
+/// Value `idx` of width `size` (8/4/2 bytes) from the 8-byte word view —
+/// one shift+mask instead of a per-byte gather loop.
+#[inline]
+fn value_at(words: &[u64; WORDS64_PER_LINE], idx: usize, size: usize) -> u64 {
+    match size {
+        8 => words[idx],
+        4 => (words[idx / 2] >> (32 * (idx % 2))) & 0xFFFF_FFFF,
+        _ => (words[idx / 4] >> (16 * (idx % 4))) & 0xFFFF,
     }
-    v
+}
+
+/// Base = first non-zero value (paper: "first few bytes ... always used as
+/// the base"; the zero base covers leading zeros).
+#[inline]
+fn first_nonzero(words: &[u64; WORDS64_PER_LINE], n_values: usize, base_size: usize) -> u64 {
+    for i in 0..n_values {
+        let v = value_at(words, i, base_size);
+        if v != 0 {
+            return v;
+        }
+    }
+    0
+}
+
+/// Does the `(base_size, delta_size)` geometry fit every value of the
+/// line against the first-non-zero base or the implicit zero base? The
+/// allocation-free core of both [`measure`] and `Bdi::try_encode`.
+fn geometry_fits(words: &[u64; WORDS64_PER_LINE], base_size: usize, delta_size: usize) -> bool {
+    let n_values = LINE_BYTES / base_size;
+    let base = first_nonzero(words, n_values, base_size);
+    for i in 0..n_values {
+        let v = value_at(words, i, base_size);
+        if !delta_fits(v, base, delta_size) && !delta_fits(v, 0, delta_size) {
+            return false;
+        }
+    }
+    true
+}
+
+/// [`BASE_DELTA_ENCODINGS`] pre-sorted by increasing compressed size
+/// (stable on the 75-byte tie: B2D1 before B8D4, i.e. declaration order).
+/// Hard-coded so the per-line hot loop never re-sorts a constant; the
+/// `geometry_order_is_sorted_by_size` test pins it to the sorted form.
+const SORTED_GEOMETRIES: [(u8, usize, usize); 6] = [
+    (ENC_B8D1, 8, 1), // 27 bytes
+    (ENC_B4D1, 4, 1), // 41
+    (ENC_B8D2, 8, 2), // 43
+    (ENC_B4D2, 4, 2), // 73
+    (ENC_B2D1, 2, 1), // 75 (tie: declared before B8D4)
+    (ENC_B8D4, 8, 4), // 75
+];
+
+/// Allocation-free `(encoding, size_bytes)` — see [`super::measure`].
+pub(crate) fn measure(line: &Line) -> (u8, usize) {
+    let words = super::line_words64(line);
+    if words.iter().all(|&w| w == 0) {
+        return (ENC_ZEROS, 1);
+    }
+    if words.iter().all(|&w| w == words[0]) {
+        return (ENC_REPEAT, 1 + 8);
+    }
+    for (enc, base_size, delta_size) in SORTED_GEOMETRIES {
+        let size = encoded_size(base_size, delta_size);
+        if size >= LINE_BYTES {
+            continue;
+        }
+        if geometry_fits(&words, base_size, delta_size) {
+            return (enc, size);
+        }
+    }
+    (ENC_UNCOMPRESSED, 1 + LINE_BYTES)
 }
 
 fn delta_fits(value: u64, base: u64, delta_size: usize) -> bool {
@@ -111,21 +176,13 @@ impl Bdi {
     /// base nor the implicit zero base. This mirrors the per-lane predicate
     /// + global-AND the paper implements with the warp predicate register.
     fn try_encode(line: &Line, enc: u8, base_size: usize, delta_size: usize) -> Option<Compressed> {
+        let words = super::line_words64(line);
         let n_values = LINE_BYTES / base_size;
-        // Base = first non-zero value (paper: "first few bytes ... always
-        // used as the base"; the zero base covers leading zeros).
-        let mut base = 0u64;
-        for i in 0..n_values {
-            let v = read_value(line, i, base_size);
-            if v != 0 {
-                base = v;
-                break;
-            }
-        }
+        let base = first_nonzero(&words, n_values, base_size);
         let mut mask = vec![0u8; n_values / 8];
         let mut deltas = Vec::with_capacity(n_values * delta_size);
         for i in 0..n_values {
-            let v = read_value(line, i, base_size);
+            let v = value_at(&words, i, base_size);
             let (from_zero, d) = if delta_fits(v, base, delta_size) {
                 (false, v.wrapping_sub(base))
             } else if delta_fits(v, 0, delta_size) {
@@ -150,21 +207,19 @@ impl Bdi {
 
 impl Compressor for Bdi {
     fn compress(&self, line: &Line) -> Compressed {
-        // Special lines first (cheapest encodings).
-        if line.iter().all(|&b| b == 0) {
+        // Special lines first (cheapest encodings), checked word-wise.
+        let words = super::line_words64(line);
+        if words.iter().all(|&w| w == 0) {
             return Compressed { algo: Algo::Bdi, encoding: ENC_ZEROS, bytes: vec![ENC_ZEROS] };
         }
-        let first8: [u8; 8] = line[..8].try_into().unwrap();
-        if line.chunks_exact(8).all(|c| c == first8) {
+        if words.iter().all(|&w| w == words[0]) {
             let mut bytes = vec![ENC_REPEAT];
-            bytes.extend_from_slice(&first8);
+            bytes.extend_from_slice(&words[0].to_le_bytes());
             return Compressed { algo: Algo::Bdi, encoding: ENC_REPEAT, bytes };
         }
         // Candidate geometries in increasing compressed size; first hit wins
         // and is also the smallest, so this equals exhaustive search.
-        let mut order = BASE_DELTA_ENCODINGS;
-        order.sort_by_key(|&(_, b, d)| encoded_size(b, d));
-        for (enc, base_size, delta_size) in order {
+        for (enc, base_size, delta_size) in SORTED_GEOMETRIES {
             if encoded_size(base_size, delta_size) >= LINE_BYTES {
                 continue;
             }
@@ -243,6 +298,15 @@ mod tests {
         let c = Bdi.compress(line);
         assert_eq!(&Bdi.decompress(&c), line, "enc={}", encoding_name(c.encoding));
         c
+    }
+
+    #[test]
+    fn geometry_order_is_sorted_by_size() {
+        // The hard-coded hot-path order must equal the stable sort of the
+        // declared encodings by compressed size.
+        let mut expect = BASE_DELTA_ENCODINGS;
+        expect.sort_by_key(|&(_, b, d)| encoded_size(b, d));
+        assert_eq!(SORTED_GEOMETRIES, expect);
     }
 
     #[test]

@@ -64,6 +64,35 @@ pub fn compress_subroutine_len(dict_entries_tested: usize) -> usize {
     2 + dict_entries_tested * 5 + 3
 }
 
+/// Allocation-free `(encoding, size_bytes)` — see [`super::measure`].
+/// Runs the serial dictionary build with an on-stack dictionary; codes and
+/// payload bytes are never materialized (the size depends only on whether
+/// the line fits a ≤4-entry dictionary, and how many entries it needs).
+pub(crate) fn measure(line: &Line) -> (u8, usize) {
+    let words = super::line_words(line);
+    let mut dict = [0u32; DICT_SIZE];
+    let mut used = 0usize;
+    for &w in words.iter() {
+        // Same match order as compress(): zero, zero-extend, full match,
+        // partial match, else a new dictionary entry.
+        if w == 0 || w & 0xFFFF_FF00 == 0 {
+            continue;
+        }
+        if dict[..used].iter().any(|&d| d == w) {
+            continue;
+        }
+        if dict[..used].iter().any(|&d| d & 0xFFFF_FF00 == w & 0xFFFF_FF00) {
+            continue;
+        }
+        if used == DICT_SIZE {
+            return (ENC_UNCOMPRESSED, 1 + LINE_BYTES);
+        }
+        dict[used] = w;
+        used += 1;
+    }
+    (used as u8, compressed_size(used))
+}
+
 /// Restricted C-Pack compressor.
 pub struct CPack;
 

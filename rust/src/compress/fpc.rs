@@ -117,6 +117,28 @@ impl Fpc {
         }
         Pattern::Uncompressed
     }
+
+    /// Allocation-free `(encoding, size_bytes)` — see [`super::measure`].
+    /// Sums each segment's payload width instead of materializing it.
+    pub fn measure(&self, line: &Line) -> (u8, usize) {
+        let words = super::line_words(line);
+        let n_seg = self.n_segments();
+        let mut payload = 0usize;
+        let mut compressed_segs = 0usize;
+        for seg in words.chunks_exact(self.segment_words) {
+            let p = self.best_pattern(seg);
+            if p != Pattern::Uncompressed {
+                compressed_segs += 1;
+            }
+            payload += p.bytes_per_word() * self.segment_words;
+        }
+        let size = 1 + n_seg + payload;
+        if size >= LINE_BYTES {
+            (ENC_UNCOMPRESSED, 1 + LINE_BYTES)
+        } else {
+            (compressed_segs as u8, size)
+        }
+    }
 }
 
 impl Compressor for Fpc {

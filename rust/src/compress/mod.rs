@@ -128,6 +128,31 @@ pub fn compress(algo: Algo, line: &Line) -> Compressed {
     }
 }
 
+/// Allocation-free compression verdict: `(encoding, size_bytes)`, exactly
+/// equal to `compress(algo, line)`'s `(encoding, size_bytes())` without
+/// materializing the compressed bytes. This is the oracle hot path — the
+/// simulator only ever needs sizes and encodings, never payloads — so it
+/// must stay bit-identical to [`compress`] (pinned by the
+/// `measure_matches_compress` test below).
+pub fn measure(algo: Algo, line: &Line) -> (u8, usize) {
+    match algo {
+        Algo::Bdi => bdi::measure(line),
+        Algo::Fpc => fpc::Fpc::default().measure(line),
+        Algo::CPack => cpack::measure(line),
+        Algo::BestOfAll => {
+            // Same tie-break as compress(): first strict improvement wins,
+            // in BDI → FPC → C-Pack order.
+            let mut best = bdi::measure(line);
+            for m in [fpc::Fpc::default().measure(line), cpack::measure(line)] {
+                if m.1 < best.1 {
+                    best = m;
+                }
+            }
+            best
+        }
+    }
+}
+
 /// Decompress a line produced by [`compress`].
 pub fn decompress(c: &Compressed) -> Line {
     match c.algo {
@@ -138,11 +163,27 @@ pub fn decompress(c: &Compressed) -> Line {
     }
 }
 
-/// View a line as 4-byte little-endian words.
+/// View a line as 4-byte little-endian words (one 8-byte read per pair).
 pub fn line_words(line: &Line) -> [u32; WORDS_PER_LINE] {
     let mut w = [0u32; WORDS_PER_LINE];
-    for (i, chunk) in line.chunks_exact(4).enumerate() {
-        w[i] = u32::from_le_bytes(chunk.try_into().unwrap());
+    for (i, chunk) in line.chunks_exact(8).enumerate() {
+        let x = u64::from_le_bytes(chunk.try_into().unwrap());
+        w[2 * i] = x as u32;
+        w[2 * i + 1] = (x >> 32) as u32;
+    }
+    w
+}
+
+/// 8-byte little-endian words per line (BDI's widest value granularity).
+pub const WORDS64_PER_LINE: usize = LINE_BYTES / 8;
+
+/// View a line as 8-byte little-endian words — the word-wise read the
+/// compressor inner loops operate on (values of every BDI granularity are
+/// extracted from these by shift/mask instead of per-byte indexing).
+pub fn line_words64(line: &Line) -> [u64; WORDS64_PER_LINE] {
+    let mut w = [0u64; WORDS64_PER_LINE];
+    for (i, chunk) in line.chunks_exact(8).enumerate() {
+        w[i] = u64::from_le_bytes(chunk.try_into().unwrap());
     }
     w
 }
@@ -180,6 +221,58 @@ mod tests {
             *b = (i * 7 + 3) as u8;
         }
         assert_eq!(words_line(&line_words(&line)), line);
+        // The 8-byte view agrees with the 4-byte view pairwise.
+        let w32 = line_words(&line);
+        for (i, &w) in line_words64(&line).iter().enumerate() {
+            assert_eq!(w as u32, w32[2 * i]);
+            assert_eq!((w >> 32) as u32, w32[2 * i + 1]);
+        }
+    }
+
+    /// The hot-path contract: `measure` must agree with `compress` on
+    /// encoding and size for every algorithm, across patterned and random
+    /// lines (the simulator's verdicts are all served by `measure`).
+    #[test]
+    fn measure_matches_compress() {
+        let mut rng = crate::util::rng::Rng::new(4242);
+        for trial in 0..600 {
+            let mut line = [0u8; LINE_BYTES];
+            match trial % 6 {
+                0 => {} // zeros
+                1 => {
+                    for chunk in line.chunks_exact_mut(8) {
+                        chunk.copy_from_slice(&0xDEAD_BEEF_0000_1111u64.to_le_bytes());
+                    }
+                }
+                2 => {
+                    for (i, chunk) in line.chunks_exact_mut(8).enumerate() {
+                        let v = 0x8001_D000u64 + (i as u64 % 120);
+                        chunk.copy_from_slice(&v.to_le_bytes());
+                    }
+                }
+                3 => {
+                    for (i, chunk) in line.chunks_exact_mut(4).enumerate() {
+                        chunk.copy_from_slice(&((i as u32) % 200).to_le_bytes());
+                    }
+                }
+                4 => {
+                    for b in line.iter_mut() {
+                        *b = if rng.chance(0.6) { 0 } else { rng.next_u32() as u8 };
+                    }
+                }
+                _ => {
+                    for b in line.iter_mut() {
+                        *b = rng.next_u32() as u8;
+                    }
+                }
+            }
+            for algo in [Algo::Bdi, Algo::Fpc, Algo::CPack, Algo::BestOfAll] {
+                let c = compress(algo, &line);
+                let (enc, size) = measure(algo, &line);
+                assert_eq!(enc, c.encoding, "{algo:?} trial {trial}");
+                assert_eq!(size, c.size_bytes(), "{algo:?} trial {trial}");
+            }
+        }
     }
 
     #[test]

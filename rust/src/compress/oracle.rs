@@ -12,9 +12,7 @@
 //! hash — the simulator re-touches the same lines constantly, and the
 //! oracle answer is a pure function of the bytes.
 
-use super::{compress, Algo, Line};
-use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
+use super::{bursts_for, measure, Algo, Line};
 
 /// Oracle verdict for one line under one algorithm.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,25 +58,36 @@ pub trait CompressionOracle: Send {
 
     /// Human-readable backend name for reports.
     fn backend_name(&self) -> &'static str;
+
+    /// Memoization counters (`(hits, misses)`) if this backend keeps any.
+    /// Only [`MemoOracle`] answers; raw backends return `None`.
+    fn memo_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
-/// Pure-Rust oracle.
+/// Pure-Rust oracle. Verdicts come from the allocation-free
+/// [`crate::compress::measure`] path (sizes and encodings only — the
+/// compressed payload is never materialized on the simulator hot path).
 #[derive(Default)]
 pub struct NativeOracle;
 
+fn measured_verdict(algo: Algo, line: &Line) -> LineVerdict {
+    let (encoding, size) = measure(algo, line);
+    LineVerdict {
+        encoding,
+        size_bytes: size as u16,
+        bursts: bursts_for(size),
+    }
+}
+
 impl CompressionOracle for NativeOracle {
     fn analyze(&mut self, algo: Algo, lines: &[Line]) -> Vec<LineVerdict> {
-        lines
-            .iter()
-            .map(|line| {
-                let c = compress(algo, line);
-                LineVerdict {
-                    encoding: c.encoding,
-                    size_bytes: c.size_bytes() as u16,
-                    bursts: c.bursts(),
-                }
-            })
-            .collect()
+        lines.iter().map(|line| measured_verdict(algo, line)).collect()
+    }
+
+    fn analyze_one(&mut self, algo: Algo, line: &Line) -> LineVerdict {
+        measured_verdict(algo, line)
     }
 
     fn backend_name(&self) -> &'static str {
@@ -86,53 +95,176 @@ impl CompressionOracle for NativeOracle {
     }
 }
 
+/// FxHash-style multiply-rotate-xor over the line's sixteen 8-byte words
+/// plus the algorithm tag. One multiply per word versus SipHash's full
+/// permutation network — the memo probe is no longer hash-dominated.
+/// Collisions (two lines with equal 64-bit keys) would silently alias
+/// verdicts, exactly as with the previous 64-bit `DefaultHasher` key; at
+/// 2^-64 per pair this is accepted.
 fn line_key(algo: Algo, line: &Line) -> u64 {
-    // FxHash-style multiply-xor over 8-byte chunks; cheap and good enough
-    // for memoization (collisions only cost a wrong verdict in a cache —
-    // we additionally store the first 8 bytes to disambiguate cheaply).
-    let mut h = std::collections::hash_map::DefaultHasher::new();
-    algo.hash(&mut h);
-    line.hash(&mut h);
-    h.finish()
+    const K: u64 = 0x517c_c1b7_2722_0a95; // FxHash's 64-bit constant
+    let mut h = (algo as u64).wrapping_add(1).wrapping_mul(K);
+    for chunk in line.chunks_exact(8) {
+        let w = u64::from_le_bytes(chunk.try_into().unwrap());
+        h = (h.rotate_left(5) ^ w).wrapping_mul(K);
+    }
+    // 0 is the table's vacant sentinel; remap the (astronomically rare)
+    // zero key instead of reserving a validity bitmap.
+    if h == EMPTY_KEY {
+        0x9E37_79B9_7F4A_7C15
+    } else {
+        h
+    }
 }
+
+/// Vacant-slot sentinel in [`MemoOracle`]'s key array.
+const EMPTY_KEY: u64 = 0;
+/// Bounded linear probe window: a lookup/insert touches at most this many
+/// consecutive slots (one or two cache lines of keys).
+const PROBE_WINDOW: usize = 8;
+/// Initial table size in slots — small, so tiny runs (unit tests, quick
+/// scales, sweep points over small footprints) pay ~50 KB, not megabytes.
+const INITIAL_SLOTS: usize = 1 << 12;
+/// Growth ceiling in slots (power of two): 512K slots ≈ 6 MB of
+/// keys+verdicts, sized to the distinct-line-content population of the
+/// large sweep points. Beyond it the table stops growing and relies on
+/// per-slot replacement.
+const MAX_SLOTS: usize = 1 << 19;
 
 /// Content-hash memoization wrapper. This is a *performance* device for the
 /// simulator, not an architectural structure (the MD cache in
 /// `mem::mdcache` models the architecture).
+///
+/// The table is open-addressed with a bounded probe window
+/// ([`PROBE_WINDOW`]); when a window is full the incoming entry
+/// deterministically replaces the one at its home slot (per-slot
+/// replacement — no wholesale `clear()`). It starts at [`INITIAL_SLOTS`]
+/// and doubles (rehashing in place) at 50% occupancy until [`MAX_SLOTS`],
+/// so memory follows the run's distinct-content population instead of
+/// being paid up front by every simulator instance. Memoization stays
+/// transparent throughout: a replaced or rehash-dropped entry is simply
+/// recomputed on its next miss.
 pub struct MemoOracle<O: CompressionOracle> {
     inner: O,
-    cache: HashMap<u64, LineVerdict>,
+    keys: Vec<u64>,
+    verdicts: Vec<LineVerdict>,
+    mask: usize,
+    /// Slots holding an entry (claimed-from-empty; replacement keeps it).
+    occupied: usize,
+    /// Growth ceiling for this instance (power of two).
+    max_slots: usize,
     pub hits: u64,
     pub misses: u64,
-    capacity: usize,
+    /// Batch-path scratch (reused across `analyze` calls).
+    miss_idx: Vec<usize>,
+    miss_lines: Vec<Line>,
 }
 
 impl<O: CompressionOracle> MemoOracle<O> {
     pub fn new(inner: O) -> Self {
+        Self::with_slots(inner, MAX_SLOTS)
+    }
+
+    /// Explicit table-size *ceiling* in slots (rounded up to a power of
+    /// two); the table still starts small and grows on demand.
+    pub fn with_slots(inner: O, slots: usize) -> Self {
+        let max_slots = slots.next_power_of_two().max(PROBE_WINDOW);
+        let initial = INITIAL_SLOTS.min(max_slots);
         MemoOracle {
             inner,
-            cache: HashMap::new(),
+            keys: vec![EMPTY_KEY; initial],
+            verdicts: vec![LineVerdict::uncompressed(); initial],
+            mask: initial - 1,
+            occupied: 0,
+            max_slots,
             hits: 0,
             misses: 0,
-            capacity: 1 << 20,
+            miss_idx: Vec::new(),
+            miss_lines: Vec::new(),
         }
     }
 
     pub fn inner_mut(&mut self) -> &mut O {
         &mut self.inner
     }
+
+    #[inline]
+    fn probe(&self, key: u64) -> Option<LineVerdict> {
+        let home = key as usize & self.mask;
+        for i in 0..PROBE_WINDOW {
+            let s = (home + i) & self.mask;
+            let k = self.keys[s];
+            if k == key {
+                return Some(self.verdicts[s]);
+            }
+            if k == EMPTY_KEY {
+                // Entries are never deleted, so an empty slot ends the run.
+                return None;
+            }
+        }
+        None
+    }
+
+    /// Probe-window write without the growth check (also the rehash path).
+    #[inline]
+    fn install_raw(&mut self, key: u64, v: LineVerdict) {
+        let home = key as usize & self.mask;
+        for i in 0..PROBE_WINDOW {
+            let s = (home + i) & self.mask;
+            if self.keys[s] == key {
+                self.verdicts[s] = v;
+                return;
+            }
+            if self.keys[s] == EMPTY_KEY {
+                self.keys[s] = key;
+                self.verdicts[s] = v;
+                self.occupied += 1;
+                return;
+            }
+        }
+        // Window full: replace the home slot (deterministic, O(1)).
+        self.keys[home] = key;
+        self.verdicts[home] = v;
+    }
+
+    #[inline]
+    fn install(&mut self, key: u64, v: LineVerdict) {
+        if self.occupied * 2 >= self.keys.len() && self.keys.len() < self.max_slots {
+            self.grow();
+        }
+        self.install_raw(key, v);
+    }
+
+    /// Double the table and re-place every entry under the new mask.
+    /// Deterministic (iteration order is the old slot order); an entry
+    /// landing in a full window is dropped — recomputed on next miss.
+    fn grow(&mut self) {
+        let new_len = (self.keys.len() * 2).min(self.max_slots);
+        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY_KEY; new_len]);
+        let old_verdicts =
+            std::mem::replace(&mut self.verdicts, vec![LineVerdict::uncompressed(); new_len]);
+        self.mask = new_len - 1;
+        self.occupied = 0;
+        for (k, v) in old_keys.into_iter().zip(old_verdicts) {
+            if k != EMPTY_KEY {
+                self.install_raw(k, v);
+            }
+        }
+    }
 }
 
 impl<O: CompressionOracle> CompressionOracle for MemoOracle<O> {
     fn analyze(&mut self, algo: Algo, lines: &[Line]) -> Vec<LineVerdict> {
         let mut out = vec![LineVerdict::uncompressed(); lines.len()];
-        let mut miss_idx = Vec::new();
-        let mut miss_lines = Vec::new();
+        let mut miss_idx = std::mem::take(&mut self.miss_idx);
+        let mut miss_lines = std::mem::take(&mut self.miss_lines);
+        miss_idx.clear();
+        miss_lines.clear();
         for (i, line) in lines.iter().enumerate() {
-            match self.cache.get(&line_key(algo, line)) {
+            match self.probe(line_key(algo, line)) {
                 Some(v) => {
                     self.hits += 1;
-                    out[i] = *v;
+                    out[i] = v;
                 }
                 None => {
                     self.misses += 1;
@@ -142,27 +274,44 @@ impl<O: CompressionOracle> CompressionOracle for MemoOracle<O> {
             }
         }
         if !miss_lines.is_empty() {
-            if self.cache.len() > self.capacity {
-                self.cache.clear(); // crude but rare; keeps memory bounded
-            }
             let verdicts = self.inner.analyze(algo, &miss_lines);
+            debug_assert_eq!(verdicts.len(), miss_lines.len());
             for (k, &i) in miss_idx.iter().enumerate() {
-                self.cache.insert(line_key(algo, &miss_lines[k]), verdicts[k]);
+                self.install(line_key(algo, &miss_lines[k]), verdicts[k]);
                 out[i] = verdicts[k];
             }
         }
+        self.miss_idx = miss_idx;
+        self.miss_lines = miss_lines;
         out
+    }
+
+    fn analyze_one(&mut self, algo: Algo, line: &Line) -> LineVerdict {
+        // The single-line fast path: no batch vectors, no `Vec` result.
+        let key = line_key(algo, line);
+        if let Some(v) = self.probe(key) {
+            self.hits += 1;
+            return v;
+        }
+        self.misses += 1;
+        let v = self.inner.analyze_one(algo, line);
+        self.install(key, v);
+        v
     }
 
     fn backend_name(&self) -> &'static str {
         self.inner.backend_name()
+    }
+
+    fn memo_stats(&self) -> Option<(u64, u64)> {
+        Some((self.hits, self.misses))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::LINE_BYTES;
+    use crate::compress::{compress, LINE_BYTES};
     use crate::util::rng::Rng;
 
     #[test]
@@ -211,5 +360,93 @@ mod tests {
         let v = LineVerdict::uncompressed();
         assert!(!v.is_compressed());
         assert_eq!(v.bursts, 4);
+    }
+
+    #[test]
+    fn memo_analyze_one_matches_batch() {
+        let mut rng = Rng::new(77);
+        let mut memo = MemoOracle::new(NativeOracle);
+        let mut plain = NativeOracle;
+        for _ in 0..200 {
+            let mut line = [0u8; LINE_BYTES];
+            for b in line.iter_mut() {
+                *b = if rng.chance(0.4) { 0 } else { rng.next_u32() as u8 };
+            }
+            for algo in Algo::CONCRETE {
+                assert_eq!(memo.analyze_one(algo, &line), plain.analyze_one(algo, &line));
+            }
+        }
+        assert_eq!(memo.memo_stats(), Some((memo.hits, memo.misses)));
+        assert!(memo.hits + memo.misses > 0);
+    }
+
+    #[test]
+    fn memo_stays_transparent_under_replacement() {
+        // A table far smaller than the working set forces the bounded
+        // probe window to replace entries; verdicts must stay correct.
+        let mut rng = Rng::new(31);
+        let mut tiny = MemoOracle::with_slots(NativeOracle, 16);
+        let mut plain = NativeOracle;
+        let mut lines = Vec::new();
+        for _ in 0..500 {
+            let mut line = [0u8; LINE_BYTES];
+            for b in line.iter_mut() {
+                *b = rng.next_u32() as u8;
+            }
+            lines.push(line);
+        }
+        // Two passes so replaced entries are re-looked-up.
+        for _ in 0..2 {
+            let got = tiny.analyze(Algo::Bdi, &lines);
+            let want = plain.analyze(Algo::Bdi, &lines);
+            assert_eq!(got, want);
+        }
+        assert!(tiny.misses > 0);
+    }
+
+    #[test]
+    fn memo_grows_past_initial_size_and_stays_transparent() {
+        // More distinct contents than INITIAL_SLOTS/2 forces at least one
+        // rehash-double; verdicts must stay correct and mostly retained.
+        let mut rng = Rng::new(9);
+        let mut memo = MemoOracle::new(NativeOracle);
+        let initial = memo.keys.len();
+        let mut lines = Vec::new();
+        for _ in 0..(INITIAL_SLOTS) {
+            let mut line = [0u8; LINE_BYTES];
+            for b in line.iter_mut() {
+                *b = rng.next_u32() as u8;
+            }
+            lines.push(line);
+        }
+        let mut plain = NativeOracle;
+        let first = memo.analyze(Algo::Bdi, &lines);
+        assert_eq!(first, plain.analyze(Algo::Bdi, &lines));
+        assert!(memo.keys.len() > initial, "table should have grown");
+        let hits_before = memo.hits;
+        let second = memo.analyze(Algo::Bdi, &lines);
+        assert_eq!(first, second);
+        // The warm pass is overwhelmingly hits (rehash drops are rare).
+        assert!(
+            memo.hits - hits_before > (lines.len() as u64 * 9) / 10,
+            "warm hits {} of {}",
+            memo.hits - hits_before,
+            lines.len()
+        );
+    }
+
+    #[test]
+    fn distinct_algos_never_share_memo_entries() {
+        let mut memo = MemoOracle::new(NativeOracle);
+        let mut line = [0u8; LINE_BYTES];
+        for (i, b) in line.iter_mut().enumerate() {
+            *b = (i % 250) as u8;
+        }
+        for algo in Algo::CONCRETE {
+            let direct = compress(algo, &line);
+            let v = memo.analyze_one(algo, &line);
+            assert_eq!(v.size_bytes as usize, direct.size_bytes(), "{algo:?}");
+            assert_eq!(v.encoding, direct.encoding, "{algo:?}");
+        }
     }
 }

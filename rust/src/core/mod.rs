@@ -109,6 +109,11 @@ pub struct Core {
     pending_retires: Vec<Retirement>,
     /// Reusable scratch for address generation (no per-cycle allocation).
     lines_scratch: Vec<u64>,
+    /// Reusable scratch for L1 fills (evictions are clean write-through
+    /// victims and always discarded) — `lines_scratch` pattern.
+    l1_evict_scratch: Vec<crate::mem::cache::Eviction>,
+    /// Reusable scratch for prefetch address prediction.
+    prefetch_scratch: Vec<u64>,
     /// Buffered stores awaiting compression (paper §5.2.2 store buffer).
     pending_compress_stores: usize,
     store_buffer_cap: usize,
@@ -134,6 +139,8 @@ impl Core {
             releases: HashMap::new(),
             pending_retires: Vec::new(),
             lines_scratch: Vec::new(),
+            l1_evict_scratch: Vec::new(),
+            prefetch_scratch: Vec::new(),
             pending_compress_stores: 0,
             store_buffer_cap: 16,
             issue: IssueBreakdown::default(),
@@ -278,7 +285,7 @@ impl Core {
                             } else {
                                 ctx.stats.l2.misses += 1;
                             }
-                            self.l1.insert(line, false, 4, false, r.at);
+                            self.l1.insert_into(line, false, 4, false, r.at, &mut self.l1_evict_scratch);
                             self.mshr.insert(
                                 line,
                                 MshrInfo { fill_at: outcome.data_at, awc_token: None },
@@ -598,7 +605,7 @@ impl Core {
                     // Keep compressed in L1 only for the Fig. 15 / Fig. 16
                     // configurations; default CABA decompresses before fill.
                     let keep_compressed = ctx.design.l1_holds_compressed();
-                    self.l1.insert(line, false, bursts, keep_compressed, now);
+                    self.l1.insert_into(line, false, bursts, keep_compressed, now, &mut self.l1_evict_scratch);
                     match ctx.design.mechanism {
                         Mechanism::Caba => {
                             let enc = ctx.data.cached_encoding(line);
@@ -638,7 +645,7 @@ impl Core {
                     }
                 }
                 None => {
-                    self.l1.insert(line, false, 4, false, now);
+                    self.l1.insert_into(line, false, 4, false, now, &mut self.l1_evict_scratch);
                     floor = floor.max(outcome.data_at);
                     self.mshr
                         .insert(line, MshrInfo { fill_at: outcome.data_at, awc_token: None });
@@ -654,7 +661,10 @@ impl Core {
         if ctx.design.prefetch && ctx.mem.dram_backlog(now) < 250.0 {
             use crate::caba::prefetch as pf;
             use crate::caba::subroutines::Subroutine;
-            let mut pred = Vec::new();
+            // Predict into the reusable scratch; a payload Vec is built
+            // only when a deploy actually happens (rare vs. per-access).
+            let mut pred = std::mem::take(&mut self.prefetch_scratch);
+            pred.clear();
             if pf::predict(ctx.wl, mem, uid, iter, body_idx, &mut pred) {
                 pred.retain(|l| !self.l1.contains(*l) && !self.mshr.contains_key(l));
                 if !pred.is_empty() {
@@ -663,10 +673,11 @@ impl Core {
                         now,
                         sub,
                         w,
-                        crate::caba::Payload::Prefetch { lines: pred },
+                        crate::caba::Payload::Prefetch { lines: pred.clone() },
                     );
                 }
             }
+            self.prefetch_scratch = pred;
         }
         self.lines_scratch = lines;
 

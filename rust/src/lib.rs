@@ -32,13 +32,18 @@
 //!   the full pipeline from such a file (bit-identical memory-side
 //!   statistics), and `caba trace import` converts accelsim-style text
 //!   dumps — trace-driven jobs participate in sweeps, cache-keyed on the
-//!   trace's content digest.
+//!   trace's content digest;
+//! * a calibrated **perf harness** ([`bench`]): `caba bench` measures the
+//!   hot paths (word-wise compressors, open-addressed oracle memo,
+//!   end-to-end simulator throughput), writes a machine-readable
+//!   `BENCH_*.json`, and gates CI against committed regression floors.
 //!
 //! See `DESIGN.md` (repo root) for the system inventory and
 //! `EXPERIMENTS.md` for paper-vs-measured results and the sweep-engine
 //! wall-clock methodology. `README.md` has the quickstart and the full
 //! CLI reference.
 
+pub mod bench;
 pub mod caba;
 pub mod compress;
 pub mod config;

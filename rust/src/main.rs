@@ -16,6 +16,7 @@
 //! caba trace replay <file.cabatrace> [--design D] [--set k=v]...
 //! caba trace info <file.cabatrace>
 //! caba trace import <dump.txt> [--out file] [--pattern random|zero|...]
+//! caba bench [--quick] [--out BENCH_pr3.json] [--floors BENCH_floors.txt]
 //! ```
 //!
 //! `--jobs N` sets the sweep-engine worker count (default: one per
@@ -53,7 +54,12 @@ fn parse_args() -> Args {
     let mut it = std::env::args().skip(1).peekable();
     while let Some(a) = it.next() {
         if let Some(name) = a.strip_prefix("--") {
-            let val = it.next().unwrap_or_default();
+            // A following `--flag` is the next flag, not this one's value
+            // (boolean flags like `bench --quick --out x.json`).
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap_or_default(),
+                _ => String::new(),
+            };
             flags.push((name.to_string(), val));
         } else {
             positional.push(a);
@@ -324,10 +330,32 @@ fn run() -> Result<()> {
             );
             Ok(())
         }
+        Some("bench") => {
+            let opts = caba::bench::BenchOpts {
+                quick: args.flag("quick").is_some(),
+                out: args.flag("out").unwrap_or("BENCH_pr3.json").to_string(),
+                floors: args.flag("floors").map(str::to_string),
+            };
+            let t0 = Instant::now();
+            let report = caba::bench::run(&opts)?;
+            print!("{}", report.human_summary());
+            eprintln!(
+                "[bench] wrote {} in {:.2}s",
+                opts.out,
+                t0.elapsed().as_secs_f64()
+            );
+            if !report.violations.is_empty() {
+                bail!(
+                    "bench floors violated ({}): see report above",
+                    report.violations.len()
+                );
+            }
+            Ok(())
+        }
         Some("trace") => run_trace(&args),
         _ => {
             eprintln!(
-                "usage: caba <list|table1|run|fig|sweep|trace> [...]\n  \
+                "usage: caba <list|table1|run|fig|sweep|trace|bench> [...]\n  \
                  caba run --app PVC --design CABA-BDI [--scale 0.25] [--oracle native|pjrt]\n  \
                  caba fig 8 [--scale 0.25] [--jobs N] [--set key=value]\n  \
                  caba sweep --apps eval --designs headline --bw 0.5,1.0,2.0 [--jobs N]\n  \
@@ -335,7 +363,8 @@ fn run() -> Result<()> {
                  caba trace record PVC [--design CABA-BDI] [--scale 0.25] [--out PVC.cabatrace]\n  \
                  caba trace replay run.cabatrace [--design CABA-BDI] [--set key=value]\n  \
                  caba trace info run.cabatrace\n  \
-                 caba trace import dump.txt [--out dump.cabatrace] [--pattern random]"
+                 caba trace import dump.txt [--out dump.cabatrace] [--pattern random]\n  \
+                 caba bench [--quick] [--out BENCH_pr3.json] [--floors BENCH_floors.txt]"
             );
             Ok(())
         }

@@ -129,6 +129,9 @@ impl Cache {
     /// Insert a line, evicting as needed. In compressed mode a fill may
     /// evict multiple victims to free enough data sectors; dirty victims
     /// are returned for writeback.
+    ///
+    /// Allocating convenience wrapper over [`Cache::insert_into`] (tests
+    /// and cold paths); the simulator hot path passes a reusable scratch.
     pub fn insert(
         &mut self,
         line_addr: u64,
@@ -137,11 +140,28 @@ impl Cache {
         compressed: bool,
         now: u64,
     ) -> Vec<Eviction> {
+        let mut evictions = Vec::new();
+        self.insert_into(line_addr, dirty, bursts, compressed, now, &mut evictions);
+        evictions
+    }
+
+    /// [`Cache::insert`] writing dirty victims into a caller-provided
+    /// scratch buffer (cleared first) — no allocation once the scratch has
+    /// grown to the workload's eviction fan-out.
+    pub fn insert_into(
+        &mut self,
+        line_addr: u64,
+        dirty: bool,
+        bursts: u8,
+        compressed: bool,
+        now: u64,
+        evictions: &mut Vec<Eviction>,
+    ) {
+        evictions.clear();
         let sectors = if compressed { bursts.max(1) } else { 4 };
         let idx = self.set_index(line_addr);
         let sectors_budget = self.sectors_per_set;
         let set = self.set(idx);
-        let mut evictions = Vec::new();
 
         // Already present (e.g., refill of an updated line): update in place.
         if let Some(e) = set.iter_mut().find(|e| e.valid && e.tag == line_addr) {
@@ -150,7 +170,7 @@ impl Cache {
             e.compressed = compressed;
             e.sectors = sectors;
             e.last_use = now;
-            return evictions;
+            return;
         }
 
         // Evict until both a tag slot and enough data sectors are free.
@@ -188,7 +208,6 @@ impl Cache {
             last_use: now,
         };
         self.stats.evictions += evicted_total;
-        evictions
     }
 
     /// Drop a line if present (write-through no-allocate stores).

@@ -47,6 +47,8 @@ pub struct MemSystem {
     pub hw_compressor_ops: u64,
     /// L2 accesses (loads + stores + writebacks) for the energy model.
     pub l2_accesses: u64,
+    /// Reusable dirty-victim scratch for L2 fills (no per-access `Vec`).
+    evict_scratch: Vec<cache::Eviction>,
 }
 
 impl MemSystem {
@@ -74,6 +76,7 @@ impl MemSystem {
             n_mcs: cfg.n_mcs,
             hw_compressor_ops: 0,
             l2_accesses: 0,
+            evict_scratch: Vec::new(),
         }
     }
 
@@ -140,8 +143,10 @@ impl MemSystem {
                 // Fill the L2 (compressed form iff the design keeps it).
                 let insert_compressed = fill_compressed && design.l2_holds_compressed;
                 self.l2_accesses += 1;
-                let evictions = self.l2[mc].insert(line_addr, false, fill_bursts, insert_compressed, now);
+                let mut evictions = std::mem::take(&mut self.evict_scratch);
+                self.l2[mc].insert_into(line_addr, false, fill_bursts, insert_compressed, now, &mut evictions);
                 self.writeback(now, mc, &evictions, design);
+                self.evict_scratch = evictions;
                 (t_data, fill_bursts, fill_compressed, false)
             }
         };
@@ -191,8 +196,10 @@ impl MemSystem {
         // Write-allocate into L2; the DRAM write happens on eviction.
         let t_now = t_mc.ceil() as u64;
         if !self.l2[mc].mark_dirty(line_addr, bursts, insert_compressed, t_now) {
-            let evictions = self.l2[mc].insert(line_addr, true, bursts, insert_compressed, t_now);
+            let mut evictions = std::mem::take(&mut self.evict_scratch);
+            self.l2[mc].insert_into(line_addr, true, bursts, insert_compressed, t_now, &mut evictions);
             self.writeback(t_now, mc, &evictions, design);
+            self.evict_scratch = evictions;
         }
         // Track MD updates for compressed DRAM images.
         if design.mem_compression {

@@ -2,6 +2,7 @@
 //! data model and workload into a cycle loop, and produces [`SimStats`].
 
 pub mod designs;
+pub mod slab;
 
 use crate::compress::oracle::{CompressionOracle, LineVerdict, MemoOracle, NativeOracle};
 use crate::compress::Algo;
@@ -10,10 +11,10 @@ use crate::core::{Core, CycleCtx};
 use crate::mem::MemSystem;
 use crate::stats::SimStats;
 use crate::trace::{record::TraceRecorder, replay::TraceData, TraceKind, TraceMeta, PATTERN_FROM_SPEC};
-use crate::workload::{apps::AppSpec, TraceRole, Workload};
+use crate::workload::{apps::AppSpec, ArrayInfo, TraceRole, Workload};
 use anyhow::{bail, Result};
 use designs::{Design, Mechanism};
-use std::collections::{HashMap, HashSet};
+use slab::LineSlab;
 use std::sync::Arc;
 
 /// Extra registers per thread reserved for assist-warp contexts when CABA
@@ -27,39 +28,42 @@ pub const CABA_EXTRA_REGS: u32 = 2;
 /// The simulator's view of memory *contents*: line data is a pure function
 /// of (address, epoch), so stores only bump epochs; the compression oracle
 /// verdict is cached per (line, epoch).
+///
+/// All per-line state (epochs, stored-form flags, verdict cache) lives in
+/// a dense [`LineSlab`] indexed by the workload's bounded line space — the
+/// per-access path hashes nothing and allocates nothing.
 pub struct DataModel {
     oracle: Box<dyn CompressionOracle>,
-    epochs: HashMap<u64, u32>,
-    /// Lines whose DRAM image is uncompressed (compression skipped at
-    /// store time: throttle / AWT full / buffer overflow).
-    stored_uncompressed: HashSet<u64>,
-    verdict_cache: HashMap<u64, (u32, LineVerdict)>,
+    slab: LineSlab,
+    /// Reusable batch scratch for [`DataModel::warm_verdicts`]:
+    /// slots awaiting a verdict and their line payloads.
+    pending: Vec<usize>,
+    datas: Vec<crate::compress::Line>,
 }
 
 impl DataModel {
-    pub fn new(oracle: Box<dyn CompressionOracle>) -> DataModel {
+    pub fn new(oracle: Box<dyn CompressionOracle>, arrays: &[ArrayInfo]) -> DataModel {
         DataModel {
             oracle,
-            epochs: HashMap::new(),
-            stored_uncompressed: HashSet::new(),
-            verdict_cache: HashMap::new(),
+            slab: LineSlab::new(arrays),
+            pending: Vec::new(),
+            datas: Vec::new(),
         }
     }
 
     /// Compression verdict for the line's *stored* DRAM image.
     pub fn verdict(&mut self, wl: &Workload, algo: Algo, line: u64) -> LineVerdict {
-        if self.stored_uncompressed.contains(&line) {
+        let s = self.slab.slot(line);
+        if self.slab.stored_uncompressed(s) {
             return LineVerdict::uncompressed();
         }
-        let epoch = self.epochs.get(&line).copied().unwrap_or(0);
-        if let Some(&(e, v)) = self.verdict_cache.get(&line) {
-            if e == epoch {
-                return v;
-            }
+        let epoch = self.slab.epoch(s);
+        if let Some(v) = self.slab.verdict_if_fresh(s, epoch) {
+            return v;
         }
         let data = wl.line_data(line, epoch);
         let v = self.oracle.analyze_one(algo, &data);
-        self.verdict_cache.insert(line, (epoch, v));
+        self.slab.put_verdict(s, epoch, v);
         v
     }
 
@@ -72,65 +76,69 @@ impl DataModel {
     /// executable launch instead of N. Purely a performance device — the
     /// verdict for each line is the same pure function of (line, epoch)
     /// either way, so timing and stats are unchanged.
+    ///
+    /// In-batch duplicates dedup in O(1): the first occurrence stamps its
+    /// slab slot fresh, so the second occurrence's freshness check skips
+    /// it (no quadratic `pending` scan, no per-batch allocation — the
+    /// scratch vectors are reused across calls).
     pub fn warm_verdicts(&mut self, wl: &Workload, algo: Algo, lines: &[u64]) {
         if lines.len() <= 1 {
             return; // nothing to batch; verdict() handles singles
         }
-        // Lazy allocation: fully-cached batches (the common steady state)
-        // never allocate.
-        let mut pending: Vec<(u64, u32)> = Vec::new();
-        let mut datas: Vec<crate::compress::Line> = Vec::new();
+        self.pending.clear();
+        self.datas.clear();
         for &line in lines {
-            if self.stored_uncompressed.contains(&line) {
+            let s = self.slab.slot(line);
+            if self.slab.stored_uncompressed(s) {
                 continue; // verdict() short-circuits these
             }
-            let epoch = self.epochs.get(&line).copied().unwrap_or(0);
-            if let Some(&(e, _)) = self.verdict_cache.get(&line) {
-                if e == epoch {
-                    continue; // already fresh
-                }
+            let epoch = self.slab.epoch(s);
+            if self.slab.verdict_if_fresh(s, epoch).is_some() {
+                continue; // already fresh — or a duplicate stamped below
             }
-            if pending.iter().any(|&(l, _)| l == line) {
-                continue; // duplicate within this batch
-            }
-            pending.push((line, epoch));
-            datas.push(wl.line_data(line, epoch));
+            self.slab.stamp(s, epoch);
+            self.pending.push(s);
+            self.datas.push(wl.line_data(line, epoch));
         }
-        if pending.is_empty() {
+        if self.pending.is_empty() {
             return;
         }
-        let verdicts = self.oracle.analyze(algo, &datas);
-        debug_assert_eq!(verdicts.len(), pending.len());
-        for ((line, epoch), v) in pending.into_iter().zip(verdicts) {
-            self.verdict_cache.insert(line, (epoch, v));
+        let verdicts = self.oracle.analyze(algo, &self.datas);
+        debug_assert_eq!(verdicts.len(), self.pending.len());
+        for (&s, v) in self.pending.iter().zip(verdicts) {
+            self.slab.set_verdict_value(s, v);
         }
     }
 
     /// Encoding from the most recent verdict for this line (drives the
     /// decompression-subroutine shape; falls back to a mid-cost encoding).
     pub fn cached_encoding(&self, line: u64) -> u8 {
-        self.verdict_cache
-            .get(&line)
-            .map(|&(_, v)| v.encoding)
+        self.slab
+            .slot_ref(line)
+            .and_then(|s| self.slab.encoding_hint(s))
             .unwrap_or(crate::compress::bdi::ENC_B8D1)
     }
 
     /// A store rewrote this line.
     pub fn bump_epoch(&mut self, line: u64) {
-        *self.epochs.entry(line).or_insert(0) += 1;
+        let s = self.slab.slot(line);
+        self.slab.bump_epoch(s);
     }
 
     /// Record whether the DRAM image of this line is compressed.
     pub fn set_stored_compressed(&mut self, line: u64, compressed: bool) {
-        if compressed {
-            self.stored_uncompressed.remove(&line);
-        } else {
-            self.stored_uncompressed.insert(line);
-        }
+        let s = self.slab.slot(line);
+        self.slab.set_stored_uncompressed(s, !compressed);
     }
 
     pub fn oracle_backend(&self) -> &'static str {
         self.oracle.backend_name()
+    }
+
+    /// Memoization counters of the underlying oracle, if it keeps any
+    /// (`(hits, misses)` — see [`CompressionOracle::memo_stats`]).
+    pub fn oracle_memo_stats(&self) -> Option<(u64, u64)> {
+        self.oracle.memo_stats()
     }
 }
 
@@ -191,7 +199,7 @@ impl Simulator {
         let mut sim = Simulator {
             cores,
             mem,
-            data: DataModel::new(oracle),
+            data: DataModel::new(oracle, &wl.arrays),
             next_cta: 0,
             stats: SimStats::default(),
             cfg,
@@ -291,7 +299,7 @@ impl Simulator {
         Ok(Simulator {
             cores,
             mem,
-            data: DataModel::new(oracle),
+            data: DataModel::new(oracle, &wl.arrays),
             next_cta: 0,
             stats: SimStats::default(),
             cfg,
@@ -309,6 +317,13 @@ impl Simulator {
         app.in_eval_set
     }
 
+    /// Memoization counters (`(hits, misses)`) of this simulator's oracle,
+    /// if the backend keeps any (see [`CompressionOracle::memo_stats`]).
+    /// `caba bench` reports the hit rate from here.
+    pub fn oracle_memo_stats(&self) -> Option<(u64, u64)> {
+        self.data.oracle_memo_stats()
+    }
+
     fn dispatch_ctas(&mut self) {
         let groups = self.wl.occ.ctas_per_sm as usize;
         for core in &mut self.cores {
@@ -319,6 +334,7 @@ impl Simulator {
                 if core.group_done(g, &self.wl) && core.warps[g * self.wl.occ.warps_per_cta as usize].uid == u64::MAX
                 {
                     core.launch_cta(g, self.next_cta, &self.wl);
+                    self.stats.ctas_launched += 1;
                     self.next_cta += 1;
                 }
             }
@@ -342,7 +358,7 @@ impl Simulator {
                     || core.warps[base..base + wpc].iter().all(|w| w.done);
                 if slot_free && core.group_done(g, &self.wl) {
                     core.launch_cta(g, self.next_cta, &self.wl);
-                    self.stats.ctas_done += 1;
+                    self.stats.ctas_launched += 1;
                     self.next_cta += 1;
                     launched = true;
                 }
@@ -398,6 +414,15 @@ impl Simulator {
                 self.stats.finished = drained;
                 break;
             }
+        }
+        // On a drained run every CTA was launched exactly once (dispatch or
+        // refill) and retired — the launch counter must cover the workload.
+        if self.stats.finished {
+            debug_assert_eq!(
+                self.stats.ctas_launched,
+                self.wl.total_ctas as u64,
+                "ctas_launched out of sync with total_ctas on a drained run"
+            );
         }
         self.collect(now);
         // Seal an attached trace recorder (idempotent). A write failure is
@@ -482,6 +507,7 @@ mod tests {
         let mut sim = Simulator::new(tiny_cfg(), Design::base(), app, 0.02);
         let stats = sim.run();
         assert!(stats.finished, "run did not drain");
+        assert_eq!(stats.ctas_launched, sim.wl.total_ctas as u64);
         assert!(stats.warp_insts > 1000);
         assert!(stats.cycles > 100);
         assert!(stats.ipc() > 0.0);
@@ -525,8 +551,8 @@ mod tests {
         let app = apps::find("PVC").unwrap();
         let cfg = tiny_cfg();
         let wl = Workload::build(app, &cfg, 0.01);
-        let mut warmed = DataModel::new(Box::new(MemoOracle::new(NativeOracle)));
-        let mut lazy = DataModel::new(Box::new(MemoOracle::new(NativeOracle)));
+        let mut warmed = DataModel::new(Box::new(MemoOracle::new(NativeOracle)), &wl.arrays);
+        let mut lazy = DataModel::new(Box::new(MemoOracle::new(NativeOracle)), &wl.arrays);
         let lines: Vec<u64> = (0..16).map(|i| wl.arrays[0].base_line + i).collect();
         warmed.warm_verdicts(&wl, Algo::Bdi, &lines);
         for &l in &lines {

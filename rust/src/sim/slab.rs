@@ -1,0 +1,252 @@
+//! Flat per-line state slab — the zero-allocation backing store for
+//! [`crate::sim::DataModel`].
+//!
+//! The simulator's line-address space is *bounded and known at build time*:
+//! every array lives at `base_line = (array_id + 1) × ARRAY_STRIDE` and
+//! spans `footprint_lines` consecutive lines ([`crate::workload`]), so a
+//! line address decomposes into `(array_id, offset)` with two integer ops
+//! and maps onto a dense slab index by a per-array prefix sum. That turns
+//! the three per-access `HashMap`/`HashSet` lookups the old `DataModel`
+//! performed (SipHash over the 64-bit address, pointer-chasing buckets)
+//! into one shift, one mask and one bounds check into a struct-of-arrays.
+//!
+//! Lines outside every declared range (possible only for hand-crafted
+//! traces; the generators and the importer both stay in range) fall back to
+//! a spill map so behaviour is identical, just not fast. Workloads whose
+//! total footprint exceeds [`DENSE_CAP_LINES`] (an imported trace spanning
+//! a huge sparse window) route *everything* through the spill map rather
+//! than allocating an absurd slab — the pre-slab memory behaviour.
+
+use crate::compress::oracle::LineVerdict;
+use crate::workload::{ArrayInfo, ARRAY_STRIDE};
+use std::collections::HashMap;
+
+/// Sentinel for "no verdict cached yet" in `verdict_epochs`. Store epochs
+/// count individual line rewrites and are bounded by the instruction
+/// budget, so a real epoch never reaches it.
+const NO_VERDICT: u32 = u32::MAX;
+
+/// Above this total footprint (lines) the dense slab is not allocated and
+/// every line goes through the spill map. 4 Mlines × 13 B/line ≈ 52 MB is
+/// the ceiling a dense slab may cost; every synthetic workload is two
+/// orders of magnitude below it.
+const DENSE_CAP_LINES: u64 = 1 << 22;
+
+/// Per-line simulator state, struct-of-arrays: epochs, verdict cache and
+/// stored-form flag folded into one structure with O(1) addressing.
+pub struct LineSlab {
+    /// Per-array `(footprint_lines, slab base offset)`, indexed by
+    /// `array_id = line / ARRAY_STRIDE - 1`. Empty when the workload
+    /// exceeded [`DENSE_CAP_LINES`] (spill-only mode).
+    ranges: Vec<(u64, usize)>,
+    /// Slot lookup for lines outside every dense range.
+    spill: HashMap<u64, usize>,
+    /// Store-generation counter per line (0 = never stored).
+    epochs: Vec<u32>,
+    /// Epoch the cached verdict was computed at ([`NO_VERDICT`] = none).
+    verdict_epochs: Vec<u32>,
+    /// Cached oracle verdict (valid iff `verdict_epochs[s] != NO_VERDICT`;
+    /// *fresh* iff it equals `epochs[s]`).
+    verdicts: Vec<LineVerdict>,
+    /// Line's DRAM image is uncompressed (compression skipped at store).
+    uncompressed: Vec<bool>,
+}
+
+impl LineSlab {
+    /// Build the slab for a workload's array table.
+    pub fn new(arrays: &[ArrayInfo]) -> LineSlab {
+        let total: u64 = arrays.iter().map(|a| a.footprint_lines).sum();
+        let mut ranges = Vec::new();
+        let mut len = 0usize;
+        if total <= DENSE_CAP_LINES {
+            for (i, a) in arrays.iter().enumerate() {
+                // The workload builder always places array i at
+                // (i+1) × ARRAY_STRIDE; the decomposition in `slot`
+                // depends on it.
+                debug_assert_eq!(a.base_line, (i as u64 + 1) * ARRAY_STRIDE);
+                ranges.push((a.footprint_lines, len));
+                len += a.footprint_lines as usize;
+            }
+        }
+        LineSlab {
+            ranges,
+            spill: HashMap::new(),
+            epochs: vec![0; len],
+            verdict_epochs: vec![NO_VERDICT; len],
+            verdicts: vec![LineVerdict::uncompressed(); len],
+            uncompressed: vec![false; len],
+        }
+    }
+
+    /// Dense slot for a line, if it falls inside a declared array range.
+    #[inline]
+    fn dense_slot(&self, line: u64) -> Option<usize> {
+        let aid = (line / ARRAY_STRIDE) as usize;
+        if aid == 0 || aid > self.ranges.len() {
+            return None;
+        }
+        let (footprint, base) = self.ranges[aid - 1];
+        let off = line - aid as u64 * ARRAY_STRIDE;
+        (off < footprint).then_some(base + off as usize)
+    }
+
+    /// Slot for a line, creating a spill slot on first touch of an
+    /// out-of-range address.
+    #[inline]
+    pub fn slot(&mut self, line: u64) -> usize {
+        if let Some(s) = self.dense_slot(line) {
+            return s;
+        }
+        if let Some(&s) = self.spill.get(&line) {
+            return s;
+        }
+        let s = self.epochs.len();
+        self.epochs.push(0);
+        self.verdict_epochs.push(NO_VERDICT);
+        self.verdicts.push(LineVerdict::uncompressed());
+        self.uncompressed.push(false);
+        self.spill.insert(line, s);
+        s
+    }
+
+    /// Slot for a line without allocating a spill entry (read-only paths).
+    #[inline]
+    pub fn slot_ref(&self, line: u64) -> Option<usize> {
+        self.dense_slot(line).or_else(|| self.spill.get(&line).copied())
+    }
+
+    #[inline]
+    pub fn epoch(&self, s: usize) -> u32 {
+        self.epochs[s]
+    }
+
+    #[inline]
+    pub fn bump_epoch(&mut self, s: usize) {
+        self.epochs[s] += 1;
+    }
+
+    #[inline]
+    pub fn stored_uncompressed(&self, s: usize) -> bool {
+        self.uncompressed[s]
+    }
+
+    #[inline]
+    pub fn set_stored_uncompressed(&mut self, s: usize, v: bool) {
+        self.uncompressed[s] = v;
+    }
+
+    /// Cached verdict if one was computed at exactly `epoch`.
+    #[inline]
+    pub fn verdict_if_fresh(&self, s: usize, epoch: u32) -> Option<LineVerdict> {
+        (self.verdict_epochs[s] == epoch).then_some(self.verdicts[s])
+    }
+
+    /// Record a verdict computed at `epoch`.
+    #[inline]
+    pub fn put_verdict(&mut self, s: usize, epoch: u32, v: LineVerdict) {
+        self.verdict_epochs[s] = epoch;
+        self.verdicts[s] = v;
+    }
+
+    /// Mark the slot's verdict fresh at `epoch` *before* the value is
+    /// known — the batch path in `DataModel::warm_verdicts` stamps every
+    /// pending slot so in-batch duplicates dedup in O(1), then fills the
+    /// values with [`LineSlab::set_verdict_value`] after the one oracle
+    /// call. Nothing may read the verdict between stamp and fill.
+    #[inline]
+    pub fn stamp(&mut self, s: usize, epoch: u32) {
+        self.verdict_epochs[s] = epoch;
+    }
+
+    #[inline]
+    pub fn set_verdict_value(&mut self, s: usize, v: LineVerdict) {
+        self.verdicts[s] = v;
+    }
+
+    /// Encoding of the most recent verdict ever computed for this slot
+    /// (possibly stale — mirrors the old `verdict_cache` semantics where
+    /// an epoch bump left the entry in place).
+    #[inline]
+    pub fn encoding_hint(&self, s: usize) -> Option<u8> {
+        (self.verdict_epochs[s] != NO_VERDICT).then_some(self.verdicts[s].encoding)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ArrayInfo;
+
+    fn arrays(footprints: &[u64]) -> Vec<ArrayInfo> {
+        footprints
+            .iter()
+            .enumerate()
+            .map(|(i, &fp)| ArrayInfo {
+                base_line: (i as u64 + 1) * ARRAY_STRIDE,
+                footprint_lines: fp,
+                pattern: crate::workload::datagen::DataPattern::Random,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dense_mapping_is_contiguous_and_disjoint() {
+        let slab = LineSlab::new(&arrays(&[4, 2, 8]));
+        let mut seen = Vec::new();
+        for (i, fp) in [4u64, 2, 8].iter().enumerate() {
+            for off in 0..*fp {
+                let line = (i as u64 + 1) * ARRAY_STRIDE + off;
+                seen.push(slab.slot_ref(line).expect("in range"));
+            }
+        }
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 14, "slots must be distinct");
+        assert_eq!(*sorted.last().unwrap(), 13, "slots must be dense");
+        // Out-of-range offsets are not dense slots.
+        assert_eq!(slab.slot_ref(ARRAY_STRIDE + 4), None);
+        assert_eq!(slab.slot_ref(7), None); // below the first array
+    }
+
+    #[test]
+    fn spill_lines_get_stable_slots() {
+        let mut slab = LineSlab::new(&arrays(&[2]));
+        let odd = 5 * ARRAY_STRIDE + 99; // no such array
+        let s1 = slab.slot(odd);
+        slab.bump_epoch(s1);
+        let s2 = slab.slot(odd);
+        assert_eq!(s1, s2);
+        assert_eq!(slab.epoch(s2), 1);
+        assert_eq!(slab.slot_ref(odd), Some(s1));
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let mut slab = LineSlab::new(&arrays(&[4]));
+        let s = slab.slot(ARRAY_STRIDE + 3);
+        assert_eq!(slab.epoch(s), 0);
+        assert!(!slab.stored_uncompressed(s));
+        assert_eq!(slab.verdict_if_fresh(s, 0), None);
+        assert_eq!(slab.encoding_hint(s), None);
+        let v = LineVerdict { encoding: 2, size_bytes: 27, bursts: 1 };
+        slab.put_verdict(s, 0, v);
+        assert_eq!(slab.verdict_if_fresh(s, 0), Some(v));
+        assert_eq!(slab.encoding_hint(s), Some(2));
+        slab.bump_epoch(s);
+        // Stale after a store, but the hint survives (old semantics).
+        assert_eq!(slab.verdict_if_fresh(s, 1), None);
+        assert_eq!(slab.encoding_hint(s), Some(2));
+        slab.set_stored_uncompressed(s, true);
+        assert!(slab.stored_uncompressed(s));
+    }
+
+    #[test]
+    fn oversized_footprint_falls_back_to_spill() {
+        let slab_arrays = arrays(&[DENSE_CAP_LINES + 1]);
+        let mut slab = LineSlab::new(&slab_arrays);
+        assert_eq!(slab.slot_ref(ARRAY_STRIDE), None, "no dense range allocated");
+        let s = slab.slot(ARRAY_STRIDE);
+        assert_eq!(slab.slot_ref(ARRAY_STRIDE), Some(s));
+    }
+}

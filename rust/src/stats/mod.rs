@@ -204,8 +204,10 @@ pub struct SimStats {
     pub md: MdCacheStats,
     pub energy_events: EnergyEvents,
     pub trace: TraceStats,
-    /// CTAs retired.
-    pub ctas_done: u64,
+    /// CTAs launched (initial dispatch + refills). On a drained run every
+    /// launched CTA also retired, and [`crate::sim::Simulator::run`]
+    /// asserts this equals the workload's `total_ctas`.
+    pub ctas_launched: u64,
     /// All launched warps finished their program.
     pub finished: bool,
 }

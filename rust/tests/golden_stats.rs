@@ -1,0 +1,91 @@
+//! Golden-stats regression: pins `(cycles, warp_insts, dram.bursts,
+//! dram.bursts_uncompressed)` — and therefore the compression ratio — for
+//! three (app, design) pairs at a fixed scale, so hot-path refactors that
+//! change simulation results fail loudly instead of silently shifting the
+//! figures.
+//!
+//! The baseline lives in `tests/golden_stats.txt`. On the first run (file
+//! absent) the test **blesses** the current results into it and passes;
+//! commit the file to lock them in. After an *intentional* semantic change,
+//! regenerate with `CABA_BLESS=1 cargo test --test golden_stats` and commit
+//! the diff — the point is that result shifts always show up in review.
+
+use caba::compress::Algo;
+use caba::sim::designs::Design;
+use caba::workload::apps;
+use caba::{SimConfig, Simulator};
+use std::fmt::Write as _;
+
+const GOLDEN_PATH: &str = "tests/golden_stats.txt";
+const SCALE: f64 = 0.02;
+
+fn pairs() -> Vec<(&'static str, Design)> {
+    vec![
+        ("SLA", Design::base()),
+        ("PVC", Design::caba(Algo::Bdi)),
+        ("MM", Design::caba(Algo::Fpc)),
+    ]
+}
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.n_sms = 2;
+    c.max_cycles = 500_000;
+    c
+}
+
+fn render_current() -> String {
+    let mut out = String::from(
+        "# golden simulation stats — regenerate with CABA_BLESS=1 cargo test --test golden_stats\n",
+    );
+    for (app_name, design) in pairs() {
+        let app = apps::find(app_name).expect("golden app exists");
+        let stats = Simulator::new(cfg(), design, app, SCALE).run();
+        assert!(
+            stats.finished,
+            "{app_name}/{} did not drain at scale {SCALE} — goldens need drained runs",
+            design.name
+        );
+        let _ = writeln!(
+            out,
+            "{}/{} cycles={} warp_insts={} bursts={} bursts_uncompressed={}",
+            app_name,
+            design.name,
+            stats.cycles,
+            stats.warp_insts,
+            stats.dram.bursts,
+            stats.dram.bursts_uncompressed,
+        );
+    }
+    out
+}
+
+#[test]
+fn golden_stats_pinned() {
+    let actual = render_current();
+    let bless = std::env::var("CABA_BLESS").is_ok();
+    match std::fs::read_to_string(GOLDEN_PATH) {
+        Ok(expected) if !bless => {
+            assert_eq!(
+                actual.trim(),
+                expected.trim(),
+                "\nsimulation results diverged from the committed golden baseline \
+                 ({GOLDEN_PATH}).\nIf this change is intentional, regenerate with \
+                 `CABA_BLESS=1 cargo test --test golden_stats` and commit the diff."
+            );
+        }
+        _ => {
+            // Self-bless keeps a fresh checkout green before the baseline
+            // is first committed — but a checkout that *requires* the
+            // committed baseline (CI after it lands) must not silently
+            // re-bless; CABA_REQUIRE_GOLDEN turns absence into a failure.
+            assert!(
+                std::env::var("CABA_REQUIRE_GOLDEN").is_err() || bless,
+                "{GOLDEN_PATH} is missing but CABA_REQUIRE_GOLDEN is set — \
+                 the committed baseline was deleted or never checked in"
+            );
+            std::fs::write(GOLDEN_PATH, &actual).expect("write golden baseline");
+            eprintln!("golden_stats: blessed new baseline into {GOLDEN_PATH}:\n{actual}");
+        }
+    }
+}

@@ -13,23 +13,27 @@ use caba::SimConfig;
 fn main() {
     let scale = caba::report::benchutil::bench_scale();
 
-    // --- §8.1 Memoization: compute-bound, SFU-heavy apps ---
-    let mut t = Table::new(["app", "Base IPC", "CABA-Memo IPC", "speedup", "LUT hit rate"]);
-    for name in ["dmr", "RAY", "sr", "bh", "STO"] {
-        let app = apps::find(name).unwrap();
+    // --- §8.1 Memoization: the compute-bound suite + the paper pool's
+    // SFU-heavy members. Hit/alias/evict rates are *measured* through the
+    // per-SM LUT model (see `caba fig memo` for the full figure).
+    let mut t = Table::new([
+        "app", "Base IPC", "CABA-Memo IPC", "speedup", "LUT hit", "alias", "evict/install",
+    ]);
+    for app in apps::memo_suite() {
         let base = Simulator::new(SimConfig::default(), Design::base(), app, scale).run();
         let memo = Simulator::new(SimConfig::default(), Design::caba_memo(), app, scale).run();
-        let hit = if memo.caba.memo_lookups > 0 {
-            memo.caba.memo_hits as f64 / memo.caba.memo_lookups as f64
-        } else {
-            0.0
+        let c = memo.caba;
+        let pct = |n: u64, d: u64| {
+            if d == 0 { "n/a".to_string() } else { format!("{:.0}%", n as f64 / d as f64 * 100.0) }
         };
         t.row([
-            name.to_string(),
+            app.name.to_string(),
             format!("{:.3}", base.ipc()),
             format!("{:.3}", memo.ipc()),
             format!("{:+.1}%", (memo.ipc() / base.ipc() - 1.0) * 100.0),
-            format!("{:.0}%", hit * 100.0),
+            pct(c.memo_hits, c.memo_lookups),
+            pct(c.memo_alias_hits, c.memo_lookups),
+            pct(c.memo_evictions, c.memo_installs),
         ]);
     }
     println!("# §8.1 — CABA memoization on compute-bound apps\n{}", t.render());

@@ -59,6 +59,8 @@ pub struct SimPoint {
     /// Oracle memo hit rate over the whole run (None if the oracle keeps
     /// no counters).
     pub memo_hit_rate: Option<f64>,
+    /// §8.1 memoization-LUT hit rate (None unless the design memoizes).
+    pub lut_hit_rate: Option<f64>,
 }
 
 /// The full report; `to_json` renders it.
@@ -147,6 +149,7 @@ fn measure_sim(pairs: &[(&'static str, Design)], scale: f64) -> Result<Vec<SimPo
             memo_hit_rate: sim
                 .oracle_memo_stats()
                 .map(|(h, m)| h as f64 / (h + m).max(1) as f64),
+            lut_hit_rate: stats.caba.memo_hit_rate(),
         });
     }
     Ok(out)
@@ -154,7 +157,7 @@ fn measure_sim(pairs: &[(&'static str, Design)], scale: f64) -> Result<Vec<SimPo
 
 /// Parse a floors file: `key=value` lines, `#` comments. Known keys:
 /// `min_compress_mlines_per_s`, `min_memo_warm_mlines_per_s`,
-/// `min_memo_hit_rate`, `min_sim_kcycles_per_s`.
+/// `min_memo_hit_rate`, `min_sim_kcycles_per_s`, `min_lut_hit_rate`.
 fn parse_floors(text: &str) -> Result<Vec<(String, f64)>> {
     let mut floors = Vec::new();
     for (ln, raw) in text.lines().enumerate() {
@@ -188,6 +191,13 @@ fn check_floors(report: &mut BenchReport, floors: &[(String, f64)]) {
                 .sim
                 .iter()
                 .map(|s| s.kcycles_per_s)
+                .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.min(v)))),
+            // Worst §8.1 LUT hit rate over the memo-design sim points: the
+            // emergent-hit-rate path must never silently collapse to zero.
+            "min_lut_hit_rate" => report
+                .sim
+                .iter()
+                .filter_map(|s| s.lut_hit_rate)
                 .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.min(v)))),
             other => {
                 report
@@ -239,21 +249,23 @@ impl BenchReport {
         );
         s.push_str("  \"sim\": [\n");
         for (i, p) in self.sim.iter().enumerate() {
-            let memo = match p.memo_hit_rate {
+            let opt = |v: Option<f64>| match v {
                 Some(r) => format!("{r:.4}"),
                 None => "null".to_string(),
             };
             let _ = writeln!(
                 s,
                 "    {{\"app\": \"{}\", \"design\": \"{}\", \"cycles\": {}, \"warp_insts\": {}, \
-                 \"kcycles_per_s\": {:.1}, \"kinsts_per_s\": {:.1}, \"memo_hit_rate\": {}}}{}",
+                 \"kcycles_per_s\": {:.1}, \"kinsts_per_s\": {:.1}, \"memo_hit_rate\": {}, \
+                 \"lut_hit_rate\": {}}}{}",
                 p.app,
                 p.design,
                 p.cycles,
                 p.warp_insts,
                 p.kcycles_per_s,
                 p.kinsts_per_s,
-                memo,
+                opt(p.memo_hit_rate),
+                opt(p.lut_hit_rate),
                 if i + 1 < self.sim.len() { "," } else { "" }
             );
         }
@@ -299,18 +311,20 @@ impl BenchReport {
         );
         s.push('\n');
         for p in &self.sim {
+            let pct = |v: Option<f64>| match v {
+                Some(r) => format!("{:.1}%", r * 100.0),
+                None => "n/a".to_string(),
+            };
             let _ = writeln!(
                 s,
-                "sim {:>4}/{:<12} {:>9.1} kcycles/s  {:>9.1} kinsts/s  (cycles {}, memo hit {})",
+                "sim {:>4}/{:<13} {:>9.1} kcycles/s  {:>9.1} kinsts/s  (cycles {}, memo hit {}, LUT hit {})",
                 p.app,
                 p.design,
                 p.kcycles_per_s,
                 p.kinsts_per_s,
                 p.cycles,
-                match p.memo_hit_rate {
-                    Some(r) => format!("{:.1}%", r * 100.0),
-                    None => "n/a".to_string(),
-                }
+                pct(p.memo_hit_rate),
+                pct(p.lut_hit_rate)
             );
         }
         for v in &self.violations {
@@ -334,13 +348,19 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
     let (cold, warm, hit_rate) = measure_memo(&lines);
 
     let pairs: Vec<(&'static str, Design)> = if opts.quick {
-        vec![("PVC", Design::base()), ("PVC", Design::caba(Algo::Bdi))]
+        vec![
+            ("PVC", Design::base()),
+            ("PVC", Design::caba(Algo::Bdi)),
+            ("FRAG", Design::caba_memo()),
+        ]
     } else {
         vec![
             ("PVC", Design::base()),
             ("PVC", Design::caba(Algo::Bdi)),
             ("MM", Design::caba(Algo::Bdi)),
             ("TRA", Design::caba(Algo::Fpc)),
+            ("FRAG", Design::caba_memo()),
+            ("NNA", Design::caba_memo_hybrid()),
         ]
     };
     let sim = measure_sim(&pairs, sim_scale)?;
@@ -396,6 +416,7 @@ mod tests {
                 kcycles_per_s: 0.5, // below floor
                 kinsts_per_s: 1.0,
                 memo_hit_rate: None,
+                lut_hit_rate: None,
             }],
             violations: Vec::new(),
         };
@@ -405,6 +426,14 @@ mod tests {
         // Unknown keys are flagged, not ignored.
         check_floors(&mut report, &[("min_typo".to_string(), 1.0)]);
         assert_eq!(report.violations.len(), 2);
+        // LUT floor: checked only over memo-design points; a non-memo-only
+        // report has nothing to check (flagged), a low measured rate fails.
+        check_floors(&mut report, &[("min_lut_hit_rate".to_string(), 0.1)]);
+        assert_eq!(report.violations.len(), 3);
+        assert!(report.violations[2].contains("no measurements"));
+        report.sim[0].lut_hit_rate = Some(0.05);
+        check_floors(&mut report, &[("min_lut_hit_rate".to_string(), 0.1)]);
+        assert_eq!(report.violations.len(), 4);
     }
 
     #[test]

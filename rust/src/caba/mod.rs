@@ -10,7 +10,6 @@
 //! two-entry AWB partition and issue only into issue slots parent warps
 //! left idle (§4.3), subject to the utilization-feedback throttle (§4.4).
 
-pub mod memoization;
 pub mod prefetch;
 pub mod subroutines;
 
@@ -36,8 +35,9 @@ pub enum Payload {
     Compress { line_addr: u64, verdict: LineVerdict },
     /// Issue the predicted prefetches into the memory system (§8.2).
     Prefetch { lines: Vec<u64> },
-    /// Install a memoized result into the LUT (§8.1) — bookkeeping only.
-    MemoInstall,
+    /// Install a memoized result for this operand key into the per-SM
+    /// memo LUT (§8.1, `crate::memo`) when the install warp retires.
+    MemoInstall { key: u64 },
 }
 
 /// One AWT row (Fig. 5): live-in/out register ids are abstracted into the
@@ -123,6 +123,32 @@ impl Awc {
         parent_warp: usize,
         reg: u8,
     ) -> Option<u64> {
+        let token = self.trigger_high(active_from, sub, parent_warp, reg)?;
+        self.stats.decompress_warps += 1;
+        Some(token)
+    }
+
+    /// Trigger a memo-lookup assist warp (§8.1): high priority like
+    /// decompression (the parent's destination register waits on it), but
+    /// counted through the memo counters in the core, not as a
+    /// decompression warp.
+    pub fn trigger_lookup(
+        &mut self,
+        active_from: u64,
+        sub: Subroutine,
+        parent_warp: usize,
+        reg: u8,
+    ) -> Option<u64> {
+        self.trigger_high(active_from, sub, parent_warp, reg)
+    }
+
+    fn trigger_high(
+        &mut self,
+        active_from: u64,
+        sub: Subroutine,
+        parent_warp: usize,
+        reg: u8,
+    ) -> Option<u64> {
         let idx = self.free_row()?;
         let token = self.next_token;
         self.next_token += 1;
@@ -135,7 +161,6 @@ impl Awc {
             payload: Payload::Decompress { regs: vec![(parent_warp, reg)] },
             parent_warp,
         });
-        self.stats.decompress_warps += 1;
         self.rows_high.push(idx);
         Some(token)
     }
@@ -241,6 +266,12 @@ impl Awc {
 
     fn free_row(&self) -> Option<usize> {
         self.entries.iter().position(|e| e.is_none())
+    }
+
+    /// Can another assist warp be triggered right now? (The memo issue
+    /// path checks this before committing to the lookup-bypass timing.)
+    pub fn has_free_row(&self) -> bool {
+        self.free_row().is_some()
     }
 
     /// Count of live entries (for buffer-capacity decisions).
@@ -460,6 +491,27 @@ mod tests {
         assert_eq!(a.stats.throttled_deploys, 1);
         // High priority is never throttled (needed for correctness).
         assert!(a.trigger_decompress(0, sub, 0, 1).is_some());
+    }
+
+    #[test]
+    fn lookup_trigger_is_not_a_decompress_warp() {
+        let mut a = awc();
+        let sub = Subroutine { total: 3, mem: 1 };
+        let tok = a.trigger_lookup(0, sub, 2, 9).unwrap();
+        assert!(a.is_live(tok));
+        assert_eq!(a.stats.decompress_warps, 0);
+        // It still releases the parent register through the high-priority
+        // retirement path.
+        let mut now = 0;
+        let mut retired = Vec::new();
+        while retired.is_empty() && now < 100 {
+            retired = a.issue_high(now, &mut slots());
+            now += 1;
+        }
+        match &retired[0].payload {
+            Payload::Decompress { regs } => assert_eq!(regs, &vec![(2usize, 9u8)]),
+            _ => panic!("wrong payload"),
+        }
     }
 
     #[test]

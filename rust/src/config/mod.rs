@@ -79,6 +79,11 @@ pub struct SimConfig {
     pub fma_latency: u32,
     /// SFU latency (tens of cycles — the paper's dmr data-dependence note).
     pub sfu_latency: u32,
+    /// Cycles the SFU pipeline stays *occupied* per warp SFU instruction
+    /// (quarter-rate SFU lanes process 32 threads over several cycles —
+    /// this is what makes transcendental-heavy kernels compute-unit-bound
+    /// rather than issue-bound, §3/§8.1).
+    pub sfu_issue_interval: u32,
 
     // --- Caches ---
     pub l1_bytes: usize,
@@ -127,6 +132,17 @@ pub struct SimConfig {
     /// FU-utilization threshold above which low-priority deployment pauses.
     pub throttle_util_threshold: f64,
 
+    // --- Memoization LUT (§8.1, `crate::memo`) ---
+    /// Shared-memory budget cap per SM for the memo LUT; the actual carve
+    /// is `min(this, smem left unallocated by the resident CTAs)`.
+    pub memo_lut_bytes: usize,
+    /// LUT associativity (ways per set).
+    pub memo_lut_ways: usize,
+    /// Modeled bytes per LUT entry (tag + result + LRU bookkeeping).
+    pub memo_entry_bytes: usize,
+    /// Stored-tag width in bits; truncation models aliasing.
+    pub memo_tag_bits: u32,
+
     // --- Run controls ---
     /// Stop after this many core cycles (safety net).
     pub max_cycles: u64,
@@ -164,6 +180,7 @@ impl Default for SimConfig {
             alu_latency: 4,
             fma_latency: 4,
             sfu_latency: 32,
+            sfu_issue_interval: 4,
             l1_bytes: 16 * 1024,
             l1_assoc: 4,
             l1_hit_latency: 28,
@@ -188,6 +205,10 @@ impl Default for SimConfig {
             awb_low_prio_slots: 2,
             caba_throttle: true,
             throttle_util_threshold: 0.9,
+            memo_lut_bytes: 16 * 1024,
+            memo_lut_ways: 4,
+            memo_entry_bytes: 16,
+            memo_tag_bits: 16,
             max_cycles: 20_000_000,
             max_warp_insts: u64::MAX,
             seed: 0xCABA,
@@ -241,6 +262,7 @@ impl SimConfig {
             alu_latency,
             fma_latency,
             sfu_latency,
+            sfu_issue_interval,
             l1_bytes,
             l1_assoc,
             l1_hit_latency,
@@ -265,6 +287,10 @@ impl SimConfig {
             awb_low_prio_slots,
             caba_throttle,
             throttle_util_threshold,
+            memo_lut_bytes,
+            memo_lut_ways,
+            memo_entry_bytes,
+            memo_tag_bits,
             max_cycles,
             max_warp_insts,
             seed,
@@ -277,14 +303,16 @@ impl SimConfig {
             n_sms, warp_size, n_mcs, clock_ghz.to_bits(), schedulers_per_sm,
             max_warps_per_sm, max_ctas_per_sm, max_threads_per_sm,
             regfile_per_sm, smem_per_sm, sp_units, sfu_units, mem_units,
-            alu_latency, fma_latency, sfu_latency, l1_bytes, l1_assoc,
+            alu_latency, fma_latency, sfu_latency, sfu_issue_interval,
+            l1_bytes, l1_assoc,
             l1_hit_latency, l1_mshrs, l2_bytes, l2_assoc, l2_hit_latency,
             l2_tag_latency, line_bytes, icnt_bytes_per_cycle.to_bits(),
             icnt_latency, dram_bw_gbps.to_bits(), bw_scale.to_bits(),
             banks_per_mc, dram_base_latency, md_cache_bytes, md_cache_assoc,
             hw_decompress_latency, hw_compress_latency, awt_entries,
             awb_low_prio_slots, caba_throttle,
-            throttle_util_threshold.to_bits(), max_cycles, max_warp_insts,
+            throttle_util_threshold.to_bits(), memo_lut_bytes, memo_lut_ways,
+            memo_entry_bytes, memo_tag_bits, max_cycles, max_warp_insts,
             seed,
         );
         // Deliberately NOT fed: `trace_record` is a pure run control (see
@@ -297,19 +325,21 @@ impl SimConfig {
     }
 
     /// Every key accepted by [`SimConfig::set`] (used by tests and docs).
-    pub const KEYS: [&'static str; 42] = [
+    pub const KEYS: [&'static str; 47] = [
         "n_sms", "warp_size", "n_mcs", "clock_ghz", "schedulers_per_sm",
         "max_warps_per_sm", "max_ctas_per_sm", "max_threads_per_sm",
         "regfile_per_sm", "smem_per_sm", "sp_units", "sfu_units",
         "mem_units", "alu_latency", "fma_latency", "sfu_latency",
+        "sfu_issue_interval",
         "l1_bytes", "l1_assoc", "l1_hit_latency", "l1_mshrs", "l2_bytes",
         "l2_assoc", "l2_hit_latency", "l2_tag_latency",
         "icnt_bytes_per_cycle", "icnt_latency", "dram_bw_gbps", "bw_scale",
         "banks_per_mc", "dram_base_latency", "md_cache_bytes",
         "md_cache_assoc", "hw_decompress_latency", "hw_compress_latency",
         "awt_entries", "awb_low_prio_slots", "caba_throttle",
-        "throttle_util_threshold", "max_cycles", "max_warp_insts", "seed",
-        "trace_record",
+        "throttle_util_threshold", "memo_lut_bytes", "memo_lut_ways",
+        "memo_entry_bytes", "memo_tag_bits", "max_cycles",
+        "max_warp_insts", "seed", "trace_record",
     ];
 
     /// Apply one `key=value` override. Returns an error on unknown keys or
@@ -337,6 +367,7 @@ impl SimConfig {
             "alu_latency" => self.alu_latency = parse!(),
             "fma_latency" => self.fma_latency = parse!(),
             "sfu_latency" => self.sfu_latency = parse!(),
+            "sfu_issue_interval" => self.sfu_issue_interval = parse!(),
             "l1_bytes" => self.l1_bytes = parse!(),
             "l1_assoc" => self.l1_assoc = parse!(),
             "l1_hit_latency" => self.l1_hit_latency = parse!(),
@@ -359,6 +390,10 @@ impl SimConfig {
             "awb_low_prio_slots" => self.awb_low_prio_slots = parse!(),
             "caba_throttle" => self.caba_throttle = parse!(),
             "throttle_util_threshold" => self.throttle_util_threshold = parse!(),
+            "memo_lut_bytes" => self.memo_lut_bytes = parse!(),
+            "memo_lut_ways" => self.memo_lut_ways = parse!(),
+            "memo_entry_bytes" => self.memo_entry_bytes = parse!(),
+            "memo_tag_bits" => self.memo_tag_bits = parse!(),
             "max_cycles" => self.max_cycles = parse!(),
             "max_warp_insts" => self.max_warp_insts = parse!(),
             "seed" => self.seed = parse!(),

@@ -13,6 +13,7 @@ use crate::config::SimConfig;
 use crate::isa::{FuKind, Op, MAX_REGS};
 use crate::mem::cache::Cache;
 use crate::mem::MemSystem;
+use crate::memo::{self, MemoGeometry, MemoLut};
 use crate::sim::designs::{Design, Mechanism};
 use crate::sim::DataModel;
 use crate::stats::{IssueBreakdown, SimStats, StallKind};
@@ -93,6 +94,8 @@ pub struct Core {
     pub warps: Vec<WarpSlot>,
     pub l1: Cache,
     pub awc: Awc,
+    /// §8.1 per-SM memoization LUT (zero-capacity on non-memo designs).
+    pub memo: MemoLut,
     /// Greedy (GTO) warp per scheduler.
     greedy: [Option<usize>; 2],
     /// Warp slots per scheduler in age (uid) order — rebuilt on CTA launch,
@@ -103,6 +106,15 @@ pub struct Core {
     min_ready_hint: u64,
     /// LSU serializes one line transaction per cycle.
     lsu_free_at: u64,
+    /// Per-SFU-unit pipeline occupancy: a warp SFU instruction holds a
+    /// unit for `sfu_issue_interval` cycles (quarter-rate SFU lanes).
+    sfu_free_at: Vec<u64>,
+    sfu_issue_interval: u64,
+    /// Per-warp-slot memo operand-key cache `(uid, pc, key)`: the key is a
+    /// pure function of the instruction instance, and a blocked SFU op
+    /// re-probes the LUT every cycle — hash once per instruction, not once
+    /// per stalled cycle.
+    memo_key_cache: Vec<(u64, u64, u64)>,
     mshr: HashMap<u64, MshrInfo>,
     mshr_limit: usize,
     releases: HashMap<(usize, u8), Release>,
@@ -124,16 +136,20 @@ pub struct Core {
 }
 
 impl Core {
-    pub fn new(sm_id: usize, cfg: &SimConfig, design: &Design) -> Core {
+    pub fn new(sm_id: usize, cfg: &SimConfig, design: &Design, memo_geom: &MemoGeometry) -> Core {
         Core {
             sm_id,
             warps: vec![WarpSlot::empty(); cfg.max_warps_per_sm],
             l1: Cache::new(cfg.l1_bytes, cfg.l1_assoc, cfg.line_bytes, design.l1_tag_mult),
             awc: Awc::new(cfg),
+            memo: MemoLut::new(*memo_geom),
             greedy: [None, None],
             sched_order: [Vec::new(), Vec::new()],
             min_ready_hint: u64::MAX,
             lsu_free_at: 0,
+            sfu_free_at: vec![0; cfg.sfu_units],
+            sfu_issue_interval: cfg.sfu_issue_interval as u64,
+            memo_key_cache: vec![(u64::MAX, u64::MAX, 0); cfg.max_warps_per_sm],
             mshr: HashMap::new(),
             mshr_limit: cfg.l1_mshrs,
             releases: HashMap::new(),
@@ -293,12 +309,34 @@ impl Core {
                             self.awc.stats.prefetches_issued += 1;
                         }
                     }
-                    Payload::MemoInstall => {} // LUT update is bookkeeping
+                    Payload::MemoInstall { key } => {
+                        // The result becomes reusable only now, when the
+                        // low-priority install warp retires.
+                        let evicted = self.memo.install(key, r.at);
+                        self.awc.stats.memo_installs += 1;
+                        if evicted {
+                            self.awc.stats.memo_evictions += 1;
+                        }
+                    }
                 }
             } else {
                 i += 1;
             }
         }
+    }
+
+    /// Memo operand key for warp `w`'s current instruction, cached per
+    /// `(uid, pc)` so blocked warps don't re-hash every cycle.
+    fn memo_key(&mut self, wl: &Workload, w: usize, iter: u32, body_idx: usize) -> u64 {
+        let uid = self.warps[w].uid;
+        let pc = self.warps[w].pc;
+        let (cu, cp, ck) = self.memo_key_cache[w];
+        if cu == uid && cp == pc {
+            return ck;
+        }
+        let key = crate::workload::values::operand_key(&wl.spec.values, wl.seed, uid, iter, body_idx);
+        self.memo_key_cache[w] = (uid, pc, key);
+        key
     }
 
     fn release_part(&mut self, warp: usize, reg: u8, at: u64) {
@@ -375,10 +413,34 @@ impl Core {
                     self.min_ready_hint = now + 1;
                     continue;
                 }
-                FuKind::Sfu if slots.sfu == 0 => {
-                    saw_compute_struct = true;
-                    self.min_ready_hint = now + 1;
-                    continue;
+                FuKind::Sfu => {
+                    // Dispatch needs a per-cycle issue slot AND a free SFU
+                    // unit (quarter-rate lanes keep a unit busy for
+                    // `sfu_issue_interval` cycles). A memoized op whose
+                    // operands are resident in the LUT needs neither — it
+                    // takes the shared-memory path (§8.1: storage instead
+                    // of computation) — provided an AWT row is free for
+                    // the lookup warp.
+                    let unit_free = self.sfu_free_at.iter().any(|&t| t <= now);
+                    if slots.sfu == 0 || !unit_free {
+                        let bypasses = ctx.design.memoization
+                            && self.memo.enabled()
+                            && self.awc.has_free_row()
+                            && {
+                                let key = self.memo_key(ctx.wl, w, iter, body_idx);
+                                self.memo.would_hit(key)
+                            };
+                        if !bypasses {
+                            saw_compute_struct = true;
+                            let free = if slots.sfu == 0 || unit_free {
+                                now + 1
+                            } else {
+                                self.sfu_free_at.iter().copied().min().unwrap_or(now + 1)
+                            };
+                            self.min_ready_hint = self.min_ready_hint.min(free.max(now + 1));
+                            continue;
+                        }
+                    }
                 }
                 FuKind::Mem => {
                     if slots.mem == 0 || self.lsu_free_at > now {
@@ -411,43 +473,51 @@ impl Core {
                     self.warps[w].reg_ready[inst.dst as usize] = now + ctx.cfg.fma_latency as u64;
                 }
                 Op::Sfu => {
-                    slots.sfu -= 1;
                     let mut latency = ctx.cfg.sfu_latency as u64;
-                    if ctx.design.memoization {
-                        // §8.1: an assist warp hashes the inputs and probes
-                        // the shared-memory LUT; a hit replaces the SFU
-                        // computation with an on-chip load.
-                        use crate::caba::memoization as memo;
+                    let mut sfu_computes = true;
+                    if ctx.design.memoization && self.memo.enabled() {
+                        // §8.1: a high-priority assist warp hashes the
+                        // operand values and probes the shared-memory LUT
+                        // (`crate::memo`). A hit replaces the SFU
+                        // computation with an on-chip load — the SFU
+                        // pipeline is never occupied; a miss computes and
+                        // deploys a low-priority install warp, so the
+                        // result becomes reusable when that warp retires.
                         use crate::caba::subroutines::Subroutine;
-                        let uid = self.warps[w].uid;
-                        let pc = self.warps[w].pc;
-                        let sub = Subroutine { total: memo::LOOKUP_SUB_TOTAL, mem: memo::LOOKUP_SUB_MEM };
-                        if self
-                            .awc
-                            .trigger_decompress(now, sub, w, inst.dst)
-                            .is_some()
-                        {
-                            // Reuse the decompress (high-prio, reg-release)
-                            // machinery for the lookup; the register is
-                            // released when the lookup retires.
-                            let hit = memo::lut_hit(ctx.wl.spec.name, uid, pc);
+                        let key = self.memo_key(ctx.wl, w, iter, body_idx);
+                        let sub = Subroutine {
+                            total: memo::LOOKUP_SUB_TOTAL,
+                            mem: memo::LOOKUP_SUB_MEM,
+                        };
+                        if self.awc.trigger_lookup(now, sub, w, inst.dst).is_some() {
                             self.awc.stats.memo_lookups += 1;
-                            if hit {
-                                latency = memo::LUT_HIT_LATENCY;
-                                self.awc.stats.memo_hits += 1;
-                            } else {
-                                // Miss: SFU computes; a low-priority assist
-                                // warp installs the result for future reuse.
-                                let install = Subroutine {
-                                    total: memo::INSTALL_SUB_TOTAL,
-                                    mem: memo::INSTALL_SUB_MEM,
-                                };
-                                let _ = self.awc.trigger_low(
-                                    now + latency,
-                                    install,
-                                    w,
-                                    crate::caba::Payload::MemoInstall,
-                                );
+                            match self.memo.lookup(key, now) {
+                                memo::Lookup::Hit => {
+                                    latency = memo::LUT_HIT_LATENCY;
+                                    sfu_computes = false;
+                                    self.awc.stats.memo_hits += 1;
+                                }
+                                memo::Lookup::AliasHit => {
+                                    // Served from a different tuple's entry
+                                    // (truncated-tag aliasing): same timing
+                                    // as a hit, tracked separately.
+                                    latency = memo::LUT_HIT_LATENCY;
+                                    sfu_computes = false;
+                                    self.awc.stats.memo_hits += 1;
+                                    self.awc.stats.memo_alias_hits += 1;
+                                }
+                                memo::Lookup::Miss | memo::Lookup::Disabled => {
+                                    let install = Subroutine {
+                                        total: memo::INSTALL_SUB_TOTAL,
+                                        mem: memo::INSTALL_SUB_MEM,
+                                    };
+                                    let _ = self.awc.trigger_low(
+                                        now + latency,
+                                        install,
+                                        w,
+                                        crate::caba::Payload::MemoInstall { key },
+                                    );
+                                }
                             }
                             // The lookup's reg release would fight the SFU
                             // write; resolve by tracking the max: the reg is
@@ -459,10 +529,24 @@ impl Core {
                             self.warps[w].reg_ready[inst.dst as usize] = PENDING;
                             self.warps[w].blocked_until = 0;
                         } else {
+                            // AWT full: no lookup this time, plain SFU.
+                            self.awc.stats.memo_lookups_skipped += 1;
                             self.warps[w].reg_ready[inst.dst as usize] = now + latency;
                         }
                     } else {
                         self.warps[w].reg_ready[inst.dst as usize] = now + latency;
+                    }
+                    if sfu_computes {
+                        // Dispatch to the SFU pipeline: consume the issue
+                        // slot and occupy a free unit for the full
+                        // multi-cycle interval. On a memo hit neither
+                        // happens — the result comes from shared memory.
+                        slots.sfu -= 1;
+                        if let Some(t) =
+                            self.sfu_free_at.iter_mut().find(|t| **t <= now)
+                        {
+                            *t = now + self.sfu_issue_interval;
+                        }
                     }
                 }
                 Op::Ld(mem) => {
@@ -819,9 +903,10 @@ mod tests {
     fn core_constructs_with_table1_defaults() {
         let cfg = SimConfig::default();
         let d = Design::base();
-        let c = Core::new(0, &cfg, &d);
+        let c = Core::new(0, &cfg, &d, &MemoGeometry::disabled());
         assert_eq!(c.warps.len(), 48);
         assert_eq!(c.mshr_limit, 64);
         assert_eq!(c.l1.capacity_lines(), 128); // 16KB / 128B
+        assert!(!c.memo.enabled());
     }
 }

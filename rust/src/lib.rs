@@ -36,7 +36,14 @@
 //! * a calibrated **perf harness** ([`bench`]): `caba bench` measures the
 //!   hot paths (word-wise compressors, open-addressed oracle memo,
 //!   end-to-end simulator throughput), writes a machine-readable
-//!   `BENCH_*.json`, and gates CI against committed regression floors.
+//!   `BENCH_*.json`, and gates CI against committed regression floors;
+//! * a **value-based memoization subsystem** ([`memo`], §8.1): per-SM
+//!   set-associative LUTs carved from unutilized shared memory, probed
+//!   with hashes of real operand values ([`workload::values`]) at the SFU
+//!   issue path — hit rates emerge from the data (capacity, eviction and
+//!   tag aliasing all modeled) instead of being drawn from a table, and a
+//!   compute-bound workload suite (`workload::apps::MEMO_APPS`) exercises
+//!   the paper's second bottleneck axis (`caba fig memo`).
 //!
 //! See `DESIGN.md` (repo root) for the system inventory and
 //! `EXPERIMENTS.md` for paper-vs-measured results and the sweep-engine
@@ -51,6 +58,7 @@ pub mod core;
 pub mod energy;
 pub mod isa;
 pub mod mem;
+pub mod memo;
 pub mod report;
 pub mod runtime;
 pub mod sim;

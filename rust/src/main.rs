@@ -7,9 +7,9 @@
 //! caba table1 [--set k=v]...       # print the simulated configuration
 //! caba run --app PVC --design CABA-BDI [--scale 0.1]
 //!          [--oracle native|pjrt] [--set key=value]...
-//! caba fig <2|3|8|9|10|11|12|13|14|15|16|md> [--scale 0.1]
+//! caba fig <2|3|8|9|10|11|12|13|14|15|16|md|memo> [--scale 0.1]
 //!          [--jobs N] [--set key=value]...
-//! caba sweep [--apps PVC,MM|eval|all] [--designs Base,CABA-BDI|headline]
+//! caba sweep [--apps PVC,MM|eval|all|memo] [--designs Base,CABA-BDI|headline]
 //!            [--bw 0.5,1.0,2.0] [--scale 0.1] [--jobs N] [--set k=v]...
 //!            [--trace file.cabatrace]
 //! caba trace record <app> [--design D] [--scale S] [--out file] [--set...]
@@ -123,6 +123,7 @@ fn design_by_name(name: &str) -> Result<Design> {
         Design::caba_cache_compressed(1, 4),
         Design::caba_prefetch(),
         Design::caba_memo(),
+        Design::caba_memo_hybrid(),
     ];
     all.iter()
         .find(|d| d.name.eq_ignore_ascii_case(name))
@@ -133,8 +134,9 @@ fn design_by_name(name: &str) -> Result<Design> {
 /// Parse the `sweep --apps` selector.
 fn apps_by_selector(sel: &str) -> Result<Vec<&'static AppSpec>> {
     match sel {
-        "all" => Ok(apps::APPS.iter().collect()),
+        "all" => Ok(apps::APPS.iter().chain(apps::MEMO_APPS.iter()).collect()),
         "eval" => Ok(apps::eval_set()),
+        "memo" => Ok(apps::memo_suite()),
         list => list
             .split(',')
             .map(|n| {
@@ -166,12 +168,22 @@ fn run() -> Result<()> {
                     if a.memory_bound { "memory-bound" } else { "compute-bound" },
                 );
             }
+            println!(
+                "\n# Compute-bound memoization suite ({} apps, §8.1 — see `caba fig memo`)",
+                apps::MEMO_APPS.len()
+            );
+            for a in apps::MEMO_APPS {
+                println!(
+                    "   {:<6} {:?}  SFU-heavy, operand redundancy p={:.2} over {} classes",
+                    a.name, a.suite, a.values.p_shared, a.values.classes,
+                );
+            }
             println!("\n# Designs");
             for n in [
                 "Base", "HW-BDI-Mem", "HW-BDI", "CABA-BDI", "CABA-FPC", "CABA-CPack",
                 "CABA-BestOfAll", "Ideal-BDI", "CABA-BDI-UncompL2", "CABA-BDI-DirectLoad",
                 "CABA-BDI-L1-2x", "CABA-BDI-L1-4x", "CABA-BDI-L2-2x", "CABA-BDI-L2-4x",
-                "CABA-Prefetch", "CABA-Memo",
+                "CABA-Prefetch", "CABA-Memo", "CABA-BDI-Memo",
             ] {
                 println!("  {n}");
             }
@@ -206,7 +218,7 @@ fn run() -> Result<()> {
             let which = args
                 .positional
                 .get(1)
-                .ok_or_else(|| anyhow!("fig requires a figure id (2..16, md)"))?;
+                .ok_or_else(|| anyhow!("fig requires a figure id (2..16, md, memo)"))?;
             let ctx = RunCtx::with_cfg(args.config()?, args.scale(), args.jobs()?);
             let t0 = Instant::now();
             let out = match which.as_str() {
@@ -222,6 +234,7 @@ fn run() -> Result<()> {
                 "15" => figures::fig15_cache_compression(&ctx),
                 "16" => figures::fig16_optimizations(&ctx),
                 "md" => figures::md_cache_hitrate(&ctx),
+                "memo" => figures::fig_memo(&ctx),
                 other => bail!("unknown figure {other:?}"),
             };
             println!("{out}");
@@ -357,8 +370,8 @@ fn run() -> Result<()> {
             eprintln!(
                 "usage: caba <list|table1|run|fig|sweep|trace|bench> [...]\n  \
                  caba run --app PVC --design CABA-BDI [--scale 0.25] [--oracle native|pjrt]\n  \
-                 caba fig 8 [--scale 0.25] [--jobs N] [--set key=value]\n  \
-                 caba sweep --apps eval --designs headline --bw 0.5,1.0,2.0 [--jobs N]\n  \
+                 caba fig 8 [--scale 0.25] [--jobs N] [--set key=value]  (fig memo = §8.1 suite)\n  \
+                 caba sweep --apps eval|memo --designs headline --bw 0.5,1.0,2.0 [--jobs N]\n  \
                  caba sweep --trace run.cabatrace --designs headline [--bw 0.5,1.0,2.0]\n  \
                  caba trace record PVC [--design CABA-BDI] [--scale 0.25] [--out PVC.cabatrace]\n  \
                  caba trace replay run.cabatrace [--design CABA-BDI] [--set key=value]\n  \
@@ -508,6 +521,18 @@ fn print_run(app: &str, design: &str, stats: &caba::stats::SimStats, sim: &Simul
         stats.caba.compress_skipped,
         stats.caba.throttled_deploys
     );
+    if let Some(rate) = stats.caba.memo_hit_rate() {
+        let c = &stats.caba;
+        println!(
+            "memo LUT: lookups={} hit={:.1}% (alias {:.1}%) installs={} evictions={} skipped={}",
+            c.memo_lookups,
+            rate * 100.0,
+            c.memo_alias_hits as f64 / c.memo_lookups as f64 * 100.0,
+            c.memo_installs,
+            c.memo_evictions,
+            c.memo_lookups_skipped
+        );
+    }
     println!(
         "energy: total={:.2}mJ dram={:.2}mJ static={:.2}mJ  avg power={:.1}W  oracle={}",
         e.total_mj(),

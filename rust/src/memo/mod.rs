@@ -1,0 +1,379 @@
+//! Value-based memoization subsystem (paper §8.1).
+//!
+//! "In applications limited by available compute resources, memoization
+//! offers an opportunity to trade off computation for storage": assist
+//! warps hash the operand values of expensive (SFU) computations, probe a
+//! look-up table kept in the **unutilized shared memory**, and on a hit
+//! skip the computation entirely, loading the previous result from on-chip
+//! storage instead.
+//!
+//! Unlike the original reproduction stub (a per-app probability draw from
+//! a hard-coded redundancy table), this is a *real* capacity-bounded
+//! structure: one [`MemoLut`] per SM, set-associative, tagged by a hash of
+//! the actual operand values flowing through the workload
+//! ([`crate::workload::values`]). Hit rates **emerge** from the data:
+//!
+//! * capacity is carved from whatever shared memory the resident CTAs
+//!   leave unallocated ([`MemoGeometry::for_workload`]) — an app that
+//!   fills its shared memory gets a smaller (or no) LUT;
+//! * entries are installed on a miss by a *low-priority* assist warp, so
+//!   results only become reusable once the install retires;
+//! * eviction is LRU within a set, and tag truncation
+//!   (`memo_tag_bits`) models aliasing — a probe can match an entry
+//!   installed for a *different* operand tuple (counted separately as
+//!   `memo_alias_hits`).
+//!
+//! The trigger point is the SFU issue path in [`crate::core`]: a
+//! high-priority lookup subroutine (hash + tag-probe/load + select) runs
+//! through the [`crate::caba::Awc`]; the parent's destination register is
+//! released when the lookup retires. On a hit the SFU pipeline is never
+//! occupied (the result comes from shared memory); on a miss the SFU
+//! computes and an install subroutine writes the result back.
+
+use crate::config::SimConfig;
+use crate::sim::designs::Design;
+use crate::util::mix64;
+use crate::workload::Workload;
+
+/// Lookup subroutine: hash inputs (1 ALU), tag-probe+load (1 mem), select.
+pub const LOOKUP_SUB_TOTAL: u16 = 3;
+pub const LOOKUP_SUB_MEM: u16 = 1;
+/// Result-install subroutine on a miss (low priority): address + store.
+pub const INSTALL_SUB_TOTAL: u16 = 2;
+pub const INSTALL_SUB_MEM: u16 = 1;
+
+/// LUT hit latency: an on-chip shared-memory access (must beat the SFU).
+pub const LUT_HIT_LATENCY: u64 = 24;
+
+/// Shape of one SM's LUT, derived from the configuration and the
+/// workload's shared-memory occupancy. `sets == 0` means memoization is
+/// structurally impossible (no free shared memory, or the design doesn't
+/// memoize) — every probe reports [`Lookup::Disabled`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemoGeometry {
+    pub sets: usize,
+    pub ways: usize,
+    /// Modeled hardware cost per entry (tag + result + LRU bookkeeping).
+    pub entry_bytes: usize,
+    /// Stored-tag width; truncation below the full hash models aliasing.
+    pub tag_bits: u32,
+    /// Shared-memory bytes actually claimed (`sets × ways × entry_bytes`).
+    pub budget_bytes: usize,
+}
+
+impl MemoGeometry {
+    /// A zero-capacity geometry (non-memo designs, exhausted smem).
+    pub const fn disabled() -> MemoGeometry {
+        MemoGeometry { sets: 0, ways: 0, entry_bytes: 0, tag_bits: 0, budget_bytes: 0 }
+    }
+
+    /// Explicit geometry (tests and what-if tools). `tag_bits` is clamped
+    /// to `1..=63` like [`MemoGeometry::for_workload`] — a 64-bit shift in
+    /// `tag_of` would overflow.
+    pub fn explicit(sets: usize, ways: usize, entry_bytes: usize, tag_bits: u32) -> MemoGeometry {
+        MemoGeometry {
+            sets,
+            ways,
+            entry_bytes,
+            tag_bits: tag_bits.clamp(1, 63),
+            budget_bytes: sets * ways * entry_bytes,
+        }
+    }
+
+    /// Carve the LUT out of the shared memory the resident CTAs leave
+    /// unallocated, capped by the `memo_lut_bytes` budget knob. The
+    /// workload's occupancy decides how much is free: `smem_per_sm −
+    /// ctas_per_sm × smem_per_cta`.
+    pub fn for_workload(cfg: &SimConfig, design: &Design, wl: &Workload) -> MemoGeometry {
+        if !design.memoization {
+            return MemoGeometry::disabled();
+        }
+        let used = wl.occ.ctas_per_sm as usize * wl.spec.smem_per_cta as usize;
+        let avail = cfg.smem_per_sm.saturating_sub(used);
+        let budget = avail.min(cfg.memo_lut_bytes);
+        let entry_bytes = cfg.memo_entry_bytes.max(1);
+        let ways = cfg.memo_lut_ways.max(1);
+        let sets = budget / entry_bytes / ways;
+        if sets == 0 {
+            return MemoGeometry::disabled();
+        }
+        MemoGeometry {
+            sets,
+            ways,
+            entry_bytes,
+            tag_bits: cfg.memo_tag_bits.clamp(1, 63),
+            budget_bytes: sets * ways * entry_bytes,
+        }
+    }
+
+    pub fn capacity_entries(&self) -> usize {
+        self.sets * self.ways
+    }
+}
+
+/// Outcome of one LUT probe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lookup {
+    /// Stored tag matched and the entry really was installed for this
+    /// operand tuple.
+    Hit,
+    /// Stored (truncated) tag matched but the entry belongs to a
+    /// *different* operand tuple — the aliasing the tag width allows.
+    AliasHit,
+    Miss,
+    /// The LUT has zero capacity (no free shared memory).
+    Disabled,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    /// Full operand key — model-side bookkeeping to *detect* aliasing;
+    /// the modeled hardware stores only the truncated tag.
+    full: u64,
+    tag: u64,
+    last_used: u64,
+    valid: bool,
+}
+
+impl Entry {
+    const EMPTY: Entry = Entry { full: 0, tag: 0, last_used: 0, valid: false };
+}
+
+/// One SM's memoization look-up table. All counters (lookups, hits,
+/// aliases, installs, evictions) are tallied by the core into
+/// [`crate::stats::CabaStats`] — install/evict events via
+/// [`MemoLut::install`]'s return value — so the stats have exactly one
+/// home next to the other assist-warp activity.
+pub struct MemoLut {
+    geom: MemoGeometry,
+    entries: Vec<Entry>,
+    occupancy: usize,
+}
+
+impl MemoLut {
+    pub fn new(geom: MemoGeometry) -> MemoLut {
+        MemoLut {
+            entries: vec![Entry::EMPTY; geom.capacity_entries()],
+            geom,
+            occupancy: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.geom.sets > 0
+    }
+
+    pub fn geometry(&self) -> &MemoGeometry {
+        &self.geom
+    }
+
+    /// Valid entries currently resident (≤ [`MemoGeometry::capacity_entries`]).
+    pub fn occupancy(&self) -> usize {
+        self.occupancy
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.geom.capacity_entries()
+    }
+
+    fn set_of(&self, key: u64) -> usize {
+        (mix64(key) as usize) % self.geom.sets
+    }
+
+    fn tag_of(&self, key: u64) -> u64 {
+        mix64(key ^ 0xA5A5_5A5A_C0FF_EE00) & ((1u64 << self.geom.tag_bits) - 1)
+    }
+
+    /// Non-mutating probe: would `key` hit right now? Used by the
+    /// scheduler's structural check — a would-hit SFU op bypasses the busy
+    /// SFU pipeline (the §8.1 point: storage instead of computation).
+    pub fn would_hit(&self, key: u64) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let set = self.set_of(key);
+        let tag = self.tag_of(key);
+        let base = set * self.geom.ways;
+        self.entries[base..base + self.geom.ways]
+            .iter()
+            .any(|e| e.valid && e.tag == tag)
+    }
+
+    /// Probe for `key` at cycle `now` (a hit refreshes the entry's LRU
+    /// position — the hardware would, too).
+    pub fn lookup(&mut self, key: u64, now: u64) -> Lookup {
+        if !self.enabled() {
+            return Lookup::Disabled;
+        }
+        let set = self.set_of(key);
+        let tag = self.tag_of(key);
+        let base = set * self.geom.ways;
+        for e in &mut self.entries[base..base + self.geom.ways] {
+            if e.valid && e.tag == tag {
+                e.last_used = now;
+                return if e.full == key { Lookup::Hit } else { Lookup::AliasHit };
+            }
+        }
+        Lookup::Miss
+    }
+
+    /// Install the result for `key` (called when the install assist warp
+    /// retires). Returns true when a valid entry was evicted to make room.
+    pub fn install(&mut self, key: u64, now: u64) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let set = self.set_of(key);
+        let tag = self.tag_of(key);
+        let base = set * self.geom.ways;
+        let ways = &mut self.entries[base..base + self.geom.ways];
+        // 1. Same tag already present (a racing warp installed first, or an
+        //    alias): refresh in place — occupancy unchanged, no eviction.
+        if let Some(e) = ways.iter_mut().find(|e| e.valid && e.tag == tag) {
+            e.full = key;
+            e.last_used = now;
+            return false;
+        }
+        // 2. Free way.
+        if let Some(e) = ways.iter_mut().find(|e| !e.valid) {
+            *e = Entry { full: key, tag, last_used: now, valid: true };
+            self.occupancy += 1;
+            return false;
+        }
+        // 3. Evict LRU (lowest last_used; ties resolve to the lowest way —
+        //    deterministic).
+        let victim = (0..ways.len())
+            .min_by_key(|&i| (ways[i].last_used, i))
+            .expect("ways is non-empty when enabled");
+        ways[victim] = Entry { full: key, tag, last_used: now, valid: true };
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lut(sets: usize, ways: usize) -> MemoLut {
+        MemoLut::new(MemoGeometry::explicit(sets, ways, 16, 16))
+    }
+
+    #[test]
+    fn lookup_install_lifecycle() {
+        let mut l = lut(4, 2);
+        assert_eq!(l.lookup(42, 0), Lookup::Miss);
+        assert!(!l.install(42, 1), "first install must not evict");
+        assert_eq!(l.lookup(42, 2), Lookup::Hit);
+        assert_eq!(l.occupancy(), 1);
+    }
+
+    #[test]
+    fn capacity_bounded_with_eviction() {
+        let mut l = lut(2, 2);
+        let mut evictions = 0;
+        for k in 0..64u64 {
+            if l.lookup(k, k) == Lookup::Miss && l.install(k, k) {
+                evictions += 1;
+            }
+            assert!(l.occupancy() <= l.capacity());
+        }
+        assert_eq!(l.occupancy(), l.capacity());
+        assert!(evictions > 0);
+    }
+
+    #[test]
+    fn lru_keeps_hot_entries() {
+        // One set, two ways: keep key 1 hot; keys 2,3 fight over the other way.
+        let mut l = lut(1, 2);
+        l.install(1, 0);
+        l.install(2, 1);
+        assert_eq!(l.lookup(1, 2), Lookup::Hit); // refresh key 1
+        l.install(3, 3); // must evict key 2, not 1
+        assert_eq!(l.lookup(1, 4), Lookup::Hit);
+        assert_eq!(l.lookup(2, 5), Lookup::Miss);
+        assert_eq!(l.lookup(3, 6), Lookup::Hit);
+    }
+
+    #[test]
+    fn narrow_tags_alias() {
+        // 1-bit tags: distinct keys in the same set collide almost surely.
+        let mut l = MemoLut::new(MemoGeometry::explicit(1, 4, 16, 1));
+        l.install(7, 0);
+        let aliased = (0..64u64)
+            .filter(|&k| k != 7 && matches!(l.lookup(k, 1), Lookup::AliasHit))
+            .count();
+        assert!(aliased > 0, "1-bit tags must alias");
+        // Wide tags on the same keys: no alias observed.
+        let mut w = MemoLut::new(MemoGeometry::explicit(1, 4, 16, 48));
+        w.install(7, 0);
+        let aliased = (0..64u64)
+            .filter(|&k| k != 7 && matches!(w.lookup(k, 1), Lookup::AliasHit))
+            .count();
+        assert_eq!(aliased, 0);
+    }
+
+    #[test]
+    fn bigger_lut_hits_more_on_the_same_stream() {
+        // Capacity sensitivity, deterministically: the same head-skewed
+        // operand stream through a 1024-entry LUT vs a 16-entry LUT.
+        use crate::workload::values::{operand_key, ValueSpec};
+        let vs = ValueSpec::shared(1.0, 4096);
+        let run = |mut lut: MemoLut| -> u64 {
+            let mut hits = 0;
+            for i in 0..6000u64 {
+                let key = operand_key(&vs, 0xCABA, i % 32, (i / 32) as u32, 3);
+                match lut.lookup(key, i) {
+                    Lookup::Hit | Lookup::AliasHit => hits += 1,
+                    Lookup::Miss => {
+                        lut.install(key, i);
+                    }
+                    Lookup::Disabled => unreachable!(),
+                }
+            }
+            hits
+        };
+        let big = run(MemoLut::new(MemoGeometry::explicit(256, 4, 16, 16)));
+        let small = run(MemoLut::new(MemoGeometry::explicit(4, 4, 16, 16)));
+        assert!(
+            big > small * 3 / 2,
+            "capacity should move hits: big {big} vs small {small}"
+        );
+        assert!(small > 0, "even 16 entries must catch the hottest classes");
+    }
+
+    #[test]
+    fn disabled_geometry_never_hits_or_installs() {
+        let mut l = MemoLut::new(MemoGeometry::disabled());
+        assert!(!l.enabled());
+        assert_eq!(l.lookup(1, 0), Lookup::Disabled);
+        assert!(!l.install(1, 0));
+        assert!(!l.would_hit(1));
+        assert_eq!(l.occupancy(), 0);
+    }
+
+    #[test]
+    fn geometry_from_workload_respects_smem_budget() {
+        use crate::workload::{apps, Workload};
+        let cfg = SimConfig::default();
+        // smem-free app: full budget.
+        let wl = Workload::build(apps::find("FRAG").unwrap(), &cfg, 0.05);
+        let g = MemoGeometry::for_workload(&cfg, &Design::caba_memo(), &wl);
+        assert!(g.sets > 0);
+        assert_eq!(g.budget_bytes, cfg.memo_lut_bytes);
+        assert!(g.budget_bytes <= cfg.smem_per_sm);
+        // smem-hungry app: LUT shrinks to what's left.
+        let wl = Workload::build(apps::find("hs").unwrap(), &cfg, 0.05);
+        let used = wl.occ.ctas_per_sm as usize * wl.spec.smem_per_cta as usize;
+        let g = MemoGeometry::for_workload(&cfg, &Design::caba_memo(), &wl);
+        assert!(g.budget_bytes <= cfg.smem_per_sm - used);
+        // Non-memo design: disabled.
+        let g = MemoGeometry::for_workload(&cfg, &Design::base(), &wl);
+        assert_eq!(g, MemoGeometry::disabled());
+    }
+
+    #[test]
+    fn lookup_cheaper_than_sfu() {
+        // The trade only makes sense if the LUT path beats the SFU latency.
+        assert!(LUT_HIT_LATENCY < SimConfig::default().sfu_latency as u64);
+    }
+}

@@ -463,6 +463,71 @@ pub fn fig16_optimizations(ctx: &RunCtx) -> String {
     )
 }
 
+// ------------------------------------------------------------------ §8.1
+
+/// Memoization on the compute-bound suite: the §8.1-style figure the paper
+/// leaves to future work. Speedups of CABA-Memo and the compress+memo
+/// hybrid over Base, plus the *measured* per-app LUT behaviour (hit /
+/// alias / eviction rates and install counts) — every number here emerges
+/// from operand values flowing through the per-SM LUTs.
+pub fn fig_memo(ctx: &RunCtx) -> String {
+    let set = apps::memo_suite();
+    let designs = [
+        Design::base(),
+        Design::caba_memo(),
+        Design::caba_memo_hybrid(),
+    ];
+    ctx.warm(&matrix(&set, &designs, &[1.0]));
+    let base: Vec<f64> = set
+        .iter()
+        .map(|a| ctx.point(a, Design::base(), 1.0).ipc())
+        .collect();
+    let series: Vec<Series> = designs[1..]
+        .iter()
+        .map(|d| Series {
+            label: d.name.to_string(),
+            values: set
+                .iter()
+                .enumerate()
+                .map(|(i, a)| ctx.point(a, *d, 1.0).ipc() / base[i])
+                .collect(),
+        })
+        .collect();
+    let mut lut = super::Table::new([
+        "app", "p_shared", "classes", "lookups", "hit%", "alias%", "installs", "evict%", "skipped",
+    ]);
+    for app in &set {
+        let s = ctx.point(app, Design::caba_memo(), 1.0);
+        let c = s.caba;
+        let pct = |num: u64, den: u64| {
+            if den == 0 {
+                "n/a".to_string()
+            } else {
+                format!("{:.1}", num as f64 / den as f64 * 100.0)
+            }
+        };
+        lut.row([
+            app.name.to_string(),
+            format!("{:.2}", app.values.p_shared),
+            app.values.classes.to_string(),
+            c.memo_lookups.to_string(),
+            pct(c.memo_hits, c.memo_lookups),
+            pct(c.memo_alias_hits, c.memo_lookups),
+            c.memo_installs.to_string(),
+            pct(c.memo_evictions, c.memo_installs),
+            c.memo_lookups_skipped.to_string(),
+        ]);
+    }
+    format!(
+        "# §8.1 — memoization speedup on the compute-bound suite (vs Base)\n\
+         hit rates are measured through the per-SM LUT model (capacity carved\n\
+         from unutilized shared memory), not drawn from a redundancy table\n{}\
+         \n## Measured LUT behaviour (CABA-Memo)\n{}",
+        figure_matrix(&names(&set), &series, 3),
+        lut.render()
+    )
+}
+
 // ---------------------------------------------------------------- §5.3.2
 
 /// MD-cache hit rate across the eval set.

@@ -83,6 +83,17 @@ impl Design {
         }
     }
 
+    /// Compress + memoize hybrid: CABA-BDI's full compression stack with
+    /// §8.1 memoization on top — the framework attacking both bottleneck
+    /// axes at once with one assist-warp engine.
+    pub const fn caba_memo_hybrid() -> Design {
+        Design {
+            name: "CABA-BDI-Memo",
+            memoization: true,
+            ..Design::caba(Algo::Bdi)
+        }
+    }
+
     /// HW-BDI-Mem: dedicated logic at the MCs; DRAM link only (prior work
     /// [100]-style). Data crosses the interconnect uncompressed.
     pub const fn hw_bdi_mem() -> Design {
@@ -230,5 +241,14 @@ mod tests {
         assert!(Design::caba_direct_load().l1_holds_compressed());
         assert!(Design::caba_cache_compressed(2, 1).l1_holds_compressed());
         assert_eq!(Design::caba_cache_compressed(1, 4).l2_tag_mult, 4);
+    }
+
+    #[test]
+    fn memo_designs() {
+        let m = Design::caba_memo();
+        assert!(m.memoization && !m.compression_enabled() && m.uses_assist_warps());
+        let h = Design::caba_memo_hybrid();
+        assert!(h.memoization && h.mem_compression && h.icnt_compression);
+        assert_eq!(h.name, "CABA-BDI-Memo");
     }
 }

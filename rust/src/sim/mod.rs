@@ -194,7 +194,12 @@ impl Simulator {
             0
         };
         let wl = Workload::build_with_extra_regs(app, &cfg, scale, extra_regs);
-        let cores = (0..cfg.n_sms).map(|i| Core::new(i, &cfg, &design)).collect();
+        // Memo LUT geometry is workload-dependent: it is carved from the
+        // shared memory the resident CTAs leave unallocated.
+        let memo_geom = crate::memo::MemoGeometry::for_workload(&cfg, &design, &wl);
+        let cores = (0..cfg.n_sms)
+            .map(|i| Core::new(i, &cfg, &design, &memo_geom))
+            .collect();
         let mem = MemSystem::new(&cfg, &design);
         let mut sim = Simulator {
             cores,
@@ -294,7 +299,10 @@ impl Simulator {
         };
         let scale = tracedata.meta.scale;
         let wl = Workload::build_replay(&tracedata, &cfg, extra_regs)?;
-        let cores = (0..cfg.n_sms).map(|i| Core::new(i, &cfg, &design)).collect();
+        let memo_geom = crate::memo::MemoGeometry::for_workload(&cfg, &design, &wl);
+        let cores = (0..cfg.n_sms)
+            .map(|i| Core::new(i, &cfg, &design, &memo_geom))
+            .collect();
         let mem = MemSystem::new(&cfg, &design);
         Ok(Simulator {
             cores,
@@ -462,6 +470,10 @@ impl Simulator {
             s.caba.prefetches_issued += core.awc.stats.prefetches_issued;
             s.caba.memo_lookups += core.awc.stats.memo_lookups;
             s.caba.memo_hits += core.awc.stats.memo_hits;
+            s.caba.memo_alias_hits += core.awc.stats.memo_alias_hits;
+            s.caba.memo_installs += core.awc.stats.memo_installs;
+            s.caba.memo_evictions += core.awc.stats.memo_evictions;
+            s.caba.memo_lookups_skipped += core.awc.stats.memo_lookups_skipped;
         }
         for d in &self.mem.dram {
             s.dram.reads += d.stats.reads;

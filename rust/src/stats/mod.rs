@@ -135,9 +135,34 @@ pub struct CabaStats {
     pub killed: u64,
     /// §8.2 prefetching: lines prefetched by assist warps.
     pub prefetches_issued: u64,
-    /// §8.1 memoization: LUT lookups and hits.
+    /// §8.1 memoization (`crate::memo`): LUT probes by lookup assist warps.
     pub memo_lookups: u64,
+    /// Probes whose stored tag matched a resident entry (alias hits
+    /// included — the modeled hardware serves them either way).
     pub memo_hits: u64,
+    /// Of the hits, probes that matched a *different* tuple's entry — the
+    /// aliasing the truncated tag width (`memo_tag_bits`) allows.
+    pub memo_alias_hits: u64,
+    /// Results installed into the LUT by retired install assist warps.
+    pub memo_installs: u64,
+    /// Valid LUT entries evicted (LRU) to make room for an install.
+    pub memo_evictions: u64,
+    /// SFU ops that bypassed the LUT because the AWT had no free row for
+    /// the lookup assist warp.
+    pub memo_lookups_skipped: u64,
+}
+
+impl CabaStats {
+    /// Measured LUT hit rate (alias hits included — they return a result
+    /// in the modeled hardware, right or wrong). `None` when the design
+    /// never probed.
+    pub fn memo_hit_rate(&self) -> Option<f64> {
+        if self.memo_lookups == 0 {
+            None
+        } else {
+            Some(self.memo_hits as f64 / self.memo_lookups as f64)
+        }
+    }
 }
 
 /// MD cache (per-MC compression metadata cache, §5.3.2).

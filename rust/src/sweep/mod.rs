@@ -119,10 +119,16 @@ impl SweepJob {
     /// The design that will actually execute: the paper's profiler
     /// disables compression for apps where it is unprofitable (§6), so
     /// those points collapse onto Base — normalizing *before* keying makes
-    /// them share one cache entry.
+    /// them share one cache entry. Memoization is orthogonal to data
+    /// compressibility: a compress+memo hybrid on an incompressible app
+    /// keeps its memo half and collapses onto CABA-Memo, never onto Base.
     fn effective_design(&self) -> Design {
         if self.design.compression_enabled() && !Simulator::compression_profitable(self.app) {
-            Design::base()
+            if self.design.memoization {
+                Design::caba_memo()
+            } else {
+                Design::base()
+            }
         } else {
             self.design
         }
@@ -341,6 +347,16 @@ mod tests {
         let caba = SweepJob::new(app, Design::caba(Algo::Bdi), tiny_cfg(), 0.01);
         let base = SweepJob::new(app, Design::base(), tiny_cfg(), 0.01);
         assert_eq!(caba.key(), base.key());
+    }
+
+    #[test]
+    fn unprofitable_hybrid_collapses_to_memo_not_base() {
+        let app = apps::find("MCX").unwrap(); // incompressible, compute-bound
+        let hybrid = SweepJob::new(app, Design::caba_memo_hybrid(), tiny_cfg(), 0.01);
+        let memo = SweepJob::new(app, Design::caba_memo(), tiny_cfg(), 0.01);
+        let base = SweepJob::new(app, Design::base(), tiny_cfg(), 0.01);
+        assert_eq!(hybrid.key(), memo.key());
+        assert_ne!(hybrid.key(), base.key());
     }
 
     #[test]

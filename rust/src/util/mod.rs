@@ -28,6 +28,16 @@ pub fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
+/// SplitMix64 finalizer: the shared bit-mixing step behind the workload
+/// address generators, the operand-value keys and the memo LUT's set/tag
+/// hashes. One definition — key streams in different modules must never
+/// silently diverge from a constant tweak applied in only one place.
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -13,15 +13,19 @@
 //! match the paper; see EXPERIMENTS.md.
 
 use super::datagen::DataPattern;
+use super::values::ValueSpec;
 use crate::isa::AccessKind;
 
-/// Benchmark suite of origin (Table of §6).
+/// Benchmark suite of origin (Table of §6). `Synthetic` marks the
+/// compute-bound memoization suite ([`MEMO_APPS`]) — μ-kernels built for
+/// the §8.1 evaluation rather than ported from a published suite.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Suite {
     CudaSdk,
     Rodinia,
     Mars,
     Lonestar,
+    Synthetic,
 }
 
 /// One array the kernel touches.
@@ -78,6 +82,9 @@ pub struct AppSpec {
     pub iters: u32,
     pub body: BodySpec,
     pub arrays: &'static [ArraySpec],
+    /// Operand-redundancy class of the SFU computations (drives the memo
+    /// LUT of `crate::memo`; [`ValueSpec::UNIQUE`] = nothing to memoize).
+    pub values: ValueSpec,
 }
 
 // --- shared pattern constants (Mix needs 'static refs) ---
@@ -122,6 +129,19 @@ macro_rules! app {
      loads=$loads:expr, stores=$stores:expr,
      ialu=$ialu:expr, falu=$falu:expr, fma=$fma:expr, sfu=$sfu:expr,
      arrays=$arrays:expr) => {
+        app!($name, $suite, mem = $mb, eval = $ev, regs = $regs,
+            tpc = $tpc, smem = $smem, ctas = $ctas, iters = $iters,
+            loads = $loads, stores = $stores,
+            ialu = $ialu, falu = $falu, fma = $fma, sfu = $sfu,
+            values = ValueSpec::UNIQUE,
+            arrays = $arrays)
+    };
+    ($name:expr, $suite:expr, mem=$mb:expr, eval=$ev:expr, regs=$regs:expr,
+     tpc=$tpc:expr, smem=$smem:expr, ctas=$ctas:expr, iters=$iters:expr,
+     loads=$loads:expr, stores=$stores:expr,
+     ialu=$ialu:expr, falu=$falu:expr, fma=$fma:expr, sfu=$sfu:expr,
+     values=$vals:expr,
+     arrays=$arrays:expr) => {
         AppSpec {
             name: $name,
             suite: $suite,
@@ -141,6 +161,7 @@ macro_rules! app {
                 sfu: $sfu,
             },
             arrays: $arrays,
+            values: $vals,
         }
     };
 }
@@ -203,10 +224,12 @@ pub static APPS: &[AppSpec] = &[
             ArraySpec { footprint_lines: 1 << 14, pattern: NARROW },
         ]),
     // RAY: ray tracing; SFU-heavy compute-bound but compressible scene data.
+    // Shading reuse across adjacent rays ([8]-style redundancy).
     app!("RAY", Suite::CudaSdk, mem = false, eval = true, regs = 40, tpc = 128, smem = 0,
         ctas = 240, iters = 112,
         loads = &[co_reuse(0, 4)], stores = &[co(1)],
         ialu = 2, falu = 4, fma = 4, sfu = 2,
+        values = ValueSpec::shared(0.40, 4096),
         arrays = &[
             ArraySpec { footprint_lines: 1 << 12, pattern: MIX_FLOAT },
             ArraySpec { footprint_lines: 1 << 14, pattern: FGRID },
@@ -252,6 +275,7 @@ pub static APPS: &[AppSpec] = &[
         ctas = 240, iters = 128,
         loads = &[co_reuse(0, 4)], stores = &[co(1)],
         ialu = 28, falu = 0, fma = 0, sfu = 1,
+        values = ValueSpec::shared(0.20, 16384),
         arrays = &[
             ArraySpec { footprint_lines: 1 << 11, pattern: RANDOM },
             ArraySpec { footprint_lines: 1 << 12, pattern: RANDOM },
@@ -294,6 +318,7 @@ pub static APPS: &[AppSpec] = &[
         ctas = 300, iters = 120,
         loads = &[co(0), co_reuse(1, 4)], stores = &[co(2)],
         ialu = 1, falu = 2, fma = 6, sfu = 1,
+        values = ValueSpec::shared(0.30, 2048),
         arrays = &[
             ArraySpec { footprint_lines: 1 << 14, pattern: MIX_FLOAT },
             ArraySpec { footprint_lines: 1 << 12, pattern: FGRID },
@@ -304,6 +329,7 @@ pub static APPS: &[AppSpec] = &[
         ctas = 300, iters = 104,
         loads = &[co(0), co(1)], stores = &[co(2)],
         ialu = 1, falu = 4, fma = 3, sfu = 2,
+        values = ValueSpec::shared(0.35, 4096),
         arrays = &[
             ArraySpec { footprint_lines: 1 << 14, pattern: FGRID },
             ArraySpec { footprint_lines: 1 << 14, pattern: FGRID },
@@ -382,6 +408,7 @@ pub static APPS: &[AppSpec] = &[
         ctas = 280, iters = 104,
         loads = &[scatter(0, 6), co_reuse(1, 4)], stores = &[co(2)],
         ialu = 2, falu = 3, fma = 4, sfu = 1,
+        values = ValueSpec::shared(0.30, 8192),
         arrays = &[
             ArraySpec { footprint_lines: 1 << 14, pattern: PTR3 },
             ArraySpec { footprint_lines: 1 << 12, pattern: MIX_FLOAT },
@@ -403,6 +430,7 @@ pub static APPS: &[AppSpec] = &[
         ctas = 360, iters = 112,
         loads = &[scatter(0, 6), co(1)], stores = &[co(1)],
         ialu = 2, falu = 3, fma = 1, sfu = 1,
+        values = ValueSpec::shared(0.15, 16384),
         arrays = &[
             ArraySpec { footprint_lines: 1 << 15, pattern: MIX_GRAPH },
             ArraySpec { footprint_lines: 1 << 15, pattern: MIX_FLOAT },
@@ -423,20 +451,91 @@ pub static APPS: &[AppSpec] = &[
         ctas = 240, iters = 104,
         loads = &[scatter(0, 4)], stores = &[co(1)],
         ialu = 2, falu = 2, fma = 2, sfu = 4,
+        values = ValueSpec::shared(0.50, 2048),
         arrays = &[
             ArraySpec { footprint_lines: 1 << 14, pattern: MIX_FLOAT },
             ArraySpec { footprint_lines: 1 << 13, pattern: FGRID },
         ]),
 ];
 
-/// Look up an app by (case-sensitive) name.
+/// The compute-bound memoization suite (§8.1): SFU-heavy, transcendental
+/// μ-kernels with *tunable* operand-value redundancy, built to exercise the
+/// paper's second bottleneck axis. Small, cache-resident footprints keep
+/// them compute-limited; shared memory stays free so the memo LUT gets its
+/// full budget. They live outside [`APPS`] — the paper's 27-app pool and
+/// its Fig. 2/3 counts are untouched. (`in_eval_set` here marks data
+/// compressibility — it gates whether the compress+memo hybrid design
+/// leaves compression enabled, exactly like the §6 profiler does.)
+pub static MEMO_APPS: &[AppSpec] = &[
+    // FRAG: fragment-shading proxy; the paper's §8.1 poster child — the
+    // redundancy studies it cites ([8, 13, 98]) measure fragment /
+    // transcendental value streams. High redundancy, head-heavy pool.
+    app!("FRAG", Suite::Synthetic, mem = false, eval = true, regs = 34, tpc = 256, smem = 0,
+        ctas = 280, iters = 112,
+        loads = &[co_reuse(0, 4)], stores = &[co(1)],
+        ialu = 1, falu = 3, fma = 3, sfu = 6,
+        values = ValueSpec::shared(0.70, 2048),
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 12, pattern: MIX_FLOAT },
+            ArraySpec { footprint_lines: 1 << 13, pattern: FGRID },
+        ]),
+    // NNA: neural-activation layer; sigmoid/tanh on clustered pre-sums.
+    app!("NNA", Suite::Synthetic, mem = false, eval = true, regs = 30, tpc = 256, smem = 2048,
+        ctas = 300, iters = 120,
+        loads = &[co(0), co_reuse(1, 8)], stores = &[co(2)],
+        ialu = 1, falu = 2, fma = 4, sfu = 4,
+        values = ValueSpec::shared(0.55, 512),
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 12, pattern: MIX_FLOAT },
+            ArraySpec { footprint_lines: 1 << 11, pattern: FGRID },
+            ArraySpec { footprint_lines: 1 << 12, pattern: MIX_FLOAT },
+        ]),
+    // GEO: geometry normalization (rsqrt-heavy); moderate redundancy over
+    // a pool larger than any plausible LUT — the eviction stress case.
+    app!("GEO", Suite::Synthetic, mem = false, eval = true, regs = 32, tpc = 128, smem = 0,
+        ctas = 260, iters = 112,
+        loads = &[co_reuse(0, 2)], stores = &[co(1)],
+        ialu = 2, falu = 3, fma = 2, sfu = 5,
+        values = ValueSpec::shared(0.40, 8192),
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 12, pattern: FGRID },
+            ArraySpec { footprint_lines: 1 << 12, pattern: FGRID },
+        ]),
+    // MCX: Monte Carlo transport; log/exp on fresh random draws — the
+    // near-zero-redundancy control (memoization must *not* pay here).
+    app!("MCX", Suite::Synthetic, mem = false, eval = false, regs = 36, tpc = 128, smem = 0,
+        ctas = 240, iters = 120,
+        loads = &[co_reuse(0, 4)], stores = &[co(1)],
+        ialu = 3, falu = 3, fma = 2, sfu = 5,
+        values = ValueSpec::shared(0.05, 1 << 16),
+        arrays = &[
+            ArraySpec { footprint_lines: 1 << 11, pattern: RANDOM },
+            ArraySpec { footprint_lines: 1 << 12, pattern: RANDOM },
+        ]),
+];
+
+/// Look up an app by (case-sensitive) name, across the paper pool and the
+/// compute-bound memoization suite.
 pub fn find(name: &str) -> Option<&'static AppSpec> {
-    APPS.iter().find(|a| a.name == name)
+    APPS.iter()
+        .chain(MEMO_APPS.iter())
+        .find(|a| a.name == name)
 }
 
 /// The bandwidth-sensitive evaluation set used in Figs. 8–16.
 pub fn eval_set() -> Vec<&'static AppSpec> {
     APPS.iter().filter(|a| a.in_eval_set).collect()
+}
+
+/// The §8.1 memoization evaluation set: the synthetic compute-bound suite
+/// plus the paper pool's most SFU-heavy members (dmr's data-dependence
+/// stalls are called out in §3; RAY and sr carry transcendental shading /
+/// diffusion terms).
+pub fn memo_suite() -> Vec<&'static AppSpec> {
+    MEMO_APPS
+        .iter()
+        .chain(["dmr", "RAY", "sr"].into_iter().map(|n| find(n).expect("memo suite app exists")))
+        .collect()
 }
 
 /// Placeholder profile for **imported trace-driven** workloads (`caba
@@ -458,6 +557,7 @@ pub static TRACE_SPEC: AppSpec = AppSpec {
     iters: 32,
     body: BodySpec { loads: &[], stores: &[], ialu: 2, falu: 0, fma: 0, sfu: 0 },
     arrays: &[],
+    values: ValueSpec::UNIQUE,
 };
 
 #[cfg(test)]
@@ -474,15 +574,47 @@ mod tests {
 
     #[test]
     fn names_unique() {
-        let mut names: Vec<_> = APPS.iter().map(|a| a.name).collect();
+        let mut names: Vec<_> =
+            APPS.iter().chain(MEMO_APPS.iter()).map(|a| a.name).collect();
         names.sort();
         names.dedup();
-        assert_eq!(names.len(), APPS.len());
+        assert_eq!(names.len(), APPS.len() + MEMO_APPS.len());
+    }
+
+    #[test]
+    fn memo_suite_is_sfu_heavy_and_compute_bound() {
+        assert_eq!(MEMO_APPS.len(), 4);
+        for app in MEMO_APPS {
+            assert!(!app.memory_bound, "{}: memo suite must be compute-bound", app.name);
+            assert!(app.body.sfu >= 4, "{}: needs SFU work to memoize", app.name);
+            assert!(app.values.p_shared > 0.0, "{}: needs a value spec", app.name);
+            assert_eq!(app.suite, Suite::Synthetic);
+        }
+        // The suite spans the redundancy axis: a high-redundancy member and
+        // a near-unique control.
+        assert!(find("FRAG").unwrap().values.p_shared >= 0.6);
+        assert!(find("MCX").unwrap().values.p_shared <= 0.1);
+        // Suite accessor resolves everything.
+        assert_eq!(memo_suite().len(), MEMO_APPS.len() + 3);
+    }
+
+    #[test]
+    fn paper_pool_sfu_apps_carry_value_specs() {
+        // The old hard-coded redundancy table is gone; its calibrations now
+        // live on the specs as *generator parameters*, measured through the
+        // LUT instead of drawn.
+        for name in ["dmr", "RAY", "sr", "bh", "bp", "STO", "sp"] {
+            let app = find(name).unwrap();
+            assert!(app.body.sfu > 0, "{name}");
+            assert!(app.values.p_shared > 0.0, "{name}: SFU app without a value spec");
+        }
+        // Apps with no SFU work have nothing to memoize.
+        assert_eq!(find("PVC").unwrap().values, ValueSpec::UNIQUE);
     }
 
     #[test]
     fn array_refs_in_range() {
-        for app in APPS {
+        for app in APPS.iter().chain(MEMO_APPS.iter()) {
             for m in app.body.loads.iter().chain(app.body.stores) {
                 assert!(
                     (m.array as usize) < app.arrays.len(),

@@ -13,12 +13,13 @@
 
 pub mod apps;
 pub mod datagen;
+pub mod values;
 
 use crate::config::SimConfig;
 use crate::compress::Line;
 use crate::isa::{AccessKind, Inst, MemAccess, Op, Program, ProgramRef, NO_REG};
 use crate::trace::{self, record::TraceRecorder, replay::TraceData, TraceKind};
-use crate::util::rng::Rng;
+use crate::util::{mix64, rng::Rng};
 use anyhow::{bail, Result};
 use apps::AppSpec;
 use datagen::DataPattern;
@@ -326,12 +327,6 @@ impl Workload {
 fn name_hash(name: &str) -> u64 {
     name.bytes()
         .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x1000_0000_01b3))
-}
-
-fn mix64(mut z: u64) -> u64 {
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
 }
 
 /// Build the loop body from the instruction mix: loads first (results

@@ -1,0 +1,136 @@
+//! Operand-value generation for SFU computations.
+//!
+//! The memoization subsystem (`crate::memo`) probes its LUT with a hash of
+//! the *actual operand values* an SFU instruction consumes. We cannot run
+//! the CUDA binaries, so — exactly like `datagen` reproduces each array's
+//! value-distribution class — each app carries a [`ValueSpec`] reproducing
+//! the *operand redundancy* class its transcendental computations exhibit
+//! (the fragment-shader / transcendental redundancy characterizations the
+//! paper cites in §8.1).
+//!
+//! An invocation either draws from a **shared pool** of `classes` distinct
+//! operand tuples (probability `p_shared`, skewed toward popular classes
+//! the way real value streams are), or produces a unique tuple nobody else
+//! will ever compute. The resulting LUT hit rate is therefore an
+//! **emergent** quantity: it depends on `p_shared`, on the pool size
+//! relative to the LUT capacity, on scheduling (which warps share an SM),
+//! and on eviction — not on a hard-coded per-app probability.
+//!
+//! Keys are a pure function of `(spec, seed, warp, iteration, slot)`, so
+//! trace replays (which pin the recorded workload seed) regenerate the
+//! exact operand stream and stay bit-identical.
+
+use crate::util::{mix64, rng::Rng};
+
+/// Operand-redundancy class of an app's SFU computations.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ValueSpec {
+    /// Probability an SFU invocation's operands come from the shared pool
+    /// (the redundant fraction of the value stream).
+    pub p_shared: f64,
+    /// Distinct operand tuples in the shared pool. Larger pools exceed the
+    /// LUT capacity and force evictions.
+    pub classes: u32,
+}
+
+impl ValueSpec {
+    /// Every invocation computes a fresh tuple — nothing to memoize.
+    /// The default for apps whose SFU redundancy was never characterized.
+    pub const UNIQUE: ValueSpec = ValueSpec { p_shared: 0.0, classes: 1 };
+
+    pub const fn shared(p_shared: f64, classes: u32) -> ValueSpec {
+        ValueSpec { p_shared, classes }
+    }
+}
+
+/// The operand-value key one SFU invocation presents to the memo LUT.
+///
+/// `slot` is the instruction's body index: memoizing `sin(x)` never serves
+/// `rsqrt(x)`, so each static SFU site namespaces its keys. Shared-pool
+/// draws are skewed (fourth power of a uniform) so low-numbered classes
+/// are much hotter — the head of the distribution fits a small LUT even
+/// when the pool as a whole does not.
+pub fn operand_key(vs: &ValueSpec, seed: u64, warp_uid: u64, iter: u32, slot: usize) -> u64 {
+    let invocation = seed
+        ^ warp_uid.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        ^ (iter as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ ((slot as u64) << 48);
+    let mut rng = Rng::new(invocation);
+    if vs.p_shared > 0.0 && rng.chance(vs.p_shared) {
+        // Fourth-power skew ⇒ P(class < k) = (k/N)^¼ — a Zipf-like head
+        // (the hottest class alone draws ~(1/N)^¼ of the stream), which is
+        // what measured value streams look like and what lets redundancy
+        // materialize even over short runs.
+        let u = rng.f64();
+        let u2 = u * u;
+        let class = ((u2 * u2) * vs.classes.max(1) as f64) as u64;
+        mix64(seed ^ ((slot as u64) << 32) ^ class.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    } else {
+        mix64(invocation ^ 0xDEAD_BEEF_0BAD_F00D)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn deterministic() {
+        let vs = ValueSpec::shared(0.5, 64);
+        assert_eq!(operand_key(&vs, 1, 2, 3, 4), operand_key(&vs, 1, 2, 3, 4));
+        assert_ne!(operand_key(&vs, 1, 2, 3, 4), operand_key(&vs, 2, 2, 3, 4));
+    }
+
+    #[test]
+    fn unique_spec_never_repeats() {
+        let vs = ValueSpec::UNIQUE;
+        let keys: HashSet<u64> = (0..10_000u64)
+            .map(|i| operand_key(&vs, 7, i / 100, (i % 100) as u32, 3))
+            .collect();
+        assert_eq!(keys.len(), 10_000);
+    }
+
+    #[test]
+    fn shared_fraction_tracks_p_shared() {
+        // Distinct keys over N invocations shrink as p_shared grows.
+        let distinct = |p: f64| {
+            let vs = ValueSpec::shared(p, 256);
+            (0..8_000u64)
+                .map(|i| operand_key(&vs, 7, i / 64, (i % 64) as u32, 3))
+                .collect::<HashSet<u64>>()
+                .len()
+        };
+        let lo = distinct(0.2);
+        let hi = distinct(0.8);
+        assert!(hi < lo, "hi-redundancy distinct {hi} vs lo {lo}");
+        // With p=0.8 over a 256-class pool, far fewer than N distinct keys.
+        assert!(hi < 3_000, "hi={hi}");
+    }
+
+    #[test]
+    fn slots_namespace_keys() {
+        // A shared class draw from slot 3 must never equal slot 4's keys
+        // (memoized sin() results cannot serve rsqrt()).
+        let vs = ValueSpec::shared(1.0, 4);
+        let a: HashSet<u64> = (0..512u64).map(|i| operand_key(&vs, 7, i, 0, 3)).collect();
+        let b: HashSet<u64> = (0..512u64).map(|i| operand_key(&vs, 7, i, 0, 4)).collect();
+        assert!(a.is_disjoint(&b));
+    }
+
+    #[test]
+    fn pool_head_is_hot() {
+        // The skew concentrates mass: with 1024 classes, the 256 most
+        // popular keys should cover well over a quarter of draws.
+        let vs = ValueSpec::shared(1.0, 1024);
+        let mut counts = std::collections::HashMap::new();
+        let n = 20_000u64;
+        for i in 0..n {
+            *counts.entry(operand_key(&vs, 7, i / 64, (i % 64) as u32, 1)).or_insert(0u64) += 1;
+        }
+        let mut freqs: Vec<u64> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        let head: u64 = freqs.iter().take(256).sum();
+        assert!(head as f64 / n as f64 > 0.4, "head coverage {}", head as f64 / n as f64);
+    }
+}

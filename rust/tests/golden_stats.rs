@@ -1,6 +1,7 @@
 //! Golden-stats regression: pins `(cycles, warp_insts, dram.bursts,
-//! dram.bursts_uncompressed)` — and therefore the compression ratio — for
-//! three (app, design) pairs at a fixed scale, so hot-path refactors that
+//! dram.bursts_uncompressed, memo_hits, memo_evictions)` — and therefore
+//! the compression ratio and the memo-LUT dynamics — for four
+//! (app, design) pairs at a fixed scale, so hot-path refactors that
 //! change simulation results fail loudly instead of silently shifting the
 //! figures.
 //!
@@ -24,6 +25,9 @@ fn pairs() -> Vec<(&'static str, Design)> {
         ("SLA", Design::base()),
         ("PVC", Design::caba(Algo::Bdi)),
         ("MM", Design::caba(Algo::Fpc)),
+        // Compute-bound × memoization: pins the emergent LUT behaviour
+        // (operand-value stream, install/evict dynamics) cycle-for-cycle.
+        ("FRAG", Design::caba_memo()),
     ]
 }
 
@@ -48,13 +52,15 @@ fn render_current() -> String {
         );
         let _ = writeln!(
             out,
-            "{}/{} cycles={} warp_insts={} bursts={} bursts_uncompressed={}",
+            "{}/{} cycles={} warp_insts={} bursts={} bursts_uncompressed={} memo_hits={} memo_evictions={}",
             app_name,
             design.name,
             stats.cycles,
             stats.warp_insts,
             stats.dram.bursts,
             stats.dram.bursts_uncompressed,
+            stats.caba.memo_hits,
+            stats.caba.memo_evictions,
         );
     }
     out

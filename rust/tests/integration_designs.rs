@@ -183,3 +183,88 @@ fn fig15_l1_compression_can_hurt() {
     assert!(worst < 1.0, "no app hurt by L1 compression (worst rel {worst:.3})");
     assert!(best > 0.95, "L1 compression should not hurt everyone (best {best:.3})");
 }
+
+// ---------------------------------------------------------------- §8.1 memo
+
+#[test]
+fn memo_hit_rate_emerges_from_value_redundancy() {
+    // The hit rate is *measured* through the per-SM LUTs, so it must track
+    // the operand-value redundancy of the workload: FRAG (70% shared,
+    // head-heavy 2048-class pool) clearly above MCX (5% shared over 64K
+    // classes), with the low-redundancy control close to zero.
+    let rate = |name: &str| {
+        let app = apps::find(name).unwrap();
+        let s = Simulator::new(cfg(), Design::caba_memo(), app, 0.05).run();
+        assert!(s.finished, "{name} did not drain");
+        assert!(s.caba.memo_lookups > 0, "{name}: no lookups");
+        (s.caba.memo_hit_rate().unwrap(), s)
+    };
+    let (frag, frag_stats) = rate("FRAG");
+    let (mcx, _) = rate("MCX");
+    assert!(frag > 0.10, "FRAG hit rate {frag:.3} too low for a 70%-shared stream");
+    assert!(mcx < 0.08, "MCX hit rate {mcx:.3} too high for a 5%-shared stream");
+    assert!(frag > mcx + 0.05, "redundancy ordering lost: {frag:.3} vs {mcx:.3}");
+    // Installs happen and the LUT actually fills (GEO's unique+large-pool
+    // stream installs more distinct keys than the LUT holds → evictions).
+    assert!(frag_stats.caba.memo_installs > 0);
+    let geo = Simulator::new(cfg(), Design::caba_memo(), apps::find("GEO").unwrap(), 0.08).run();
+    assert!(geo.caba.memo_evictions > 0, "GEO never evicted — capacity not modeled?");
+}
+
+#[test]
+fn memo_zero_budget_disables_cleanly() {
+    // `memo_lut_bytes=0` leaves no LUT to carve: the memo design must
+    // degrade to plain SFU execution (no lookups, no hits) and still
+    // drain — capacity is a real, configuration-visible resource.
+    let app = apps::find("FRAG").unwrap();
+    let mut zero = cfg();
+    zero.memo_lut_bytes = 0;
+    let s = Simulator::new(zero, Design::caba_memo(), app, 0.02).run();
+    assert!(s.finished);
+    assert_eq!(s.caba.memo_lookups, 0);
+    assert_eq!(s.caba.memo_hits, 0);
+    assert_eq!(s.caba.memo_installs, 0);
+    // And with the default budget the same workload does probe.
+    let s = Simulator::new(cfg(), Design::caba_memo(), app, 0.02).run();
+    assert!(s.caba.memo_lookups > 0);
+}
+
+#[test]
+fn memo_speeds_up_sfu_heavy_compute_bound_apps() {
+    // FRAG is SFU-pipeline bound (6 SFU ops/iter × 4-cycle occupancy);
+    // every memo hit frees the pipe and serves the result at shared-memory
+    // latency, so CABA-Memo must beat Base. On the near-unique control the
+    // lookup overhead must stay bounded (it hides under the SFU shadow).
+    let run = |name: &str, d: Design| {
+        Simulator::new(cfg(), d, apps::find(name).unwrap(), 0.05).run().ipc()
+    };
+    let base = run("FRAG", Design::base());
+    let memo = run("FRAG", Design::caba_memo());
+    assert!(memo > base * 1.01, "FRAG: memo {memo:.3} vs base {base:.3}");
+    let base = run("MCX", Design::base());
+    let memo = run("MCX", Design::caba_memo());
+    assert!(memo > base * 0.85, "MCX: memo overhead too large ({memo:.3} vs {base:.3})");
+}
+
+#[test]
+fn memo_smem_hungry_app_gets_a_smaller_or_no_lut() {
+    // hs fills most of its shared memory; the carve must shrink and the
+    // run must still complete (memoization silently degrades, never
+    // crashes).
+    let app = apps::find("hs").unwrap();
+    let s = Simulator::new(cfg(), Design::caba_memo(), app, 0.02).run();
+    assert!(s.finished);
+}
+
+#[test]
+fn memo_hybrid_compresses_and_memoizes() {
+    let app = apps::find("FRAG").unwrap(); // compressible float data
+    let s = Simulator::new(cfg(), Design::caba_memo_hybrid(), app, 0.02).run();
+    assert!(s.finished);
+    assert!(s.caba.memo_lookups > 0, "hybrid lost its memo half");
+    assert!(
+        s.dram.compression_ratio() > 1.05,
+        "hybrid lost its compression half: {}",
+        s.dram.compression_ratio()
+    );
+}

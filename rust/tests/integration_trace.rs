@@ -92,6 +92,46 @@ fn record_then_replay_is_bit_identical() {
 }
 
 #[test]
+fn memo_record_then_replay_is_bit_identical() {
+    // The §8.1 acceptance contract: a memo design's emergent LUT behaviour
+    // (operand keys, install/evict order, hit counters) is a pure function
+    // of the recorded workload, so trace replay reproduces the direct run
+    // bit-identically — memory signature (which includes every memo
+    // counter), cycles and issue breakdown.
+    let app = apps::find("FRAG").unwrap();
+    let design = Design::caba_memo();
+    let direct = Simulator::new(tiny_cfg(), design, app, 0.02).run();
+    assert!(direct.finished);
+    assert!(direct.caba.memo_lookups > 0, "memo path never exercised");
+    assert!(direct.caba.memo_hits > 0, "no emergent hits on a 70%-shared stream");
+
+    let path = tmp("memo.cabatrace");
+    let recorded = record("FRAG", design, &path);
+    assert_eq!(recorded.memory_signature(), direct.memory_signature());
+
+    let trace = TraceData::load(path.to_str().unwrap()).unwrap();
+    let replayed = Simulator::from_trace(tiny_cfg(), design, Arc::clone(&trace))
+        .expect("build memo replay")
+        .run();
+    assert!(replayed.finished);
+    assert_eq!(replayed.memory_signature(), direct.memory_signature());
+    assert_eq!(replayed.cycles, direct.cycles);
+    assert_eq!(replayed.issue, direct.issue);
+    assert_eq!(replayed.caba.memo_hits, direct.caba.memo_hits);
+    assert_eq!(replayed.caba.memo_evictions, direct.caba.memo_evictions);
+
+    // Cross-design over the same trace: the hybrid must also replay
+    // deterministically (twice → identical stats).
+    let hybrid = Design::caba_memo_hybrid();
+    let a = Simulator::from_trace(tiny_cfg(), hybrid, Arc::clone(&trace)).unwrap().run();
+    let b = Simulator::from_trace(tiny_cfg(), hybrid, Arc::clone(&trace)).unwrap().run();
+    assert_eq!(a, b);
+    assert!(a.caba.memo_lookups > 0);
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn cross_design_replay_matches_direct_run() {
     // Record under Base (no compression → no payloads are even sampled),
     // replay under CABA-BDI: the generator fallback must reproduce the

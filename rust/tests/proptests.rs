@@ -403,3 +403,106 @@ fn prop_bursts_for_monotone_and_bounded() {
         },
     );
 }
+
+// ---------------------------------------------------------------- §8.1 memo
+
+/// Drive `n` deterministically generated SFU invocations through a fresh
+/// LUT (install-on-miss, like the core does) and return (hits, lookups).
+fn memo_stream_hits(
+    lut: &mut caba::memo::MemoLut,
+    vs: &caba::workload::values::ValueSpec,
+    seed: u64,
+    n: u64,
+) -> (u64, u64) {
+    use caba::memo::Lookup;
+    use caba::workload::values::operand_key;
+    let mut hits = 0;
+    for i in 0..n {
+        // 32 warps round-robin through iterations of one SFU slot.
+        let key = operand_key(vs, seed, i % 32, (i / 32) as u32, 3);
+        match lut.lookup(key, i) {
+            Lookup::Hit | Lookup::AliasHit => hits += 1,
+            Lookup::Miss => {
+                lut.install(key, i);
+            }
+            Lookup::Disabled => {}
+        }
+    }
+    (hits, n)
+}
+
+#[test]
+fn prop_memo_lut_occupancy_never_exceeds_budget() {
+    use caba::memo::{Lookup, MemoGeometry, MemoLut};
+    forall(
+        "memo-lut-occupancy",
+        64,
+        |rng: &mut Rng| {
+            (
+                rng.below(64) + 1,  // sets
+                rng.below(8) + 1,   // ways
+                rng.below(48) + 8,  // entry bytes
+                rng.next_u64(),     // key-stream seed
+            )
+        },
+        |&(sets, ways, entry_bytes, seed)| {
+            let geom =
+                MemoGeometry::explicit(sets as usize, ways as usize, entry_bytes as usize, 16);
+            let mut lut = MemoLut::new(geom);
+            let mut rng = Rng::new(seed);
+            for now in 0..2048u64 {
+                let key = rng.below(sets * ways * 4); // enough to overflow
+                if lut.lookup(key, now) == Lookup::Miss {
+                    lut.install(key, now);
+                }
+                prop_assert!(
+                    lut.occupancy() <= lut.capacity(),
+                    "occupancy {} > capacity {}",
+                    lut.occupancy(),
+                    lut.capacity()
+                );
+                prop_assert!(
+                    lut.occupancy() * geom.entry_bytes <= geom.budget_bytes,
+                    "occupancy exceeds the shared-memory budget"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_memo_hit_rate_monotone_in_value_redundancy() {
+    use caba::memo::{MemoGeometry, MemoLut};
+    use caba::workload::values::ValueSpec;
+    forall(
+        "memo-hit-monotone",
+        24,
+        |rng: &mut Rng| {
+            (
+                rng.below(4000) as f64 / 10_000.0,       // p_lo in [0, 0.4)
+                0.2 + rng.below(3500) as f64 / 10_000.0, // delta in [0.2, 0.55)
+                64u32 << rng.below(7),                   // classes: 64..4096
+                rng.next_u64(),
+            )
+        },
+        |&(p_lo, delta, classes, seed)| {
+            let rate = |p: f64| {
+                let mut lut = MemoLut::new(MemoGeometry::explicit(64, 4, 16, 16));
+                let vs = ValueSpec::shared(p, classes);
+                let (hits, n) = memo_stream_hits(&mut lut, &vs, seed, 6000);
+                hits as f64 / n as f64
+            };
+            let lo = rate(p_lo);
+            let hi = rate(p_lo + delta);
+            // Same seed ⇒ the shared-draw set under p_lo is a subset of the
+            // one under p_hi; tolerance absorbs eviction-order noise.
+            prop_assert!(
+                hi + 0.02 >= lo,
+                "hit rate not monotone: p={p_lo:.3}→{lo:.3}, p={:.3}→{hi:.3}",
+                p_lo + delta
+            );
+            Ok(())
+        },
+    );
+}

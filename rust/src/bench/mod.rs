@@ -5,9 +5,14 @@
 //! perf_hotpath` (compression-substrate throughput, oracle memoization,
 //! end-to-end simulator throughput), but:
 //!
-//! * emits a **JSON report** (`BENCH_pr3.json` by default; schema
+//! * emits a **JSON report** (`BENCH_pr5.json` by default; schema
 //!   documented in EXPERIMENTS.md §Perf) so the perf trajectory is
 //!   tracked in-repo from PR 3 onward;
+//! * measures the **event-driven tick** against the `strict_tick=true`
+//!   reference on a memory-bound and a compute-bound point — the speedup
+//!   is a number in the JSON, and any stats divergence between the two
+//!   modes is reported as a floor violation (a free differential check on
+//!   every CI bench run);
 //! * optionally checks the numbers against a committed **floors file**
 //!   (`key=value` lines, same offline-friendly format as `SimConfig`
 //!   overrides) and reports violations — the CI `bench-smoke` job fails
@@ -48,6 +53,23 @@ pub struct CompressPoint {
     pub size_checksum: u64,
 }
 
+/// One strict-vs-event tick comparison point.
+pub struct TickPoint {
+    pub app: &'static str,
+    pub design: &'static str,
+    /// Simulated kilocycles per wall-second under `strict_tick=true`
+    /// (every SM ticked every cycle — the reference path).
+    pub kcycles_per_s_strict: f64,
+    /// Same point under the event-driven default.
+    pub kcycles_per_s_event: f64,
+    /// `kcycles_per_s_event / kcycles_per_s_strict`.
+    pub speedup: f64,
+    /// Bit-identity of the two runs on (cycles, warp_insts, the full
+    /// issue breakdown, memory_signature). `false` is a floor violation
+    /// regardless of the floors file.
+    pub stats_match: bool,
+}
+
 /// One end-to-end simulator measurement.
 pub struct SimPoint {
     pub app: &'static str,
@@ -73,6 +95,7 @@ pub struct BenchReport {
     pub memo_warm_mlines_per_s: f64,
     pub memo_hit_rate: f64,
     pub sim: Vec<SimPoint>,
+    pub tick: Vec<TickPoint>,
     pub violations: Vec<String>,
 }
 
@@ -130,34 +153,73 @@ fn measure_memo(lines: &[Line]) -> (f64, f64, f64) {
     )
 }
 
-fn measure_sim(pairs: &[(&'static str, Design)], scale: f64) -> Result<Vec<SimPoint>> {
+/// One timed end-to-end run under the default (event-driven) config,
+/// rendered as a [`SimPoint`]. Shared by the sim section and the tick
+/// comparison so overlapping pairs are simulated once, not twice.
+fn measure_one_sim(app_name: &'static str, design: Design, scale: f64) -> Result<(SimPoint, crate::stats::SimStats)> {
+    let app = apps::find(app_name)
+        .ok_or_else(|| anyhow!("bench references unknown app {app_name:?}"))?;
+    let t0 = Instant::now();
+    let mut sim = Simulator::new(SimConfig::default(), design, app, scale);
+    let stats = sim.run();
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    let point = SimPoint {
+        app: app.name,
+        design: design.name,
+        cycles: stats.cycles,
+        warp_insts: stats.warp_insts,
+        kcycles_per_s: stats.cycles as f64 / dt / 1e3,
+        kinsts_per_s: stats.warp_insts as f64 / dt / 1e3,
+        memo_hit_rate: sim
+            .oracle_memo_stats()
+            .map(|(h, m)| h as f64 / (h + m).max(1) as f64),
+        lut_hit_rate: stats.caba.memo_hit_rate(),
+    };
+    Ok((point, stats))
+}
+
+/// Measure the event-driven tick against the strict reference. Each pair
+/// runs once per mode; the comparison covers both wall-clock and full
+/// stat equality, so every bench run doubles as a differential check.
+/// Returns the tick points plus the event-mode runs as [`SimPoint`]s so
+/// the sim section can reuse them instead of re-simulating.
+fn measure_tick(
+    pairs: &[(&'static str, Design)],
+    scale: f64,
+) -> Result<(Vec<TickPoint>, Vec<Option<SimPoint>>)> {
     let mut out = Vec::new();
+    let mut event_points = Vec::new();
     for &(app_name, design) in pairs {
         let app = apps::find(app_name)
             .ok_or_else(|| anyhow!("bench references unknown app {app_name:?}"))?;
+        let strict_cfg = SimConfig { strict_tick: true, ..SimConfig::default() };
         let t0 = Instant::now();
-        let mut sim = Simulator::new(SimConfig::default(), design, app, scale);
-        let stats = sim.run();
-        let dt = t0.elapsed().as_secs_f64().max(1e-9);
-        out.push(SimPoint {
+        let strict = Simulator::new(strict_cfg, design, app, scale).run();
+        let dt_strict = t0.elapsed().as_secs_f64().max(1e-9);
+        let (event_point, event) = measure_one_sim(app_name, design, scale)?;
+        let stats_match = strict.cycles == event.cycles
+            && strict.warp_insts == event.warp_insts
+            && strict.issue == event.issue
+            && strict.memory_signature() == event.memory_signature();
+        let kc_strict = strict.cycles as f64 / dt_strict / 1e3;
+        let kc_event = event_point.kcycles_per_s;
+        out.push(TickPoint {
             app: app.name,
             design: design.name,
-            cycles: stats.cycles,
-            warp_insts: stats.warp_insts,
-            kcycles_per_s: stats.cycles as f64 / dt / 1e3,
-            kinsts_per_s: stats.warp_insts as f64 / dt / 1e3,
-            memo_hit_rate: sim
-                .oracle_memo_stats()
-                .map(|(h, m)| h as f64 / (h + m).max(1) as f64),
-            lut_hit_rate: stats.caba.memo_hit_rate(),
+            kcycles_per_s_strict: kc_strict,
+            kcycles_per_s_event: kc_event,
+            speedup: kc_event / kc_strict.max(1e-12),
+            stats_match,
         });
+        event_points.push(Some(event_point));
     }
-    Ok(out)
+    Ok((out, event_points))
 }
 
 /// Parse a floors file: `key=value` lines, `#` comments. Known keys:
 /// `min_compress_mlines_per_s`, `min_memo_warm_mlines_per_s`,
-/// `min_memo_hit_rate`, `min_sim_kcycles_per_s`, `min_lut_hit_rate`.
+/// `min_memo_hit_rate`, `min_sim_kcycles_per_s`, `min_lut_hit_rate`,
+/// `min_event_speedup`.
 fn parse_floors(text: &str) -> Result<Vec<(String, f64)>> {
     let mut floors = Vec::new();
     for (ln, raw) in text.lines().enumerate() {
@@ -198,6 +260,13 @@ fn check_floors(report: &mut BenchReport, floors: &[(String, f64)]) {
                 .sim
                 .iter()
                 .filter_map(|s| s.lut_hit_rate)
+                .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.min(v)))),
+            // Worst event-driven-over-strict speedup across the tick
+            // comparison points.
+            "min_event_speedup" => report
+                .tick
+                .iter()
+                .map(|t| t.speedup)
                 .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.min(v)))),
             other => {
                 report
@@ -270,6 +339,22 @@ impl BenchReport {
             );
         }
         s.push_str("  ],\n");
+        s.push_str("  \"strict_tick\": [\n");
+        for (i, t) in self.tick.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "    {{\"app\": \"{}\", \"design\": \"{}\", \"kcycles_per_s_strict\": {:.1}, \
+                 \"kcycles_per_s_event\": {:.1}, \"speedup\": {:.3}, \"stats_match\": {}}}{}",
+                t.app,
+                t.design,
+                t.kcycles_per_s_strict,
+                t.kcycles_per_s_event,
+                t.speedup,
+                t.stats_match,
+                if i + 1 < self.tick.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  ],\n");
         s.push_str("  \"floor_violations\": [");
         for (i, v) in self.violations.iter().enumerate() {
             if i > 0 {
@@ -327,6 +412,21 @@ impl BenchReport {
                 pct(p.lut_hit_rate)
             );
         }
+        if !self.tick.is_empty() {
+            s.push('\n');
+        }
+        for t in &self.tick {
+            let _ = writeln!(
+                s,
+                "tick {:>4}/{:<13} strict {:>9.1} kcycles/s  event {:>9.1} kcycles/s  speedup {:.2}x  stats {}",
+                t.app,
+                t.design,
+                t.kcycles_per_s_strict,
+                t.kcycles_per_s_event,
+                t.speedup,
+                if t.stats_match { "identical" } else { "DIVERGED" }
+            );
+        }
         for v in &self.violations {
             let _ = writeln!(s, "\nFLOOR VIOLATION: {v}");
         }
@@ -363,7 +463,38 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
             ("NNA", Design::caba_memo_hybrid()),
         ]
     };
-    let sim = measure_sim(&pairs, sim_scale)?;
+    // Strict-vs-event tick comparison: one memory-bound point (PVC under
+    // full CABA-BDI compression — long DRAM-stall windows, the skip
+    // machinery's best case) and one compute-bound point (FRAG under
+    // CABA-Memo — busy SFU pipes, its worst case). Full mode adds the
+    // plain baseline and the hybrid. Runs first so its event-mode
+    // simulations double as the sim points for overlapping pairs below.
+    let tick_pairs: Vec<(&'static str, Design)> = if opts.quick {
+        vec![("PVC", Design::caba(Algo::Bdi)), ("FRAG", Design::caba_memo())]
+    } else {
+        vec![
+            ("PVC", Design::caba(Algo::Bdi)),
+            ("FRAG", Design::caba_memo()),
+            ("SLA", Design::base()),
+            ("NNA", Design::caba_memo_hybrid()),
+        ]
+    };
+    let (tick, mut tick_event_points) = measure_tick(&tick_pairs, sim_scale)?;
+
+    // Assemble the sim section in `pairs` order, reusing the event-mode
+    // run from the tick comparison where the pair overlaps (identical
+    // config/scale — same measurement either way, half the simulations).
+    let mut sim = Vec::with_capacity(pairs.len());
+    for &(app_name, design) in &pairs {
+        let reused = tick_pairs
+            .iter()
+            .position(|&(a, d)| a == app_name && d.name == design.name)
+            .and_then(|i| tick_event_points[i].take());
+        match reused {
+            Some(point) => sim.push(point),
+            None => sim.push(measure_one_sim(app_name, design, sim_scale)?.0),
+        }
+    }
 
     let mut report = BenchReport {
         mode,
@@ -374,8 +505,20 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
         memo_warm_mlines_per_s: warm,
         memo_hit_rate: hit_rate,
         sim,
+        tick,
         violations: Vec::new(),
     };
+
+    // Stats divergence between tick modes is a violation regardless of the
+    // floors file — equivalence is a correctness contract, not a perf bar.
+    for t in &report.tick {
+        if !t.stats_match {
+            report.violations.push(format!(
+                "strict_tick differential: {}/{} stats diverged between tick modes",
+                t.app, t.design
+            ));
+        }
+    }
 
     if let Some(path) = &opts.floors {
         let text = std::fs::read_to_string(path)
@@ -408,6 +551,7 @@ mod tests {
             memo_cold_mlines_per_s: 1.0,
             memo_warm_mlines_per_s: 10.0,
             memo_hit_rate: 0.5,
+            tick: vec![],
             sim: vec![SimPoint {
                 app: "PVC",
                 design: "Base",
@@ -458,6 +602,14 @@ mod tests {
             memo_warm_mlines_per_s: 2.0,
             memo_hit_rate: 0.75,
             sim: vec![],
+            tick: vec![TickPoint {
+                app: "PVC",
+                design: "CABA-BDI",
+                kcycles_per_s_strict: 100.0,
+                kcycles_per_s_event: 250.0,
+                speedup: 2.5,
+                stats_match: true,
+            }],
             violations: vec!["min_x: measured 1 < floor 2".to_string()],
         };
         let j = report.to_json();

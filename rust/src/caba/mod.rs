@@ -29,8 +29,11 @@ pub enum Priority {
 #[derive(Clone, Debug)]
 pub enum Payload {
     /// Release the parent-warp registers waiting on this decompression:
-    /// `(warp slot, register)` pairs (grows as MSHR merges attach).
-    Decompress { regs: Vec<(usize, u8)> },
+    /// `(warp slot, register, warp uid)` triples (grows as MSHR merges
+    /// attach). The uid stamps the warp *instance*: warp slots are
+    /// recycled across CTAs, and a release must never land on a later
+    /// tenant of the slot.
+    Decompress { regs: Vec<(usize, u8, u64)> },
     /// Dispatch the buffered store with its compression verdict.
     Compress { line_addr: u64, verdict: LineVerdict },
     /// Issue the predicted prefetches into the memory system (§8.2).
@@ -122,8 +125,9 @@ impl Awc {
         sub: Subroutine,
         parent_warp: usize,
         reg: u8,
+        uid: u64,
     ) -> Option<u64> {
-        let token = self.trigger_high(active_from, sub, parent_warp, reg)?;
+        let token = self.trigger_high(active_from, sub, parent_warp, reg, uid)?;
         self.stats.decompress_warps += 1;
         Some(token)
     }
@@ -138,8 +142,9 @@ impl Awc {
         sub: Subroutine,
         parent_warp: usize,
         reg: u8,
+        uid: u64,
     ) -> Option<u64> {
-        self.trigger_high(active_from, sub, parent_warp, reg)
+        self.trigger_high(active_from, sub, parent_warp, reg, uid)
     }
 
     fn trigger_high(
@@ -148,6 +153,7 @@ impl Awc {
         sub: Subroutine,
         parent_warp: usize,
         reg: u8,
+        uid: u64,
     ) -> Option<u64> {
         let idx = self.free_row()?;
         let token = self.next_token;
@@ -158,7 +164,7 @@ impl Awc {
             sp_left: sub.sp(),
             mem_left: sub.mem,
             priority: Priority::High,
-            payload: Payload::Decompress { regs: vec![(parent_warp, reg)] },
+            payload: Payload::Decompress { regs: vec![(parent_warp, reg, uid)] },
             parent_warp,
         });
         self.rows_high.push(idx);
@@ -234,11 +240,11 @@ impl Awc {
     /// Attach another waiting register to an in-flight decompression
     /// (MSHR-merge on the same line). Returns false if the entry already
     /// retired (its row may have been recycled).
-    pub fn attach_reg(&mut self, token: u64, warp: usize, reg: u8) -> bool {
+    pub fn attach_reg(&mut self, token: u64, warp: usize, reg: u8, uid: u64) -> bool {
         if let Some(idx) = self.row_of(token) {
             if let Some(e) = &mut self.entries[idx] {
                 if let Payload::Decompress { regs } = &mut e.payload {
-                    regs.push((warp, reg));
+                    regs.push((warp, reg, uid));
                     return true;
                 }
             }
@@ -300,6 +306,47 @@ impl Awc {
     pub fn observe_utilization(&mut self, used: usize, total: usize) {
         let u = used as f64 / total.max(1) as f64;
         self.util_ema = 0.99 * self.util_ema + 0.01 * u;
+    }
+
+    /// Bulk-replay `k` cycles on which the core issued nothing and no AWT
+    /// entry was active — the event-driven tick's stand-in for `k` calls
+    /// of the per-cycle path (see `Simulator::run`). Two per-cycle effects
+    /// exist on such cycles and both are replayed **bit-exactly**:
+    ///
+    /// * `observe_utilization(0, _)` each cycle: with `u = 0` the update
+    ///   reduces to `ema = 0.99 * ema + 0.0`, and `x + 0.0 == x` exactly
+    ///   for the non-negative EMA, so the loop below is the identical
+    ///   float sequence (a closed-form `powi` would round differently).
+    ///   The loop stops early at a *fixed point* of the update — not just
+    ///   0.0: under round-to-nearest the decay bottoms out at the smallest
+    ///   subnormal (`0.99 × 2⁻¹⁰⁷⁴` rounds back up to `2⁻¹⁰⁷⁴`), where the
+    ///   per-cycle path would also sit unchanged forever, so breaking
+    ///   there is bit-exact and keeps long settles O(~70k) multiplies
+    ///   worst-case instead of O(window).
+    /// * the round-robin pointer: `issue_high`/`issue_low` bump `rr` once
+    ///   per call whenever their row list is non-empty, even when every
+    ///   entry is still waiting on a future `active_from`. `high_calls` /
+    ///   `low_calls` tell us whether the core would have made those calls
+    ///   at all (they are design/config-gated); row-list membership cannot
+    ///   change across the window (no triggers, no issues, no kills).
+    pub fn skip_idle_cycles(&mut self, k: u64, high_calls: bool, low_calls: bool) {
+        let mut per_cycle: u64 = 0;
+        if high_calls && !self.rows_high.is_empty() {
+            per_cycle += 1;
+        }
+        if low_calls && !self.rows_low.is_empty() {
+            per_cycle += 1;
+        }
+        if per_cycle > 0 {
+            self.rr = self.rr.wrapping_add(k.wrapping_mul(per_cycle) as usize);
+        }
+        for _ in 0..k {
+            let next = 0.99 * self.util_ema;
+            if next == self.util_ema {
+                break; // fixed point (0.0 or the smallest subnormal)
+            }
+            self.util_ema = next;
+        }
     }
 
     /// Issue high-priority assist instructions into `slots` (before parent
@@ -413,7 +460,7 @@ mod tests {
     fn decompress_lifecycle() {
         let mut a = awc();
         let sub = subroutine(Algo::Bdi, AwKind::Decompress, crate::compress::bdi::ENC_B8D1, false);
-        let idx = a.trigger_decompress(10, sub, 3, 7).unwrap();
+        let idx = a.trigger_decompress(10, sub, 3, 7, 30).unwrap();
         assert!(a.is_live(idx));
         // Not active before its trigger time.
         let r = a.issue_high(5, &mut slots());
@@ -429,7 +476,7 @@ mod tests {
         assert_eq!(retired.len(), 1);
         assert!(retired[0].at >= now);
         match &retired[0].payload {
-            Payload::Decompress { regs } => assert_eq!(regs, &vec![(3usize, 7u8)]),
+            Payload::Decompress { regs } => assert_eq!(regs, &vec![(3usize, 7u8, 30u64)]),
             _ => panic!("wrong payload"),
         }
         assert!(!a.is_live(idx));
@@ -441,7 +488,7 @@ mod tests {
     fn slots_bound_issue_rate() {
         let mut a = awc();
         let sub = Subroutine { total: 10, mem: 4 };
-        a.trigger_decompress(0, sub, 0, 1).unwrap();
+        a.trigger_decompress(0, sub, 0, 1, 0).unwrap();
         // One cycle with 2 sp + 1 mem slots issues at most 3 instructions.
         let before = a.stats.assist_insts_issued;
         let mut s = slots();
@@ -472,9 +519,9 @@ mod tests {
         cfg.awt_entries = 2;
         let mut a = Awc::new(&cfg);
         let sub = Subroutine { total: 4, mem: 1 };
-        assert!(a.trigger_decompress(0, sub, 0, 1).is_some());
-        assert!(a.trigger_decompress(0, sub, 1, 2).is_some());
-        assert!(a.trigger_decompress(0, sub, 2, 3).is_none());
+        assert!(a.trigger_decompress(0, sub, 0, 1, 0).is_some());
+        assert!(a.trigger_decompress(0, sub, 1, 2, 1).is_some());
+        assert!(a.trigger_decompress(0, sub, 2, 3, 2).is_none());
         assert_eq!(a.live(), 2);
     }
 
@@ -490,14 +537,14 @@ mod tests {
         assert!(a.trigger_compress(0, sub, 0, 5, v).is_none());
         assert_eq!(a.stats.throttled_deploys, 1);
         // High priority is never throttled (needed for correctness).
-        assert!(a.trigger_decompress(0, sub, 0, 1).is_some());
+        assert!(a.trigger_decompress(0, sub, 0, 1, 0).is_some());
     }
 
     #[test]
     fn lookup_trigger_is_not_a_decompress_warp() {
         let mut a = awc();
         let sub = Subroutine { total: 3, mem: 1 };
-        let tok = a.trigger_lookup(0, sub, 2, 9).unwrap();
+        let tok = a.trigger_lookup(0, sub, 2, 9, 5).unwrap();
         assert!(a.is_live(tok));
         assert_eq!(a.stats.decompress_warps, 0);
         // It still releases the parent register through the high-priority
@@ -509,7 +556,7 @@ mod tests {
             now += 1;
         }
         match &retired[0].payload {
-            Payload::Decompress { regs } => assert_eq!(regs, &vec![(2usize, 9u8)]),
+            Payload::Decompress { regs } => assert_eq!(regs, &vec![(2usize, 9u8, 5u64)]),
             _ => panic!("wrong payload"),
         }
     }
@@ -518,11 +565,60 @@ mod tests {
     fn attach_and_kill() {
         let mut a = awc();
         let sub = Subroutine { total: 4, mem: 1 };
-        let idx = a.trigger_decompress(0, sub, 0, 1).unwrap();
-        assert!(a.attach_reg(idx, 5, 9));
+        let idx = a.trigger_decompress(0, sub, 0, 1, 0).unwrap();
+        assert!(a.attach_reg(idx, 5, 9, 50));
         a.kill(idx);
         assert!(!a.is_live(idx));
         assert_eq!(a.stats.killed, 1);
-        assert!(!a.attach_reg(idx, 6, 9));
+        assert!(!a.attach_reg(idx, 6, 9, 60));
+    }
+
+    #[test]
+    fn skip_idle_cycles_matches_per_cycle_path() {
+        // The bulk replay must leave the AWC in the bit-identical state a
+        // per-cycle loop of idle cycles produces: same EMA (float-exact),
+        // same round-robin pointer.
+        let sub = Subroutine { total: 4, mem: 1 };
+        let build = || {
+            let mut a = awc();
+            // Prime a non-trivial EMA and two future-triggered entries so
+            // both row lists are non-empty but inactive.
+            for _ in 0..50 {
+                a.observe_utilization(3, 4);
+            }
+            a.trigger_decompress(1_000_000, sub, 0, 1, 0).unwrap();
+            let v = LineVerdict { encoding: 0, size_bytes: 17, bursts: 1 };
+            a.trigger_compress(1_000_000, sub, 1, 42, v).unwrap();
+            a
+        };
+        let mut per_cycle = build();
+        let mut bulk = build();
+        let k = 777u64;
+        for now in 0..k {
+            // Mirrors Core::cycle on a fully stalled cycle: both issue
+            // calls run (and find nothing active), then the utilization
+            // observation sees zero slots used.
+            let mut s = slots();
+            let r = per_cycle.issue_high(now, &mut s);
+            assert!(r.is_empty());
+            let r = per_cycle.issue_low(now, &mut s);
+            assert!(r.is_empty());
+            per_cycle.observe_utilization(0, 4);
+        }
+        bulk.skip_idle_cycles(k, true, true);
+        assert_eq!(per_cycle.rr, bulk.rr);
+        assert_eq!(per_cycle.util_ema.to_bits(), bulk.util_ema.to_bits());
+        // Empty row lists advance nothing.
+        let mut empty_per = awc();
+        let mut empty_bulk = awc();
+        for now in 0..10 {
+            let mut s = slots();
+            empty_per.issue_high(now, &mut s);
+            empty_per.issue_low(now, &mut s);
+            empty_per.observe_utilization(0, 4);
+        }
+        empty_bulk.skip_idle_cycles(10, true, true);
+        assert_eq!(empty_per.rr, empty_bulk.rr);
+        assert_eq!(empty_per.util_ema.to_bits(), empty_bulk.util_ema.to_bits());
     }
 }

@@ -144,6 +144,17 @@ pub struct SimConfig {
     pub memo_tag_bits: u32,
 
     // --- Run controls ---
+    /// Force the naive per-cycle tick: every SM is cycled on every core
+    /// cycle and the run loop never fast-forwards. The event-driven
+    /// default (`false`) skips stalled SMs wholesale and bulk-charges
+    /// their stall cycles — provably the same statistics, much less host
+    /// work (see EXPERIMENTS.md §4, "Event-driven tick"). This knob exists
+    /// so the equivalence is *testable*: the differential suite pins
+    /// `strict_tick=1` ≡ event-driven on every golden stat and
+    /// `memory_signature()`. Fingerprinted like any simulated parameter —
+    /// if the equivalence ever regressed, cached results would still be
+    /// correct per mode.
+    pub strict_tick: bool,
     /// Stop after this many core cycles (safety net).
     pub max_cycles: u64,
     /// Stop after this many issued warp-instructions (paper: 1B thread-
@@ -209,6 +220,7 @@ impl Default for SimConfig {
             memo_lut_ways: 4,
             memo_entry_bytes: 16,
             memo_tag_bits: 16,
+            strict_tick: false,
             max_cycles: 20_000_000,
             max_warp_insts: u64::MAX,
             seed: 0xCABA,
@@ -291,6 +303,7 @@ impl SimConfig {
             memo_lut_ways,
             memo_entry_bytes,
             memo_tag_bits,
+            strict_tick,
             max_cycles,
             max_warp_insts,
             seed,
@@ -312,8 +325,8 @@ impl SimConfig {
             hw_decompress_latency, hw_compress_latency, awt_entries,
             awb_low_prio_slots, caba_throttle,
             throttle_util_threshold.to_bits(), memo_lut_bytes, memo_lut_ways,
-            memo_entry_bytes, memo_tag_bits, max_cycles, max_warp_insts,
-            seed,
+            memo_entry_bytes, memo_tag_bits, strict_tick, max_cycles,
+            max_warp_insts, seed,
         );
         // Deliberately NOT fed: `trace_record` is a pure run control (see
         // its field doc) — the same simulation recorded to two different
@@ -325,7 +338,7 @@ impl SimConfig {
     }
 
     /// Every key accepted by [`SimConfig::set`] (used by tests and docs).
-    pub const KEYS: [&'static str; 47] = [
+    pub const KEYS: [&'static str; 48] = [
         "n_sms", "warp_size", "n_mcs", "clock_ghz", "schedulers_per_sm",
         "max_warps_per_sm", "max_ctas_per_sm", "max_threads_per_sm",
         "regfile_per_sm", "smem_per_sm", "sp_units", "sfu_units",
@@ -338,7 +351,7 @@ impl SimConfig {
         "md_cache_assoc", "hw_decompress_latency", "hw_compress_latency",
         "awt_entries", "awb_low_prio_slots", "caba_throttle",
         "throttle_util_threshold", "memo_lut_bytes", "memo_lut_ways",
-        "memo_entry_bytes", "memo_tag_bits", "max_cycles",
+        "memo_entry_bytes", "memo_tag_bits", "strict_tick", "max_cycles",
         "max_warp_insts", "seed", "trace_record",
     ];
 
@@ -394,6 +407,7 @@ impl SimConfig {
             "memo_lut_ways" => self.memo_lut_ways = parse!(),
             "memo_entry_bytes" => self.memo_entry_bytes = parse!(),
             "memo_tag_bits" => self.memo_tag_bits = parse!(),
+            "strict_tick" => self.strict_tick = parse!(),
             "max_cycles" => self.max_cycles = parse!(),
             "max_warp_insts" => self.max_warp_insts = parse!(),
             "seed" => self.seed = parse!(),
@@ -508,6 +522,7 @@ mod tests {
             // A value different from every default for that key.
             let val = match key {
                 "caba_throttle" => "false".to_string(),
+                "strict_tick" => "true".to_string(),
                 "clock_ghz" | "icnt_bytes_per_cycle" | "dram_bw_gbps"
                 | "bw_scale" | "throttle_util_threshold" => "123.456".to_string(),
                 _ => "77".to_string(),

@@ -7,6 +7,8 @@
 //! slot each cycle is *active* or charged to compute-structural,
 //! memory-structural, data-dependence, or idle.
 
+pub mod tables;
+
 use crate::caba::subroutines::{subroutine, AwKind};
 use crate::caba::{Awc, Payload, Retirement, Slots};
 use crate::config::SimConfig;
@@ -18,7 +20,7 @@ use crate::sim::designs::{Design, Mechanism};
 use crate::sim::DataModel;
 use crate::stats::{IssueBreakdown, SimStats, StallKind};
 use crate::workload::Workload;
-use std::collections::HashMap;
+use tables::{MshrInfo, MshrTable, ReleaseTable};
 
 /// Sentinel: register is waiting on an assist-warp retirement.
 const PENDING: u64 = u64::MAX;
@@ -64,20 +66,6 @@ impl WarpSlot {
     }
 }
 
-/// In-flight miss bookkeeping.
-struct MshrInfo {
-    fill_at: u64,
-    /// Token of the AWT entry decompressing this line, if any.
-    awc_token: Option<u64>,
-}
-
-/// Multi-part register release (a load spanning several lines completes
-/// when all per-line decompressions retire).
-struct Release {
-    parts: u32,
-    floor: u64,
-}
-
 /// Everything a core needs from the rest of the chip during one cycle.
 pub struct CycleCtx<'a> {
     pub cfg: &'a SimConfig,
@@ -96,11 +84,17 @@ pub struct Core {
     pub awc: Awc,
     /// §8.1 per-SM memoization LUT (zero-capacity on non-memo designs).
     pub memo: MemoLut,
-    /// Greedy (GTO) warp per scheduler.
-    greedy: [Option<usize>; 2],
+    /// Greedy (GTO) warp per scheduler (sized by `schedulers_per_sm`).
+    greedy: Vec<Option<usize>>,
     /// Warp slots per scheduler in age (uid) order — rebuilt on CTA launch,
     /// so the per-cycle GTO scan allocates nothing.
-    sched_order: [Vec<usize>; 2],
+    sched_order: Vec<Vec<usize>>,
+    /// Last stall classification per scheduler, memoized for the
+    /// event-driven tick: valid for every cycle in `(last executed,
+    /// next_event)` because nothing on the core can change state inside
+    /// that window (every transient stall source pins `next_event` to the
+    /// very next cycle — see DESIGN.md §3, wake-source contract).
+    stall_memo: Vec<StallKind>,
     /// Earliest operand-ready time seen by the schedulers this cycle
     /// (fast-forward hint collected during the issue scan itself).
     min_ready_hint: u64,
@@ -115,9 +109,9 @@ pub struct Core {
     /// re-probes the LUT every cycle — hash once per instruction, not once
     /// per stalled cycle.
     memo_key_cache: Vec<(u64, u64, u64)>,
-    mshr: HashMap<u64, MshrInfo>,
+    mshr: MshrTable,
     mshr_limit: usize,
-    releases: HashMap<(usize, u8), Release>,
+    releases: ReleaseTable,
     pending_retires: Vec<Retirement>,
     /// Reusable scratch for address generation (no per-cycle allocation).
     lines_scratch: Vec<u64>,
@@ -133,6 +127,16 @@ pub struct Core {
     /// Earliest future cycle at which anything on this core can change
     /// state (fast-forward hint; `u64::MAX` = fully drained).
     pub next_event: u64,
+    /// First cycle not yet accounted in `issue` — the event-driven run
+    /// loop skips this core while `next_event > now`, and
+    /// [`Core::settle_to`] bulk-charges the skipped window on wake.
+    charged_until: u64,
+    /// Cached [`Core::any_live`] — valid while the core is skipped
+    /// (liveness only changes inside `cycle` / `launch_cta`).
+    live_cache: bool,
+    /// Set when a warp retires this cycle (CTA-refill eligibility can only
+    /// arise then; the run loop gates its refill scan on this).
+    warp_retired: bool,
 }
 
 impl Core {
@@ -143,16 +147,17 @@ impl Core {
             l1: Cache::new(cfg.l1_bytes, cfg.l1_assoc, cfg.line_bytes, design.l1_tag_mult),
             awc: Awc::new(cfg),
             memo: MemoLut::new(*memo_geom),
-            greedy: [None, None],
-            sched_order: [Vec::new(), Vec::new()],
+            greedy: vec![None; cfg.schedulers_per_sm],
+            sched_order: vec![Vec::new(); cfg.schedulers_per_sm],
+            stall_memo: vec![StallKind::Idle; cfg.schedulers_per_sm],
             min_ready_hint: u64::MAX,
             lsu_free_at: 0,
             sfu_free_at: vec![0; cfg.sfu_units],
             sfu_issue_interval: cfg.sfu_issue_interval as u64,
             memo_key_cache: vec![(u64::MAX, u64::MAX, 0); cfg.max_warps_per_sm],
-            mshr: HashMap::new(),
+            mshr: MshrTable::new(cfg.l1_mshrs, cfg.warp_size),
             mshr_limit: cfg.l1_mshrs,
-            releases: HashMap::new(),
+            releases: ReleaseTable::new(cfg.max_warps_per_sm),
             pending_retires: Vec::new(),
             lines_scratch: Vec::new(),
             l1_evict_scratch: Vec::new(),
@@ -161,6 +166,9 @@ impl Core {
             store_buffer_cap: 16,
             issue: IssueBreakdown::default(),
             next_event: 0,
+            charged_until: 0,
+            live_cache: false,
+            warp_retired: false,
         }
     }
 
@@ -181,13 +189,19 @@ impl Core {
             };
         }
         self.next_event = 0;
+        self.live_cache = true;
         self.rebuild_sched_order();
     }
 
     fn rebuild_sched_order(&mut self) {
-        for sched in 0..2 {
+        // Warp slots interleave across however many schedulers the config
+        // asks for (`schedulers_per_sm` is not hard-coded to 2: `--set
+        // schedulers_per_sm=4` must size these structures, not index out
+        // of bounds).
+        let n = self.sched_order.len();
+        for sched in 0..n {
             let mut slots: Vec<usize> = (0..self.warps.len())
-                .filter(|&i| i % 2 == sched && self.warps[i].uid != u64::MAX)
+                .filter(|&i| i % n == sched && self.warps[i].uid != u64::MAX)
                 .collect();
             slots.sort_by_key(|&i| self.warps[i].uid);
             self.sched_order[sched] = slots;
@@ -208,8 +222,48 @@ impl Core {
         self.warps.iter().any(|w| w.live())
     }
 
+    /// Cached liveness — valid while the core is skipped (nothing can
+    /// retire a warp without the core cycling).
+    pub fn live_cached(&self) -> bool {
+        self.live_cache
+    }
+
+    /// Did a warp retire during the last executed cycle? (Consumes the
+    /// flag.) CTA-refill eligibility can only arise at such cycles.
+    pub fn take_warp_retired(&mut self) -> bool {
+        std::mem::take(&mut self.warp_retired)
+    }
+
+    /// Bulk-charge the skipped window `[charged_until, now)` exactly as the
+    /// per-cycle path would have: each scheduler's memoized stall
+    /// classification once per skipped cycle, plus the AWC's per-idle-cycle
+    /// effects ([`Awc::skip_idle_cycles`]). The memoized classification is
+    /// exact, not approximate: a window only opens after a cycle on which
+    /// *no* scheduler issued, and every stall condition that could clear
+    /// before `next_event` pins `next_event` to the very next cycle, so the
+    /// per-cycle path would re-derive the identical `StallKind` on every
+    /// skipped cycle (proved per stall source in DESIGN.md §3).
+    pub fn settle_to(&mut self, now: u64, cfg: &SimConfig, design: &Design) {
+        debug_assert!(self.charged_until <= now, "core settled backwards");
+        let k = now - self.charged_until;
+        if k == 0 {
+            return;
+        }
+        for &kind in &self.stall_memo {
+            self.issue.bulk_charge(kind, k);
+        }
+        let high = design.uses_assist_warps();
+        let low = high && (cfg.sp_units > 0 || cfg.mem_units > 0);
+        self.awc.skip_idle_cycles(k, high, low);
+        self.charged_until = now;
+    }
+
     /// Advance this SM by one cycle.
     pub fn cycle(&mut self, now: u64, ctx: &mut CycleCtx) {
+        // Charge any skipped window ending at this wake (no-op when the
+        // core ran last cycle, and always a no-op under strict_tick).
+        self.settle_to(now, ctx.cfg, ctx.design);
+
         // 0. Apply due assist-warp retirements.
         self.apply_retirements(now, ctx);
 
@@ -254,6 +308,8 @@ impl Core {
         }
         self.next_event = next.max(now + 1);
         self.min_ready_hint = u64::MAX;
+        self.live_cache = self.any_live();
+        self.charged_until = now + 1;
     }
 
     fn apply_retirements(&mut self, now: u64, ctx: &mut CycleCtx) {
@@ -266,8 +322,8 @@ impl Core {
                 let r = self.pending_retires.swap_remove(i);
                 match r.payload {
                     Payload::Decompress { regs } => {
-                        for (w, reg) in regs {
-                            self.release_part(w, reg, r.at);
+                        for (w, reg, uid) in regs {
+                            self.release_part(w, reg, uid, r.at);
                         }
                     }
                     Payload::Compress { line_addr, verdict } => {
@@ -282,7 +338,7 @@ impl Core {
                         // and pre-fill the L1; a later demand load merges on
                         // the MSHR entry (§8.2).
                         for line in lines {
-                            if self.l1.contains(line) || self.mshr.contains_key(&line) {
+                            if self.l1.contains(line) || self.mshr.contains_key(line) {
                                 continue;
                             }
                             if self.mshr.len() >= self.mshr_limit {
@@ -339,17 +395,15 @@ impl Core {
         key
     }
 
-    fn release_part(&mut self, warp: usize, reg: u8, at: u64) {
-        if let Some(rel) = self.releases.get_mut(&(warp, reg)) {
-            rel.parts -= 1;
-            rel.floor = rel.floor.max(at);
-            if rel.parts == 0 {
-                let floor = rel.floor;
-                self.releases.remove(&(warp, reg));
-                if self.warps[warp].live() {
-                    self.warps[warp].reg_ready[reg as usize] = floor;
-                    self.warps[warp].blocked_until = 0;
-                }
+    fn release_part(&mut self, warp: usize, reg: u8, uid: u64, at: u64) {
+        if let Some(floor) = self.releases.release(warp, reg, uid, at) {
+            let w = &mut self.warps[warp];
+            // The uid guard (here and in the table) keeps a release that
+            // outlives its warp instance from delaying the slot's next
+            // tenant — warp slots are recycled across CTA refills.
+            if w.uid == uid && w.live() {
+                w.reg_ready[reg as usize] = floor;
+                w.blocked_until = 0;
             }
         }
     }
@@ -363,7 +417,7 @@ impl Core {
 
         // GTO order: greedy warp first, then oldest (precomputed at launch).
         let greedy = self.greedy[sched].filter(|&g| self.warps[g].live());
-        let order = std::mem::take(&mut self.sched_order[sched % 2]);
+        let order = std::mem::take(&mut self.sched_order[sched]);
         let candidates = greedy
             .into_iter()
             .chain(order.iter().copied().filter(|&i| Some(i) != greedy));
@@ -410,7 +464,12 @@ impl Core {
             match inst.op.fu() {
                 FuKind::Sp if slots.sp == 0 => {
                     saw_compute_struct = true;
-                    self.min_ready_hint = now + 1;
+                    // Slot contention is transient (another warp consumed
+                    // the slot this very cycle), so the wake hint is the
+                    // next cycle — folded in with `.min` like every other
+                    // hint update, so the `min_ready_hint` lower-bound
+                    // invariant survives reordering of these arms.
+                    self.min_ready_hint = self.min_ready_hint.min(now + 1);
                     continue;
                 }
                 FuKind::Sfu => {
@@ -454,7 +513,23 @@ impl Core {
                         self.sweep_mshr(now);
                         if self.mshr.len() >= self.mshr_limit {
                             saw_mem_struct = true;
-                            self.min_ready_hint = now + 1;
+                            // Precise wake: a full MSHR drains only when an
+                            // in-flight fill crosses `now` (entries pinned
+                            // by a live assist warp are covered by the AWC
+                            // activity hint in `cycle`), so the next fill
+                            // time is a sound lower bound on this stall
+                            // clearing — no `now + 1` spin needed. The scan
+                            // is skipped under strict_tick, where hints are
+                            // never consumed: paying O(table) per stalled
+                            // cycle there would skew the reference baseline
+                            // the tick benchmark compares against.
+                            let wake = if ctx.cfg.strict_tick {
+                                now + 1
+                            } else {
+                                self.mshr.next_fill_after(now)
+                            };
+                            self.min_ready_hint =
+                                self.min_ready_hint.min(wake.max(now + 1));
                             continue;
                         }
                     }
@@ -484,12 +559,13 @@ impl Core {
                         // deploys a low-priority install warp, so the
                         // result becomes reusable when that warp retires.
                         use crate::caba::subroutines::Subroutine;
+                        let uid = self.warps[w].uid;
                         let key = self.memo_key(ctx.wl, w, iter, body_idx);
                         let sub = Subroutine {
                             total: memo::LOOKUP_SUB_TOTAL,
                             mem: memo::LOOKUP_SUB_MEM,
                         };
-                        if self.awc.trigger_lookup(now, sub, w, inst.dst).is_some() {
+                        if self.awc.trigger_lookup(now, sub, w, inst.dst, uid).is_some() {
                             self.awc.stats.memo_lookups += 1;
                             match self.memo.lookup(key, now) {
                                 memo::Lookup::Hit => {
@@ -522,10 +598,7 @@ impl Core {
                             // The lookup's reg release would fight the SFU
                             // write; resolve by tracking the max: the reg is
                             // ready at max(lookup retire, chosen latency).
-                            self.releases.insert(
-                                (w, inst.dst),
-                                Release { parts: 1, floor: now + latency },
-                            );
+                            self.releases.insert(w, inst.dst, uid, 1, now + latency);
                             self.warps[w].reg_ready[inst.dst as usize] = PENDING;
                             self.warps[w].blocked_until = 0;
                         } else {
@@ -569,6 +642,7 @@ impl Core {
             }
             if self.warps[w].pc >= ctx.wl.program.total_insts() {
                 self.warps[w].done = true;
+                self.warp_retired = true;
                 if self.greedy[sched] == Some(w) {
                     self.greedy[sched] = None;
                 }
@@ -579,13 +653,15 @@ impl Core {
             issued = true;
             break;
         }
-        self.sched_order[sched % 2] = order;
+        self.sched_order[sched] = order;
         if issued {
-            self.min_ready_hint = now + 1;
+            self.min_ready_hint = self.min_ready_hint.min(now + 1);
             return true;
         }
 
-        // Nothing issued: classify (Fig. 2).
+        // Nothing issued: classify (Fig. 2), and memoize the verdict — it
+        // holds for every cycle until `next_event` (the event-driven tick
+        // bulk-charges it via `settle_to`).
         let kind = if saw_mem_struct {
             StallKind::Memory
         } else if saw_compute_struct {
@@ -596,6 +672,7 @@ impl Core {
             let _ = any_candidate;
             StallKind::Idle
         };
+        self.stall_memo[sched] = kind;
         self.issue.record_stall(kind);
         false
     }
@@ -622,11 +699,11 @@ impl Core {
         for &line in &lines {
             ctx.stats.energy_events.l1_accesses += 1;
             // 1. In-flight miss to the same line: merge.
-            if let Some(info) = self.mshr.get(&line) {
+            if let Some(info) = self.mshr.get(line) {
                 match info.awc_token {
                     // Attach to the in-flight decompression; if it already
                     // retired, the data is ready at/after the fill time.
-                    Some(tok) if self.awc.attach_reg(tok, w, dst) => parts += 1,
+                    Some(tok) if self.awc.attach_reg(tok, w, dst, uid) => parts += 1,
                     _ => floor = floor.max(info.fill_at),
                 }
                 continue;
@@ -647,7 +724,7 @@ impl Core {
                                 enc,
                                 ctx.design.direct_load,
                             );
-                            if let Some(tok) = self.awc.trigger_decompress(t_hit, sub, w, dst) {
+                            if let Some(tok) = self.awc.trigger_decompress(t_hit, sub, w, dst, uid) {
                                 self.mshr.insert(line, MshrInfo { fill_at: t_hit, awc_token: Some(tok) });
                                 parts += 1;
                             } else {
@@ -700,7 +777,7 @@ impl Core {
                                 ctx.design.direct_load,
                             );
                             if let Some(tok) =
-                                self.awc.trigger_decompress(outcome.data_at, sub, w, dst)
+                                self.awc.trigger_decompress(outcome.data_at, sub, w, dst, uid)
                             {
                                 self.mshr.insert(
                                     line,
@@ -750,7 +827,7 @@ impl Core {
             let mut pred = std::mem::take(&mut self.prefetch_scratch);
             pred.clear();
             if pf::predict(ctx.wl, mem, uid, iter, body_idx, &mut pred) {
-                pred.retain(|l| !self.l1.contains(*l) && !self.mshr.contains_key(l));
+                pred.retain(|l| !self.l1.contains(*l) && !self.mshr.contains_key(*l));
                 if !pred.is_empty() {
                     let sub = Subroutine { total: pf::PREFETCH_SUB_TOTAL, mem: pf::PREFETCH_SUB_MEM };
                     let _ = self.awc.trigger_low(
@@ -768,7 +845,7 @@ impl Core {
         // Scoreboard outcome for the destination register.
         if parts > 0 {
             self.warps[w].reg_ready[dst as usize] = PENDING;
-            self.releases.insert((w, dst), Release { parts, floor });
+            self.releases.insert(w, dst, uid, parts, floor);
         } else {
             self.warps[w].reg_ready[dst as usize] = floor;
         }
@@ -875,7 +952,7 @@ impl Core {
 
     fn sweep_mshr(&mut self, now: u64) {
         let awc = &self.awc;
-        self.mshr.retain(|_, info| {
+        self.mshr.sweep(|info| {
             info.fill_at > now || info.awc_token.map_or(false, |t| awc.is_live(t))
         });
     }
@@ -908,5 +985,41 @@ mod tests {
         assert_eq!(c.mshr_limit, 64);
         assert_eq!(c.l1.capacity_lines(), 128); // 16KB / 128B
         assert!(!c.memo.enabled());
+    }
+
+    #[test]
+    fn scheduler_structures_size_by_config() {
+        // `schedulers_per_sm` is a fingerprinted config key; the scheduler
+        // structures used to hard-code 2 and index out of bounds at 4.
+        for n_sched in [1usize, 2, 3, 4] {
+            let mut cfg = SimConfig::default();
+            cfg.schedulers_per_sm = n_sched;
+            let d = Design::base();
+            let mut c = Core::new(0, &cfg, &d, &MemoGeometry::disabled());
+            assert_eq!(c.greedy.len(), n_sched);
+            assert_eq!(c.sched_order.len(), n_sched);
+            assert_eq!(c.stall_memo.len(), n_sched);
+            // Populate a few warp slots and rebuild: every live slot must
+            // land in exactly one scheduler's order.
+            for (i, uid) in [(0usize, 5u64), (1, 3), (2, 8), (5, 1)] {
+                c.warps[i].uid = uid;
+                c.warps[i].done = false;
+            }
+            c.rebuild_sched_order();
+            let mut seen: Vec<usize> = Vec::new();
+            for (sched, order) in c.sched_order.iter().enumerate() {
+                for &slot in order {
+                    assert_eq!(slot % n_sched, sched, "slot on wrong scheduler");
+                    seen.push(slot);
+                }
+                // Age (uid) order within a scheduler.
+                assert!(
+                    order.windows(2).all(|p| c.warps[p[0]].uid < c.warps[p[1]].uid),
+                    "GTO order not uid-sorted"
+                );
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 1, 2, 5]);
+        }
     }
 }

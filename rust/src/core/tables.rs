@@ -1,0 +1,337 @@
+//! Flat per-access data structures for the SM hot path.
+//!
+//! PR 3 removed the `DataModel`/oracle hash maps; these two tables finish
+//! the job for the core itself, replacing the last two per-access
+//! `HashMap`s (`Core::mshr`, `Core::releases`) with structures that hash
+//! nothing (releases) or one multiply (MSHR) and allocate nothing per
+//! access:
+//!
+//! * [`MshrTable`] — an open-addressed, linear-probing table keyed on line
+//!   address, in the spirit of the `MemoOracle` table
+//!   (`crate::compress::oracle`). Unlike the memo table it may never drop
+//!   an entry (an in-flight miss is architectural state), so instead of a
+//!   bounded probe with replacement it sizes itself at ≥2× the logical
+//!   MSHR limit and rebuilds on the (rare) sweep. Vacancy is carried by a
+//!   key sentinel — the intrusive-free-list equivalent for a table whose
+//!   only bulk operation is "drop every filled entry".
+//! * [`ReleaseTable`] — a dense array indexed by `warp_slot × MAX_REGS +
+//!   reg`. Both key components are small and bounded, so hashing them was
+//!   pure waste; a generation stamp (the owning warp's uid) guards each
+//!   entry against retirements that outlive their warp instance.
+
+use crate::isa::MAX_REGS;
+
+/// In-flight miss bookkeeping (one entry per outstanding line).
+#[derive(Clone, Copy, Debug)]
+pub struct MshrInfo {
+    /// Cycle the line data reaches this SM.
+    pub fill_at: u64,
+    /// Token of the AWT entry decompressing this line, if any.
+    pub awc_token: Option<u64>,
+}
+
+/// Vacant-slot key sentinel. Line addresses are `array base + offset` and
+/// never reach `u64::MAX`; inserts assert it.
+const VACANT: u64 = u64::MAX;
+
+/// Open-addressed MSHR: line address → [`MshrInfo`].
+///
+/// The *logical* capacity bound (`l1_mshrs`) stays with the caller — the
+/// scheduler's structural-stall check enforces it, exactly as it did over
+/// the `HashMap`. This table only provides the storage, sized with enough
+/// physical headroom (2× the limit plus one warp-wide access) that linear
+/// probes stay short at the worst legal occupancy. Trace replays may serve
+/// wider accesses than any synthetic generator; if occupancy ever passes
+/// 3/4 the table rebuilds at double size rather than degrade — contents
+/// are unchanged, so simulation results cannot depend on it.
+pub struct MshrTable {
+    keys: Vec<u64>,
+    info: Vec<MshrInfo>,
+    mask: usize,
+    len: usize,
+    /// Reusable survivor scratch for [`MshrTable::sweep`].
+    scratch: Vec<(u64, MshrInfo)>,
+}
+
+#[inline]
+fn hash_line(key: u64) -> u64 {
+    // One multiply + one xor-shift (fibonacci hashing): line addresses are
+    // already well-spread, this just decorrelates the low bits.
+    let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^ (h >> 29)
+}
+
+impl MshrTable {
+    pub fn new(mshr_limit: usize, max_lines_per_access: usize) -> MshrTable {
+        let slots = (2 * (mshr_limit + max_lines_per_access))
+            .next_power_of_two()
+            .max(16);
+        MshrTable {
+            keys: vec![VACANT; slots],
+            info: vec![MshrInfo { fill_at: 0, awc_token: None }; slots],
+            mask: slots - 1,
+            len: 0,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Live entries (the scheduler compares this against `l1_mshrs`).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn contains_key(&self, line: u64) -> bool {
+        self.get(line).is_some()
+    }
+
+    pub fn get(&self, line: u64) -> Option<&MshrInfo> {
+        let mut i = hash_line(line) as usize & self.mask;
+        loop {
+            let k = self.keys[i];
+            if k == line {
+                return Some(&self.info[i]);
+            }
+            if k == VACANT {
+                return None;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Insert a fresh line. Callers never insert a line that is already
+    /// present (they merge on [`MshrTable::get`] first); debug builds
+    /// assert it.
+    pub fn insert(&mut self, line: u64, info: MshrInfo) {
+        debug_assert_ne!(line, VACANT, "line address collides with the vacancy sentinel");
+        debug_assert!(!self.contains_key(line), "MSHR double-insert for line {line}");
+        if (self.len + 1) * 4 > self.keys.len() * 3 {
+            self.grow();
+        }
+        let mut i = hash_line(line) as usize & self.mask;
+        while self.keys[i] != VACANT {
+            i = (i + 1) & self.mask;
+        }
+        self.keys[i] = line;
+        self.info[i] = info;
+        self.len += 1;
+    }
+
+    fn grow(&mut self) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        self.drain_into(&mut scratch);
+        let slots = (self.keys.len() * 2).max(16);
+        self.keys = vec![VACANT; slots];
+        self.info = vec![MshrInfo { fill_at: 0, awc_token: None }; slots];
+        self.mask = slots - 1;
+        self.len = 0;
+        for &(k, v) in &scratch {
+            self.insert(k, v);
+        }
+        self.scratch = scratch;
+    }
+
+    fn drain_into(&mut self, out: &mut Vec<(u64, MshrInfo)>) {
+        for i in 0..self.keys.len() {
+            if self.keys[i] != VACANT {
+                out.push((self.keys[i], self.info[i]));
+            }
+        }
+    }
+
+    /// Drop every entry for which `keep` returns false (the lazy fill
+    /// sweep). Open-addressed deletion would need tombstones or backward
+    /// shifting; since the sweep runs only when the MSHR is *full* (rare),
+    /// a full rebuild is simpler and leaves the table tombstone-free.
+    pub fn sweep(&mut self, mut keep: impl FnMut(&MshrInfo) -> bool) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        for i in 0..self.keys.len() {
+            if self.keys[i] != VACANT {
+                if keep(&self.info[i]) {
+                    scratch.push((self.keys[i], self.info[i]));
+                }
+                self.keys[i] = VACANT;
+            }
+        }
+        self.len = 0;
+        for &(k, v) in &scratch {
+            let mut i = hash_line(k) as usize & self.mask;
+            while self.keys[i] != VACANT {
+                i = (i + 1) & self.mask;
+            }
+            self.keys[i] = k;
+            self.info[i] = v;
+            self.len += 1;
+        }
+        self.scratch = scratch;
+    }
+
+    /// Earliest strictly-future fill time among live entries, `u64::MAX`
+    /// if none. This is the precise wake time for an MSHR-full structural
+    /// stall: entries with `fill_at ≤ now` that survived the sweep are
+    /// pinned by a live assist warp, and assist-warp activity feeds the
+    /// core's `next_event` through the AWC hint instead (see DESIGN.md §3,
+    /// wake-source contract).
+    pub fn next_fill_after(&self, now: u64) -> u64 {
+        let mut next = u64::MAX;
+        for i in 0..self.keys.len() {
+            if self.keys[i] != VACANT && self.info[i].fill_at > now {
+                next = next.min(self.info[i].fill_at);
+            }
+        }
+        next
+    }
+}
+
+/// Multi-part register release (a load spanning several lines completes
+/// when all per-line decompressions retire).
+#[derive(Clone, Copy, Debug, Default)]
+struct ReleaseSlot {
+    /// Outstanding parts; 0 = vacant (live entries always hold ≥ 1).
+    parts: u32,
+    /// Running max of part completion times.
+    floor: u64,
+    /// Uid of the warp instance that opened this release. Slots are keyed
+    /// by (warp slot, reg) and warp slots are recycled across CTAs; the
+    /// stamp keeps a retirement that outlives its warp instance from
+    /// corrupting the slot's next tenant.
+    gen: u64,
+}
+
+/// Dense release table: `(warp_slot, reg) → (parts, floor, gen)`.
+pub struct ReleaseTable {
+    slots: Vec<ReleaseSlot>,
+}
+
+impl ReleaseTable {
+    pub fn new(warp_slots: usize) -> ReleaseTable {
+        ReleaseTable {
+            slots: vec![ReleaseSlot::default(); warp_slots * MAX_REGS],
+        }
+    }
+
+    #[inline]
+    fn idx(warp: usize, reg: u8) -> usize {
+        warp * MAX_REGS + reg as usize
+    }
+
+    /// Open (or replace) the release for `(warp, reg)`, owned by warp
+    /// instance `uid`. Replacement matches the old `HashMap::insert`
+    /// semantics: a stale release for a previous tenant is simply
+    /// overwritten.
+    pub fn insert(&mut self, warp: usize, reg: u8, uid: u64, parts: u32, floor: u64) {
+        debug_assert!(parts > 0, "a release must have at least one part");
+        self.slots[Self::idx(warp, reg)] = ReleaseSlot { parts, floor, gen: uid };
+    }
+
+    /// Apply one part completion at time `at` for warp instance `uid`.
+    /// Returns `Some(floor)` when this was the final part (the entry is
+    /// freed); `None` while parts remain, when no release is open, or when
+    /// the open release belongs to a different warp instance (a stale
+    /// retirement — dropped, and the entry left for its rightful owner).
+    pub fn release(&mut self, warp: usize, reg: u8, uid: u64, at: u64) -> Option<u64> {
+        let slot = &mut self.slots[Self::idx(warp, reg)];
+        if slot.parts == 0 || slot.gen != uid {
+            return None;
+        }
+        slot.parts -= 1;
+        slot.floor = slot.floor.max(at);
+        if slot.parts == 0 {
+            Some(slot.floor)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mshr_insert_get_len() {
+        let mut t = MshrTable::new(4, 4);
+        assert!(t.is_empty());
+        t.insert(100, MshrInfo { fill_at: 50, awc_token: None });
+        t.insert(101, MshrInfo { fill_at: 60, awc_token: Some(7) });
+        assert_eq!(t.len(), 2);
+        assert!(t.contains_key(100));
+        assert!(!t.contains_key(102));
+        assert_eq!(t.get(101).unwrap().fill_at, 60);
+        assert_eq!(t.get(101).unwrap().awc_token, Some(7));
+    }
+
+    #[test]
+    fn mshr_sweep_keeps_predicate_and_reuses_slots() {
+        let mut t = MshrTable::new(8, 8);
+        for i in 0..8u64 {
+            t.insert(i, MshrInfo { fill_at: 10 * i, awc_token: None });
+        }
+        t.sweep(|info| info.fill_at >= 40);
+        assert_eq!(t.len(), 4);
+        assert!(!t.contains_key(0));
+        assert!(t.contains_key(7));
+        // Reinsert over swept slots.
+        t.insert(100, MshrInfo { fill_at: 1, awc_token: None });
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.get(100).unwrap().fill_at, 1);
+    }
+
+    #[test]
+    fn mshr_next_fill_skips_past_and_pinned() {
+        let mut t = MshrTable::new(4, 4);
+        t.insert(1, MshrInfo { fill_at: 5, awc_token: None });
+        t.insert(2, MshrInfo { fill_at: 90, awc_token: None });
+        t.insert(3, MshrInfo { fill_at: 40, awc_token: Some(1) });
+        assert_eq!(t.next_fill_after(10), 40);
+        assert_eq!(t.next_fill_after(50), 90);
+        assert_eq!(t.next_fill_after(90), u64::MAX);
+    }
+
+    #[test]
+    fn mshr_grows_past_static_headroom() {
+        // A trace replay can serve wider accesses than any synthetic
+        // generator; the table must absorb them rather than probe forever.
+        let mut t = MshrTable::new(2, 2);
+        for i in 0..1000u64 {
+            t.insert(i, MshrInfo { fill_at: i, awc_token: None });
+        }
+        assert_eq!(t.len(), 1000);
+        for i in (0..1000u64).step_by(97) {
+            assert_eq!(t.get(i).unwrap().fill_at, i);
+        }
+    }
+
+    #[test]
+    fn release_parts_and_floor() {
+        let mut r = ReleaseTable::new(4);
+        r.insert(2, 5, 77, 3, 100);
+        assert_eq!(r.release(2, 5, 77, 150), None);
+        assert_eq!(r.release(2, 5, 77, 120), None);
+        // Final part: floor is the max over all completion times and the
+        // initial floor.
+        assert_eq!(r.release(2, 5, 77, 90), Some(150));
+        // Entry is freed.
+        assert_eq!(r.release(2, 5, 77, 200), None);
+    }
+
+    #[test]
+    fn release_generation_guards_recycled_slots() {
+        let mut r = ReleaseTable::new(4);
+        r.insert(1, 3, 10, 1, 50);
+        // A retirement stamped with a different warp instance neither
+        // completes nor corrupts the open release.
+        assert_eq!(r.release(1, 3, 99, 60), None);
+        assert_eq!(r.release(1, 3, 10, 60), Some(60));
+        // Re-tenanting the slot starts a fresh generation.
+        r.insert(1, 3, 20, 2, 0);
+        assert_eq!(r.release(1, 3, 10, 70), None); // stale uid ignored
+        assert_eq!(r.release(1, 3, 20, 70), None);
+        assert_eq!(r.release(1, 3, 20, 80), Some(80));
+    }
+}

@@ -16,7 +16,7 @@
 //! caba trace replay <file.cabatrace> [--design D] [--set k=v]...
 //! caba trace info <file.cabatrace>
 //! caba trace import <dump.txt> [--out file] [--pattern random|zero|...]
-//! caba bench [--quick] [--out BENCH_pr3.json] [--floors BENCH_floors.txt]
+//! caba bench [--quick] [--out BENCH_pr5.json] [--floors BENCH_floors.txt]
 //! ```
 //!
 //! `--jobs N` sets the sweep-engine worker count (default: one per
@@ -346,7 +346,7 @@ fn run() -> Result<()> {
         Some("bench") => {
             let opts = caba::bench::BenchOpts {
                 quick: args.flag("quick").is_some(),
-                out: args.flag("out").unwrap_or("BENCH_pr3.json").to_string(),
+                out: args.flag("out").unwrap_or("BENCH_pr5.json").to_string(),
                 floors: args.flag("floors").map(str::to_string),
             };
             let t0 = Instant::now();
@@ -377,7 +377,7 @@ fn run() -> Result<()> {
                  caba trace replay run.cabatrace [--design CABA-BDI] [--set key=value]\n  \
                  caba trace info run.cabatrace\n  \
                  caba trace import dump.txt [--out dump.cabatrace] [--pattern random]\n  \
-                 caba bench [--quick] [--out BENCH_pr3.json] [--floors BENCH_floors.txt]"
+                 caba bench [--quick] [--out BENCH_pr5.json] [--floors BENCH_floors.txt]"
             );
             Ok(())
         }

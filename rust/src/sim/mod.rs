@@ -377,15 +377,36 @@ impl Simulator {
 
     /// Run to completion (or the cycle/instruction budget) and return the
     /// collected statistics.
+    ///
+    /// The loop is **event-driven per core**: a core whose `next_event`
+    /// lies in the future is skipped outright — its stall cycles are
+    /// bulk-charged from its memoized per-scheduler classification when it
+    /// next wakes ([`Core::settle_to`]) — and when *every* core is
+    /// skippable, `now` jumps straight to the earliest `next_event`. The
+    /// result is **bit-identical** to ticking every core every cycle
+    /// (`strict_tick=true` forces exactly that reference path; the
+    /// differential suite in `tests/strict_tick_differential.rs` pins the
+    /// equivalence). The soundness argument — why `next_event` can never
+    /// overshoot a state change and why the memoized classification holds
+    /// across the whole skipped window — is the wake-source contract,
+    /// DESIGN.md §3.
     pub fn run(&mut self) -> SimStats {
         self.dispatch_ctas();
+        let strict = self.cfg.strict_tick;
         let mut now: u64 = 0;
         loop {
-            // Tick every SM.
-            let mut all_idle = true;
+            let mut any_live = false;
             let mut min_next = u64::MAX;
-            for i in 0..self.cores.len() {
-                let core = &mut self.cores[i];
+            let mut retired_any = false;
+            for core in &mut self.cores {
+                if !strict && core.next_event > now {
+                    // Skipped: nothing on this core can change state before
+                    // `next_event`; its liveness cache is therefore valid
+                    // and its stall slots are charged lazily on wake.
+                    any_live |= core.live_cached();
+                    min_next = min_next.min(core.next_event);
+                    continue;
+                }
                 let mut ctx = CycleCtx {
                     cfg: &self.cfg,
                     design: &self.design,
@@ -395,33 +416,46 @@ impl Simulator {
                     stats: &mut self.stats,
                 };
                 core.cycle(now, &mut ctx);
-                if core.any_live() {
-                    all_idle = false;
-                }
+                any_live |= core.live_cached();
+                retired_any |= core.take_warp_retired();
                 min_next = min_next.min(core.next_event);
             }
-            let launched = self.refill_ctas();
+            // CTA-refill eligibility arises only on cycles where a warp
+            // retired (group-done and slot-free flags change nowhere else),
+            // so the scan is gated on that in event-driven mode; strict
+            // mode scans unconditionally, pinning the equivalence of the
+            // gating argument itself.
+            let launched = if strict || retired_any {
+                self.refill_ctas()
+            } else {
+                false
+            };
 
             now += 1;
-            // Fast-forward over cycles where no core can make progress
-            // (every warp is waiting on a known future ready time). The
-            // skipped scheduler slots are charged as data-dependence stalls,
-            // which is exactly what those cycles are (Fig. 2 taxonomy).
-            if !launched && min_next > now && min_next != u64::MAX {
-                let skip = (min_next - now).min(100_000);
-                if skip > 0 {
-                    let sched_slots = self.cfg.schedulers_per_sm as u64 * self.cores.len() as u64;
-                    self.stats.issue.data_stall += skip * sched_slots;
-                    now += skip;
-                }
-            }
-
-            let drained = all_idle && self.next_cta >= self.wl.total_ctas as u64;
+            let drained = !any_live && self.next_cta >= self.wl.total_ctas as u64;
             if drained || now >= self.cfg.max_cycles || self.stats.warp_insts >= self.cfg.max_warp_insts
             {
                 self.stats.finished = drained;
                 break;
             }
+            // Fast-forward `now` when no core has anything to do before
+            // `min_next` (the common case once per-core skipping makes the
+            // per-iteration work proportional to *busy* cores only). The
+            // jump is clamped to `max_cycles` so a budget-capped run stops
+            // at exactly the cycle the strict path would.
+            if !strict && !launched && min_next > now && min_next != u64::MAX {
+                now = min_next.min(self.cfg.max_cycles);
+                if now >= self.cfg.max_cycles {
+                    self.stats.finished = false;
+                    break;
+                }
+            }
+        }
+        // Settle every core's outstanding skipped window so the issue
+        // breakdown covers each of the `now` cycles exactly once per
+        // scheduler slot — on any exit path, in either mode.
+        for core in &mut self.cores {
+            core.settle_to(now, &self.cfg, &self.design);
         }
         // On a drained run every CTA was launched exactly once (dispatch or
         // refill) and retired — the launch counter must cover the workload.
@@ -475,6 +509,14 @@ impl Simulator {
             s.caba.memo_evictions += core.awc.stats.memo_evictions;
             s.caba.memo_lookups_skipped += core.awc.stats.memo_lookups_skipped;
         }
+        // The tentpole invariant of the event-driven tick: executed cycles
+        // and bulk-settled windows together account every scheduler slot of
+        // every cycle exactly once, in either tick mode.
+        debug_assert_eq!(
+            s.issue.total(),
+            now * (self.cfg.schedulers_per_sm * self.cfg.n_sms) as u64,
+            "issue accounting must cover cycles × schedulers × SMs exactly"
+        );
         for d in &self.mem.dram {
             s.dram.reads += d.stats.reads;
             s.dram.writes += d.stats.writes;
@@ -544,6 +586,24 @@ mod tests {
             caba.dram.compression_ratio()
         );
         assert!(caba.caba.decompress_warps > 0);
+    }
+
+    #[test]
+    fn strict_tick_matches_event_driven_tick() {
+        // The full app×design differential lives in
+        // tests/strict_tick_differential.rs; this is the one-pair smoke
+        // version kept next to the run loop it guards.
+        let app = apps::find("PVC").unwrap();
+        let event = Simulator::new(tiny_cfg(), Design::caba(Algo::Bdi), app, 0.02).run();
+        let mut strict_cfg = tiny_cfg();
+        strict_cfg.strict_tick = true;
+        let strict = Simulator::new(strict_cfg, Design::caba(Algo::Bdi), app, 0.02).run();
+        assert_eq!(event.cycles, strict.cycles);
+        assert_eq!(event.warp_insts, strict.warp_insts);
+        // Not just the totals: the bulk-charged stall classification must
+        // reproduce the per-cycle taxonomy category for category.
+        assert_eq!(event.issue, strict.issue);
+        assert_eq!(event.memory_signature(), strict.memory_signature());
     }
 
     #[test]

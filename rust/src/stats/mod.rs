@@ -31,11 +31,19 @@ impl IssueBreakdown {
     }
 
     pub fn record_stall(&mut self, kind: StallKind) {
+        self.bulk_charge(kind, 1);
+    }
+
+    /// Charge `n` scheduler slots to `kind` at once — the event-driven
+    /// tick's bulk equivalent of `n` calls to [`Self::record_stall`]
+    /// (integer counters, so bulk and per-cycle charging are exactly
+    /// interchangeable).
+    pub fn bulk_charge(&mut self, kind: StallKind, n: u64) {
         match kind {
-            StallKind::Compute => self.compute_stall += 1,
-            StallKind::Memory => self.memory_stall += 1,
-            StallKind::DataDependence => self.data_stall += 1,
-            StallKind::Idle => self.idle += 1,
+            StallKind::Compute => self.compute_stall += n,
+            StallKind::Memory => self.memory_stall += n,
+            StallKind::DataDependence => self.data_stall += n,
+            StallKind::Idle => self.idle += n,
         }
     }
 

@@ -1,0 +1,246 @@
+//! The event-driven tick's equivalence contract, end to end:
+//!
+//! `Simulator::run` skips any SM whose `next_event` lies in the future and
+//! bulk-charges its stall cycles on wake; `strict_tick=true` forces the
+//! naive reference (every SM, every cycle, no fast-forward). The two paths
+//! must be **bit-identical** — not "statistically close":
+//!
+//! 1. across apps × designs (memory-bound compression, compute-bound
+//!    memoization, hybrid, prefetch, hardware-compression), on cycles,
+//!    warp_insts, the *full* issue-cycle breakdown (category for
+//!    category, not just the total), and `memory_signature()`;
+//! 2. through trace record → replay (a trace recorded under one tick mode
+//!    replays bit-identically under the other);
+//! 3. at the unit level: a single hand-built core, driven per-cycle vs.
+//!    skip-and-settle over the same workload, lands on the identical
+//!    `IssueBreakdown`;
+//! 4. under a mid-stall cycle-budget cut (settlement on the `max_cycles`
+//!    exit path charges exactly the strict count).
+//!
+//! The issue-slot conservation law `issue.total() == cycles ×
+//! schedulers_per_sm × n_sms` is asserted throughout (and again as a
+//! `debug_assert` inside `Simulator::collect`).
+
+use caba::compress::Algo;
+use caba::core::{Core, CycleCtx};
+use caba::mem::MemSystem;
+use caba::memo::MemoGeometry;
+use caba::sim::designs::Design;
+use caba::sim::{DataModel, Simulator};
+use caba::trace::replay::TraceData;
+use caba::workload::{apps, Workload};
+use caba::SimConfig;
+use std::sync::Arc;
+
+fn cfg(strict: bool) -> SimConfig {
+    let mut c = SimConfig::default();
+    c.n_sms = 2;
+    c.max_cycles = 500_000;
+    c.strict_tick = strict;
+    c
+}
+
+fn run_pair(app_name: &str, design: Design, scale: f64, base: &SimConfig) {
+    let app = apps::find(app_name).expect("differential app exists");
+    let mut event_cfg = base.clone();
+    event_cfg.strict_tick = false;
+    let mut strict_cfg = base.clone();
+    strict_cfg.strict_tick = true;
+    let event = Simulator::new(event_cfg, design, app, scale).run();
+    let strict = Simulator::new(strict_cfg, design, app, scale).run();
+
+    let label = format!("{app_name}/{}", design.name);
+    assert_eq!(event.finished, strict.finished, "{label}: finished");
+    assert_eq!(event.cycles, strict.cycles, "{label}: cycles");
+    assert_eq!(event.warp_insts, strict.warp_insts, "{label}: warp_insts");
+    assert_eq!(event.ctas_launched, strict.ctas_launched, "{label}: ctas");
+    // Full per-category breakdown — the bulk-charged classification must
+    // reproduce the per-cycle Fig. 2 taxonomy exactly, which subsumes the
+    // issue.total() requirement.
+    assert_eq!(event.issue, strict.issue, "{label}: issue breakdown");
+    assert_eq!(
+        event.issue.total(),
+        event.cycles * (base.schedulers_per_sm * base.n_sms) as u64,
+        "{label}: issue slots not conserved"
+    );
+    assert_eq!(
+        event.memory_signature(),
+        strict.memory_signature(),
+        "{label}: memory signature"
+    );
+}
+
+#[test]
+fn strict_equals_event_across_apps_and_designs() {
+    // Memory-bound × compression (the paper's core), compute-bound ×
+    // memoization (§8.1), the hybrid, prefetching (§8.2), hardware
+    // compression, and the plain baseline.
+    let pairs: &[(&str, Design)] = &[
+        ("SLA", Design::base()),
+        ("PVC", Design::caba(Algo::Bdi)),
+        ("MM", Design::caba(Algo::Fpc)),
+        ("PVC", Design::hw_bdi()),
+        ("SLA", Design::caba_prefetch()),
+        ("FRAG", Design::caba_memo()),
+        ("NNA", Design::caba_memo_hybrid()),
+    ];
+    for &(app, design) in pairs {
+        run_pair(app, design, 0.02, &cfg(false));
+    }
+}
+
+#[test]
+fn strict_equals_event_with_four_schedulers() {
+    // schedulers_per_sm used to be hard-coded to 2 in the scheduler
+    // structures (`--set schedulers_per_sm=4` indexed out of bounds); this
+    // pins both the fix and the differential at the wider width.
+    let mut base = cfg(false);
+    base.schedulers_per_sm = 4;
+    run_pair("PVC", Design::caba(Algo::Bdi), 0.02, &base);
+    run_pair("FRAG", Design::caba_memo(), 0.02, &base);
+}
+
+#[test]
+fn strict_equals_event_on_trace_replay() {
+    // Record under the event-driven tick, then replay under both modes:
+    // the trace-driven workload must behave identically too (record →
+    // replay bit-identity is mode-independent).
+    let app = apps::find("PVC").unwrap();
+    let design = Design::caba(Algo::Bdi);
+    let path = std::env::temp_dir().join(format!(
+        "caba_strict_diff_{}.cabatrace",
+        std::process::id()
+    ));
+    let recorded = {
+        let mut sim = Simulator::new(cfg(false), design, app, 0.02);
+        sim.record_to(path.to_str().unwrap()).expect("attach recorder");
+        sim.run()
+    };
+    assert!(recorded.finished);
+
+    let trace = TraceData::load(path.to_str().unwrap()).expect("load trace");
+    let event = Simulator::from_trace(cfg(false), design, Arc::clone(&trace))
+        .expect("event replay")
+        .run();
+    let strict = Simulator::from_trace(cfg(true), design, Arc::clone(&trace))
+        .expect("strict replay")
+        .run();
+    assert_eq!(event.cycles, strict.cycles);
+    assert_eq!(event.warp_insts, strict.warp_insts);
+    assert_eq!(event.issue, strict.issue);
+    assert_eq!(event.memory_signature(), strict.memory_signature());
+    // And both reproduce the recording run's memory side.
+    assert_eq!(event.memory_signature(), recorded.memory_signature());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn strict_equals_event_under_cycle_budget_cut() {
+    // Cut the budget mid-flight (including, almost surely, mid-stall for
+    // the memory-bound app): the settlement on the max_cycles exit path
+    // must charge exactly what strict per-cycle ticking charges, and both
+    // must report cycles == max_cycles.
+    let mut saw_cut = false;
+    for budget in [1_000u64, 7_777, 20_011] {
+        let mut base = cfg(false);
+        base.max_cycles = budget;
+        let app = apps::find("PVC").unwrap();
+        let design = Design::caba(Algo::Bdi);
+        let mut strict_cfg = base.clone();
+        strict_cfg.strict_tick = true;
+        let event = Simulator::new(base, design, app, 0.05).run();
+        let strict = Simulator::new(strict_cfg, design, app, 0.05).run();
+        assert_eq!(event.finished, strict.finished, "budget {budget}");
+        assert_eq!(event.cycles, strict.cycles, "budget {budget}");
+        if !event.finished {
+            // A budget-cut run must stop at exactly the budget in both
+            // modes (the event path clamps its fast-forward jumps).
+            saw_cut = true;
+            assert_eq!(event.cycles, budget, "budget {budget}");
+        }
+        assert_eq!(event.warp_insts, strict.warp_insts, "budget {budget}");
+        assert_eq!(event.issue, strict.issue, "budget {budget}");
+        assert_eq!(
+            event.memory_signature(),
+            strict.memory_signature(),
+            "budget {budget}"
+        );
+    }
+    assert!(saw_cut, "no budget actually cut the run mid-flight — shrink the budgets");
+}
+
+/// Drive one hand-built core through `Core::cycle` per-cycle vs.
+/// skip-and-settle, with identical surroundings, and require the identical
+/// issue breakdown — the unit-level form of the bulk-charge contract.
+fn handbuilt_core_differential(app_name: &str, design: Design, horizon: u64) {
+    let cfg = SimConfig::default();
+    let app = apps::find(app_name).unwrap();
+    let wl = Workload::build(app, &cfg, 0.01);
+    let geom = MemoGeometry::for_workload(&cfg, &design, &wl);
+
+    let run = |event: bool| {
+        let mut core = Core::new(0, &cfg, &design, &geom);
+        let mut mem = MemSystem::new(&cfg, &design);
+        let mut data = DataModel::new(
+            Box::new(caba::compress::oracle::MemoOracle::new(
+                caba::compress::oracle::NativeOracle,
+            )),
+            &wl.arrays,
+        );
+        let mut stats = caba::stats::SimStats::default();
+        core.launch_cta(0, 0, &wl);
+        let mut t = 0u64;
+        while t < horizon {
+            if event && core.next_event > t {
+                // Jump straight to the wake (clamped to the horizon); the
+                // skipped window settles inside the next cycle() call or
+                // the final settle_to below.
+                t = core.next_event.min(horizon);
+                continue;
+            }
+            let mut ctx = CycleCtx {
+                cfg: &cfg,
+                design: &design,
+                wl: &wl,
+                mem: &mut mem,
+                data: &mut data,
+                stats: &mut stats,
+            };
+            core.cycle(t, &mut ctx);
+            t += 1;
+        }
+        core.settle_to(horizon, &cfg, &design);
+        core.issue
+    };
+
+    let per_cycle = run(false);
+    let skipped = run(true);
+    assert_eq!(
+        skipped, per_cycle,
+        "{app_name}/{}: bulk-charged breakdown diverged from per-cycle",
+        design.name
+    );
+    assert_eq!(
+        per_cycle.total(),
+        horizon * cfg.schedulers_per_sm as u64,
+        "{app_name}/{}: hand-built core lost scheduler slots",
+        design.name
+    );
+    // The scenario must actually exercise stalls, or the test is vacuous.
+    assert!(
+        per_cycle.total() > per_cycle.active,
+        "{app_name}/{}: no stall cycles in the hand-built scenario",
+        design.name
+    );
+}
+
+#[test]
+fn bulk_charged_stalls_match_per_cycle_on_handbuilt_core() {
+    // Memory-structural + data-dependence windows (long DRAM stalls).
+    handbuilt_core_differential("PVC", Design::caba(Algo::Bdi), 20_000);
+    // Compute-structural windows (busy quarter-rate SFU pipes) and the
+    // memo lookup/install machinery.
+    handbuilt_core_differential("FRAG", Design::caba_memo(), 20_000);
+    // Plain baseline.
+    handbuilt_core_differential("SLA", Design::base(), 20_000);
+}

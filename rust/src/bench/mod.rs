@@ -5,7 +5,7 @@
 //! perf_hotpath` (compression-substrate throughput, oracle memoization,
 //! end-to-end simulator throughput), but:
 //!
-//! * emits a **JSON report** (`BENCH_pr5.json` by default; schema
+//! * emits a **JSON report** (`BENCH_pr6.json` by default; schema
 //!   documented in EXPERIMENTS.md §Perf) so the perf trajectory is
 //!   tracked in-repo from PR 3 onward;
 //! * measures the **event-driven tick** against the `strict_tick=true`
@@ -13,6 +13,10 @@
 //!   is a number in the JSON, and any stats divergence between the two
 //!   modes is reported as a floor violation (a free differential check on
 //!   every CI bench run);
+//! * measures **intra-sim sharding** (`sim_threads` = 1/2/4 on one
+//!   memory-bound point): kcycles/s per thread count, speedup over the
+//!   serial run, and bit-identity of the stats — divergence is again a
+//!   violation regardless of the floors file;
 //! * optionally checks the numbers against a committed **floors file**
 //!   (`key=value` lines, same offline-friendly format as `SimConfig`
 //!   overrides) and reports violations — the CI `bench-smoke` job fails
@@ -70,6 +74,21 @@ pub struct TickPoint {
     pub stats_match: bool,
 }
 
+/// One intra-sim sharding measurement (`sim_threads=N` on one point).
+pub struct ShardPoint {
+    pub app: &'static str,
+    pub design: &'static str,
+    pub threads: usize,
+    pub kcycles_per_s: f64,
+    /// `kcycles_per_s / kcycles_per_s(threads=1)`; 1.0 for the serial
+    /// point itself.
+    pub speedup: f64,
+    /// Bit-identity vs. the `sim_threads=1` run on (cycles, warp_insts,
+    /// the full issue breakdown, memory_signature). `false` is a floor
+    /// violation regardless of the floors file.
+    pub stats_match: bool,
+}
+
 /// One end-to-end simulator measurement.
 pub struct SimPoint {
     pub app: &'static str,
@@ -96,6 +115,7 @@ pub struct BenchReport {
     pub memo_hit_rate: f64,
     pub sim: Vec<SimPoint>,
     pub tick: Vec<TickPoint>,
+    pub shard: Vec<ShardPoint>,
     pub violations: Vec<String>,
 }
 
@@ -216,10 +236,50 @@ fn measure_tick(
     Ok((out, event_points))
 }
 
+/// Measure the sharded tick loop at 1/2/4 threads on one memory-bound
+/// point. The serial (`sim_threads=1`) run is the baseline for both the
+/// speedup and the bit-identity check — so every bench run also exercises
+/// the sharding differential on this host's actual core count.
+fn measure_shard(app_name: &'static str, design: Design, scale: f64) -> Result<Vec<ShardPoint>> {
+    let app = apps::find(app_name)
+        .ok_or_else(|| anyhow!("bench references unknown app {app_name:?}"))?;
+    let mut out = Vec::new();
+    let mut base: Option<(crate::stats::SimStats, f64)> = None;
+    for threads in [1usize, 2, 4] {
+        let cfg = SimConfig { sim_threads: threads, ..SimConfig::default() };
+        let t0 = Instant::now();
+        let stats = Simulator::new(cfg, design, app, scale).run();
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let kc = stats.cycles as f64 / dt / 1e3;
+        let (speedup, stats_match) = match &base {
+            None => (1.0, true),
+            Some((b, base_kc)) => (
+                kc / base_kc.max(1e-12),
+                b.cycles == stats.cycles
+                    && b.warp_insts == stats.warp_insts
+                    && b.issue == stats.issue
+                    && b.memory_signature() == stats.memory_signature(),
+            ),
+        };
+        out.push(ShardPoint {
+            app: app.name,
+            design: design.name,
+            threads,
+            kcycles_per_s: kc,
+            speedup,
+            stats_match,
+        });
+        if base.is_none() {
+            base = Some((stats, kc));
+        }
+    }
+    Ok(out)
+}
+
 /// Parse a floors file: `key=value` lines, `#` comments. Known keys:
 /// `min_compress_mlines_per_s`, `min_memo_warm_mlines_per_s`,
 /// `min_memo_hit_rate`, `min_sim_kcycles_per_s`, `min_lut_hit_rate`,
-/// `min_event_speedup`.
+/// `min_event_speedup`, `min_shard_speedup`.
 fn parse_floors(text: &str) -> Result<Vec<(String, f64)>> {
     let mut floors = Vec::new();
     for (ln, raw) in text.lines().enumerate() {
@@ -268,6 +328,17 @@ fn check_floors(report: &mut BenchReport, floors: &[(String, f64)]) {
                 .iter()
                 .map(|t| t.speedup)
                 .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.min(v)))),
+            // BEST sharded-over-serial speedup across the threads>1
+            // points (max, not min: CI runners may expose only 2 cores,
+            // where the 4-thread point oversubscribes — the floor guards
+            // against sharding regressing into pure overhead, not against
+            // a small host).
+            "min_shard_speedup" => report
+                .shard
+                .iter()
+                .filter(|p| p.threads > 1)
+                .map(|p| p.speedup)
+                .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.max(v)))),
             other => {
                 report
                     .violations
@@ -355,6 +426,22 @@ impl BenchReport {
             );
         }
         s.push_str("  ],\n");
+        s.push_str("  \"sim_threads\": [\n");
+        for (i, p) in self.shard.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "    {{\"app\": \"{}\", \"design\": \"{}\", \"threads\": {}, \
+                 \"kcycles_per_s\": {:.1}, \"speedup\": {:.3}, \"stats_match\": {}}}{}",
+                p.app,
+                p.design,
+                p.threads,
+                p.kcycles_per_s,
+                p.speedup,
+                p.stats_match,
+                if i + 1 < self.shard.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  ],\n");
         s.push_str("  \"floor_violations\": [");
         for (i, v) in self.violations.iter().enumerate() {
             if i > 0 {
@@ -427,6 +514,21 @@ impl BenchReport {
                 if t.stats_match { "identical" } else { "DIVERGED" }
             );
         }
+        if !self.shard.is_empty() {
+            s.push('\n');
+        }
+        for p in &self.shard {
+            let _ = writeln!(
+                s,
+                "shard {:>4}/{:<13} sim_threads={} {:>9.1} kcycles/s  speedup {:.2}x  stats {}",
+                p.app,
+                p.design,
+                p.threads,
+                p.kcycles_per_s,
+                p.speedup,
+                if p.stats_match { "identical" } else { "DIVERGED" }
+            );
+        }
         for v in &self.violations {
             let _ = writeln!(s, "\nFLOOR VIOLATION: {v}");
         }
@@ -481,6 +583,11 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
     };
     let (tick, mut tick_event_points) = measure_tick(&tick_pairs, sim_scale)?;
 
+    // Intra-sim sharding: one memory-bound point at 1/2/4 threads (the
+    // differential suite covers the full matrix; here we track the perf
+    // trajectory and keep a bit-identity check on the bench path).
+    let shard = measure_shard("PVC", Design::caba(Algo::Bdi), sim_scale)?;
+
     // Assemble the sim section in `pairs` order, reusing the event-mode
     // run from the tick comparison where the pair overlaps (identical
     // config/scale — same measurement either way, half the simulations).
@@ -506,6 +613,7 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
         memo_hit_rate: hit_rate,
         sim,
         tick,
+        shard,
         violations: Vec::new(),
     };
 
@@ -516,6 +624,15 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
             report.violations.push(format!(
                 "strict_tick differential: {}/{} stats diverged between tick modes",
                 t.app, t.design
+            ));
+        }
+    }
+    // Same contract for thread counts: sharding must never change results.
+    for p in &report.shard {
+        if !p.stats_match {
+            report.violations.push(format!(
+                "sim_threads differential: {}/{} stats diverged at {} threads",
+                p.app, p.design, p.threads
             ));
         }
     }
@@ -552,6 +669,7 @@ mod tests {
             memo_warm_mlines_per_s: 10.0,
             memo_hit_rate: 0.5,
             tick: vec![],
+            shard: vec![],
             sim: vec![SimPoint {
                 app: "PVC",
                 design: "Base",
@@ -578,6 +696,28 @@ mod tests {
         report.sim[0].lut_hit_rate = Some(0.05);
         check_floors(&mut report, &[("min_lut_hit_rate".to_string(), 0.1)]);
         assert_eq!(report.violations.len(), 4);
+        // Shard floor: checked over the BEST threads>1 speedup (a 2-core
+        // host legitimately loses on the oversubscribed 4-thread point).
+        check_floors(&mut report, &[("min_shard_speedup".to_string(), 1.0)]);
+        assert_eq!(report.violations.len(), 5); // empty → nothing to check
+        assert!(report.violations[4].contains("no measurements"));
+        let shard_point = |threads: usize, speedup: f64| ShardPoint {
+            app: "PVC",
+            design: "CABA-BDI",
+            threads,
+            kcycles_per_s: 100.0 * speedup,
+            speedup,
+            stats_match: true,
+        };
+        report.shard = vec![
+            shard_point(1, 1.0),
+            shard_point(2, 0.8),
+            shard_point(4, 1.3),
+        ];
+        check_floors(&mut report, &[("min_shard_speedup".to_string(), 1.0)]);
+        assert_eq!(report.violations.len(), 5); // max(0.8, 1.3) clears 1.0
+        check_floors(&mut report, &[("min_shard_speedup".to_string(), 1.5)]);
+        assert_eq!(report.violations.len(), 6);
     }
 
     #[test]
@@ -610,11 +750,20 @@ mod tests {
                 speedup: 2.5,
                 stats_match: true,
             }],
+            shard: vec![ShardPoint {
+                app: "PVC",
+                design: "CABA-BDI",
+                threads: 2,
+                kcycles_per_s: 400.0,
+                speedup: 1.6,
+                stats_match: true,
+            }],
             violations: vec!["min_x: measured 1 < floor 2".to_string()],
         };
         let j = report.to_json();
         assert!(j.contains("\"schema\": \"caba-bench-v1\""));
         assert!(j.contains("\"algo\": \"BDI\""));
+        assert!(j.contains("\"sim_threads\""));
         assert!(j.contains("floor_violations"));
         // Balanced braces/brackets (cheap well-formedness probe).
         assert_eq!(j.matches('{').count(), j.matches('}').count());

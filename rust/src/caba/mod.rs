@@ -621,4 +621,130 @@ mod tests {
         assert_eq!(empty_per.rr, empty_bulk.rr);
         assert_eq!(empty_per.util_ema.to_bits(), empty_bulk.util_ema.to_bits());
     }
+
+    #[test]
+    fn prop_settle_window_partitions_commute() {
+        // The invariant the sharded tick leans on hardest: a core's stall
+        // window may be settled in ONE `skip_idle_cycles` call (serial
+        // fast-forward), or carved into arbitrary per-epoch sub-windows
+        // (the shard loop settles up to each rendezvous boundary as it
+        // reaches it). Every partition of the same window must land on the
+        // bit-identical AWC state — round-robin pointer and utilization
+        // EMA (including through the EMA's fixed-point early-out) — as
+        // the cycle-by-cycle reference.
+        use crate::util::miniprop::{default_cases, forall};
+
+        #[derive(Debug)]
+        struct Case {
+            /// EMA priming iterations (0 ⇒ start at the 0.0 fixed point).
+            prime: u64,
+            /// Whether a (future-triggered, never-active) entry occupies
+            /// the high/low row list — row membership gates rr advance.
+            has_high: bool,
+            has_low: bool,
+            /// Whether the core would make the issue calls at all (they
+            /// are design/config-gated) — forwarded as the
+            /// `skip_idle_cycles` flags.
+            call_high: bool,
+            call_low: bool,
+            /// Total idle window, and a partition of it into sub-windows
+            /// (zeros allowed: an epoch boundary can land on a core that
+            /// advanced nothing).
+            total: u64,
+            windows: Vec<u64>,
+        }
+
+        let sub = Subroutine { total: 4, mem: 1 };
+        let v = LineVerdict { encoding: 0, size_bytes: 17, bursts: 1 };
+        let build = |case: &Case| {
+            let mut a = awc();
+            for _ in 0..case.prime {
+                a.observe_utilization(3, 4);
+            }
+            if case.has_high {
+                a.trigger_decompress(1_000_000_000, sub, 0, 1, 0).unwrap();
+            }
+            if case.has_low {
+                a.trigger_compress(1_000_000_000, sub, 1, 42, v).unwrap();
+            }
+            a
+        };
+
+        forall(
+            "settle_window_partitions_commute",
+            default_cases(),
+            |r| {
+                let total = 1 + r.below(5_000);
+                let n_windows = 1 + r.range(0, 6);
+                let mut cuts: Vec<u64> =
+                    (0..n_windows - 1).map(|_| r.below(total + 1)).collect();
+                cuts.sort_unstable();
+                cuts.push(total);
+                let mut windows = Vec::with_capacity(n_windows);
+                let mut prev = 0;
+                for c in cuts {
+                    windows.push(c - prev);
+                    prev = c;
+                }
+                Case {
+                    prime: r.below(200),
+                    has_high: r.chance(0.7),
+                    has_low: r.chance(0.7),
+                    call_high: r.chance(0.8),
+                    call_low: r.chance(0.8),
+                    total,
+                    windows,
+                }
+            },
+            |case| {
+                // Cycle-by-cycle reference: exactly what Core::cycle does
+                // on a fully stalled cycle.
+                let mut reference = build(case);
+                for now in 0..case.total {
+                    let mut s = slots();
+                    if case.call_high {
+                        let r = reference.issue_high(now, &mut s);
+                        crate::prop_assert!(
+                            r.is_empty(),
+                            "future-triggered entry retired at {now}"
+                        );
+                    }
+                    if case.call_low {
+                        let r = reference.issue_low(now, &mut s);
+                        crate::prop_assert!(
+                            r.is_empty(),
+                            "future-triggered entry retired at {now}"
+                        );
+                    }
+                    reference.observe_utilization(0, 4);
+                }
+
+                // One-shot settle over the whole window.
+                let mut one_shot = build(case);
+                one_shot.skip_idle_cycles(case.total, case.call_high, case.call_low);
+
+                // The same window carved at arbitrary epoch boundaries.
+                let mut carved = build(case);
+                for &w in &case.windows {
+                    carved.skip_idle_cycles(w, case.call_high, case.call_low);
+                }
+
+                for (name, got) in [("one-shot", &one_shot), ("carved", &carved)] {
+                    crate::prop_assert!(
+                        got.rr == reference.rr,
+                        "{name}: rr {} != per-cycle {}",
+                        got.rr,
+                        reference.rr
+                    );
+                    crate::prop_assert!(
+                        got.util_ema.to_bits() == reference.util_ema.to_bits(),
+                        "{name}: ema {:?} != per-cycle {:?}",
+                        got.util_ema,
+                        reference.util_ema
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
 }

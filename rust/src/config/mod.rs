@@ -155,6 +155,18 @@ pub struct SimConfig {
     /// if the equivalence ever regressed, cached results would still be
     /// correct per mode.
     pub strict_tick: bool,
+    /// Host threads used to shard the per-core tick loop *inside* one
+    /// simulation (`crate::sim::Simulator::run_sharded`). Cores advance
+    /// independently between memory-system epochs, then rendezvous to
+    /// drain the shared `MemSystem` in deterministic SM order, so every
+    /// thread count produces bit-identical statistics (the three-way
+    /// differential suite pins strict × serial × sharded at 1/2/4/8
+    /// threads). `1` keeps the event-driven serial path; values are
+    /// clamped to `n_sms`; `strict_tick=true` forces the naive serial
+    /// reference regardless. Fingerprinted like `strict_tick` and for the
+    /// same reason: the equivalence is a *proved invariant*, and if it
+    /// ever regressed, cached results would still be correct per mode.
+    pub sim_threads: usize,
     /// Stop after this many core cycles (safety net).
     pub max_cycles: u64,
     /// Stop after this many issued warp-instructions (paper: 1B thread-
@@ -221,6 +233,7 @@ impl Default for SimConfig {
             memo_entry_bytes: 16,
             memo_tag_bits: 16,
             strict_tick: false,
+            sim_threads: 1,
             max_cycles: 20_000_000,
             max_warp_insts: u64::MAX,
             seed: 0xCABA,
@@ -304,6 +317,7 @@ impl SimConfig {
             memo_entry_bytes,
             memo_tag_bits,
             strict_tick,
+            sim_threads,
             max_cycles,
             max_warp_insts,
             seed,
@@ -325,8 +339,8 @@ impl SimConfig {
             hw_decompress_latency, hw_compress_latency, awt_entries,
             awb_low_prio_slots, caba_throttle,
             throttle_util_threshold.to_bits(), memo_lut_bytes, memo_lut_ways,
-            memo_entry_bytes, memo_tag_bits, strict_tick, max_cycles,
-            max_warp_insts, seed,
+            memo_entry_bytes, memo_tag_bits, strict_tick, sim_threads,
+            max_cycles, max_warp_insts, seed,
         );
         // Deliberately NOT fed: `trace_record` is a pure run control (see
         // its field doc) — the same simulation recorded to two different
@@ -338,7 +352,7 @@ impl SimConfig {
     }
 
     /// Every key accepted by [`SimConfig::set`] (used by tests and docs).
-    pub const KEYS: [&'static str; 48] = [
+    pub const KEYS: [&'static str; 49] = [
         "n_sms", "warp_size", "n_mcs", "clock_ghz", "schedulers_per_sm",
         "max_warps_per_sm", "max_ctas_per_sm", "max_threads_per_sm",
         "regfile_per_sm", "smem_per_sm", "sp_units", "sfu_units",
@@ -351,8 +365,8 @@ impl SimConfig {
         "md_cache_assoc", "hw_decompress_latency", "hw_compress_latency",
         "awt_entries", "awb_low_prio_slots", "caba_throttle",
         "throttle_util_threshold", "memo_lut_bytes", "memo_lut_ways",
-        "memo_entry_bytes", "memo_tag_bits", "strict_tick", "max_cycles",
-        "max_warp_insts", "seed", "trace_record",
+        "memo_entry_bytes", "memo_tag_bits", "strict_tick", "sim_threads",
+        "max_cycles", "max_warp_insts", "seed", "trace_record",
     ];
 
     /// Apply one `key=value` override. Returns an error on unknown keys or
@@ -408,6 +422,7 @@ impl SimConfig {
             "memo_entry_bytes" => self.memo_entry_bytes = parse!(),
             "memo_tag_bits" => self.memo_tag_bits = parse!(),
             "strict_tick" => self.strict_tick = parse!(),
+            "sim_threads" => self.sim_threads = parse!(),
             "max_cycles" => self.max_cycles = parse!(),
             "max_warp_insts" => self.max_warp_insts = parse!(),
             "seed" => self.seed = parse!(),

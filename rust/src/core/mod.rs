@@ -6,6 +6,22 @@
 //! Issue-cycle accounting follows Fig. 2's taxonomy exactly: each scheduler
 //! slot each cycle is *active* or charged to compute-structural,
 //! memory-structural, data-dependence, or idle.
+//!
+//! # Two-phase cycle protocol
+//!
+//! Each simulated cycle splits into two phases so the run loop can shard
+//! phase A across threads (`sim_threads`, DESIGN.md §3):
+//!
+//! * **Phase A — [`Core::cycle`]**: everything core-local (scheduling,
+//!   scoreboard, FU/LSU/MSHR structural checks, AWC issue, address
+//!   generation). It sees only shared *read-only* state ([`CoreCtx`]) and
+//!   queues each side effect that must touch the shared chip
+//!   ([`MemSystem`], [`DataModel`], [`SimStats`]) as a [`SharedOp`].
+//! * **Phase B — [`Core::drain`]**: the queued ops are applied through
+//!   [`DrainCtx`], always on one thread, always in SM order. The drain
+//!   replays the exact shared-state op sequence the pre-split serial code
+//!   performed, so results are bit-identical no matter how phase A was
+//!   scheduled — one thread or many.
 
 pub mod tables;
 
@@ -66,14 +82,63 @@ impl WarpSlot {
     }
 }
 
-/// Everything a core needs from the rest of the chip during one cycle.
-pub struct CycleCtx<'a> {
+/// Read-only chip state visible during phase A ([`Core::cycle`]). The
+/// borrow checker, not discipline, is what keeps the sharded phase A free
+/// of shared mutation: there is simply no `&mut` here to misuse.
+pub struct CoreCtx<'a> {
+    pub cfg: &'a SimConfig,
+    pub design: &'a Design,
+    pub wl: &'a Workload,
+}
+
+/// Mutable chip state visible during phase B ([`Core::drain`]), which the
+/// run loop only ever enters on one thread, in SM order.
+pub struct DrainCtx<'a> {
     pub cfg: &'a SimConfig,
     pub design: &'a Design,
     pub wl: &'a Workload,
     pub mem: &'a mut MemSystem,
     pub data: &'a mut DataModel,
     pub stats: &'a mut SimStats,
+}
+
+/// A side effect generated during phase A that must touch shared chip
+/// state. Queued in [`Core::cycle`] in the exact order the pre-split code
+/// performed the corresponding mutations (retirements before scheduled
+/// accesses), and applied verbatim in that order by [`Core::drain`].
+enum SharedOp {
+    /// A compression assist warp retired: dispatch the buffered store.
+    /// `at` is the retirement time (≤ now), kept because the pre-split
+    /// code stamped the store with it, not with the cycle it was applied.
+    CompressRetire {
+        at: u64,
+        line_addr: u64,
+        verdict: crate::compress::oracle::LineVerdict,
+    },
+    /// A prefetch assist warp retired: issue its predicted lines.
+    PrefetchRetire { at: u64, lines: Vec<u64> },
+    /// A load issued; its coalesced line addresses live in
+    /// `Core::op_arena[start .. start + len]`.
+    Load {
+        w: usize,
+        uid: u64,
+        access: crate::isa::MemAccess,
+        dst: u8,
+        iter: u32,
+        body_idx: u32,
+        start: u32,
+        len: u32,
+    },
+    /// A store issued (lines in the arena, as for `Load`).
+    Store {
+        w: usize,
+        uid: u64,
+        access: crate::isa::MemAccess,
+        iter: u32,
+        body_idx: u32,
+        start: u32,
+        len: u32,
+    },
 }
 
 /// One SM.
@@ -123,6 +188,18 @@ pub struct Core {
     /// Buffered stores awaiting compression (paper §5.2.2 store buffer).
     pending_compress_stores: usize,
     store_buffer_cap: usize,
+    /// Shared-state side effects queued by phase A this cycle, applied (and
+    /// emptied) by [`Core::drain`].
+    shared_ops: Vec<SharedOp>,
+    /// Line-address arena backing `SharedOp::{Load,Store}`; cleared each
+    /// drain so accesses never allocate a payload `Vec`.
+    op_arena: Vec<u64>,
+    /// Phase-A deltas for the global instruction counters (phase A cannot
+    /// reach `SimStats`); flushed first thing in [`Core::drain`] so the run
+    /// loop's `max_warp_insts` budget check stays cycle-exact.
+    d_warp_insts: u64,
+    d_thread_insts: u64,
+    d_core_insts: u64,
     pub issue: IssueBreakdown,
     /// Earliest future cycle at which anything on this core can change
     /// state (fast-forward hint; `u64::MAX` = fully drained).
@@ -164,6 +241,11 @@ impl Core {
             prefetch_scratch: Vec::new(),
             pending_compress_stores: 0,
             store_buffer_cap: 16,
+            shared_ops: Vec::new(),
+            op_arena: Vec::new(),
+            d_warp_insts: 0,
+            d_thread_insts: 0,
+            d_core_insts: 0,
             issue: IssueBreakdown::default(),
             next_event: 0,
             charged_until: 0,
@@ -258,14 +340,22 @@ impl Core {
         self.charged_until = now;
     }
 
-    /// Advance this SM by one cycle.
-    pub fn cycle(&mut self, now: u64, ctx: &mut CycleCtx) {
+    /// Advance this SM by one cycle — phase A only. Every shared-state
+    /// side effect lands in the op queue; the caller must follow up with
+    /// [`Core::drain`] (on one thread, in SM order) before the next cycle.
+    pub fn cycle(&mut self, now: u64, ctx: &CoreCtx) {
+        debug_assert!(
+            self.shared_ops.is_empty() && self.op_arena.is_empty(),
+            "cycle() called with undrained shared ops"
+        );
         // Charge any skipped window ending at this wake (no-op when the
         // core ran last cycle, and always a no-op under strict_tick).
         self.settle_to(now, ctx.cfg, ctx.design);
 
-        // 0. Apply due assist-warp retirements.
-        self.apply_retirements(now, ctx);
+        // 0. Apply due assist-warp retirements (shared-state halves are
+        //    queued; they drain ahead of this cycle's scheduled accesses,
+        //    matching the pre-split intra-cycle order).
+        self.apply_retirements(now);
 
         let mut slots = Slots {
             sp: ctx.cfg.sp_units,
@@ -312,7 +402,7 @@ impl Core {
         self.charged_until = now + 1;
     }
 
-    fn apply_retirements(&mut self, now: u64, ctx: &mut CycleCtx) {
+    fn apply_retirements(&mut self, now: u64) {
         if self.pending_retires.is_empty() {
             return;
         }
@@ -327,43 +417,19 @@ impl Core {
                         }
                     }
                     Payload::Compress { line_addr, verdict } => {
+                        // The store-buffer slot frees now (core-local so
+                        // this cycle's scheduling sees it); the store
+                        // itself touches shared state and drains later.
                         self.pending_compress_stores =
                             self.pending_compress_stores.saturating_sub(1);
-                        ctx.data.set_stored_compressed(line_addr, verdict.is_compressed());
-                        ctx.mem
-                            .store(r.at, self.sm_id, line_addr, ctx.design, Some(verdict));
+                        self.shared_ops.push(SharedOp::CompressRetire {
+                            at: r.at,
+                            line_addr,
+                            verdict,
+                        });
                     }
                     Payload::Prefetch { lines } => {
-                        // Issue the predicted lines into the memory system
-                        // and pre-fill the L1; a later demand load merges on
-                        // the MSHR entry (§8.2).
-                        for line in lines {
-                            if self.l1.contains(line) || self.mshr.contains_key(line) {
-                                continue;
-                            }
-                            if self.mshr.len() >= self.mshr_limit {
-                                break; // never starve demand misses
-                            }
-                            let algo = ctx.design.algo;
-                            let outcome = {
-                                let data = &mut *ctx.data;
-                                let wl = ctx.wl;
-                                let mut verdict = || data.verdict(wl, algo, line);
-                                ctx.mem.load(r.at, self.sm_id, line, ctx.design, &mut verdict)
-                            };
-                            ctx.stats.l2.accesses += 1;
-                            if outcome.l2_hit {
-                                ctx.stats.l2.hits += 1;
-                            } else {
-                                ctx.stats.l2.misses += 1;
-                            }
-                            self.l1.insert_into(line, false, 4, false, r.at, &mut self.l1_evict_scratch);
-                            self.mshr.insert(
-                                line,
-                                MshrInfo { fill_at: outcome.data_at, awc_token: None },
-                            );
-                            self.awc.stats.prefetches_issued += 1;
-                        }
+                        self.shared_ops.push(SharedOp::PrefetchRetire { at: r.at, lines });
                     }
                     Payload::MemoInstall { key } => {
                         // The result becomes reusable only now, when the
@@ -378,6 +444,87 @@ impl Core {
             } else {
                 i += 1;
             }
+        }
+    }
+
+    /// Apply this core's queued shared-state side effects for cycle `now`
+    /// — phase B. Called for *every* core the run loop cycled, on one
+    /// thread, in SM order; with phase A confined to [`CoreCtx`], this
+    /// serial drain is the only writer of shared chip state, so the
+    /// mutation sequence (and therefore every stat) is identical whether
+    /// phase A ran on one thread or sixteen.
+    pub fn drain(&mut self, now: u64, ctx: &mut DrainCtx) {
+        ctx.stats.warp_insts += self.d_warp_insts;
+        ctx.stats.thread_insts += self.d_thread_insts;
+        ctx.stats.energy_events.core_insts += self.d_core_insts;
+        self.d_warp_insts = 0;
+        self.d_thread_insts = 0;
+        self.d_core_insts = 0;
+        if self.shared_ops.is_empty() {
+            debug_assert!(self.op_arena.is_empty());
+            return;
+        }
+        let mut ops = std::mem::take(&mut self.shared_ops);
+        for op in ops.drain(..) {
+            match op {
+                SharedOp::CompressRetire { at, line_addr, verdict } => {
+                    ctx.data.set_stored_compressed(line_addr, verdict.is_compressed());
+                    ctx.mem.store(at, self.sm_id, line_addr, ctx.design, Some(verdict));
+                }
+                SharedOp::PrefetchRetire { at, lines } => {
+                    self.drain_prefetch(at, &lines, ctx);
+                }
+                SharedOp::Load { w, uid, access, dst, iter, body_idx, start, len } => {
+                    // An access op implies an issue, which already pinned
+                    // `next_event` to the next cycle in phase A — nothing
+                    // the drain does here can create an earlier wake.
+                    debug_assert_eq!(self.next_event, now + 1);
+                    self.exec_load(
+                        now, w, uid, &access, dst, iter,
+                        body_idx as usize, start as usize, len as usize, ctx,
+                    );
+                }
+                SharedOp::Store { w, uid, access, iter, body_idx, start, len } => {
+                    debug_assert_eq!(self.next_event, now + 1);
+                    self.exec_store(
+                        now, w, uid, &access, iter,
+                        body_idx as usize, start as usize, len as usize, ctx,
+                    );
+                }
+            }
+        }
+        self.shared_ops = ops;
+        self.op_arena.clear();
+    }
+
+    /// Drain half of a retired prefetch assist warp: issue the predicted
+    /// lines into the memory system and pre-fill the L1; a later demand
+    /// load merges on the MSHR entry (§8.2).
+    fn drain_prefetch(&mut self, at: u64, lines: &[u64], ctx: &mut DrainCtx) {
+        for &line in lines {
+            if self.l1.contains(line) || self.mshr.contains_key(line) {
+                continue;
+            }
+            if self.mshr.len() >= self.mshr_limit {
+                break; // never starve demand misses
+            }
+            let algo = ctx.design.algo;
+            let outcome = {
+                let data = &mut *ctx.data;
+                let wl = ctx.wl;
+                let mut verdict = || data.verdict(wl, algo, line);
+                ctx.mem.load(at, self.sm_id, line, ctx.design, &mut verdict)
+            };
+            ctx.stats.l2.accesses += 1;
+            if outcome.l2_hit {
+                ctx.stats.l2.hits += 1;
+            } else {
+                ctx.stats.l2.misses += 1;
+            }
+            self.l1.insert_into(line, false, 4, false, at, &mut self.l1_evict_scratch);
+            self.mshr
+                .insert(line, MshrInfo { fill_at: outcome.data_at, awc_token: None });
+            self.awc.stats.prefetches_issued += 1;
         }
     }
 
@@ -409,7 +556,7 @@ impl Core {
     }
 
     /// One scheduler's issue attempt. Returns true if it issued.
-    fn schedule(&mut self, now: u64, sched: usize, slots: &mut Slots, ctx: &mut CycleCtx) -> bool {
+    fn schedule(&mut self, now: u64, sched: usize, slots: &mut Slots, ctx: &CoreCtx) -> bool {
         let mut saw_data = false;
         let mut saw_compute_struct = false;
         let mut saw_mem_struct = false;
@@ -624,16 +771,16 @@ impl Core {
                 }
                 Op::Ld(mem) => {
                     slots.mem -= 1;
-                    self.exec_load(now, w, &mem, inst.dst, iter, body_idx, ctx);
+                    self.queue_access(now, w, &mem, inst.dst, iter, body_idx, false, ctx);
                 }
                 Op::St(mem) => {
                     slots.mem -= 1;
-                    self.exec_store(now, w, &mem, iter, body_idx, ctx);
+                    self.queue_access(now, w, &mem, inst.dst, iter, body_idx, true, ctx);
                 }
             }
-            ctx.stats.warp_insts += 1;
-            ctx.stats.thread_insts += ctx.cfg.warp_size as u64;
-            ctx.stats.energy_events.core_insts += 1;
+            self.d_warp_insts += 1;
+            self.d_thread_insts += ctx.cfg.warp_size as u64;
+            self.d_core_insts += 1;
             self.warps[w].pc += 1;
             self.warps[w].body_idx += 1;
             if self.warps[w].body_idx as usize >= ctx.wl.program.body.len() {
@@ -677,22 +824,58 @@ impl Core {
         false
     }
 
-    fn exec_load(
+    /// Phase-A half of a memory instruction: generate the coalesced line
+    /// addresses (the workload generators are pure functions of the warp
+    /// instance, so this is core-local), charge the LSU, and queue the
+    /// shared-state half for the drain.
+    #[allow(clippy::too_many_arguments)]
+    fn queue_access(
         &mut self,
         now: u64,
         w: usize,
-        mem: &crate::isa::MemAccess,
+        access: &crate::isa::MemAccess,
         dst: u8,
         iter: u32,
         body_idx: usize,
-        ctx: &mut CycleCtx,
+        is_store: bool,
+        ctx: &CoreCtx,
     ) {
         let uid = self.warps[w].uid;
         ctx.wl.trace_note_cycle(now); // trace-capture timestamp span
         let mut lines = std::mem::take(&mut self.lines_scratch);
-        ctx.wl.access_lines(mem, uid, iter, body_idx, &mut lines);
+        ctx.wl.access_lines(access, uid, iter, body_idx, &mut lines);
         // The LSU processes one line transaction per cycle.
         self.lsu_free_at = now + lines.len() as u64;
+        let start = self.op_arena.len() as u32;
+        let len = lines.len() as u32;
+        self.op_arena.extend_from_slice(&lines);
+        self.lines_scratch = lines;
+        let (access, body_idx) = (*access, body_idx as u32);
+        self.shared_ops.push(if is_store {
+            SharedOp::Store { w, uid, access, iter, body_idx, start, len }
+        } else {
+            SharedOp::Load { w, uid, access, dst, iter, body_idx, start, len }
+        });
+    }
+
+    /// Drain half of an issued load (runs at the same `now` it issued).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_load(
+        &mut self,
+        now: u64,
+        w: usize,
+        uid: u64,
+        mem: &crate::isa::MemAccess,
+        dst: u8,
+        iter: u32,
+        body_idx: usize,
+        start: usize,
+        len: usize,
+        ctx: &mut DrainCtx,
+    ) {
+        let mut lines = std::mem::take(&mut self.lines_scratch);
+        lines.clear();
+        lines.extend_from_slice(&self.op_arena[start..start + len]);
 
         let mut parts = 0u32;
         let mut floor = now + ctx.cfg.l1_hit_latency as u64;
@@ -851,20 +1034,26 @@ impl Core {
         }
     }
 
+    /// Drain half of an issued store (runs at the same `now` it issued).
+    #[allow(clippy::too_many_arguments)]
     fn exec_store(
         &mut self,
         now: u64,
         w: usize,
+        uid: u64,
         mem: &crate::isa::MemAccess,
         iter: u32,
         body_idx: usize,
-        ctx: &mut CycleCtx,
+        start: usize,
+        len: usize,
+        ctx: &mut DrainCtx,
     ) {
-        let uid = self.warps[w].uid;
-        ctx.wl.trace_note_cycle(now); // trace-capture timestamp span
+        // Address generation already happened in phase A; the operand
+        // metadata rides along for symmetry with `Load` (and debugging).
+        let _ = (mem, uid, iter, body_idx);
         let mut lines = std::mem::take(&mut self.lines_scratch);
-        ctx.wl.access_lines(mem, uid, iter, body_idx, &mut lines);
-        self.lsu_free_at = now + lines.len() as u64;
+        lines.clear();
+        lines.extend_from_slice(&self.op_arena[start..start + len]);
 
         // Pass 1 — per-line write-through bookkeeping (order-independent:
         // invalidation is idempotent, the counter commutative).

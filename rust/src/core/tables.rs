@@ -80,6 +80,13 @@ impl MshrTable {
         self.len
     }
 
+    /// Physical slot count (a power of two). Exposed so the growth policy
+    /// — resize before occupancy passes 3/4, never during a probe — is
+    /// directly testable from `tests/core_tables.rs`.
+    pub fn capacity_slots(&self) -> usize {
+        self.keys.len()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

@@ -5,7 +5,7 @@
 //! ```text
 //! caba list                         # apps and designs
 //! caba table1 [--set k=v]...       # print the simulated configuration
-//! caba run --app PVC --design CABA-BDI [--scale 0.1]
+//! caba run --app PVC --design CABA-BDI [--scale 0.1] [--threads N]
 //!          [--oracle native|pjrt] [--set key=value]...
 //! caba fig <2|3|8|9|10|11|12|13|14|15|16|md|memo> [--scale 0.1]
 //!          [--jobs N] [--set key=value]...
@@ -16,12 +16,16 @@
 //! caba trace replay <file.cabatrace> [--design D] [--set k=v]...
 //! caba trace info <file.cabatrace>
 //! caba trace import <dump.txt> [--out file] [--pattern random|zero|...]
-//! caba bench [--quick] [--out BENCH_pr5.json] [--floors BENCH_floors.txt]
+//! caba bench [--quick] [--out BENCH_pr6.json] [--floors BENCH_floors.txt]
 //! ```
 //!
 //! `--jobs N` sets the sweep-engine worker count (default: one per
 //! available core). Results are bit-identical for any worker count —
 //! every simulation point is deterministic and self-contained.
+//!
+//! `--threads N` (alias for `--set sim_threads=N`) shards the per-core
+//! tick loop *inside* one simulation; also bit-identical for any N (see
+//! `tests/strict_tick_differential.rs`).
 
 use anyhow::{anyhow, bail, Result};
 use caba::compress::Algo;
@@ -85,6 +89,9 @@ impl Args {
                     .split_once('=')
                     .ok_or_else(|| anyhow!("--set expects key=value"))?;
                 cfg.set(k, val)?;
+            } else if n == "threads" {
+                // Sugar for --set sim_threads=N; last writer wins either way.
+                cfg.set("sim_threads", v)?;
             }
         }
         Ok(cfg)
@@ -346,7 +353,7 @@ fn run() -> Result<()> {
         Some("bench") => {
             let opts = caba::bench::BenchOpts {
                 quick: args.flag("quick").is_some(),
-                out: args.flag("out").unwrap_or("BENCH_pr5.json").to_string(),
+                out: args.flag("out").unwrap_or("BENCH_pr6.json").to_string(),
                 floors: args.flag("floors").map(str::to_string),
             };
             let t0 = Instant::now();
@@ -369,7 +376,7 @@ fn run() -> Result<()> {
         _ => {
             eprintln!(
                 "usage: caba <list|table1|run|fig|sweep|trace|bench> [...]\n  \
-                 caba run --app PVC --design CABA-BDI [--scale 0.25] [--oracle native|pjrt]\n  \
+                 caba run --app PVC --design CABA-BDI [--scale 0.25] [--threads N] [--oracle native|pjrt]\n  \
                  caba fig 8 [--scale 0.25] [--jobs N] [--set key=value]  (fig memo = §8.1 suite)\n  \
                  caba sweep --apps eval|memo --designs headline --bw 0.5,1.0,2.0 [--jobs N]\n  \
                  caba sweep --trace run.cabatrace --designs headline [--bw 0.5,1.0,2.0]\n  \
@@ -377,7 +384,7 @@ fn run() -> Result<()> {
                  caba trace replay run.cabatrace [--design CABA-BDI] [--set key=value]\n  \
                  caba trace info run.cabatrace\n  \
                  caba trace import dump.txt [--out dump.cabatrace] [--pattern random]\n  \
-                 caba bench [--quick] [--out BENCH_pr5.json] [--floors BENCH_floors.txt]"
+                 caba bench [--quick] [--out BENCH_pr6.json] [--floors BENCH_floors.txt]"
             );
             Ok(())
         }

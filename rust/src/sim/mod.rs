@@ -7,15 +7,17 @@ pub mod slab;
 use crate::compress::oracle::{CompressionOracle, LineVerdict, MemoOracle, NativeOracle};
 use crate::compress::Algo;
 use crate::config::SimConfig;
-use crate::core::{Core, CycleCtx};
+use crate::core::{Core, CoreCtx, DrainCtx};
 use crate::mem::MemSystem;
+use crate::util::barrier::SpinBarrier;
 use crate::stats::SimStats;
 use crate::trace::{record::TraceRecorder, replay::TraceData, TraceKind, TraceMeta, PATTERN_FROM_SPEC};
 use crate::workload::{apps::AppSpec, ArrayInfo, TraceRole, Workload};
 use anyhow::{bail, Result};
 use designs::{Design, Mechanism};
 use slab::LineSlab;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Extra registers per thread reserved for assist-warp contexts when CABA
 /// is enabled (§4.2.2: each enabled subroutine's register need is added to
@@ -159,13 +161,20 @@ pub struct Simulator {
     pub stats: SimStats,
 }
 
-// The sweep engine moves whole simulations onto worker threads; this
-// compile-time assertion keeps the property from regressing (any non-Send
-// field — an `Rc`, a raw pointer, a non-Send oracle — fails here, not at a
-// distant spawn site).
+// The sweep engine moves whole simulations onto worker threads, and the
+// intra-sim shard loop moves individual cores across threads while they
+// read the config/design/workload concurrently; these compile-time
+// assertions keep both properties from regressing (any non-Send field — an
+// `Rc`, a raw pointer, a non-Send oracle — fails here, not at a distant
+// spawn site).
 const _: () = {
     const fn assert_send<T: Send>() {}
-    assert_send::<Simulator>()
+    const fn assert_sync<T: Sync>() {}
+    assert_send::<Simulator>();
+    assert_send::<Core>();
+    assert_sync::<SimConfig>();
+    assert_sync::<Design>();
+    assert_sync::<Workload>();
 };
 
 impl Simulator {
@@ -354,25 +363,33 @@ impl Simulator {
             return false;
         }
         let mut launched = false;
-        let groups = self.wl.occ.ctas_per_sm as usize;
-        let wpc = self.wl.occ.warps_per_cta as usize;
         for core in &mut self.cores {
-            for g in 0..groups {
-                if self.next_cta >= self.wl.total_ctas as u64 {
-                    return launched;
-                }
-                let base = g * wpc;
-                let slot_free = core.warps[base].uid == u64::MAX
-                    || core.warps[base..base + wpc].iter().all(|w| w.done);
-                if slot_free && core.group_done(g, &self.wl) {
-                    core.launch_cta(g, self.next_cta, &self.wl);
-                    self.stats.ctas_launched += 1;
-                    self.next_cta += 1;
-                    launched = true;
-                }
+            launched |= refill_core(
+                core,
+                &self.wl,
+                &mut self.next_cta,
+                &mut self.stats.ctas_launched,
+            );
+            if self.next_cta >= self.wl.total_ctas as u64 {
+                break;
             }
         }
         launched
+    }
+
+    /// Worker-thread count this run will actually use. `strict_tick`
+    /// forces the naive serial reference; recording forces serial too (the
+    /// recorder's first-encounter emission order is part of the file
+    /// format); otherwise `sim_threads`, clamped to `[1, n_sms]` — a
+    /// worker beyond one-per-SM could only spin on the barrier.
+    fn effective_threads(&self) -> usize {
+        if self.cfg.strict_tick {
+            return 1;
+        }
+        if matches!(self.wl.source, TraceRole::Record(_)) {
+            return 1;
+        }
+        self.cfg.sim_threads.max(1).min(self.cores.len().max(1))
     }
 
     /// Run to completion (or the cycle/instruction budget) and return the
@@ -390,24 +407,88 @@ impl Simulator {
     /// overshoot a state change and why the memoized classification holds
     /// across the whole skipped window — is the wake-source contract,
     /// DESIGN.md §3.
+    ///
+    /// With `sim_threads > 1` the core-local phase A of each cycle is
+    /// additionally sharded across a scoped thread pool
+    /// ([`Simulator::run_sharded`]); the shared-state drain stays serial
+    /// and in SM order, which is why that too is bit-identical (the
+    /// rendezvous contract, DESIGN.md §3).
     pub fn run(&mut self) -> SimStats {
         self.dispatch_ctas();
+        let threads = self.effective_threads();
+        let now = if threads > 1 {
+            self.run_sharded(threads)
+        } else {
+            self.run_serial()
+        };
+        // Settle every core's outstanding skipped window so the issue
+        // breakdown covers each of the `now` cycles exactly once per
+        // scheduler slot — on any exit path, in either mode.
+        for core in &mut self.cores {
+            core.settle_to(now, &self.cfg, &self.design);
+        }
+        // On a drained run every CTA was launched exactly once (dispatch or
+        // refill) and retired — the launch counter must cover the workload.
+        if self.stats.finished {
+            debug_assert_eq!(
+                self.stats.ctas_launched,
+                self.wl.total_ctas as u64,
+                "ctas_launched out of sync with total_ctas on a drained run"
+            );
+        }
+        self.collect(now);
+        // Seal an attached trace recorder (idempotent). A write failure is
+        // fatal here — the user explicitly asked for the trace, and the
+        // alternative is a silently unusable file.
+        if let TraceRole::Record(rec) = &self.wl.source {
+            match rec.finish(self.stats.finished) {
+                Ok((a, p)) => {
+                    self.stats.trace.accesses_recorded = a;
+                    self.stats.trace.payloads_recorded = p;
+                }
+                Err(e) => panic!("trace recording failed: {e:#}"),
+            }
+        }
+        self.stats.clone()
+    }
+
+    /// The single-thread run loop (also the `strict_tick` reference). Each
+    /// iteration is one epoch: phase A over every due core, then the
+    /// serial drain over *all* cores in SM order (a no-op for skipped
+    /// cores), then refill/exit/fast-forward bookkeeping — the same
+    /// sequence [`Simulator::run_sharded`] executes, minus the barrier.
+    fn run_serial(&mut self) -> u64 {
         let strict = self.cfg.strict_tick;
         let mut now: u64 = 0;
         loop {
             let mut any_live = false;
             let mut min_next = u64::MAX;
             let mut retired_any = false;
-            for core in &mut self.cores {
-                if !strict && core.next_event > now {
-                    // Skipped: nothing on this core can change state before
-                    // `next_event`; its liveness cache is therefore valid
-                    // and its stall slots are charged lazily on wake.
+            // Phase A: core-local work, shared state read-only.
+            {
+                let ctx = CoreCtx {
+                    cfg: &self.cfg,
+                    design: &self.design,
+                    wl: &self.wl,
+                };
+                for core in &mut self.cores {
+                    if !strict && core.next_event > now {
+                        // Skipped: nothing on this core can change state
+                        // before `next_event`; its liveness cache is valid
+                        // and its stall slots are charged lazily on wake.
+                        any_live |= core.live_cached();
+                        min_next = min_next.min(core.next_event);
+                        continue;
+                    }
+                    core.cycle(now, &ctx);
                     any_live |= core.live_cached();
+                    retired_any |= core.take_warp_retired();
                     min_next = min_next.min(core.next_event);
-                    continue;
                 }
-                let mut ctx = CycleCtx {
+            }
+            // Phase B: drain queued shared-state ops, SM order.
+            {
+                let mut ctx = DrainCtx {
                     cfg: &self.cfg,
                     design: &self.design,
                     wl: &self.wl,
@@ -415,10 +496,9 @@ impl Simulator {
                     data: &mut self.data,
                     stats: &mut self.stats,
                 };
-                core.cycle(now, &mut ctx);
-                any_live |= core.live_cached();
-                retired_any |= core.take_warp_retired();
-                min_next = min_next.min(core.next_event);
+                for core in &mut self.cores {
+                    core.drain(now, &mut ctx);
+                }
             }
             // CTA-refill eligibility arises only on cycles where a warp
             // retired (group-done and slot-free flags change nowhere else),
@@ -451,35 +531,175 @@ impl Simulator {
                 }
             }
         }
-        // Settle every core's outstanding skipped window so the issue
-        // breakdown covers each of the `now` cycles exactly once per
-        // scheduler slot — on any exit path, in either mode.
-        for core in &mut self.cores {
-            core.settle_to(now, &self.cfg, &self.design);
-        }
-        // On a drained run every CTA was launched exactly once (dispatch or
-        // refill) and retired — the launch counter must cover the workload.
-        if self.stats.finished {
-            debug_assert_eq!(
-                self.stats.ctas_launched,
-                self.wl.total_ctas as u64,
-                "ctas_launched out of sync with total_ctas on a drained run"
-            );
-        }
-        self.collect(now);
-        // Seal an attached trace recorder (idempotent). A write failure is
-        // fatal here — the user explicitly asked for the trace, and the
-        // alternative is a silently unusable file.
-        if let TraceRole::Record(rec) = &self.wl.source {
-            match rec.finish(self.stats.finished) {
-                Ok((a, p)) => {
-                    self.stats.trace.accesses_recorded = a;
-                    self.stats.trace.payloads_recorded = p;
-                }
-                Err(e) => panic!("trace recording failed: {e:#}"),
+        now
+    }
+
+    /// The sharded run loop: phase A fans out across `threads` persistent
+    /// workers (this thread is participant 0), phase B and all epoch
+    /// bookkeeping stay on this thread between two barrier crossings.
+    ///
+    /// Determinism does not depend on scheduling: workers only ever touch
+    /// their own cores' local state plus read-only shared state, every
+    /// cross-core reduction (`any_live`, `retired`, `min_next`) is
+    /// commutative, and the only shared-state writer is the serial drain
+    /// in SM order — identical to [`Simulator::run_serial`]'s sequence.
+    fn run_sharded(&mut self, threads: usize) -> u64 {
+        debug_assert!(threads > 1 && !self.cfg.strict_tick);
+        let cores: Vec<Mutex<Core>> = std::mem::take(&mut self.cores)
+            .into_iter()
+            .map(Mutex::new)
+            .collect();
+        let n = cores.len();
+        let barrier = SpinBarrier::new(threads);
+        // Epoch clock, published by participant 0 before releasing the
+        // workers into the next phase A.
+        let now_shared = AtomicU64::new(0);
+        let stop = AtomicBool::new(false);
+        // Worker → main reduction flags for the current epoch (commutative
+        // folds, so Relaxed stores suffice; the barrier orders them).
+        let any_live_flag = AtomicBool::new(false);
+        let retired_flag = AtomicBool::new(false);
+        let min_next_shared = AtomicU64::new(u64::MAX);
+
+        let cfg = &self.cfg;
+        let design = &self.design;
+        let wl = &self.wl;
+        let mem = &mut self.mem;
+        let data = &mut self.data;
+        let stats = &mut self.stats;
+        let next_cta = &mut self.next_cta;
+        let total_ctas = wl.total_ctas as u64;
+
+        let final_now = std::thread::scope(|scope| {
+            for t in 1..threads {
+                let cores = &cores;
+                let barrier = &barrier;
+                let now_shared = &now_shared;
+                let stop = &stop;
+                let any_live_flag = &any_live_flag;
+                let retired_flag = &retired_flag;
+                let min_next_shared = &min_next_shared;
+                scope.spawn(move || {
+                    let ctx = CoreCtx { cfg, design, wl };
+                    loop {
+                        let now = now_shared.load(Ordering::Acquire);
+                        let mut live = false;
+                        let mut retired = false;
+                        let mut min_next = u64::MAX;
+                        for i in chunk_range(t, threads, n) {
+                            // Uncontended by construction: each core is
+                            // locked by exactly one participant per phase.
+                            let mut core = cores[i].lock().unwrap();
+                            if core.next_event > now {
+                                live |= core.live_cached();
+                                min_next = min_next.min(core.next_event);
+                                continue;
+                            }
+                            core.cycle(now, &ctx);
+                            live |= core.live_cached();
+                            retired |= core.take_warp_retired();
+                            min_next = min_next.min(core.next_event);
+                        }
+                        if live {
+                            any_live_flag.store(true, Ordering::Relaxed);
+                        }
+                        if retired {
+                            retired_flag.store(true, Ordering::Relaxed);
+                        }
+                        min_next_shared.fetch_min(min_next, Ordering::Relaxed);
+                        barrier.wait(); // A: all phase-A chunks complete
+                        barrier.wait(); // B: drain + epoch advance done
+                        if stop.load(Ordering::Acquire) {
+                            return;
+                        }
+                    }
+                });
             }
-        }
-        self.stats.clone()
+
+            let mut now: u64 = 0;
+            loop {
+                let mut any_live = false;
+                let mut retired_any = false;
+                let mut min_next = u64::MAX;
+                // Phase A for this thread's own chunk.
+                {
+                    let ctx = CoreCtx { cfg, design, wl };
+                    for i in chunk_range(0, threads, n) {
+                        let mut core = cores[i].lock().unwrap();
+                        if core.next_event > now {
+                            any_live |= core.live_cached();
+                            min_next = min_next.min(core.next_event);
+                            continue;
+                        }
+                        core.cycle(now, &ctx);
+                        any_live |= core.live_cached();
+                        retired_any |= core.take_warp_retired();
+                        min_next = min_next.min(core.next_event);
+                    }
+                }
+                barrier.wait(); // A: every worker's chunk is done
+                any_live |= any_live_flag.swap(false, Ordering::Relaxed);
+                retired_any |= retired_flag.swap(false, Ordering::Relaxed);
+                min_next = min_next.min(min_next_shared.swap(u64::MAX, Ordering::Relaxed));
+
+                // Phase B + bookkeeping, alone between the barriers: drain
+                // in SM order, then refill in SM order (same sequence as
+                // the serial loop).
+                {
+                    let mut dctx = DrainCtx {
+                        cfg,
+                        design,
+                        wl,
+                        mem: &mut *mem,
+                        data: &mut *data,
+                        stats: &mut *stats,
+                    };
+                    for c in cores.iter() {
+                        c.lock().unwrap().drain(now, &mut dctx);
+                    }
+                }
+                let launched = if retired_any && *next_cta < total_ctas {
+                    let mut l = false;
+                    for c in cores.iter() {
+                        let mut core = c.lock().unwrap();
+                        l |= refill_core(&mut core, wl, next_cta, &mut stats.ctas_launched);
+                        if *next_cta >= total_ctas {
+                            break;
+                        }
+                    }
+                    l
+                } else {
+                    false
+                };
+
+                now += 1;
+                let drained = !any_live && *next_cta >= total_ctas;
+                if drained || now >= cfg.max_cycles || stats.warp_insts >= cfg.max_warp_insts {
+                    stats.finished = drained;
+                    break;
+                }
+                if !launched && min_next > now && min_next != u64::MAX {
+                    now = min_next.min(cfg.max_cycles);
+                    if now >= cfg.max_cycles {
+                        stats.finished = false;
+                        break;
+                    }
+                }
+                now_shared.store(now, Ordering::Release);
+                barrier.wait(); // B: release workers into the next epoch
+            }
+            // Exit: workers are parked at barrier B; raise stop and cross
+            // it once more so they observe it and return.
+            stop.store(true, Ordering::Release);
+            barrier.wait();
+            now
+        });
+
+        self.cores = cores
+            .into_iter()
+            .map(|m| m.into_inner().unwrap())
+            .collect();
+        final_now
     }
 
     fn collect(&mut self, now: u64) {
@@ -543,6 +763,42 @@ impl Simulator {
     }
 }
 
+/// Refill scan for one core, shared by the serial loop
+/// ([`Simulator::refill_ctas`]) and the sharded loop (which holds its cores
+/// behind mutexes and so cannot call a `&mut self` method). CTA ids are
+/// handed out greedily in SM order either way — the sequence of
+/// `launch_cta` calls is identical.
+fn refill_core(core: &mut Core, wl: &Workload, next_cta: &mut u64, ctas_launched: &mut u64) -> bool {
+    let groups = wl.occ.ctas_per_sm as usize;
+    let wpc = wl.occ.warps_per_cta as usize;
+    let mut launched = false;
+    for g in 0..groups {
+        if *next_cta >= wl.total_ctas as u64 {
+            return launched;
+        }
+        let base = g * wpc;
+        let slot_free = core.warps[base].uid == u64::MAX
+            || core.warps[base..base + wpc].iter().all(|w| w.done);
+        if slot_free && core.group_done(g, wl) {
+            core.launch_cta(g, *next_cta, wl);
+            *ctas_launched += 1;
+            *next_cta += 1;
+            launched = true;
+        }
+    }
+    launched
+}
+
+/// Contiguous chunk of core indices owned by participant `t` of `threads`
+/// (the first `n % threads` participants take one extra core).
+fn chunk_range(t: usize, threads: usize, n: usize) -> std::ops::Range<usize> {
+    let per = n / threads;
+    let rem = n % threads;
+    let lo = t * per + t.min(rem);
+    let hi = lo + per + usize::from(t < rem);
+    lo..hi
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -604,6 +860,53 @@ mod tests {
         // reproduce the per-cycle taxonomy category for category.
         assert_eq!(event.issue, strict.issue);
         assert_eq!(event.memory_signature(), strict.memory_signature());
+    }
+
+    #[test]
+    fn sharded_matches_serial_smoke() {
+        // The full three-way strict × serial × sharded matrix lives in
+        // tests/strict_tick_differential.rs; this is the one-pair smoke
+        // version kept next to the run loop it guards.
+        let app = apps::find("PVC").unwrap();
+        let serial = Simulator::new(tiny_cfg(), Design::caba(Algo::Bdi), app, 0.02).run();
+        let mut sharded_cfg = tiny_cfg();
+        sharded_cfg.sim_threads = 2;
+        let sharded = Simulator::new(sharded_cfg, Design::caba(Algo::Bdi), app, 0.02).run();
+        assert_eq!(sharded.cycles, serial.cycles);
+        assert_eq!(sharded.warp_insts, serial.warp_insts);
+        assert_eq!(sharded.issue, serial.issue);
+        assert_eq!(sharded.memory_signature(), serial.memory_signature());
+    }
+
+    #[test]
+    fn chunk_range_partitions_exactly() {
+        for threads in 1..=9usize {
+            for n in [0usize, 1, 2, 5, 8, 15, 16, 33] {
+                let mut covered = Vec::new();
+                for t in 0..threads {
+                    covered.extend(chunk_range(t, threads, n));
+                }
+                assert_eq!(covered, (0..n).collect::<Vec<_>>(), "threads={threads} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn effective_threads_clamps_and_gates() {
+        let app = apps::find("SLA").unwrap();
+        let mut cfg = tiny_cfg(); // n_sms = 2
+        cfg.sim_threads = 8;
+        let sim = Simulator::new(cfg, Design::base(), app, 0.01);
+        assert_eq!(sim.effective_threads(), 2, "clamped to n_sms");
+        let mut cfg = tiny_cfg();
+        cfg.sim_threads = 8;
+        cfg.strict_tick = true;
+        let sim = Simulator::new(cfg, Design::base(), app, 0.01);
+        assert_eq!(sim.effective_threads(), 1, "strict_tick forces serial");
+        let mut cfg = tiny_cfg();
+        cfg.sim_threads = 0;
+        let sim = Simulator::new(cfg, Design::base(), app, 0.01);
+        assert_eq!(sim.effective_threads(), 1, "0 normalizes to 1");
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Small self-contained utilities: a deterministic PRNG, a mini
-//! property-testing harness (the offline image has no `proptest`), and
-//! math helpers shared across the simulator and the report generators.
+//! property-testing harness (the offline image has no `proptest`), a spin
+//! barrier for the intra-sim shard loop, and math helpers shared across
+//! the simulator and the report generators.
 
+pub mod barrier;
 pub mod miniprop;
 pub mod rng;
 

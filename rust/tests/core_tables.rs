@@ -1,0 +1,288 @@
+//! Dedicated unit + property tests for the flat per-access tables behind
+//! the SM hot path (`caba::core::tables`): the open-addressed [`MshrTable`]
+//! and the dense generation-stamped [`ReleaseTable`]. PR 5 shipped these
+//! with in-module smoke tests only; this file pins the parts the sharded
+//! tick leans on — growth policy (resize *before* 3/4 occupancy, never
+//! mid-probe), the rebuild-on-sweep invariant, `next_fill_after`'s
+//! strictly-future precision, and stale-uid release dropping — plus
+//! model-based properties against `std::collections::HashMap` references.
+
+use caba::core::tables::{MshrInfo, MshrTable, ReleaseTable};
+use caba::prop_assert;
+use caba::util::miniprop::{default_cases, forall};
+use std::collections::HashMap;
+
+// ---------------------------------------------------------------------------
+// MshrTable: growth policy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mshr_initial_sizing_gives_2x_headroom() {
+    // slots = next_pow2(2 * (limit + max_lines)), floored at 16.
+    assert_eq!(MshrTable::new(4, 4).capacity_slots(), 16);
+    assert_eq!(MshrTable::new(2, 2).capacity_slots(), 16); // floor
+    assert_eq!(MshrTable::new(64, 32).capacity_slots(), 256);
+    assert_eq!(MshrTable::new(0, 0).capacity_slots(), 16); // floor again
+}
+
+#[test]
+fn mshr_grows_exactly_at_three_quarters() {
+    // Capacity 16 → the grow check `(len+1)*4 > slots*3` first trips when
+    // inserting the 13th entry (13*4 = 52 > 48): 12 entries fit at 16
+    // slots, the 13th doubles to 32 *before* probing for a slot.
+    let mut t = MshrTable::new(4, 4);
+    for i in 0..12u64 {
+        t.insert(i, MshrInfo { fill_at: i, awc_token: None });
+        assert_eq!(t.capacity_slots(), 16, "insert {i} must not grow yet");
+    }
+    assert_eq!(t.len(), 12);
+    t.insert(12, MshrInfo { fill_at: 12, awc_token: None });
+    assert_eq!(t.capacity_slots(), 32, "13th insert crosses 3/4 of 16");
+    assert_eq!(t.len(), 13);
+    // Next doubling: (len+1)*4 > 96 ⇒ at the 25th insert.
+    for i in 13..24u64 {
+        t.insert(i, MshrInfo { fill_at: i, awc_token: None });
+        assert_eq!(t.capacity_slots(), 32, "insert {i} must not grow yet");
+    }
+    t.insert(24, MshrInfo { fill_at: 24, awc_token: None });
+    assert_eq!(t.capacity_slots(), 64, "25th insert crosses 3/4 of 32");
+    // Growth preserved every entry.
+    for i in 0..25u64 {
+        assert_eq!(t.get(i).expect("entry survived growth").fill_at, i);
+    }
+}
+
+#[test]
+fn mshr_sweep_rebuilds_in_place_without_growing() {
+    let mut t = MshrTable::new(4, 4);
+    for i in 0..12u64 {
+        t.insert(i, MshrInfo { fill_at: 10 * i, awc_token: (i % 3 == 0).then_some(i) });
+    }
+    let cap = t.capacity_slots();
+    t.sweep(|info| info.fill_at >= 60);
+    // The sweep rebuild reuses the same physical array: same capacity,
+    // tombstone-free, survivors fully probe-able.
+    assert_eq!(t.capacity_slots(), cap, "sweep must not resize");
+    assert_eq!(t.len(), 6);
+    for i in 0..12u64 {
+        if 10 * i >= 60 {
+            let info = t.get(i).expect("survivor present");
+            assert_eq!(info.fill_at, 10 * i);
+            assert_eq!(info.awc_token, (i % 3 == 0).then_some(i));
+        } else {
+            assert!(!t.contains_key(i), "swept entry {i} still visible");
+        }
+    }
+    // Swept slots are genuinely vacant: refill to the same occupancy
+    // without triggering growth.
+    for i in 100..106u64 {
+        t.insert(i, MshrInfo { fill_at: i, awc_token: None });
+    }
+    assert_eq!(t.len(), 12);
+    assert_eq!(t.capacity_slots(), cap);
+}
+
+#[test]
+fn mshr_next_fill_after_is_strictly_future_and_exact() {
+    let mut t = MshrTable::new(4, 4);
+    for (line, fill_at) in [(1u64, 5u64), (2, 10), (3, 10), (4, 17)] {
+        t.insert(line, MshrInfo { fill_at, awc_token: None });
+    }
+    // Strictly greater than `now` — a fill *at* now is not a future wake.
+    assert_eq!(t.next_fill_after(0), 5);
+    assert_eq!(t.next_fill_after(4), 5);
+    assert_eq!(t.next_fill_after(5), 10);
+    assert_eq!(t.next_fill_after(9), 10);
+    assert_eq!(t.next_fill_after(10), 17);
+    assert_eq!(t.next_fill_after(16), 17);
+    assert_eq!(t.next_fill_after(17), u64::MAX);
+    assert_eq!(MshrTable::new(4, 4).next_fill_after(0), u64::MAX);
+}
+
+// ---------------------------------------------------------------------------
+// MshrTable: model-based property vs. a HashMap reference
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum MshrOp {
+    Insert { line: u64, fill_at: u64, token: Option<u64> },
+    Sweep { threshold: u64 },
+    Query { line: u64 },
+    NextFill { now: u64 },
+}
+
+#[test]
+fn prop_mshr_matches_hashmap_model() {
+    // Any op sequence (inserts over a small line space to force probe
+    // clusters, full-rebuild sweeps, point queries, wake queries) leaves
+    // the open-addressed table observationally equal to a HashMap.
+    forall(
+        "mshr_matches_hashmap_model",
+        default_cases(),
+        |r| {
+            let n = 20 + r.range(0, 120);
+            (0..n)
+                .map(|_| match r.below(10) {
+                    0..=4 => MshrOp::Insert {
+                        line: r.below(64),
+                        fill_at: r.below(200),
+                        token: r.chance(0.3).then(|| r.below(8)),
+                    },
+                    5 => MshrOp::Sweep { threshold: r.below(200) },
+                    6..=7 => MshrOp::Query { line: r.below(64) },
+                    _ => MshrOp::NextFill { now: r.below(220) },
+                })
+                .collect::<Vec<_>>()
+        },
+        |ops| {
+            let mut t = MshrTable::new(4, 4);
+            let mut model: HashMap<u64, (u64, Option<u64>)> = HashMap::new();
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    MshrOp::Insert { line, fill_at, token } => {
+                        // Callers never double-insert (they merge on `get`
+                        // first); mirror that contract here.
+                        if model.contains_key(&line) {
+                            continue;
+                        }
+                        model.insert(line, (fill_at, token));
+                        t.insert(line, MshrInfo { fill_at, awc_token: token });
+                    }
+                    MshrOp::Sweep { threshold } => {
+                        model.retain(|_, &mut (fill_at, _)| fill_at >= threshold);
+                        t.sweep(|info| info.fill_at >= threshold);
+                    }
+                    MshrOp::Query { line } => {
+                        let got = t.get(line).map(|i| (i.fill_at, i.awc_token));
+                        let want = model.get(&line).copied();
+                        prop_assert!(
+                            got == want,
+                            "op {i}: get({line}) = {got:?}, model says {want:?}"
+                        );
+                    }
+                    MshrOp::NextFill { now } => {
+                        let want = model
+                            .values()
+                            .filter(|&&(fill_at, _)| fill_at > now)
+                            .map(|&(fill_at, _)| fill_at)
+                            .min()
+                            .unwrap_or(u64::MAX);
+                        let got = t.next_fill_after(now);
+                        prop_assert!(
+                            got == want,
+                            "op {i}: next_fill_after({now}) = {got}, model says {want}"
+                        );
+                    }
+                }
+                prop_assert!(
+                    t.len() == model.len(),
+                    "op {i}: len {} != model {}",
+                    t.len(),
+                    model.len()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// ReleaseTable: generation stamping
+// ---------------------------------------------------------------------------
+
+#[test]
+fn release_stale_uid_on_recycled_warp_slot_is_dropped() {
+    // The scenario the stamp exists for: warp slot 3 runs CTA A's warp
+    // (uid 100), opens a 2-part release, retires mid-flight, and the slot
+    // is re-tenanted by CTA B's warp (uid 200) which opens its own
+    // release. A's late retirements must neither complete nor corrupt
+    // B's release.
+    let mut r = ReleaseTable::new(8);
+    r.insert(3, 7, 100, 2, 0);
+    assert_eq!(r.release(3, 7, 100, 40), None); // part 1 of A
+    r.insert(3, 7, 200, 2, 10); // slot recycled: B overwrites
+    assert_eq!(r.release(3, 7, 100, 55), None, "stale A retirement dropped");
+    assert_eq!(r.release(3, 7, 200, 50), None); // part 1 of B — still open
+    assert_eq!(r.release(3, 7, 100, 60), None, "second stale A retirement dropped");
+    // B completes with its own floor (max of insert floor and part times).
+    assert_eq!(r.release(3, 7, 200, 45), Some(50));
+    // Freed: even the rightful uid gets nothing afterwards.
+    assert_eq!(r.release(3, 7, 200, 70), None);
+}
+
+#[test]
+fn release_slots_are_independent_per_warp_and_reg() {
+    let mut r = ReleaseTable::new(4);
+    r.insert(0, 1, 11, 1, 5);
+    r.insert(0, 2, 11, 1, 6);
+    r.insert(1, 1, 22, 1, 7);
+    assert_eq!(r.release(1, 1, 22, 9), Some(9));
+    assert_eq!(r.release(0, 2, 11, 3), Some(6));
+    assert_eq!(r.release(0, 1, 11, 8), Some(8));
+}
+
+#[derive(Debug, Clone, Copy)]
+enum RelOp {
+    Insert { warp: usize, reg: u8, uid: u64, parts: u32, floor: u64 },
+    Release { warp: usize, reg: u8, uid: u64, at: u64 },
+}
+
+#[test]
+fn prop_release_matches_hashmap_model() {
+    // Uids drawn from a tiny space so stale-uid releases happen often;
+    // warps/regs from a tiny space so slots get recycled constantly.
+    forall(
+        "release_matches_hashmap_model",
+        default_cases(),
+        |r| {
+            let n = 20 + r.range(0, 120);
+            (0..n)
+                .map(|_| {
+                    let warp = r.range(0, 4);
+                    let reg = r.below(3) as u8;
+                    let uid = 1 + r.below(4);
+                    if r.chance(0.35) {
+                        RelOp::Insert { warp, reg, uid, parts: 1 + r.below(3) as u32, floor: r.below(100) }
+                    } else {
+                        RelOp::Release { warp, reg, uid, at: r.below(100) }
+                    }
+                })
+                .collect::<Vec<_>>()
+        },
+        |ops| {
+            let mut t = ReleaseTable::new(4);
+            // model: (warp, reg) → (parts, floor, uid)
+            let mut model: HashMap<(usize, u8), (u32, u64, u64)> = HashMap::new();
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    RelOp::Insert { warp, reg, uid, parts, floor } => {
+                        model.insert((warp, reg), (parts, floor, uid));
+                        t.insert(warp, reg, uid, parts, floor);
+                    }
+                    RelOp::Release { warp, reg, uid, at } => {
+                        let want = match model.get_mut(&(warp, reg)) {
+                            Some(slot) if slot.2 == uid => {
+                                slot.0 -= 1;
+                                slot.1 = slot.1.max(at);
+                                if slot.0 == 0 {
+                                    let floor = slot.1;
+                                    model.remove(&(warp, reg));
+                                    Some(floor)
+                                } else {
+                                    None
+                                }
+                            }
+                            _ => None,
+                        };
+                        let got = t.release(warp, reg, uid, at);
+                        prop_assert!(
+                            got == want,
+                            "op {i}: release({warp},{reg},uid={uid},at={at}) = {got:?}, model says {want:?}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,73 +1,99 @@
-//! The event-driven tick's equivalence contract, end to end:
+//! The tick loop's equivalence contract, end to end — now **three-way**:
 //!
-//! `Simulator::run` skips any SM whose `next_event` lies in the future and
-//! bulk-charges its stall cycles on wake; `strict_tick=true` forces the
-//! naive reference (every SM, every cycle, no fast-forward). The two paths
-//! must be **bit-identical** — not "statistically close":
+//! * `strict_tick=true` — the naive reference: every SM, every cycle, no
+//!   fast-forward.
+//! * event-serial (`sim_threads=1`) — `Simulator::run` skips any SM whose
+//!   `next_event` lies in the future and bulk-charges its stall cycles on
+//!   wake.
+//! * event-sharded (`sim_threads=N`) — cores advance independently on a
+//!   scoped thread pool between memory-system epochs, then rendezvous to
+//!   drain the shared `MemSystem` in deterministic SM order.
+//!
+//! All three must be **bit-identical** — not "statistically close":
 //!
 //! 1. across apps × designs (memory-bound compression, compute-bound
 //!    memoization, hybrid, prefetch, hardware-compression), on cycles,
 //!    warp_insts, the *full* issue-cycle breakdown (category for
-//!    category, not just the total), and `memory_signature()`;
+//!    category, not just the total), and `memory_signature()`, at every
+//!    thread count in {1, 2, 4, 8};
 //! 2. through trace record → replay (a trace recorded under one tick mode
-//!    replays bit-identically under the other);
+//!    replays bit-identically under every other mode and thread count);
 //! 3. at the unit level: a single hand-built core, driven per-cycle vs.
-//!    skip-and-settle over the same workload, lands on the identical
-//!    `IssueBreakdown`;
+//!    skip-and-settle through the two-phase `cycle()`/`drain()` protocol,
+//!    lands on the identical `IssueBreakdown`;
 //! 4. under a mid-stall cycle-budget cut (settlement on the `max_cycles`
-//!    exit path charges exactly the strict count).
+//!    exit path charges exactly the strict count in every mode).
 //!
 //! The issue-slot conservation law `issue.total() == cycles ×
 //! schedulers_per_sm × n_sms` is asserted throughout (and again as a
 //! `debug_assert` inside `Simulator::collect`).
 
 use caba::compress::Algo;
-use caba::core::{Core, CycleCtx};
+use caba::core::{Core, CoreCtx, DrainCtx};
 use caba::mem::MemSystem;
 use caba::memo::MemoGeometry;
 use caba::sim::designs::Design;
 use caba::sim::{DataModel, Simulator};
+use caba::stats::SimStats;
 use caba::trace::replay::TraceData;
 use caba::workload::{apps, Workload};
 use caba::SimConfig;
 use std::sync::Arc;
 
+/// Thread counts for the sharded leg. `effective_threads` clamps to
+/// `n_sms`, so the base config below uses `n_sms = 8` — each count here
+/// then exercises a genuinely different core partition (8/4/1 cores per
+/// chunk) instead of collapsing to the same one.
+const THREADS: [usize; 3] = [2, 4, 8];
+
 fn cfg(strict: bool) -> SimConfig {
     let mut c = SimConfig::default();
-    c.n_sms = 2;
+    c.n_sms = 8;
     c.max_cycles = 500_000;
     c.strict_tick = strict;
     c
 }
 
-fn run_pair(app_name: &str, design: Design, scale: f64, base: &SimConfig) {
+/// Run one app×design point under all modes — strict, event-serial, and
+/// event-sharded at every [`THREADS`] count — and require bit-identity
+/// against the strict reference on every golden stat.
+fn run_matrix(app_name: &str, design: Design, scale: f64, base: &SimConfig) {
     let app = apps::find(app_name).expect("differential app exists");
-    let mut event_cfg = base.clone();
-    event_cfg.strict_tick = false;
-    let mut strict_cfg = base.clone();
-    strict_cfg.strict_tick = true;
-    let event = Simulator::new(event_cfg, design, app, scale).run();
-    let strict = Simulator::new(strict_cfg, design, app, scale).run();
+    let run_mode = |strict: bool, threads: usize| -> SimStats {
+        let mut c = base.clone();
+        c.strict_tick = strict;
+        c.sim_threads = threads;
+        Simulator::new(c, design, app, scale).run()
+    };
+    let strict = run_mode(true, 1);
+    assert_eq!(
+        strict.issue.total(),
+        strict.cycles * (base.schedulers_per_sm * base.n_sms) as u64,
+        "{app_name}/{}: issue slots not conserved",
+        design.name
+    );
 
-    let label = format!("{app_name}/{}", design.name);
-    assert_eq!(event.finished, strict.finished, "{label}: finished");
-    assert_eq!(event.cycles, strict.cycles, "{label}: cycles");
-    assert_eq!(event.warp_insts, strict.warp_insts, "{label}: warp_insts");
-    assert_eq!(event.ctas_launched, strict.ctas_launched, "{label}: ctas");
-    // Full per-category breakdown — the bulk-charged classification must
-    // reproduce the per-cycle Fig. 2 taxonomy exactly, which subsumes the
-    // issue.total() requirement.
-    assert_eq!(event.issue, strict.issue, "{label}: issue breakdown");
-    assert_eq!(
-        event.issue.total(),
-        event.cycles * (base.schedulers_per_sm * base.n_sms) as u64,
-        "{label}: issue slots not conserved"
-    );
-    assert_eq!(
-        event.memory_signature(),
-        strict.memory_signature(),
-        "{label}: memory signature"
-    );
+    let check = |mode: &str, got: &SimStats| {
+        let label = format!("{app_name}/{} [{mode} vs strict]", design.name);
+        assert_eq!(got.finished, strict.finished, "{label}: finished");
+        assert_eq!(got.cycles, strict.cycles, "{label}: cycles");
+        assert_eq!(got.warp_insts, strict.warp_insts, "{label}: warp_insts");
+        assert_eq!(got.ctas_launched, strict.ctas_launched, "{label}: ctas");
+        // Full per-category breakdown — the bulk-charged classification
+        // must reproduce the per-cycle Fig. 2 taxonomy exactly, which
+        // subsumes the issue.total() requirement.
+        assert_eq!(got.issue, strict.issue, "{label}: issue breakdown");
+        assert_eq!(
+            got.memory_signature(),
+            strict.memory_signature(),
+            "{label}: memory signature"
+        );
+    };
+
+    check("event-serial", &run_mode(false, 1));
+    for &threads in &THREADS {
+        check(&format!("sharded x{threads}"), &run_mode(false, threads));
+    }
 }
 
 #[test]
@@ -85,7 +111,7 @@ fn strict_equals_event_across_apps_and_designs() {
         ("NNA", Design::caba_memo_hybrid()),
     ];
     for &(app, design) in pairs {
-        run_pair(app, design, 0.02, &cfg(false));
+        run_matrix(app, design, 0.02, &cfg(false));
     }
 }
 
@@ -96,15 +122,18 @@ fn strict_equals_event_with_four_schedulers() {
     // pins both the fix and the differential at the wider width.
     let mut base = cfg(false);
     base.schedulers_per_sm = 4;
-    run_pair("PVC", Design::caba(Algo::Bdi), 0.02, &base);
-    run_pair("FRAG", Design::caba_memo(), 0.02, &base);
+    run_matrix("PVC", Design::caba(Algo::Bdi), 0.02, &base);
+    run_matrix("FRAG", Design::caba_memo(), 0.02, &base);
 }
 
 #[test]
 fn strict_equals_event_on_trace_replay() {
-    // Record under the event-driven tick, then replay under both modes:
-    // the trace-driven workload must behave identically too (record →
-    // replay bit-identity is mode-independent).
+    // Record under the event-driven serial tick (recording pins
+    // `effective_threads` to 1 — emission order is part of the file
+    // format), then replay under every mode: strict, event-serial, and
+    // sharded at each thread count. The trace-driven workload must behave
+    // identically everywhere, and all replays must reproduce the
+    // recording run's memory side.
     let app = apps::find("PVC").unwrap();
     let design = Design::caba(Algo::Bdi);
     let path = std::env::temp_dir().join(format!(
@@ -119,18 +148,30 @@ fn strict_equals_event_on_trace_replay() {
     assert!(recorded.finished);
 
     let trace = TraceData::load(path.to_str().unwrap()).expect("load trace");
-    let event = Simulator::from_trace(cfg(false), design, Arc::clone(&trace))
-        .expect("event replay")
-        .run();
-    let strict = Simulator::from_trace(cfg(true), design, Arc::clone(&trace))
-        .expect("strict replay")
-        .run();
-    assert_eq!(event.cycles, strict.cycles);
-    assert_eq!(event.warp_insts, strict.warp_insts);
-    assert_eq!(event.issue, strict.issue);
-    assert_eq!(event.memory_signature(), strict.memory_signature());
-    // And both reproduce the recording run's memory side.
-    assert_eq!(event.memory_signature(), recorded.memory_signature());
+    let replay = |strict: bool, threads: usize| -> SimStats {
+        let mut c = cfg(strict);
+        c.sim_threads = threads;
+        Simulator::from_trace(c, design, Arc::clone(&trace))
+            .expect("replay sim")
+            .run()
+    };
+    let strict = replay(true, 1);
+    let mut runs = vec![("event-serial".to_string(), replay(false, 1))];
+    for &threads in &THREADS {
+        runs.push((format!("sharded x{threads}"), replay(false, threads)));
+    }
+    for (mode, got) in &runs {
+        assert_eq!(got.cycles, strict.cycles, "replay {mode}: cycles");
+        assert_eq!(got.warp_insts, strict.warp_insts, "replay {mode}: warp_insts");
+        assert_eq!(got.issue, strict.issue, "replay {mode}: issue breakdown");
+        assert_eq!(
+            got.memory_signature(),
+            strict.memory_signature(),
+            "replay {mode}: memory signature"
+        );
+    }
+    // And the replays reproduce the recording run's memory side.
+    assert_eq!(strict.memory_signature(), recorded.memory_signature());
     let _ = std::fs::remove_file(&path);
 }
 
@@ -138,40 +179,51 @@ fn strict_equals_event_on_trace_replay() {
 fn strict_equals_event_under_cycle_budget_cut() {
     // Cut the budget mid-flight (including, almost surely, mid-stall for
     // the memory-bound app): the settlement on the max_cycles exit path
-    // must charge exactly what strict per-cycle ticking charges, and both
-    // must report cycles == max_cycles.
+    // must charge exactly what strict per-cycle ticking charges — in the
+    // serial *and* every sharded configuration — and all must report
+    // cycles == max_cycles.
     let mut saw_cut = false;
     for budget in [1_000u64, 7_777, 20_011] {
-        let mut base = cfg(false);
-        base.max_cycles = budget;
         let app = apps::find("PVC").unwrap();
         let design = Design::caba(Algo::Bdi);
-        let mut strict_cfg = base.clone();
-        strict_cfg.strict_tick = true;
-        let event = Simulator::new(base, design, app, 0.05).run();
-        let strict = Simulator::new(strict_cfg, design, app, 0.05).run();
-        assert_eq!(event.finished, strict.finished, "budget {budget}");
-        assert_eq!(event.cycles, strict.cycles, "budget {budget}");
-        if !event.finished {
-            // A budget-cut run must stop at exactly the budget in both
-            // modes (the event path clamps its fast-forward jumps).
-            saw_cut = true;
-            assert_eq!(event.cycles, budget, "budget {budget}");
+        let run_mode = |strict: bool, threads: usize| -> SimStats {
+            let mut c = cfg(strict);
+            c.max_cycles = budget;
+            c.sim_threads = threads;
+            Simulator::new(c, design, app, 0.05).run()
+        };
+        let strict = run_mode(true, 1);
+        let mut runs = vec![("event-serial".to_string(), run_mode(false, 1))];
+        for &threads in &THREADS {
+            runs.push((format!("sharded x{threads}"), run_mode(false, threads)));
         }
-        assert_eq!(event.warp_insts, strict.warp_insts, "budget {budget}");
-        assert_eq!(event.issue, strict.issue, "budget {budget}");
-        assert_eq!(
-            event.memory_signature(),
-            strict.memory_signature(),
-            "budget {budget}"
-        );
+        for (mode, got) in &runs {
+            let label = format!("budget {budget} [{mode}]");
+            assert_eq!(got.finished, strict.finished, "{label}: finished");
+            assert_eq!(got.cycles, strict.cycles, "{label}: cycles");
+            if !got.finished {
+                // A budget-cut run must stop at exactly the budget in
+                // every mode (the event paths clamp their fast-forwards).
+                saw_cut = true;
+                assert_eq!(got.cycles, budget, "{label}: clamp");
+            }
+            assert_eq!(got.warp_insts, strict.warp_insts, "{label}: warp_insts");
+            assert_eq!(got.issue, strict.issue, "{label}: issue breakdown");
+            assert_eq!(
+                got.memory_signature(),
+                strict.memory_signature(),
+                "{label}: memory signature"
+            );
+        }
     }
     assert!(saw_cut, "no budget actually cut the run mid-flight — shrink the budgets");
 }
 
-/// Drive one hand-built core through `Core::cycle` per-cycle vs.
-/// skip-and-settle, with identical surroundings, and require the identical
-/// issue breakdown — the unit-level form of the bulk-charge contract.
+/// Drive one hand-built core through the two-phase `cycle()`/`drain()`
+/// protocol per-cycle vs. skip-and-settle, with identical surroundings,
+/// and require the identical issue breakdown — the unit-level form of the
+/// bulk-charge contract (and, since `drain` is exactly what the shard
+/// loop's rendezvous runs, of the sharding contract too).
 fn handbuilt_core_differential(app_name: &str, design: Design, horizon: u64) {
     let cfg = SimConfig::default();
     let app = apps::find(app_name).unwrap();
@@ -198,7 +250,13 @@ fn handbuilt_core_differential(app_name: &str, design: Design, horizon: u64) {
                 t = core.next_event.min(horizon);
                 continue;
             }
-            let mut ctx = CycleCtx {
+            // Phase A: core-local work against read-only shared state.
+            let cctx = CoreCtx { cfg: &cfg, design: &design, wl: &wl };
+            core.cycle(t, &cctx);
+            // Phase B: drain the queued shared-memory ops immediately —
+            // exactly what the serial run loop (and, per shard epoch, the
+            // rendezvous) does.
+            let mut dctx = DrainCtx {
                 cfg: &cfg,
                 design: &design,
                 wl: &wl,
@@ -206,7 +264,7 @@ fn handbuilt_core_differential(app_name: &str, design: Design, horizon: u64) {
                 data: &mut data,
                 stats: &mut stats,
             };
-            core.cycle(t, &mut ctx);
+            core.drain(t, &mut dctx);
             t += 1;
         }
         core.settle_to(horizon, &cfg, &design);

@@ -5,7 +5,7 @@
 //! perf_hotpath` (compression-substrate throughput, oracle memoization,
 //! end-to-end simulator throughput), but:
 //!
-//! * emits a **JSON report** (`BENCH_pr6.json` by default; schema
+//! * emits a **JSON report** (`BENCH_pr7.json` by default; schema
 //!   documented in EXPERIMENTS.md §Perf) so the perf trajectory is
 //!   tracked in-repo from PR 3 onward;
 //! * measures the **event-driven tick** against the `strict_tick=true`
@@ -17,6 +17,11 @@
 //!   memory-bound point): kcycles/s per thread count, speedup over the
 //!   serial run, and bit-identity of the stats — divergence is again a
 //!   violation regardless of the floors file;
+//! * measures the **flight recorder's overhead** (`telemetry_window=1024`
+//!   vs off on the same points): the fractional slowdown is checked
+//!   against a `max_telemetry_overhead` *ceiling* in the floors file, and
+//!   any `SimStats` difference between the on/off runs violates the
+//!   observation-only contract unconditionally;
 //! * optionally checks the numbers against a committed **floors file**
 //!   (`key=value` lines, same offline-friendly format as `SimConfig`
 //!   overrides) and reports violations — the CI `bench-smoke` job fails
@@ -89,6 +94,29 @@ pub struct ShardPoint {
     pub stats_match: bool,
 }
 
+/// One flight-recorder overhead measurement (`telemetry_window=1024` vs
+/// the recorder off, same app/design/scale).
+pub struct TelemetryPoint {
+    pub app: &'static str,
+    pub design: &'static str,
+    /// Simulated kilocycles per wall-second with the recorder off.
+    pub kcycles_per_s_off: f64,
+    /// Same point with `telemetry_window=1024` (and the span log on).
+    pub kcycles_per_s_on: f64,
+    /// Fractional wall-clock cost of recording: `t_on / t_off - 1`
+    /// (0.05 = 5% slower). Checked against the `max_telemetry_overhead`
+    /// *ceiling* — the one floors-file key where bigger is worse.
+    pub overhead: f64,
+    /// Full `SimStats` equality between the off and on runs. `false`
+    /// breaks the observation-only contract and is a violation regardless
+    /// of the floors file.
+    pub stats_match: bool,
+    /// Chip windows the on-run recorded (sanity: the recorder ran).
+    pub windows: usize,
+    /// Assist-warp spans the on-run captured across all SMs.
+    pub spans: usize,
+}
+
 /// One end-to-end simulator measurement.
 pub struct SimPoint {
     pub app: &'static str,
@@ -116,6 +144,7 @@ pub struct BenchReport {
     pub sim: Vec<SimPoint>,
     pub tick: Vec<TickPoint>,
     pub shard: Vec<ShardPoint>,
+    pub telemetry: Vec<TelemetryPoint>,
     pub violations: Vec<String>,
 }
 
@@ -276,10 +305,45 @@ fn measure_shard(app_name: &'static str, design: Design, scale: f64) -> Result<V
     Ok(out)
 }
 
+/// Measure the flight recorder's cost on one point: an off-run and an
+/// on-run (`telemetry_window=1024`), compared on wall-clock and on full
+/// `SimStats` equality — every bench run doubles as an observation-only
+/// check of the recorder.
+fn measure_telemetry(
+    app_name: &'static str,
+    design: Design,
+    scale: f64,
+) -> Result<TelemetryPoint> {
+    let app = apps::find(app_name)
+        .ok_or_else(|| anyhow!("bench references unknown app {app_name:?}"))?;
+    let t0 = Instant::now();
+    let off = Simulator::new(SimConfig::default(), design, app, scale).run();
+    let dt_off = t0.elapsed().as_secs_f64().max(1e-9);
+    let cfg = SimConfig { telemetry_window: 1024, ..SimConfig::default() };
+    let t0 = Instant::now();
+    let mut sim = Simulator::new(cfg, design, app, scale);
+    let on = sim.run();
+    let dt_on = t0.elapsed().as_secs_f64().max(1e-9);
+    let run = sim
+        .telemetry_run()
+        .ok_or_else(|| anyhow!("telemetry bench point recorded nothing"))?;
+    Ok(TelemetryPoint {
+        app: app.name,
+        design: design.name,
+        kcycles_per_s_off: off.cycles as f64 / dt_off / 1e3,
+        kcycles_per_s_on: on.cycles as f64 / dt_on / 1e3,
+        overhead: dt_on / dt_off - 1.0,
+        stats_match: off == on,
+        windows: run.window_count(),
+        spans: run.span_count(),
+    })
+}
+
 /// Parse a floors file: `key=value` lines, `#` comments. Known keys:
 /// `min_compress_mlines_per_s`, `min_memo_warm_mlines_per_s`,
 /// `min_memo_hit_rate`, `min_sim_kcycles_per_s`, `min_lut_hit_rate`,
-/// `min_event_speedup`, `min_shard_speedup`.
+/// `min_event_speedup`, `min_shard_speedup`, and the one ceiling:
+/// `max_telemetry_overhead`.
 fn parse_floors(text: &str) -> Result<Vec<(String, f64)>> {
     let mut floors = Vec::new();
     for (ln, raw) in text.lines().enumerate() {
@@ -339,6 +403,27 @@ fn check_floors(report: &mut BenchReport, floors: &[(String, f64)]) {
                 .filter(|p| p.threads > 1)
                 .map(|p| p.speedup)
                 .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.max(v)))),
+            // The one ceiling key (bigger is worse): worst = the HIGHEST
+            // measured recorder overhead, violated when it EXCEEDS the
+            // configured value. Handled inline because the shared check
+            // below assumes floor semantics.
+            "max_telemetry_overhead" => {
+                let worst = report
+                    .telemetry
+                    .iter()
+                    .map(|t| t.overhead)
+                    .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.max(v))));
+                match worst {
+                    Some(w) if w > *floor => report
+                        .violations
+                        .push(format!("{key}: measured {w:.3} > ceiling {floor:.3}")),
+                    None => report
+                        .violations
+                        .push(format!("{key}: no measurements to check")),
+                    _ => {}
+                }
+                continue;
+            }
             other => {
                 report
                     .violations
@@ -442,6 +527,25 @@ impl BenchReport {
             );
         }
         s.push_str("  ],\n");
+        s.push_str("  \"telemetry\": [\n");
+        for (i, t) in self.telemetry.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "    {{\"app\": \"{}\", \"design\": \"{}\", \"kcycles_per_s_off\": {:.1}, \
+                 \"kcycles_per_s_on\": {:.1}, \"overhead\": {:.4}, \"stats_match\": {}, \
+                 \"windows\": {}, \"spans\": {}}}{}",
+                t.app,
+                t.design,
+                t.kcycles_per_s_off,
+                t.kcycles_per_s_on,
+                t.overhead,
+                t.stats_match,
+                t.windows,
+                t.spans,
+                if i + 1 < self.telemetry.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  ],\n");
         s.push_str("  \"floor_violations\": [");
         for (i, v) in self.violations.iter().enumerate() {
             if i > 0 {
@@ -529,6 +633,23 @@ impl BenchReport {
                 if p.stats_match { "identical" } else { "DIVERGED" }
             );
         }
+        if !self.telemetry.is_empty() {
+            s.push('\n');
+        }
+        for t in &self.telemetry {
+            let _ = writeln!(
+                s,
+                "telem {:>4}/{:<13} off {:>9.1} kcycles/s  on {:>9.1} kcycles/s  overhead {:+.1}%  stats {}  ({} windows, {} spans)",
+                t.app,
+                t.design,
+                t.kcycles_per_s_off,
+                t.kcycles_per_s_on,
+                t.overhead * 100.0,
+                if t.stats_match { "identical" } else { "DIVERGED" },
+                t.windows,
+                t.spans
+            );
+        }
         for v in &self.violations {
             let _ = writeln!(s, "\nFLOOR VIOLATION: {v}");
         }
@@ -588,6 +709,19 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
     // trajectory and keep a bit-identity check on the bench path).
     let shard = measure_shard("PVC", Design::caba(Algo::Bdi), sim_scale)?;
 
+    // Flight-recorder overhead: the memory-bound headline point always;
+    // full mode adds a compute-bound memoizing point (dense span traffic —
+    // the span log's worst case).
+    let telem_pairs: Vec<(&'static str, Design)> = if opts.quick {
+        vec![("PVC", Design::caba(Algo::Bdi))]
+    } else {
+        vec![("PVC", Design::caba(Algo::Bdi)), ("FRAG", Design::caba_memo())]
+    };
+    let telemetry = telem_pairs
+        .iter()
+        .map(|&(a, d)| measure_telemetry(a, d, sim_scale))
+        .collect::<Result<Vec<_>>>()?;
+
     // Assemble the sim section in `pairs` order, reusing the event-mode
     // run from the tick comparison where the pair overlaps (identical
     // config/scale — same measurement either way, half the simulations).
@@ -614,6 +748,7 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
         sim,
         tick,
         shard,
+        telemetry,
         violations: Vec::new(),
     };
 
@@ -633,6 +768,15 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
             report.violations.push(format!(
                 "sim_threads differential: {}/{} stats diverged at {} threads",
                 p.app, p.design, p.threads
+            ));
+        }
+    }
+    // And for the flight recorder: turning it on must not perturb the run.
+    for t in &report.telemetry {
+        if !t.stats_match {
+            report.violations.push(format!(
+                "telemetry observation-only: {}/{} SimStats changed with the recorder on",
+                t.app, t.design
             ));
         }
     }
@@ -670,6 +814,7 @@ mod tests {
             memo_hit_rate: 0.5,
             tick: vec![],
             shard: vec![],
+            telemetry: vec![],
             sim: vec![SimPoint {
                 app: "PVC",
                 design: "Base",
@@ -718,6 +863,27 @@ mod tests {
         assert_eq!(report.violations.len(), 5); // max(0.8, 1.3) clears 1.0
         check_floors(&mut report, &[("min_shard_speedup".to_string(), 1.5)]);
         assert_eq!(report.violations.len(), 6);
+        // Telemetry overhead is a CEILING: empty → flagged, a worst-case
+        // overhead above the configured value fails, below passes.
+        check_floors(&mut report, &[("max_telemetry_overhead".to_string(), 0.5)]);
+        assert_eq!(report.violations.len(), 7);
+        assert!(report.violations[6].contains("no measurements"));
+        let telem_point = |overhead: f64| TelemetryPoint {
+            app: "PVC",
+            design: "CABA-BDI",
+            kcycles_per_s_off: 100.0,
+            kcycles_per_s_on: 100.0 / (1.0 + overhead),
+            overhead,
+            stats_match: true,
+            windows: 8,
+            spans: 3,
+        };
+        report.telemetry = vec![telem_point(0.02), telem_point(0.08)];
+        check_floors(&mut report, &[("max_telemetry_overhead".to_string(), 0.5)]);
+        assert_eq!(report.violations.len(), 7); // worst 0.08 under ceiling
+        check_floors(&mut report, &[("max_telemetry_overhead".to_string(), 0.05)]);
+        assert_eq!(report.violations.len(), 8);
+        assert!(report.violations[7].contains("> ceiling"));
     }
 
     #[test]
@@ -758,12 +924,24 @@ mod tests {
                 speedup: 1.6,
                 stats_match: true,
             }],
+            telemetry: vec![TelemetryPoint {
+                app: "PVC",
+                design: "CABA-BDI",
+                kcycles_per_s_off: 250.0,
+                kcycles_per_s_on: 240.0,
+                overhead: 0.0417,
+                stats_match: true,
+                windows: 12,
+                spans: 40,
+            }],
             violations: vec!["min_x: measured 1 < floor 2".to_string()],
         };
         let j = report.to_json();
         assert!(j.contains("\"schema\": \"caba-bench-v1\""));
         assert!(j.contains("\"algo\": \"BDI\""));
         assert!(j.contains("\"sim_threads\""));
+        assert!(j.contains("\"telemetry\""));
+        assert!(j.contains("\"overhead\": 0.0417"));
         assert!(j.contains("floor_violations"));
         // Balanced braces/brackets (cheap well-formedness probe).
         assert_eq!(j.matches('{').count(), j.matches('}').count());

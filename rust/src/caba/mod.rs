@@ -16,6 +16,7 @@ pub mod subroutines;
 use crate::compress::oracle::LineVerdict;
 use crate::config::SimConfig;
 use crate::stats::CabaStats;
+use crate::telemetry::{SpanKind, SpanLog, SpanOutcome, SPAN_NONE};
 use subroutines::Subroutine;
 
 /// Scheduling priority of an assist warp (§4.2.3).
@@ -58,6 +59,10 @@ pub struct AwtEntry {
     pub payload: Payload,
     /// Warp slot of the parent (shares its context and warp ID, §4.2.1).
     pub parent_warp: usize,
+    /// Flight-recorder span for this deployment ([`SPAN_NONE`] when
+    /// telemetry is off or the span log was full) — lets issue/retire/kill
+    /// update the span in O(1) without a token lookup.
+    pub span_idx: u32,
 }
 
 /// A retirement the core must act upon.
@@ -97,6 +102,11 @@ pub struct Awc {
     throttle_enabled: bool,
     throttle_threshold: f64,
     pub stats: CabaStats,
+    /// Flight-recorder span log (trigger → issue → retire/kill per assist
+    /// warp). Disabled (zero-capacity) unless telemetry is on; every hook
+    /// below is then a single branch. Observation-only: never read by any
+    /// scheduling decision.
+    pub spans: SpanLog,
 }
 
 impl Awc {
@@ -113,6 +123,11 @@ impl Awc {
             throttle_enabled: cfg.caba_throttle,
             throttle_threshold: cfg.throttle_util_threshold,
             stats: CabaStats::default(),
+            spans: SpanLog::new(if cfg.telemetry_window > 0 {
+                cfg.telemetry_spans
+            } else {
+                0
+            }),
         }
     }
 
@@ -127,7 +142,8 @@ impl Awc {
         reg: u8,
         uid: u64,
     ) -> Option<u64> {
-        let token = self.trigger_high(active_from, sub, parent_warp, reg, uid)?;
+        let token =
+            self.trigger_high(active_from, sub, parent_warp, reg, uid, SpanKind::Decompress)?;
         self.stats.decompress_warps += 1;
         Some(token)
     }
@@ -144,7 +160,7 @@ impl Awc {
         reg: u8,
         uid: u64,
     ) -> Option<u64> {
-        self.trigger_high(active_from, sub, parent_warp, reg, uid)
+        self.trigger_high(active_from, sub, parent_warp, reg, uid, SpanKind::MemoLookup)
     }
 
     fn trigger_high(
@@ -154,10 +170,12 @@ impl Awc {
         parent_warp: usize,
         reg: u8,
         uid: u64,
+        kind: SpanKind,
     ) -> Option<u64> {
         let idx = self.free_row()?;
         let token = self.next_token;
         self.next_token += 1;
+        let span_idx = self.spans.open(token, kind, parent_warp, active_from);
         self.entries[idx] = Some(AwtEntry {
             token,
             active_from,
@@ -166,6 +184,7 @@ impl Awc {
             priority: Priority::High,
             payload: Payload::Decompress { regs: vec![(parent_warp, reg, uid)] },
             parent_warp,
+            span_idx,
         });
         self.rows_high.push(idx);
         Some(token)
@@ -189,6 +208,7 @@ impl Awc {
         let idx = self.free_row()?;
         let token = self.next_token;
         self.next_token += 1;
+        let span_idx = self.spans.open(token, SpanKind::Compress, parent_warp, active_from);
         self.entries[idx] = Some(AwtEntry {
             token,
             active_from,
@@ -197,6 +217,7 @@ impl Awc {
             priority: Priority::Low,
             payload: Payload::Compress { line_addr, verdict },
             parent_warp,
+            span_idx,
         });
         self.stats.compress_warps += 1;
         self.rows_low.push(idx);
@@ -218,6 +239,13 @@ impl Awc {
         let idx = self.free_row()?;
         let token = self.next_token;
         self.next_token += 1;
+        let kind = match &payload {
+            Payload::Prefetch { .. } => SpanKind::Prefetch,
+            Payload::MemoInstall { .. } => SpanKind::MemoInstall,
+            Payload::Compress { .. } => SpanKind::Compress,
+            Payload::Decompress { .. } => SpanKind::Decompress,
+        };
+        let span_idx = self.spans.open(token, kind, parent_warp, active_from);
         self.entries[idx] = Some(AwtEntry {
             token,
             active_from,
@@ -226,6 +254,7 @@ impl Awc {
             priority: Priority::Low,
             payload,
             parent_warp,
+            span_idx,
         });
         self.rows_low.push(idx);
         Some(token)
@@ -253,13 +282,16 @@ impl Awc {
     }
 
     /// Kill an entry (line turned out uncompressed / no longer needed,
-    /// §4.4 "Communication and Control").
-    pub fn kill(&mut self, token: u64) {
+    /// §4.4 "Communication and Control"). `now` closes the entry's
+    /// flight-recorder span.
+    pub fn kill(&mut self, token: u64, now: u64) {
         if let Some(idx) = self.row_of(token) {
-            match self.entries[idx].take().map(|e| e.priority) {
-                Some(Priority::High) => self.rows_high.retain(|&r| r != idx),
-                Some(Priority::Low) => self.rows_low.retain(|&r| r != idx),
-                None => {}
+            if let Some(e) = self.entries[idx].take() {
+                match e.priority {
+                    Priority::High => self.rows_high.retain(|&r| r != idx),
+                    Priority::Low => self.rows_low.retain(|&r| r != idx),
+                }
+                self.spans.close(e.span_idx, now, SpanOutcome::Killed);
             }
             self.stats.killed += 1;
         }
@@ -418,10 +450,14 @@ impl Awc {
                     self.stats.assist_insts_idle_slots += 1;
                 }
             }
-            let _ = issued_any;
+            if issued_any {
+                self.spans.note_issue(e.span_idx, now);
+            }
             if e.sp_left == 0 && e.mem_left == 0 {
                 let e = self.entries[idx].take().unwrap();
                 any_retired = true;
+                self.spans
+                    .close(e.span_idx, now + self.retire_latency, SpanOutcome::Retired);
                 retired.push(Retirement {
                     at: now + self.retire_latency,
                     payload: e.payload,
@@ -567,10 +603,67 @@ mod tests {
         let sub = Subroutine { total: 4, mem: 1 };
         let idx = a.trigger_decompress(0, sub, 0, 1, 0).unwrap();
         assert!(a.attach_reg(idx, 5, 9, 50));
-        a.kill(idx);
+        a.kill(idx, 3);
         assert!(!a.is_live(idx));
         assert_eq!(a.stats.killed, 1);
         assert!(!a.attach_reg(idx, 6, 9, 60));
+    }
+
+    #[test]
+    fn spans_record_trigger_issue_retire_and_kill() {
+        use crate::telemetry::{SpanKind, SpanOutcome};
+        let mut cfg = SimConfig::default();
+        cfg.telemetry_window = 64;
+        cfg.telemetry_spans = 8;
+        let mut a = Awc::new(&cfg);
+        assert!(a.spans.enabled());
+        let sub = Subroutine { total: 3, mem: 1 };
+        let tok = a.trigger_decompress(10, sub, 4, 7, 1).unwrap();
+        let v = LineVerdict { encoding: 0, size_bytes: 17, bursts: 1 };
+        let tok2 = a.trigger_compress(12, sub, 5, 42, v).unwrap();
+        // Issue the decompression to completion from cycle 10.
+        let mut now = 10;
+        let mut retired = Vec::new();
+        while retired.is_empty() && now < 100 {
+            retired = a.issue_high(now, &mut slots());
+            now += 1;
+        }
+        a.kill(tok2, 20);
+        let spans = a.spans.spans();
+        assert_eq!(spans.len(), 2);
+        let d = spans.iter().find(|s| s.token == tok).unwrap();
+        assert_eq!(d.kind, SpanKind::Decompress);
+        assert_eq!(d.parent_warp, 4);
+        assert_eq!(d.trigger_at, 10);
+        assert_eq!(d.first_issue, 10);
+        assert_eq!(d.outcome, SpanOutcome::Retired);
+        assert_eq!(d.end, retired[0].at);
+        let c = spans.iter().find(|s| s.token == tok2).unwrap();
+        assert_eq!(c.kind, SpanKind::Compress);
+        assert_eq!(c.outcome, SpanOutcome::Killed);
+        assert_eq!(c.end, 20);
+        assert_eq!(c.first_issue, u64::MAX);
+    }
+
+    #[test]
+    fn spans_disabled_by_default_and_bounded_when_on() {
+        // Default config: telemetry off, no spans recorded.
+        let mut a = awc();
+        let sub = Subroutine { total: 3, mem: 1 };
+        a.trigger_decompress(0, sub, 0, 1, 0).unwrap();
+        assert!(!a.spans.enabled());
+        assert!(a.spans.spans().is_empty());
+        assert_eq!(a.spans.dropped(), 0);
+        // Enabled with a tiny cap: overflow drops and counts.
+        let mut cfg = SimConfig::default();
+        cfg.telemetry_window = 64;
+        cfg.telemetry_spans = 2;
+        let mut a = Awc::new(&cfg);
+        for i in 0..4 {
+            a.trigger_decompress(0, sub, i, 1, i as u64).unwrap();
+        }
+        assert_eq!(a.spans.spans().len(), 2);
+        assert_eq!(a.spans.dropped(), 2);
     }
 
     #[test]

@@ -182,6 +182,17 @@ pub struct SimConfig {
     /// fingerprint matches the same effective config on replay). The sweep
     /// engine additionally strips it: sweep jobs never record.
     pub trace_record: String,
+    /// Flight-recorder window cadence in cycles; `0` disables telemetry
+    /// (see `crate::telemetry`). A run control like `trace_record`:
+    /// recording is observation-only (a dedicated test pins `SimStats`
+    /// bit-identical with telemetry on vs off), so it is **excluded** from
+    /// [`SimConfig::fingerprint`] and stripped by the sweep engine.
+    pub telemetry_window: u64,
+    /// Per-SM assist-warp span-log capacity when telemetry is enabled
+    /// (`telemetry_window > 0`); `0` records windows but no spans. Same
+    /// run-control status as `telemetry_window`: excluded from the
+    /// fingerprint, stripped by sweeps.
+    pub telemetry_spans: usize,
 }
 
 impl Default for SimConfig {
@@ -238,6 +249,8 @@ impl Default for SimConfig {
             max_warp_insts: u64::MAX,
             seed: 0xCABA,
             trace_record: String::new(),
+            telemetry_window: 0,
+            telemetry_spans: 256,
         }
     }
 }
@@ -322,6 +335,8 @@ impl SimConfig {
             max_warp_insts,
             seed,
             trace_record,
+            telemetry_window,
+            telemetry_spans,
         } = self; // exhaustive destructuring: adding a field breaks this
         macro_rules! feed {
             ($($v:expr),* $(,)?) => { $( $v.hash(&mut h); )* };
@@ -344,15 +359,18 @@ impl SimConfig {
         );
         // Deliberately NOT fed: `trace_record` is a pure run control (see
         // its field doc) — the same simulation recorded to two different
-        // paths must fingerprint (and cache) identically.
-        let _ = trace_record;
+        // paths must fingerprint (and cache) identically. Likewise the
+        // telemetry knobs: the flight recorder is observation-only
+        // (`SimStats` bit-identical on vs off, pinned by the differential
+        // suite), so recording a timeline must not fragment the cache.
+        let _ = (trace_record, telemetry_window, telemetry_spans);
         let DramTiming { t_cl, t_rp, t_rc, t_ras, t_rcd, t_rrd, t_ccd, t_wr } = dram_timing;
         feed!(t_cl, t_rp, t_rc, t_ras, t_rcd, t_rrd, t_ccd, t_wr);
         h.finish()
     }
 
     /// Every key accepted by [`SimConfig::set`] (used by tests and docs).
-    pub const KEYS: [&'static str; 49] = [
+    pub const KEYS: [&'static str; 51] = [
         "n_sms", "warp_size", "n_mcs", "clock_ghz", "schedulers_per_sm",
         "max_warps_per_sm", "max_ctas_per_sm", "max_threads_per_sm",
         "regfile_per_sm", "smem_per_sm", "sp_units", "sfu_units",
@@ -367,6 +385,7 @@ impl SimConfig {
         "throttle_util_threshold", "memo_lut_bytes", "memo_lut_ways",
         "memo_entry_bytes", "memo_tag_bits", "strict_tick", "sim_threads",
         "max_cycles", "max_warp_insts", "seed", "trace_record",
+        "telemetry_window", "telemetry_spans",
     ];
 
     /// Apply one `key=value` override. Returns an error on unknown keys or
@@ -427,6 +446,8 @@ impl SimConfig {
             "max_warp_insts" => self.max_warp_insts = parse!(),
             "seed" => self.seed = parse!(),
             "trace_record" => self.trace_record = value.to_string(),
+            "telemetry_window" => self.telemetry_window = parse!(),
+            "telemetry_spans" => self.telemetry_spans = parse!(),
             _ => bail!("unknown config key: {key}"),
         }
         Ok(())
@@ -543,13 +564,14 @@ mod tests {
                 _ => "77".to_string(),
             };
             c.set(key, &val).unwrap();
-            if key == "trace_record" {
-                // The one deliberate exception: a pure run control that
-                // must NOT fragment the run cache or trace fingerprints.
+            if matches!(key, "trace_record" | "telemetry_window" | "telemetry_spans") {
+                // The deliberate exceptions: pure run controls (trace
+                // recording, flight-recorder telemetry) that must NOT
+                // fragment the run cache or trace fingerprints.
                 assert_eq!(
                     c.fingerprint(),
                     base.fingerprint(),
-                    "trace_record must not affect the fingerprint"
+                    "run control {key} must not affect the fingerprint"
                 );
                 continue;
             }

@@ -35,6 +35,7 @@ use crate::memo::{self, MemoGeometry, MemoLut};
 use crate::sim::designs::{Design, Mechanism};
 use crate::sim::DataModel;
 use crate::stats::{IssueBreakdown, SimStats, StallKind};
+use crate::telemetry::CoreRecorder;
 use crate::workload::Workload;
 use tables::{MshrInfo, MshrTable, ReleaseTable};
 
@@ -201,6 +202,11 @@ pub struct Core {
     d_thread_insts: u64,
     d_core_insts: u64,
     pub issue: IssueBreakdown,
+    /// Per-SM flight-recorder timeline (no-op unless `telemetry_window`
+    /// is set). Windows close lazily inside [`Core::settle_to`] — the one
+    /// place every tick mode funnels through with the boundary-state
+    /// contract ("state at start of cycle `b`") intact.
+    pub tl: CoreRecorder,
     /// Earliest future cycle at which anything on this core can change
     /// state (fast-forward hint; `u64::MAX` = fully drained).
     pub next_event: u64,
@@ -247,6 +253,7 @@ impl Core {
             d_thread_insts: 0,
             d_core_insts: 0,
             issue: IssueBreakdown::default(),
+            tl: CoreRecorder::new(cfg.telemetry_window, cfg.max_cycles),
             next_event: 0,
             charged_until: 0,
             live_cache: false,
@@ -325,19 +332,67 @@ impl Core {
     /// before `next_event` pins `next_event` to the very next cycle, so the
     /// per-cycle path would re-derive the identical `StallKind` on every
     /// skipped cycle (proved per stall source in DESIGN.md §3).
+    /// With telemetry on, any window boundary inside `[charged_until, now]`
+    /// is closed here with the bulk charge *split* at the boundary: the
+    /// issue breakdown is charged up to the boundary first, sampled, then
+    /// charging resumes — so the per-window deltas are bit-identical to the
+    /// strict per-cycle path. Everything else sampled at a boundary (L1 /
+    /// CABA stats, AWT occupancy) is frozen across a skipped window
+    /// ([`Awc::skip_idle_cycles`] touches only scheduling state), and MSHR
+    /// occupancy is sampled sweep-invariantly
+    /// ([`MshrTable::count_fills_at_or_after`]), so the boundary snapshot
+    /// needs no further splitting. The AWC skip itself stays ONE call with
+    /// the full window (partition-commutativity is pinned by
+    /// `prop_settle_window_partitions_commute`).
     pub fn settle_to(&mut self, now: u64, cfg: &SimConfig, design: &Design) {
         debug_assert!(self.charged_until <= now, "core settled backwards");
         let k = now - self.charged_until;
-        if k == 0 {
-            return;
+        if self.tl.enabled() {
+            while self.tl.next_boundary() <= now {
+                let b = self.tl.next_boundary();
+                let step = b - self.charged_until;
+                if step > 0 {
+                    for &kind in &self.stall_memo {
+                        self.issue.bulk_charge(kind, step);
+                    }
+                    self.charged_until = b;
+                }
+                let mshr_inflight = self.mshr.count_fills_at_or_after(b);
+                self.tl.close_window(
+                    &self.issue,
+                    &self.awc.stats,
+                    &self.l1.stats,
+                    mshr_inflight,
+                    self.awc.live() as u32,
+                );
+            }
         }
-        for &kind in &self.stall_memo {
-            self.issue.bulk_charge(kind, k);
+        let rest = now - self.charged_until;
+        if rest > 0 {
+            for &kind in &self.stall_memo {
+                self.issue.bulk_charge(kind, rest);
+            }
+            self.charged_until = now;
         }
-        let high = design.uses_assist_warps();
-        let low = high && (cfg.sp_units > 0 || cfg.mem_units > 0);
-        self.awc.skip_idle_cycles(k, high, low);
-        self.charged_until = now;
+        if k > 0 {
+            let high = design.uses_assist_warps();
+            let low = high && (cfg.sp_units > 0 || cfg.mem_units > 0);
+            self.awc.skip_idle_cycles(k, high, low);
+        }
+    }
+
+    /// Close the flight recorder's partial tail window at end of run
+    /// (call after the final [`Core::settle_to`]).
+    pub fn finish_telemetry(&mut self, now: u64) {
+        let mshr_inflight = self.mshr.count_fills_at_or_after(now);
+        self.tl.finish(
+            now,
+            &self.issue,
+            &self.awc.stats,
+            &self.l1.stats,
+            mshr_inflight,
+            self.awc.live() as u32,
+        );
     }
 
     /// Advance this SM by one cycle — phase A only. Every shared-state

@@ -193,6 +193,24 @@ impl MshrTable {
         }
         next
     }
+
+    /// Entries whose fill has not landed by the start of `cycle`
+    /// (`fill_at >= cycle`) — the flight recorder's MSHR-occupancy sample.
+    /// Deliberately *not* [`MshrTable::len`]: the sweep is lazy, so raw
+    /// length depends on how often the core executed (which differs across
+    /// tick modes), while this count is a pure function of table contents —
+    /// a sweep at any `now < cycle` removes only entries the predicate
+    /// already excludes. That makes the sample bit-identical across
+    /// strict / event-serial / sharded ticking (see `crate::telemetry`).
+    pub fn count_fills_at_or_after(&self, cycle: u64) -> u32 {
+        let mut n = 0;
+        for i in 0..self.keys.len() {
+            if self.keys[i] != VACANT && self.info[i].fill_at >= cycle {
+                n += 1;
+            }
+        }
+        n
+    }
 }
 
 /// Multi-part register release (a load spanning several lines completes
@@ -298,6 +316,26 @@ mod tests {
         assert_eq!(t.next_fill_after(10), 40);
         assert_eq!(t.next_fill_after(50), 90);
         assert_eq!(t.next_fill_after(90), u64::MAX);
+    }
+
+    #[test]
+    fn mshr_count_fills_is_sweep_invariant() {
+        let mut t = MshrTable::new(8, 8);
+        t.insert(1, MshrInfo { fill_at: 5, awc_token: None });
+        t.insert(2, MshrInfo { fill_at: 10, awc_token: None });
+        t.insert(3, MshrInfo { fill_at: 40, awc_token: Some(1) });
+        // Boundary semantics: fill_at == cycle still counts as in flight
+        // (the fill lands *during* that cycle, after the boundary sample).
+        assert_eq!(t.count_fills_at_or_after(10), 2);
+        assert_eq!(t.count_fills_at_or_after(11), 1);
+        assert_eq!(t.count_fills_at_or_after(0), 3);
+        assert_eq!(t.count_fills_at_or_after(41), 0);
+        // Sweeping filled entries (any now < cycle) leaves the count
+        // unchanged — the mode-invariance argument in the method docs.
+        t.sweep(|info| info.fill_at > 9);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.count_fills_at_or_after(10), 2);
+        assert_eq!(t.count_fills_at_or_after(11), 1);
     }
 
     #[test]

@@ -43,7 +43,14 @@
 //!   issue path — hit rates emerge from the data (capacity, eviction and
 //!   tag aliasing all modeled) instead of being drawn from a table, and a
 //!   compute-bound workload suite (`workload::apps::MEMO_APPS`) exercises
-//!   the paper's second bottleneck axis (`caba fig memo`).
+//!   the paper's second bottleneck axis (`caba fig memo`);
+//! * a deterministic **flight recorder** ([`telemetry`]): fixed-cadence
+//!   windowed timelines of IPC / stalls / bandwidth / cache and AWT
+//!   occupancy plus bounded assist-warp span logs, bit-identical across
+//!   all tick modes and provably observation-only — rendered as ASCII
+//!   sparklines and a per-SM stall heatmap (`caba run --timeline`,
+//!   [`report::timeline`]) or exported as Perfetto-loadable Chrome
+//!   trace-event JSON (`caba prof`).
 //!
 //! See `DESIGN.md` (repo root) for the system inventory and
 //! `EXPERIMENTS.md` for paper-vs-measured results and the sweep-engine
@@ -64,6 +71,7 @@ pub mod runtime;
 pub mod sim;
 pub mod stats;
 pub mod sweep;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 pub mod workload;

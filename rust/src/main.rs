@@ -6,7 +6,8 @@
 //! caba list                         # apps and designs
 //! caba table1 [--set k=v]...       # print the simulated configuration
 //! caba run --app PVC --design CABA-BDI [--scale 0.1] [--threads N]
-//!          [--oracle native|pjrt] [--set key=value]...
+//!          [--oracle native|pjrt] [--timeline] [--json] [--set key=value]...
+//! caba prof <out.json> --app PVC [--design D] [--scale S] [--set k=v]...
 //! caba fig <2|3|8|9|10|11|12|13|14|15|16|md|memo> [--scale 0.1]
 //!          [--jobs N] [--set key=value]...
 //! caba sweep [--apps PVC,MM|eval|all|memo] [--designs Base,CABA-BDI|headline]
@@ -16,8 +17,16 @@
 //! caba trace replay <file.cabatrace> [--design D] [--set k=v]...
 //! caba trace info <file.cabatrace>
 //! caba trace import <dump.txt> [--out file] [--pattern random|zero|...]
-//! caba bench [--quick] [--out BENCH_pr6.json] [--floors BENCH_floors.txt]
+//! caba bench [--quick] [--out BENCH_pr7.json] [--floors BENCH_floors.txt]
 //! ```
+//!
+//! `run --timeline` prints the flight recorder's ASCII timeline (chip
+//! sparklines + per-SM stall heatmap) after the usual summary; `run
+//! --json` emits the whole run as one JSON object instead. `prof` runs
+//! one point with the recorder on and writes Chrome trace-event JSON
+//! (open it in <https://ui.perfetto.dev> or `chrome://tracing`). All
+//! three default `telemetry_window` to 1024 when unset — recording is
+//! observation-only, so results are bit-identical either way.
 //!
 //! `--jobs N` sets the sweep-engine worker count (default: one per
 //! available core). Results are bit-identical for any worker count —
@@ -205,7 +214,15 @@ fn run() -> Result<()> {
             let app = apps::find(app_name)
                 .ok_or_else(|| anyhow!("unknown app {app_name:?}; see `caba list`"))?;
             let design = design_by_name(args.flag("design").unwrap_or("CABA-BDI"))?;
-            let cfg = args.config()?;
+            let timeline = args.flag("timeline").is_some();
+            let json = args.flag("json").is_some();
+            let mut cfg = args.config()?;
+            // Both render paths want the flight recorder; enabling it is
+            // observation-only (SimStats stay bit-identical), so a default
+            // cadence is safe. An explicit --set telemetry_window wins.
+            if (timeline || json) && cfg.telemetry_window == 0 {
+                cfg.telemetry_window = 1024;
+            }
             let scale = args.scale();
             let mut sim = match args.flag("oracle") {
                 Some("pjrt") => {
@@ -218,7 +235,55 @@ fn run() -> Result<()> {
                 Some(o) => bail!("unknown oracle {o:?} (native|pjrt)"),
             };
             let stats = sim.run();
+            if json {
+                print!(
+                    "{}",
+                    caba::report::jsonout::run_json(
+                        app.name,
+                        design.name,
+                        &stats,
+                        sim.cfg.n_mcs,
+                        sim.telemetry_run().as_ref(),
+                    )
+                );
+                return Ok(());
+            }
             print_run(app.name, design.name, &stats, &sim);
+            if timeline {
+                if let Some(run) = sim.telemetry_run() {
+                    println!();
+                    print!("{}", caba::report::timeline::render(&run, 64));
+                }
+            }
+            Ok(())
+        }
+        Some("prof") => {
+            let out = args.positional.get(1).map(String::as_str).ok_or_else(|| {
+                anyhow!("prof requires an output path, e.g. caba prof trace.json --app PVC")
+            })?;
+            let app_name = args.flag("app").ok_or_else(|| anyhow!("--app required"))?;
+            let app = apps::find(app_name)
+                .ok_or_else(|| anyhow!("unknown app {app_name:?}; see `caba list`"))?;
+            let design = design_by_name(args.flag("design").unwrap_or("CABA-BDI"))?;
+            let mut cfg = args.config()?;
+            if cfg.telemetry_window == 0 {
+                cfg.telemetry_window = 1024;
+            }
+            let mut sim = Simulator::new(cfg, design, app, args.scale());
+            let stats = sim.run();
+            let run = sim
+                .telemetry_run()
+                .ok_or_else(|| anyhow!("flight recorder produced no data (telemetry_window=0?)"))?;
+            let trace = caba::telemetry::export::chrome_trace_json(&run, app.name, design.name);
+            std::fs::write(out, &trace).map_err(|e| anyhow!("writing {out}: {e}"))?;
+            println!(
+                "prof: wrote {out} ({} windows x {} cycles, {} spans over {} cycles)",
+                run.window_count(),
+                run.window,
+                run.span_count(),
+                stats.cycles
+            );
+            println!("open it in https://ui.perfetto.dev or chrome://tracing");
             Ok(())
         }
         Some("fig") => {
@@ -353,7 +418,7 @@ fn run() -> Result<()> {
         Some("bench") => {
             let opts = caba::bench::BenchOpts {
                 quick: args.flag("quick").is_some(),
-                out: args.flag("out").unwrap_or("BENCH_pr6.json").to_string(),
+                out: args.flag("out").unwrap_or("BENCH_pr7.json").to_string(),
                 floors: args.flag("floors").map(str::to_string),
             };
             let t0 = Instant::now();
@@ -375,8 +440,10 @@ fn run() -> Result<()> {
         Some("trace") => run_trace(&args),
         _ => {
             eprintln!(
-                "usage: caba <list|table1|run|fig|sweep|trace|bench> [...]\n  \
+                "usage: caba <list|table1|run|prof|fig|sweep|trace|bench> [...]\n  \
                  caba run --app PVC --design CABA-BDI [--scale 0.25] [--threads N] [--oracle native|pjrt]\n  \
+                 caba run --app PVC --timeline   (ASCII flight-recorder timeline; --json for machine-readable)\n  \
+                 caba prof trace.json --app PVC [--design CABA-BDI]   (Perfetto/chrome-trace export)\n  \
                  caba fig 8 [--scale 0.25] [--jobs N] [--set key=value]  (fig memo = §8.1 suite)\n  \
                  caba sweep --apps eval|memo --designs headline --bw 0.5,1.0,2.0 [--jobs N]\n  \
                  caba sweep --trace run.cabatrace --designs headline [--bw 0.5,1.0,2.0]\n  \
@@ -384,7 +451,7 @@ fn run() -> Result<()> {
                  caba trace replay run.cabatrace [--design CABA-BDI] [--set key=value]\n  \
                  caba trace info run.cabatrace\n  \
                  caba trace import dump.txt [--out dump.cabatrace] [--pattern random]\n  \
-                 caba bench [--quick] [--out BENCH_pr6.json] [--floors BENCH_floors.txt]"
+                 caba bench [--quick] [--out BENCH_pr7.json] [--floors BENCH_floors.txt]"
             );
             Ok(())
         }

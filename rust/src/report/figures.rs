@@ -546,3 +546,57 @@ pub fn md_cache_hitrate(ctx: &RunCtx) -> String {
         figure_matrix(&names(&set), &series, 1)
     )
 }
+
+#[cfg(test)]
+mod tests {
+    // The figure bodies themselves are exercised end-to-end by the bench
+    // binaries and `caba fig`; these pin the matrix-plumbing helpers every
+    // regenerator builds on.
+    use super::*;
+
+    #[test]
+    fn matrix_is_app_major_cross_product() {
+        let set: Vec<&'static AppSpec> = eval_apps().into_iter().take(2).collect();
+        let designs = [Design::base(), Design::caba(Algo::Bdi)];
+        let bws = [0.5, 1.0];
+        let points = matrix(&set, &designs, &bws);
+        assert_eq!(points.len(), 2 * 2 * 2);
+        // App-major, then design, then bandwidth — the order the sweep
+        // engine keys its cache warm-up on.
+        assert!(std::ptr::eq(points[0].0, set[0]));
+        assert_eq!(points[0].1.name, "Base");
+        assert_eq!(points[0].2, 0.5);
+        assert_eq!(points[1].2, 1.0);
+        assert_eq!(points[2].1.name, designs[1].name);
+        assert!(std::ptr::eq(points[4].0, set[1]));
+        // Degenerate axes collapse cleanly.
+        assert!(matrix(&[], &designs, &bws).is_empty());
+        assert!(matrix(&set, &designs, &[]).is_empty());
+    }
+
+    #[test]
+    fn names_and_eval_set_are_consistent() {
+        let set = eval_apps();
+        let n = names(&set);
+        assert_eq!(n.len(), set.len());
+        assert!(!set.is_empty());
+        for (app, name) in set.iter().zip(&n) {
+            assert_eq!(app.name, *name);
+            assert!(app.in_eval_set, "{name} outside the eval set");
+        }
+    }
+
+    #[test]
+    fn runctx_constructors_carry_overrides() {
+        let ctx = RunCtx::new(0.25);
+        assert_eq!(ctx.scale, 0.25);
+        assert_eq!(ctx.jobs, 0);
+        assert_eq!(ctx.cfg.fingerprint(), SimConfig::default().fingerprint());
+        let mut cfg = SimConfig::default();
+        cfg.n_sms = 3;
+        let ctx = RunCtx::with_cfg(cfg.clone(), 1.0, 4);
+        assert_eq!(ctx.jobs, 4);
+        assert_eq!(ctx.cfg.n_sms, 3);
+        assert_eq!(ctx.cfg.fingerprint(), cfg.fingerprint());
+    }
+}

@@ -1,0 +1,227 @@
+//! `caba run --json`: the full end-of-run [`SimStats`] plus a flight
+//! recorder summary as machine-readable JSON.
+//!
+//! Hand-rolled writer in the `BenchReport::to_json` idiom (the offline
+//! image has no serde). All keys are fixed identifiers and app/design
+//! names are `[A-Za-z0-9_-]`, so no escaping is needed. Derived metrics
+//! (hit rates, IPC, compression ratio) are embedded alongside the raw
+//! counters so downstream scripts don't re-implement the formulas.
+
+use crate::stats::{CacheStats, SimStats};
+use crate::telemetry::TelemetryRun;
+use std::fmt::Write as _;
+
+fn cache(s: &CacheStats) -> String {
+    format!(
+        "{{\"accesses\": {}, \"hits\": {}, \"misses\": {}, \"evictions\": {}, \
+         \"writebacks\": {}, \"hit_rate\": {:.6}}}",
+        s.accesses,
+        s.hits,
+        s.misses,
+        s.evictions,
+        s.writebacks,
+        s.hit_rate()
+    )
+}
+
+/// Render one finished run as a JSON object. `n_mcs` feeds the bandwidth
+/// utilization derivation (the stats struct stores raw busy-cycles);
+/// `telemetry` is `None` when the flight recorder was off.
+pub fn run_json(
+    app: &str,
+    design: &str,
+    stats: &SimStats,
+    n_mcs: usize,
+    telemetry: Option<&TelemetryRun>,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"caba-run-v1\",\n");
+    let _ = writeln!(s, "  \"app\": \"{app}\",");
+    let _ = writeln!(s, "  \"design\": \"{design}\",");
+    let _ = writeln!(s, "  \"finished\": {},", stats.finished);
+    let _ = writeln!(s, "  \"cycles\": {},", stats.cycles);
+    let _ = writeln!(s, "  \"warp_insts\": {},", stats.warp_insts);
+    let _ = writeln!(s, "  \"thread_insts\": {},", stats.thread_insts);
+    let _ = writeln!(s, "  \"ctas_launched\": {},", stats.ctas_launched);
+    let _ = writeln!(s, "  \"ipc\": {:.6},", stats.ipc());
+    let i = &stats.issue;
+    let _ = writeln!(
+        s,
+        "  \"issue\": {{\"active\": {}, \"compute_stall\": {}, \"memory_stall\": {}, \
+         \"data_stall\": {}, \"idle\": {}}},",
+        i.active, i.compute_stall, i.memory_stall, i.data_stall, i.idle
+    );
+    let _ = writeln!(s, "  \"l1\": {},", cache(&stats.l1));
+    let _ = writeln!(s, "  \"l2\": {},", cache(&stats.l2));
+    let d = &stats.dram;
+    let _ = writeln!(
+        s,
+        "  \"dram\": {{\"reads\": {}, \"writes\": {}, \"row_hits\": {}, \"row_misses\": {}, \
+         \"bursts\": {}, \"bursts_uncompressed\": {}, \"md_accesses\": {}, \
+         \"compression_ratio\": {:.4}, \"bandwidth_utilization\": {:.4}}},",
+        d.reads,
+        d.writes,
+        d.row_hits,
+        d.row_misses,
+        d.bursts,
+        d.bursts_uncompressed,
+        d.md_accesses,
+        d.compression_ratio(),
+        d.bandwidth_utilization(stats.cycles, n_mcs)
+    );
+    let ic = &stats.icnt;
+    let _ = writeln!(
+        s,
+        "  \"icnt\": {{\"packets_fwd\": {}, \"packets_back\": {}, \"flits_fwd\": {}, \
+         \"flits_back\": {}}},",
+        ic.packets_fwd, ic.packets_back, ic.flits_fwd, ic.flits_back
+    );
+    let c = &stats.caba;
+    let _ = writeln!(
+        s,
+        "  \"caba\": {{\"decompress_warps\": {}, \"compress_warps\": {}, \
+         \"assist_insts_issued\": {}, \"assist_insts_idle_slots\": {}, \
+         \"compress_skipped\": {}, \"throttled_deploys\": {}, \"killed\": {}, \
+         \"prefetches_issued\": {}, \"memo_lookups\": {}, \"memo_hits\": {}, \
+         \"memo_alias_hits\": {}, \"memo_installs\": {}, \"memo_evictions\": {}, \
+         \"memo_lookups_skipped\": {}}},",
+        c.decompress_warps,
+        c.compress_warps,
+        c.assist_insts_issued,
+        c.assist_insts_idle_slots,
+        c.compress_skipped,
+        c.throttled_deploys,
+        c.killed,
+        c.prefetches_issued,
+        c.memo_lookups,
+        c.memo_hits,
+        c.memo_alias_hits,
+        c.memo_installs,
+        c.memo_evictions,
+        c.memo_lookups_skipped
+    );
+    let _ = writeln!(
+        s,
+        "  \"md\": {{\"accesses\": {}, \"hits\": {}, \"hit_rate\": {:.6}}},",
+        stats.md.accesses,
+        stats.md.hits,
+        stats.md.hit_rate()
+    );
+    let e = &stats.energy_events;
+    let _ = writeln!(
+        s,
+        "  \"energy_events\": {{\"core_insts\": {}, \"assist_insts\": {}, \"l1_accesses\": {}, \
+         \"l2_accesses\": {}, \"icnt_flits\": {}, \"dram_bursts\": {}, \"dram_activates\": {}, \
+         \"md_cache_accesses\": {}, \"hw_compressor_ops\": {}}},",
+        e.core_insts,
+        e.assist_insts,
+        e.l1_accesses,
+        e.l2_accesses,
+        e.icnt_flits,
+        e.dram_bursts,
+        e.dram_activates,
+        e.md_cache_accesses,
+        e.hw_compressor_ops
+    );
+    let _ = writeln!(
+        s,
+        "  \"trace\": {{\"accesses_recorded\": {}, \"payloads_recorded\": {}}},",
+        stats.trace.accesses_recorded, stats.trace.payloads_recorded
+    );
+    match telemetry {
+        None => s.push_str("  \"telemetry\": null\n"),
+        Some(r) => {
+            let mut ipc_min = f64::INFINITY;
+            let mut ipc_max = 0.0f64;
+            let mut bw_peak = 0.0f64;
+            for w in &r.chip {
+                ipc_min = ipc_min.min(w.ipc());
+                ipc_max = ipc_max.max(w.ipc());
+                bw_peak = bw_peak.max(w.bw_utilization_raw(r.n_mcs));
+            }
+            if r.chip.is_empty() {
+                ipc_min = 0.0;
+            }
+            let dropped: u64 = r.cores.iter().map(|c| c.spans_dropped).sum();
+            let _ = writeln!(
+                s,
+                "  \"telemetry\": {{\"window\": {}, \"windows\": {}, \"chip_truncated\": {}, \
+                 \"bus_overcommit_windows\": {}, \"spans\": {}, \"spans_dropped\": {}, \
+                 \"ipc_min\": {:.6}, \"ipc_max\": {:.6}, \"bw_util_peak_raw\": {:.6}}}",
+                r.window,
+                r.window_count(),
+                r.chip_truncated,
+                r.bus_overcommit_windows,
+                r.span_count(),
+                dropped,
+                ipc_min,
+                ipc_max,
+                bw_peak
+            );
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{ChipWindow, CoreTimeline};
+
+    fn stats() -> SimStats {
+        let mut s = SimStats {
+            cycles: 100,
+            warp_insts: 250,
+            finished: true,
+            ..Default::default()
+        };
+        s.issue.active = 250;
+        s.issue.idle = 150;
+        s.l1.accesses = 40;
+        s.l1.hits = 30;
+        s.dram.bursts = 10;
+        s.dram.bursts_uncompressed = 20;
+        s.dram.bus_busy_cycles = 50.0;
+        s
+    }
+
+    #[test]
+    fn json_is_balanced_with_and_without_telemetry() {
+        let j = run_json("PVC", "CABA-BDI", &stats(), 4, None);
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(j.contains("\"schema\": \"caba-run-v1\""));
+        assert!(j.contains("\"telemetry\": null"));
+        assert!(j.contains("\"ipc\": 2.500000"));
+        assert!(j.contains("\"compression_ratio\": 2.0000"));
+        // 50 busy / (100 cycles x 4 MCs).
+        assert!(j.contains("\"bandwidth_utilization\": 0.1250"));
+
+        let run = TelemetryRun {
+            window: 50,
+            cycles: 100,
+            n_mcs: 4,
+            chip: vec![
+                ChipWindow { cycles: 50, warp_insts: 200, ..Default::default() },
+                ChipWindow { cycles: 50, warp_insts: 50, ..Default::default() },
+            ],
+            chip_truncated: 0,
+            bus_overcommit_windows: 1,
+            cores: vec![CoreTimeline {
+                sm_id: 0,
+                windows: vec![],
+                truncated_windows: 0,
+                spans: vec![],
+                spans_dropped: 3,
+            }],
+        };
+        let j = run_json("PVC", "CABA-BDI", &stats(), 4, Some(&run));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(j.contains("\"windows\": 2"));
+        assert!(j.contains("\"bus_overcommit_windows\": 1"));
+        assert!(j.contains("\"spans_dropped\": 3"));
+        assert!(j.contains("\"ipc_min\": 1.000000"));
+        assert!(j.contains("\"ipc_max\": 4.000000"));
+    }
+}

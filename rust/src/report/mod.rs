@@ -3,6 +3,8 @@
 
 pub mod benchutil;
 pub mod figures;
+pub mod jsonout;
+pub mod timeline;
 
 use crate::util::{geomean, mean};
 

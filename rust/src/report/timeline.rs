@@ -1,0 +1,392 @@
+//! ASCII rendering of a [`TelemetryRun`] (`caba run --timeline`):
+//! labeled sparklines for the chip-level series and a per-SM stall
+//! heatmap, all plain ASCII so the output survives logs, CI artifacts
+//! and terminals without Unicode fonts.
+//!
+//! Everything here is a pure function of the (already deterministic)
+//! telemetry data — rendering twice, or rendering the timeline of a
+//! different tick mode, yields byte-identical text.
+
+use crate::stats::IssueBreakdown;
+use crate::telemetry::TelemetryRun;
+
+/// Intensity ramp, blank = zero. 9 levels keeps each step distinct in
+/// every monospace font.
+const RAMP: &[u8] = b" .:-=+*#@";
+
+/// Partition `n` items into at most `width` contiguous buckets (fewer
+/// when `n < width` — a short run is not stretched).
+fn bucket_ranges(n: usize, width: usize) -> Vec<std::ops::Range<usize>> {
+    let buckets = width.min(n);
+    (0..buckets)
+        .map(|b| (b * n / buckets)..((b + 1) * n / buckets))
+        .collect()
+}
+
+/// Render `values` as a one-line sparkline at most `width` chars wide
+/// (mean-pooled into buckets). Zero maps to blank, the maximum to `@`.
+pub fn sparkline(values: &[f64], width: usize) -> String {
+    if values.is_empty() || width == 0 {
+        return String::new();
+    }
+    let pooled: Vec<f64> = bucket_ranges(values.len(), width)
+        .into_iter()
+        .map(|r| {
+            let n = r.len().max(1);
+            values[r].iter().sum::<f64>() / n as f64
+        })
+        .collect();
+    let max = pooled.iter().cloned().fold(0.0f64, f64::max);
+    pooled
+        .iter()
+        .map(|&v| {
+            let idx = if max > 0.0 && v > 0.0 {
+                // Non-zero values get at least the faintest mark.
+                (((v / max) * (RAMP.len() - 1) as f64).round() as usize).max(1)
+            } else {
+                0
+            };
+            RAMP[idx.min(RAMP.len() - 1)] as char
+        })
+        .collect()
+}
+
+/// The dominant issue class of a window, as a heatmap cell. Ties break in
+/// severity order (active beats stalls, memory beats the other stalls) so
+/// the map is deterministic.
+pub fn stall_char(issue: &IssueBreakdown) -> char {
+    let classes = [
+        (issue.active, '#'),
+        (issue.memory_stall, 'm'),
+        (issue.compute_stall, 'c'),
+        (issue.data_stall, 'd'),
+        (issue.idle, '.'),
+    ];
+    let max = classes.iter().map(|&(n, _)| n).max().unwrap_or(0);
+    if max == 0 {
+        return '.';
+    }
+    classes.iter().find(|&&(n, _)| n == max).unwrap().1
+}
+
+fn series_line(out: &mut String, label: &str, values: &[f64], width: usize) {
+    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().cloned().fold(0.0f64, f64::max);
+    let lo = if lo.is_finite() { lo } else { 0.0 };
+    out.push_str(&format!(
+        "  {:<14} |{}| min={:.3} max={:.3}\n",
+        label,
+        sparkline(values, width),
+        lo,
+        hi
+    ));
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// Render the full `--timeline` report: chip sparklines, per-SM series,
+/// the stall heatmap and the span summary.
+pub fn render(run: &TelemetryRun, width: usize) -> String {
+    let mut out = String::new();
+    let n = run.chip.len();
+    out.push_str(&format!(
+        "# flight recorder: {} windows x {} cycles ({} cycles total{})\n",
+        n,
+        run.window,
+        run.cycles,
+        if run.chip_truncated > 0 {
+            format!(", {} windows truncated", run.chip_truncated)
+        } else {
+            String::new()
+        }
+    ));
+    if n == 0 {
+        out.push_str("(no windows recorded)\n");
+        return out;
+    }
+
+    out.push_str("\n## chip\n");
+    series_line(
+        &mut out,
+        "IPC",
+        &run.chip.iter().map(|w| w.ipc()).collect::<Vec<_>>(),
+        width,
+    );
+    series_line(
+        &mut out,
+        "DRAM bw util",
+        &run
+            .chip
+            .iter()
+            .map(|w| w.bw_utilization(run.n_mcs))
+            .collect::<Vec<_>>(),
+        width,
+    );
+    series_line(
+        &mut out,
+        "compr ratio",
+        &run.chip.iter().map(|w| w.compression_ratio()).collect::<Vec<_>>(),
+        width,
+    );
+    series_line(
+        &mut out,
+        "L2 hit rate",
+        &run.chip.iter().map(|w| w.l2.hit_rate()).collect::<Vec<_>>(),
+        width,
+    );
+    if run.bus_overcommit_windows > 0 {
+        out.push_str(&format!(
+            "  note: {} window(s) overcommitted the DRAM bus (raw util > 1.0)\n",
+            run.bus_overcommit_windows
+        ));
+    }
+
+    // Cross-SM aggregates, one value per window index.
+    let windows = run.cores.iter().map(|c| c.windows.len()).max().unwrap_or(0);
+    if windows > 0 {
+        let agg = |f: &dyn Fn(&crate::telemetry::CoreWindow) -> (u64, u64)| -> Vec<f64> {
+            (0..windows)
+                .map(|i| {
+                    let (num, den) = run
+                        .cores
+                        .iter()
+                        .filter_map(|c| c.windows.get(i))
+                        .map(f)
+                        .fold((0, 0), |(a, b), (x, y)| (a + x, b + y));
+                    ratio(num, den)
+                })
+                .collect()
+        };
+        out.push_str("\n## SMs (aggregated)\n");
+        series_line(&mut out, "L1 hit rate", &agg(&|w| (w.l1.hits, w.l1.accesses)), width);
+        series_line(
+            &mut out,
+            "memo hit rate",
+            &agg(&|w| (w.caba.memo_hits, w.caba.memo_lookups)),
+            width,
+        );
+        series_line(
+            &mut out,
+            "AWT live",
+            &agg(&|w| (w.awt_live as u64, 1)),
+            width,
+        );
+        series_line(
+            &mut out,
+            "MSHR inflight",
+            &agg(&|w| (w.mshr_inflight as u64, 1)),
+            width,
+        );
+
+        out.push_str(
+            "\n## per-SM stall heatmap (dominant class: #=active m=memory c=compute d=data .=idle)\n",
+        );
+        for core in &run.cores {
+            let cells: String = bucket_ranges(core.windows.len(), width)
+                .into_iter()
+                .map(|r| {
+                    let mut sum = IssueBreakdown::default();
+                    for w in &core.windows[r] {
+                        sum.active += w.issue.active;
+                        sum.compute_stall += w.issue.compute_stall;
+                        sum.memory_stall += w.issue.memory_stall;
+                        sum.data_stall += w.issue.data_stall;
+                        sum.idle += w.issue.idle;
+                    }
+                    stall_char(&sum)
+                })
+                .collect();
+            out.push_str(&format!("  SM {:>3} |{}|\n", core.sm_id, cells));
+        }
+    }
+
+    // Span summary (per kind, across SMs).
+    let mut counts = [("decompress", 0u64), ("compress", 0), ("prefetch", 0), ("memo_lookup", 0), ("memo_install", 0)];
+    let mut dropped = 0;
+    for c in &run.cores {
+        dropped += c.spans_dropped;
+        for s in &c.spans {
+            for entry in counts.iter_mut() {
+                if entry.0 == s.kind.name() {
+                    entry.1 += 1;
+                }
+            }
+        }
+    }
+    out.push_str(&format!("\n## assist-warp spans ({} recorded", run.span_count()));
+    if dropped > 0 {
+        out.push_str(&format!(", {} dropped at the cap", dropped));
+    }
+    out.push_str(")\n");
+    for (name, n) in counts {
+        if n > 0 {
+            out.push_str(&format!("  {:<14} {}\n", name, n));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{CabaStats, CacheStats};
+    use crate::telemetry::{
+        ChipWindow, CoreTimeline, CoreWindow, Span, SpanKind, SpanOutcome, TelemetryRun,
+    };
+
+    #[test]
+    fn sparkline_scales_and_handles_edges() {
+        assert_eq!(sparkline(&[], 10), "");
+        assert_eq!(sparkline(&[1.0, 2.0], 0), "");
+        // All-zero input renders blanks (no division by zero).
+        assert_eq!(sparkline(&[0.0, 0.0, 0.0], 3), "   ");
+        // Max maps to '@', zero to ' ', small non-zero to at least '.'.
+        let s = sparkline(&[0.0, 0.001, 8.0], 3);
+        assert_eq!(s.len(), 3);
+        assert_eq!(&s[0..1], " ");
+        assert_eq!(&s[1..2], ".");
+        assert_eq!(&s[2..3], "@");
+        // Short input is not stretched to the full width.
+        assert_eq!(sparkline(&[1.0, 1.0], 80).len(), 2);
+        // Long input pools down to exactly `width` buckets.
+        let long: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        assert_eq!(sparkline(&long, 40).len(), 40);
+    }
+
+    #[test]
+    fn bucket_ranges_partition_exactly() {
+        for n in [0usize, 1, 2, 7, 40, 41, 100] {
+            for width in [1usize, 3, 40] {
+                let ranges = bucket_ranges(n, width);
+                assert_eq!(ranges.len(), width.min(n));
+                let covered: Vec<usize> = ranges.into_iter().flatten().collect();
+                assert_eq!(covered, (0..n).collect::<Vec<_>>(), "n={n} width={width}");
+            }
+        }
+    }
+
+    #[test]
+    fn stall_char_picks_dominant_with_severity_ties() {
+        let mut i = IssueBreakdown::default();
+        assert_eq!(stall_char(&i), '.'); // empty window
+        i.memory_stall = 5;
+        i.idle = 3;
+        assert_eq!(stall_char(&i), 'm');
+        i.active = 5; // tie with memory: active wins
+        assert_eq!(stall_char(&i), '#');
+        i = IssueBreakdown::default();
+        i.compute_stall = 2;
+        i.data_stall = 2; // tie among stalls: memory > compute > data order
+        assert_eq!(stall_char(&i), 'c');
+    }
+
+    fn golden_run() -> TelemetryRun {
+        let cw = |active: u64, memory: u64, l1_hits: u64, l1_acc: u64| CoreWindow {
+            issue: IssueBreakdown {
+                active,
+                memory_stall: memory,
+                ..Default::default()
+            },
+            caba: CabaStats::default(),
+            l1: CacheStats {
+                accesses: l1_acc,
+                hits: l1_hits,
+                ..Default::default()
+            },
+            mshr_inflight: 2,
+            awt_live: 1,
+        };
+        TelemetryRun {
+            window: 10,
+            cycles: 30,
+            n_mcs: 2,
+            chip: vec![
+                ChipWindow {
+                    cycles: 10,
+                    warp_insts: 20,
+                    bursts: 5,
+                    bursts_uncompressed: 10,
+                    bus_busy_cycles: 10.0,
+                    ..Default::default()
+                },
+                ChipWindow {
+                    cycles: 10,
+                    warp_insts: 10,
+                    ..Default::default()
+                },
+                ChipWindow {
+                    cycles: 10,
+                    ..Default::default()
+                },
+            ],
+            chip_truncated: 0,
+            bus_overcommit_windows: 0,
+            cores: vec![CoreTimeline {
+                sm_id: 0,
+                windows: vec![cw(8, 2, 3, 4), cw(1, 9, 0, 0), cw(0, 0, 0, 0)],
+                truncated_windows: 0,
+                spans: vec![Span {
+                    token: 0,
+                    kind: SpanKind::Decompress,
+                    parent_warp: 1,
+                    trigger_at: 2,
+                    first_issue: 2,
+                    end: 8,
+                    outcome: SpanOutcome::Retired,
+                }],
+                spans_dropped: 0,
+            }],
+        }
+    }
+
+    #[test]
+    fn render_golden_snapshot() {
+        // Byte-exact golden: rendering is part of the deterministic
+        // surface (the differential suite compares the underlying data,
+        // this pins the presentation).
+        let text = render(&golden_run(), 3);
+        let expected = "\
+# flight recorder: 3 windows x 10 cycles (30 cycles total)
+
+## chip
+  IPC            |@= | min=0.000 max=2.000
+  DRAM bw util   |@  | min=0.000 max=0.500
+  compr ratio    |@==| min=1.000 max=2.000
+  L2 hit rate    |   | min=0.000 max=0.000
+
+## SMs (aggregated)
+  L1 hit rate    |@  | min=0.000 max=0.750
+  memo hit rate  |   | min=0.000 max=0.000
+  AWT live       |@@@| min=1.000 max=1.000
+  MSHR inflight  |@@@| min=2.000 max=2.000
+
+## per-SM stall heatmap (dominant class: #=active m=memory c=compute d=data .=idle)
+  SM   0 |#m.|
+
+## assist-warp spans (1 recorded)
+  decompress     1
+";
+        assert_eq!(text, expected, "got:\n{text}");
+    }
+
+    #[test]
+    fn render_empty_run_is_graceful() {
+        let run = TelemetryRun {
+            window: 10,
+            cycles: 0,
+            n_mcs: 2,
+            chip: vec![],
+            chip_truncated: 0,
+            bus_overcommit_windows: 0,
+            cores: vec![],
+        };
+        let text = render(&run, 40);
+        assert!(text.contains("(no windows recorded)"));
+    }
+}

@@ -11,6 +11,7 @@ use crate::core::{Core, CoreCtx, DrainCtx};
 use crate::mem::MemSystem;
 use crate::util::barrier::SpinBarrier;
 use crate::stats::SimStats;
+use crate::telemetry::{ChipRecorder, ChipSnap, CoreTimeline, TelemetryRun};
 use crate::trace::{record::TraceRecorder, replay::TraceData, TraceKind, TraceMeta, PATTERN_FROM_SPEC};
 use crate::workload::{apps::AppSpec, ArrayInfo, TraceRole, Workload};
 use anyhow::{bail, Result};
@@ -159,6 +160,10 @@ pub struct Simulator {
     next_cta: u64,
     /// (core, group) slots awaiting a CTA.
     pub stats: SimStats,
+    /// Chip-level flight recorder (no-op unless `telemetry_window` is
+    /// set). Driven only between the run loop's phases on the drain
+    /// thread, so the sharded workers never see it.
+    telemetry: ChipRecorder,
 }
 
 // The sweep engine moves whole simulations onto worker threads, and the
@@ -210,12 +215,14 @@ impl Simulator {
             .map(|i| Core::new(i, &cfg, &design, &memo_geom))
             .collect();
         let mem = MemSystem::new(&cfg, &design);
+        let telemetry = ChipRecorder::new(cfg.telemetry_window, cfg.max_cycles, cfg.n_mcs);
         let mut sim = Simulator {
             cores,
             mem,
             data: DataModel::new(oracle, &wl.arrays),
             next_cta: 0,
             stats: SimStats::default(),
+            telemetry,
             cfg,
             design,
             wl,
@@ -313,12 +320,14 @@ impl Simulator {
             .map(|i| Core::new(i, &cfg, &design, &memo_geom))
             .collect();
         let mem = MemSystem::new(&cfg, &design);
+        let telemetry = ChipRecorder::new(cfg.telemetry_window, cfg.max_cycles, cfg.n_mcs);
         Ok(Simulator {
             cores,
             mem,
             data: DataModel::new(oracle, &wl.arrays),
             next_cta: 0,
             stats: SimStats::default(),
+            telemetry,
             cfg,
             design,
             wl,
@@ -423,9 +432,16 @@ impl Simulator {
         };
         // Settle every core's outstanding skipped window so the issue
         // breakdown covers each of the `now` cycles exactly once per
-        // scheduler slot — on any exit path, in either mode.
+        // scheduler slot — on any exit path, in either mode. With
+        // telemetry on this also closes every pending per-core window,
+        // and `finish_telemetry` the final partial tail.
         for core in &mut self.cores {
             core.settle_to(now, &self.cfg, &self.design);
+            core.finish_telemetry(now);
+        }
+        if self.telemetry.enabled() {
+            let snap = chip_snap(&self.mem, &self.stats);
+            self.telemetry.finish(now, &snap);
         }
         // On a drained run every CTA was launched exactly once (dispatch or
         // refill) and retired — the launch counter must cover the workload.
@@ -512,6 +528,12 @@ impl Simulator {
             };
 
             now += 1;
+            // Flight recorder: a boundary `== now` closes with post-drain
+            // state — exactly the "state at start of cycle now" contract.
+            if self.telemetry.enabled() && self.telemetry.next_boundary() <= now {
+                let snap = chip_snap(&self.mem, &self.stats);
+                self.telemetry.advance_to(now, &snap);
+            }
             let drained = !any_live && self.next_cta >= self.wl.total_ctas as u64;
             if drained || now >= self.cfg.max_cycles || self.stats.warp_insts >= self.cfg.max_warp_insts
             {
@@ -525,6 +547,13 @@ impl Simulator {
             // at exactly the cycle the strict path would.
             if !strict && !launched && min_next > now && min_next != u64::MAX {
                 now = min_next.min(self.cfg.max_cycles);
+                // Boundaries inside the skipped range close with the frozen
+                // snapshot: no core executes (hence no drain runs) in
+                // there, so the state at the jump IS each boundary's state.
+                if self.telemetry.enabled() && self.telemetry.next_boundary() <= now {
+                    let snap = chip_snap(&self.mem, &self.stats);
+                    self.telemetry.advance_to(now, &snap);
+                }
                 if now >= self.cfg.max_cycles {
                     self.stats.finished = false;
                     break;
@@ -568,6 +597,9 @@ impl Simulator {
         let data = &mut self.data;
         let stats = &mut self.stats;
         let next_cta = &mut self.next_cta;
+        // Telemetry is driven only by participant 0 between the barriers
+        // (the same thread that drains), never by the workers.
+        let telem = &mut self.telemetry;
         let total_ctas = wl.total_ctas as u64;
 
         let final_now = std::thread::scope(|scope| {
@@ -673,6 +705,12 @@ impl Simulator {
                 };
 
                 now += 1;
+                // Flight recorder: same two call sites (and the same
+                // boundary-state argument) as the serial loop.
+                if telem.enabled() && telem.next_boundary() <= now {
+                    let snap = chip_snap(&*mem, &*stats);
+                    telem.advance_to(now, &snap);
+                }
                 let drained = !any_live && *next_cta >= total_ctas;
                 if drained || now >= cfg.max_cycles || stats.warp_insts >= cfg.max_warp_insts {
                     stats.finished = drained;
@@ -680,6 +718,10 @@ impl Simulator {
                 }
                 if !launched && min_next > now && min_next != u64::MAX {
                     now = min_next.min(cfg.max_cycles);
+                    if telem.enabled() && telem.next_boundary() <= now {
+                        let snap = chip_snap(&*mem, &*stats);
+                        telem.advance_to(now, &snap);
+                    }
                     if now >= cfg.max_cycles {
                         stats.finished = false;
                         break;
@@ -700,6 +742,34 @@ impl Simulator {
             .map(|m| m.into_inner().unwrap())
             .collect();
         final_now
+    }
+
+    /// Everything the flight recorder captured, assembled per SM. `None`
+    /// unless the run was configured with `telemetry_window > 0`. Call
+    /// after [`Simulator::run`] — timelines are only final then.
+    pub fn telemetry_run(&self) -> Option<TelemetryRun> {
+        if !self.telemetry.enabled() {
+            return None;
+        }
+        Some(TelemetryRun {
+            window: self.telemetry.window(),
+            cycles: self.stats.cycles,
+            n_mcs: self.telemetry.n_mcs(),
+            chip: self.telemetry.windows().to_vec(),
+            chip_truncated: self.telemetry.truncated(),
+            bus_overcommit_windows: self.telemetry.overcommit(),
+            cores: self
+                .cores
+                .iter()
+                .map(|c| CoreTimeline {
+                    sm_id: c.sm_id,
+                    windows: c.tl.windows().to_vec(),
+                    truncated_windows: c.tl.truncated(),
+                    spans: c.awc.spans.spans().to_vec(),
+                    spans_dropped: c.awc.spans.dropped(),
+                })
+                .collect(),
+        })
     }
 
     fn collect(&mut self, now: u64) {
@@ -760,6 +830,33 @@ impl Simulator {
         s.energy_events.dram_activates = s.dram.row_misses;
         s.energy_events.md_cache_accesses = s.md.accesses;
         s.energy_events.hw_compressor_ops += self.mem.hw_compressor_ops;
+    }
+}
+
+/// Assemble the chip-side counter snapshot the [`ChipRecorder`] samples at
+/// window boundaries. Free function (not a method) so the sharded loop,
+/// which holds `mem`/`stats` as disjoint field borrows, can call it too.
+/// Every summand is shared-side state written only by the serial drain, so
+/// its value at any given cycle boundary is identical across tick modes.
+fn chip_snap(mem: &MemSystem, stats: &SimStats) -> ChipSnap {
+    let mut bursts = 0;
+    let mut bursts_uncompressed = 0;
+    let mut md_accesses = 0;
+    let mut bus_busy_cycles = 0.0;
+    for d in &mem.dram {
+        bursts += d.stats.bursts;
+        bursts_uncompressed += d.stats.bursts_uncompressed;
+        md_accesses += d.stats.md_accesses;
+        bus_busy_cycles += d.stats.bus_busy_cycles;
+    }
+    ChipSnap {
+        warp_insts: stats.warp_insts,
+        bursts,
+        bursts_uncompressed,
+        md_accesses,
+        bus_busy_cycles,
+        l2: stats.l2,
+        flits: mem.icnt.stats.flits_fwd + mem.icnt.stats.flits_back,
     }
 }
 
@@ -917,6 +1014,64 @@ mod tests {
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.warp_insts, b.warp_insts);
         assert_eq!(a.dram.bursts, b.dram.bursts);
+    }
+
+    #[test]
+    fn telemetry_is_observation_only_and_windows_tile_the_run() {
+        // The observation-only contract: turning the flight recorder on
+        // must leave every simulation statistic bit-identical (and the
+        // config fingerprint unchanged — pinned in config::tests).
+        let app = apps::find("PVC").unwrap();
+        let mut off_sim = Simulator::new(tiny_cfg(), Design::caba(Algo::Bdi), app, 0.02);
+        let off = off_sim.run();
+        assert!(off_sim.telemetry_run().is_none(), "recorder off by default");
+
+        let mut cfg = tiny_cfg();
+        cfg.telemetry_window = 512;
+        let mut sim = Simulator::new(cfg, Design::caba(Algo::Bdi), app, 0.02);
+        let on = sim.run();
+        assert_eq!(on, off, "telemetry perturbed the simulation");
+
+        let run = sim.telemetry_run().unwrap();
+        assert_eq!(run.window, 512);
+        assert_eq!(run.cycles, on.cycles);
+        assert_eq!(run.cores.len(), 2);
+        // The chip windows tile the run exactly: full windows plus one
+        // partial tail, covering every cycle once.
+        assert_eq!(run.chip_truncated, 0);
+        let covered: u64 = run.chip.iter().map(|w| w.cycles).sum();
+        assert_eq!(covered, on.cycles);
+        // Deltas sum back to the run totals.
+        let wi: u64 = run.chip.iter().map(|w| w.warp_insts).sum();
+        assert_eq!(wi, on.warp_insts);
+        let l2: u64 = run.chip.iter().map(|w| w.l2.accesses).sum();
+        assert_eq!(l2, on.l2.accesses);
+        let bursts: u64 = run.chip.iter().map(|w| w.bursts).sum();
+        assert_eq!(bursts, on.dram.bursts);
+        // Per-core issue deltas, summed over cores and windows, must equal
+        // the aggregate breakdown (every scheduler slot in some window).
+        let issue_total: u64 = run
+            .cores
+            .iter()
+            .flat_map(|c| c.windows.iter())
+            .map(|w| w.issue.total())
+            .sum();
+        assert_eq!(issue_total, on.issue.total());
+        // Every per-core timeline has the same shape as the chip's.
+        for c in &run.cores {
+            assert_eq!(c.windows.len(), run.chip.len(), "SM {}", c.sm_id);
+        }
+        // A CABA run on a compressible app deploys assist warps, so the
+        // span log is non-empty and spans are well-formed.
+        assert!(run.span_count() > 0);
+        for s in run.cores.iter().flat_map(|c| c.spans.iter()) {
+            if s.first_issue != u64::MAX {
+                assert!(s.first_issue >= s.trigger_at);
+            }
+            if s.end != u64::MAX {
+                assert!(s.end >= s.trigger_at);
+            }
+        }
     }
 
     #[test]

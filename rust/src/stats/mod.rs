@@ -99,11 +99,21 @@ pub struct DramStats {
 
 impl DramStats {
     /// Paper metric: fraction of DRAM cycles the data bus is busy.
+    /// Clamped to 1.0 — short windows can book more bus-busy cycles than
+    /// wall-clock cycles × MCs (queued bursts charged on dispatch). The
+    /// flight recorder counts such windows (`bus_overcommit_windows` on
+    /// [`crate::telemetry::TelemetryRun`]) via the raw value below.
     pub fn bandwidth_utilization(&self, cycles: u64, n_mcs: usize) -> f64 {
+        self.bandwidth_utilization_raw(cycles, n_mcs).min(1.0)
+    }
+
+    /// [`Self::bandwidth_utilization`] without the `.min(1.0)` clamp: may
+    /// exceed 1.0 when the bus is overcommitted within the measured span.
+    pub fn bandwidth_utilization_raw(&self, cycles: u64, n_mcs: usize) -> f64 {
         if cycles == 0 {
             0.0
         } else {
-            (self.bus_busy_cycles / (cycles as f64 * n_mcs as f64)).min(1.0)
+            self.bus_busy_cycles / (cycles as f64 * n_mcs as f64)
         }
     }
 
@@ -308,6 +318,35 @@ mod tests {
         let u = d.bandwidth_utilization(100, 6);
         assert!((u - 1.0).abs() < 1e-12);
         assert_eq!(d.bandwidth_utilization(0, 6), 0.0);
+    }
+
+    #[test]
+    fn bw_utilization_clamp_boundary() {
+        // Exactly at capacity: raw == clamped == 1.0 (not an overcommit).
+        let d = DramStats {
+            bus_busy_cycles: 600.0,
+            ..Default::default()
+        };
+        assert_eq!(d.bandwidth_utilization_raw(100, 6), 1.0);
+        assert_eq!(d.bandwidth_utilization(100, 6), 1.0);
+        // One busy cycle over capacity: raw exceeds 1.0, public metric clamps.
+        let over = DramStats {
+            bus_busy_cycles: 601.0,
+            ..Default::default()
+        };
+        assert!(over.bandwidth_utilization_raw(100, 6) > 1.0);
+        assert_eq!(over.bandwidth_utilization(100, 6), 1.0);
+        // Under capacity: clamp is a no-op.
+        let under = DramStats {
+            bus_busy_cycles: 599.0,
+            ..Default::default()
+        };
+        assert_eq!(
+            under.bandwidth_utilization(100, 6),
+            under.bandwidth_utilization_raw(100, 6)
+        );
+        // Zero-cycle guard holds for both.
+        assert_eq!(over.bandwidth_utilization_raw(0, 6), 0.0);
     }
 
     #[test]

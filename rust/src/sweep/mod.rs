@@ -68,8 +68,9 @@ pub struct SweepJob {
     pub design: Design,
     /// The **full** configuration (including `bw_scale` and any `--set`
     /// overrides) — all of it participates in the cache key. The
-    /// constructors strip `trace_record`: sweep jobs never record, and a
-    /// recording path must not fragment the cache.
+    /// constructors strip `trace_record` and the telemetry knobs: sweep
+    /// jobs never record (traces or timelines), and a recording path must
+    /// not fragment the cache.
     pub cfg: SimConfig,
     /// Workload scale factor (iterations / CTA count shrink).
     pub scale: f64,
@@ -89,6 +90,12 @@ pub type JobKey = (&'static str, &'static str, u64, u64, u64);
 impl SweepJob {
     pub fn new(app: &'static AppSpec, design: Design, mut cfg: SimConfig, scale: f64) -> SweepJob {
         cfg.trace_record = String::new();
+        // Same reasoning as trace_record: the flight recorder is a run
+        // control outside the fingerprint, so a telemetry-enabled config
+        // would alias a cache entry whose stored stats carry no timeline.
+        // Sweep results are aggregates only — never record.
+        cfg.telemetry_window = 0;
+        cfg.telemetry_spans = SimConfig::default().telemetry_spans;
         SweepJob { app, design, cfg, scale, trace: None }
     }
 
@@ -381,6 +388,17 @@ mod tests {
         let b = SweepJob::new(app, Design::base(), cfg2, 0.01);
         assert_eq!(a.key(), b.key());
         assert!(b.cfg.trace_record.is_empty(), "constructor must strip trace_record");
+        // The flight recorder is stripped for the same reason: a sweep job
+        // only ever surfaces aggregate stats, so recording would be pure
+        // waste — and two configs differing only in telemetry knobs must
+        // share one cache entry.
+        let mut cfg3 = tiny_cfg();
+        cfg3.set("telemetry_window", "512").unwrap();
+        cfg3.set("telemetry_spans", "16").unwrap();
+        let c = SweepJob::new(app, Design::base(), cfg3, 0.01);
+        assert_eq!(a.key(), c.key());
+        assert_eq!(c.cfg.telemetry_window, 0, "constructor must strip telemetry_window");
+        assert_eq!(c.cfg.telemetry_spans, SimConfig::default().telemetry_spans);
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Chrome trace-event JSON export of a [`TelemetryRun`] (`caba prof`).
+//!
+//! The output is the Trace Event Format's JSON-object form
+//! (`{"traceEvents": [...]}`), loadable by Perfetto and
+//! `chrome://tracing`:
+//!
+//! - **pid 0** is the chip: `"C"` counter tracks for IPC, DRAM bandwidth
+//!   utilization (raw, unclamped), compression ratio and L2 hit rate —
+//!   one sample at each window start.
+//! - **pid `sm+1`** is one SM: `"X"` complete events for assist-warp
+//!   spans (trigger → retire/kill), plus per-SM counter tracks for AWT
+//!   occupancy and MSHR in-flight entries. Overlapping spans are packed
+//!   into lanes (`tid`) greedily in trigger order — deterministic, so the
+//!   exported JSON is bit-identical across tick modes too.
+//!
+//! Timestamps map 1 core cycle → 1 µs (`ts`/`dur` are µs in the format).
+//! Hand-rolled writer in the `BenchReport::to_json` idiom — no serde.
+
+use super::{Span, SpanOutcome, TelemetryRun};
+use std::fmt::Write as _;
+
+/// Pack overlapping spans into lanes: each span takes the first lane
+/// whose previous occupant ended at or before its trigger. Spans are
+/// already in trigger order (AWT tokens are monotonic per SM).
+fn lane_of(lanes: &mut Vec<u64>, start: u64, end: u64) -> usize {
+    for (i, busy_until) in lanes.iter_mut().enumerate() {
+        if *busy_until <= start {
+            *busy_until = end;
+            return i;
+        }
+    }
+    lanes.push(end);
+    lanes.len() - 1
+}
+
+/// Clamp a span's endpoints to the run: pending spans (or spans whose
+/// first issue never happened) extend to the final cycle.
+fn span_bounds(s: &Span, run_cycles: u64) -> (u64, u64) {
+    let start = s.trigger_at.min(run_cycles);
+    let end = if s.end == u64::MAX { run_cycles } else { s.end };
+    // Zero-length spans still need dur >= 1 to be visible (and to keep
+    // lane packing strict).
+    (start, end.max(start + 1))
+}
+
+fn esc(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Render `run` as Chrome trace-event JSON. `app` / `design` label the
+/// trace in the viewer's metadata; they do not affect the event data.
+pub fn chrome_trace_json(run: &TelemetryRun, app: &str, design: &str) -> String {
+    let mut out = String::new();
+    let w = &mut out;
+    writeln!(w, "{{").unwrap();
+    writeln!(w, "  \"displayTimeUnit\": \"ms\",").unwrap();
+    writeln!(
+        w,
+        "  \"otherData\": {{\"app\": \"{}\", \"design\": \"{}\", \"window\": {}, \"cycles\": {}, \"bus_overcommit_windows\": {}}},",
+        esc(app),
+        esc(design),
+        run.window,
+        run.cycles,
+        run.bus_overcommit_windows
+    )
+    .unwrap();
+    writeln!(w, "  \"traceEvents\": [").unwrap();
+
+    let mut events: Vec<String> = Vec::new();
+
+    // --- pid 0: chip metadata + counter tracks ----------------------
+    events.push(
+        "{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": 0, \"tid\": 0, \"args\": {\"name\": \"chip\"}}"
+            .to_string(),
+    );
+    let mut start = 0u64;
+    for cw in &run.chip {
+        events.push(format!(
+            "{{\"name\": \"IPC\", \"ph\": \"C\", \"ts\": {}, \"pid\": 0, \"args\": {{\"ipc\": {:.6}}}}}",
+            start,
+            cw.ipc()
+        ));
+        events.push(format!(
+            "{{\"name\": \"DRAM bw util\", \"ph\": \"C\", \"ts\": {}, \"pid\": 0, \"args\": {{\"util\": {:.6}}}}}",
+            start,
+            cw.bw_utilization_raw(run.n_mcs)
+        ));
+        events.push(format!(
+            "{{\"name\": \"compression ratio\", \"ph\": \"C\", \"ts\": {}, \"pid\": 0, \"args\": {{\"ratio\": {:.6}}}}}",
+            start,
+            cw.compression_ratio()
+        ));
+        events.push(format!(
+            "{{\"name\": \"L2 hit rate\", \"ph\": \"C\", \"ts\": {}, \"pid\": 0, \"args\": {{\"rate\": {:.6}}}}}",
+            start,
+            cw.l2.hit_rate()
+        ));
+        start += cw.cycles;
+    }
+
+    // --- pid sm+1: spans + per-SM counters --------------------------
+    for core in &run.cores {
+        let pid = core.sm_id + 1;
+        events.push(format!(
+            "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {}, \"tid\": 0, \"args\": {{\"name\": \"SM {}\"}}}}",
+            pid, core.sm_id
+        ));
+        let mut lanes: Vec<u64> = Vec::new();
+        for s in &core.spans {
+            let (start, end) = span_bounds(s, run.cycles);
+            let tid = lane_of(&mut lanes, start, end);
+            let outcome = match s.outcome {
+                SpanOutcome::Pending => "pending",
+                SpanOutcome::Retired => "retired",
+                SpanOutcome::Killed => "killed",
+            };
+            let first_issue = if s.first_issue == u64::MAX {
+                "null".to_string()
+            } else {
+                s.first_issue.to_string()
+            };
+            events.push(format!(
+                "{{\"name\": \"{} #{}\", \"cat\": \"{}\", \"ph\": \"X\", \"ts\": {}, \"dur\": {}, \"pid\": {}, \"tid\": {}, \"args\": {{\"parent_warp\": {}, \"first_issue\": {}, \"outcome\": \"{}\"}}}}",
+                s.kind.name(),
+                s.token,
+                s.kind.name(),
+                start,
+                end - start,
+                pid,
+                tid,
+                s.parent_warp,
+                first_issue,
+                outcome
+            ));
+        }
+        let mut start = 0u64;
+        for (i, cw) in core.windows.iter().enumerate() {
+            events.push(format!(
+                "{{\"name\": \"AWT live\", \"ph\": \"C\", \"ts\": {}, \"pid\": {}, \"args\": {{\"rows\": {}}}}}",
+                start, pid, cw.awt_live
+            ));
+            events.push(format!(
+                "{{\"name\": \"MSHR inflight\", \"ph\": \"C\", \"ts\": {}, \"pid\": {}, \"args\": {{\"entries\": {}}}}}",
+                start, pid, cw.mshr_inflight
+            ));
+            // Core windows share the chip cadence; reuse its cycle counts
+            // (the final chip window may be the partial tail).
+            start += run.chip.get(i).map_or(run.window, |c| c.cycles);
+        }
+    }
+
+    for (i, e) in events.iter().enumerate() {
+        let comma = if i + 1 < events.len() { "," } else { "" };
+        writeln!(w, "    {}{}", e, comma).unwrap();
+    }
+    writeln!(w, "  ]").unwrap();
+    writeln!(w, "}}").unwrap();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ChipWindow, CoreTimeline, CoreWindow, Span, SpanKind, SpanOutcome};
+    use super::*;
+
+    fn tiny_run() -> TelemetryRun {
+        TelemetryRun {
+            window: 10,
+            cycles: 25,
+            n_mcs: 2,
+            chip: vec![
+                ChipWindow {
+                    cycles: 10,
+                    warp_insts: 12,
+                    bursts: 4,
+                    bursts_uncompressed: 8,
+                    bus_busy_cycles: 21.0,
+                    ..Default::default()
+                },
+                ChipWindow {
+                    cycles: 10,
+                    ..Default::default()
+                },
+                ChipWindow {
+                    cycles: 5,
+                    ..Default::default()
+                },
+            ],
+            chip_truncated: 0,
+            bus_overcommit_windows: 1,
+            cores: vec![CoreTimeline {
+                sm_id: 0,
+                windows: vec![CoreWindow::default(); 3],
+                truncated_windows: 0,
+                spans: vec![
+                    Span {
+                        token: 1,
+                        kind: SpanKind::Decompress,
+                        parent_warp: 2,
+                        trigger_at: 3,
+                        first_issue: 4,
+                        end: 9,
+                        outcome: SpanOutcome::Retired,
+                    },
+                    Span {
+                        token: 2,
+                        kind: SpanKind::Prefetch,
+                        parent_warp: 0,
+                        trigger_at: 5,
+                        first_issue: u64::MAX,
+                        end: u64::MAX,
+                        outcome: SpanOutcome::Pending,
+                    },
+                ],
+                spans_dropped: 0,
+            }],
+        }
+    }
+
+    #[test]
+    fn trace_json_is_balanced_and_complete() {
+        let json = chrome_trace_json(&tiny_run(), "PVC", "CABA-BDI");
+        let braces =
+            json.chars().filter(|&c| c == '{').count() - json.chars().filter(|&c| c == '}').count();
+        assert_eq!(braces, 0);
+        let brackets =
+            json.chars().filter(|&c| c == '[').count() - json.chars().filter(|&c| c == ']').count();
+        assert_eq!(brackets, 0);
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"ph\": \"M\""));
+        assert!(json.contains("\"name\": \"SM 0\""));
+        assert!(json.contains("decompress #1"));
+        // Overlapping spans land on different lanes.
+        assert!(json.contains("\"tid\": 0"));
+        assert!(json.contains("\"tid\": 1"));
+        // Pending span clamps to run end: dur = 25 - 5.
+        assert!(json.contains("\"dur\": 20"));
+        // Trailing element has no comma before the closing bracket.
+        assert!(!json.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn lane_packing_is_greedy_and_deterministic() {
+        let mut lanes = Vec::new();
+        assert_eq!(lane_of(&mut lanes, 0, 10), 0);
+        assert_eq!(lane_of(&mut lanes, 5, 8), 1); // overlaps lane 0
+        assert_eq!(lane_of(&mut lanes, 8, 12), 1); // lane 1 free at 8
+        assert_eq!(lane_of(&mut lanes, 9, 11), 2); // 0 and 1 both busy
+        assert_eq!(lane_of(&mut lanes, 12, 13), 0); // lane 0 free again
+    }
+
+    #[test]
+    fn span_bounds_clamp_pending_and_zero_length() {
+        let mut s = Span {
+            token: 1,
+            kind: SpanKind::Compress,
+            parent_warp: 0,
+            trigger_at: 7,
+            first_issue: u64::MAX,
+            end: u64::MAX,
+            outcome: SpanOutcome::Pending,
+        };
+        assert_eq!(span_bounds(&s, 100), (7, 100));
+        s.end = 7; // killed the cycle it was triggered
+        assert_eq!(span_bounds(&s, 100), (7, 8));
+    }
+}

@@ -1,0 +1,790 @@
+//! Flight recorder: deterministic, time-resolved telemetry.
+//!
+//! The simulator's end-of-run [`crate::stats::SimStats`] aggregates hide
+//! every *phase* of execution — a compression burst, a throttle event, a
+//! memoization warm-up are all invisible. This module samples the existing
+//! counters into fixed-cadence windows (`telemetry_window` cycles each)
+//! plus a bounded per-assist-warp span log, with two hard contracts:
+//!
+//! 1. **Mode invariance.** Strict ticking, the event-driven serial loop and
+//!    the sharded loop must produce **bit-identical** timelines. Windows
+//!    are therefore charged from *delta snapshots taken at window
+//!    boundaries*: counter state at boundary `b` is defined as "state at
+//!    the start of cycle `b`", i.e. after the drain of cycle `b-1` — a
+//!    point every tick mode passes through with identical state. Event
+//!    fast-forwards ([`crate::core::Core::settle_to`], epoch jumps in
+//!    `sim/mod.rs`) split their bulk charges across any boundaries inside
+//!    the skipped range; counters that are frozen during a genuinely
+//!    skippable window (L1, CABA, AWT occupancy) snapshot to the same
+//!    values either way. The one subtle sample is MSHR occupancy: raw
+//!    `MshrTable::len()` depends on lazy-sweep timing, which *does* differ
+//!    across modes, so the recorded metric is the count of entries still
+//!    awaiting their fill at the boundary
+//!    ([`crate::core::tables::MshrTable::count_fills_at_or_after`]),
+//!    which is a pure function of table contents that sweeps cannot
+//!    change. `tests/strict_tick_differential.rs` pins all of this.
+//!
+//! 2. **Observation only.** Recording must not perturb the simulation:
+//!    `SimStats` is bit-identical with telemetry on vs off, and the
+//!    `telemetry_window` / `telemetry_spans` knobs stay *outside*
+//!    [`crate::SimConfig::fingerprint`] (they are run controls, like
+//!    `trace_record`'s output path).
+//!
+//! The recorder is zero-allocation on the hot path: all window storage is
+//! reserved up front from `max_cycles / window` (capped), and closing a
+//! window is a handful of u64 subtractions. Exceeding the cap drops the
+//! newest windows and counts them (`truncated_windows`) rather than
+//! reallocating.
+//!
+//! Rendering lives elsewhere: ASCII sparklines and the per-SM stall
+//! heatmap in [`crate::report::timeline`], Chrome trace-event JSON (open
+//! in Perfetto / `chrome://tracing`) in [`export`].
+
+pub mod export;
+
+use crate::stats::{CabaStats, CacheStats, IssueBreakdown};
+
+/// Sentinel span index stored on AWT entries whose trigger was not
+/// recorded (telemetry off, or the span log was full).
+pub const SPAN_NONE: u32 = u32::MAX;
+
+/// Hard cap on preallocated windows per timeline. At the default
+/// `telemetry_window=1024` this covers runs of 8M+ cycles; beyond it the
+/// recorder keeps the *earliest* windows and counts the dropped tail.
+pub const WINDOW_CAP: usize = 8192;
+
+fn window_cap(window: u64, max_cycles: u64) -> usize {
+    if window == 0 {
+        return 0;
+    }
+    // +1: a final partial window; ceil-div for the full ones.
+    let want = max_cycles / window + 2;
+    (want as usize).min(WINDOW_CAP)
+}
+
+// ---------------------------------------------------------------- windows
+
+/// One closed per-SM window: counter deltas over the window plus two
+/// occupancy samples taken at the closing boundary.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CoreWindow {
+    /// Issue-slot deltas (sums to `window × schedulers_per_sm` for full
+    /// windows — bulk charges are split exactly at boundaries).
+    pub issue: IssueBreakdown,
+    /// CABA activity deltas (assist issues, memo probes, kills, ...).
+    pub caba: CabaStats,
+    /// L1 counter deltas.
+    pub l1: CacheStats,
+    /// MSHR entries still awaiting their fill at the boundary (the
+    /// mode-invariant occupancy metric — see the module docs).
+    pub mshr_inflight: u32,
+    /// Live AWT rows (high + low priority) at the boundary.
+    pub awt_live: u32,
+}
+
+/// One closed chip-level window: deltas of the shared-side counters
+/// (identical across tick modes at the end of every cycle).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChipWindow {
+    /// Cycles covered (== the configured window except for the final
+    /// partial one).
+    pub cycles: u64,
+    /// Warp-instruction delta (chip IPC = `warp_insts / cycles`).
+    pub warp_insts: u64,
+    /// DRAM 32B bursts actually transferred in this window.
+    pub bursts: u64,
+    /// Bursts an uncompressed system would have moved (ratio = un/bursts).
+    pub bursts_uncompressed: u64,
+    /// Compression-metadata DRAM accesses in this window.
+    pub md_accesses: u64,
+    /// Bus-busy delta summed over MCs (f64, but a difference of two
+    /// bit-identical accumulators — itself bit-identical across modes).
+    pub bus_busy_cycles: f64,
+    /// L2 counter deltas.
+    pub l2: CacheStats,
+    /// Interconnect flits moved (fwd + back).
+    pub flits: u64,
+}
+
+impl ChipWindow {
+    /// Chip IPC over this window.
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.warp_insts as f64 / self.cycles as f64
+        }
+    }
+
+    /// DRAM bandwidth utilization over this window, clamped to 1.0.
+    pub fn bw_utilization(&self, n_mcs: usize) -> f64 {
+        self.bw_utilization_raw(n_mcs).min(1.0)
+    }
+
+    /// Unclamped bandwidth utilization (may exceed 1.0 — see
+    /// `bus_overcommit_windows` on [`TelemetryRun`]).
+    pub fn bw_utilization_raw(&self, n_mcs: usize) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.bus_busy_cycles / (self.cycles as f64 * n_mcs as f64)
+        }
+    }
+
+    /// Compression ratio of the window's DRAM traffic (1.0 when idle).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.bursts == 0 {
+            1.0
+        } else {
+            self.bursts_uncompressed as f64 / self.bursts as f64
+        }
+    }
+}
+
+/// The chip-side counter values the [`ChipRecorder`] snapshots at each
+/// boundary. Assembled by the simulator's drain thread from the live
+/// `SimStats` (warp_insts, L2) and `MemSystem` (DRAM, MD, interconnect).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChipSnap {
+    pub warp_insts: u64,
+    pub bursts: u64,
+    pub bursts_uncompressed: u64,
+    pub md_accesses: u64,
+    pub bus_busy_cycles: f64,
+    pub l2: CacheStats,
+    pub flits: u64,
+}
+
+fn cache_delta(now: &CacheStats, prev: &CacheStats) -> CacheStats {
+    CacheStats {
+        accesses: now.accesses - prev.accesses,
+        hits: now.hits - prev.hits,
+        misses: now.misses - prev.misses,
+        evictions: now.evictions - prev.evictions,
+        writebacks: now.writebacks - prev.writebacks,
+    }
+}
+
+fn issue_delta(now: &IssueBreakdown, prev: &IssueBreakdown) -> IssueBreakdown {
+    IssueBreakdown {
+        active: now.active - prev.active,
+        compute_stall: now.compute_stall - prev.compute_stall,
+        memory_stall: now.memory_stall - prev.memory_stall,
+        data_stall: now.data_stall - prev.data_stall,
+        idle: now.idle - prev.idle,
+    }
+}
+
+fn caba_delta(now: &CabaStats, prev: &CabaStats) -> CabaStats {
+    CabaStats {
+        decompress_warps: now.decompress_warps - prev.decompress_warps,
+        compress_warps: now.compress_warps - prev.compress_warps,
+        assist_insts_issued: now.assist_insts_issued - prev.assist_insts_issued,
+        assist_insts_idle_slots: now.assist_insts_idle_slots - prev.assist_insts_idle_slots,
+        compress_skipped: now.compress_skipped - prev.compress_skipped,
+        throttled_deploys: now.throttled_deploys - prev.throttled_deploys,
+        killed: now.killed - prev.killed,
+        prefetches_issued: now.prefetches_issued - prev.prefetches_issued,
+        memo_lookups: now.memo_lookups - prev.memo_lookups,
+        memo_hits: now.memo_hits - prev.memo_hits,
+        memo_alias_hits: now.memo_alias_hits - prev.memo_alias_hits,
+        memo_installs: now.memo_installs - prev.memo_installs,
+        memo_evictions: now.memo_evictions - prev.memo_evictions,
+        memo_lookups_skipped: now.memo_lookups_skipped - prev.memo_lookups_skipped,
+    }
+}
+
+// ---------------------------------------------------------------- per-core
+
+/// Per-SM window recorder, owned by each [`crate::core::Core`]. Windows
+/// close lazily inside `Core::settle_to` (the one place every tick mode
+/// funnels through before a core observes a new `now`), so bulk charges
+/// split exactly at boundaries.
+#[derive(Clone, Debug)]
+pub struct CoreRecorder {
+    window: u64,
+    next_boundary: u64,
+    cap: usize,
+    windows: Vec<CoreWindow>,
+    truncated: u64,
+    prev_issue: IssueBreakdown,
+    prev_caba: CabaStats,
+    prev_l1: CacheStats,
+}
+
+impl CoreRecorder {
+    /// `window == 0` disables recording (all hooks become a branch).
+    pub fn new(window: u64, max_cycles: u64) -> CoreRecorder {
+        let cap = window_cap(window, max_cycles);
+        CoreRecorder {
+            window,
+            next_boundary: window,
+            cap,
+            windows: Vec::with_capacity(cap),
+            truncated: 0,
+            prev_issue: IssueBreakdown::default(),
+            prev_caba: CabaStats::default(),
+            prev_l1: CacheStats::default(),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.window > 0
+    }
+
+    /// First boundary not yet closed. Only meaningful when enabled.
+    #[inline]
+    pub fn next_boundary(&self) -> u64 {
+        self.next_boundary
+    }
+
+    /// Close the window ending at [`Self::next_boundary`] with the core's
+    /// current counter state (callers guarantee that state *is* the
+    /// boundary state — see `Core::settle_to`).
+    pub fn close_window(
+        &mut self,
+        issue: &IssueBreakdown,
+        caba: &CabaStats,
+        l1: &CacheStats,
+        mshr_inflight: u32,
+        awt_live: u32,
+    ) {
+        self.push(issue, caba, l1, mshr_inflight, awt_live);
+        self.next_boundary += self.window;
+    }
+
+    /// Close the final partial window `[next_boundary - window, now)` if
+    /// non-empty. `now` is the run's final cycle count — identical across
+    /// modes, so the tail is too.
+    pub fn finish(
+        &mut self,
+        now: u64,
+        issue: &IssueBreakdown,
+        caba: &CabaStats,
+        l1: &CacheStats,
+        mshr_inflight: u32,
+        awt_live: u32,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let start = self.next_boundary - self.window;
+        if now > start {
+            self.push(issue, caba, l1, mshr_inflight, awt_live);
+            // Leave next_boundary so a repeated finish() is the caller's
+            // bug, not silent double-counting.
+            self.next_boundary += self.window;
+        }
+    }
+
+    fn push(
+        &mut self,
+        issue: &IssueBreakdown,
+        caba: &CabaStats,
+        l1: &CacheStats,
+        mshr_inflight: u32,
+        awt_live: u32,
+    ) {
+        let w = CoreWindow {
+            issue: issue_delta(issue, &self.prev_issue),
+            caba: caba_delta(caba, &self.prev_caba),
+            l1: cache_delta(l1, &self.prev_l1),
+            mshr_inflight,
+            awt_live,
+        };
+        self.prev_issue = *issue;
+        self.prev_caba = *caba;
+        self.prev_l1 = *l1;
+        if self.windows.len() < self.cap {
+            self.windows.push(w);
+        } else {
+            self.truncated += 1;
+        }
+    }
+
+    pub fn windows(&self) -> &[CoreWindow] {
+        &self.windows
+    }
+
+    pub fn truncated(&self) -> u64 {
+        self.truncated
+    }
+}
+
+// ---------------------------------------------------------------- spans
+
+/// What an assist warp was deployed to do (derived from the AWC trigger
+/// call site, more precise than `Payload` alone).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    Decompress,
+    Compress,
+    Prefetch,
+    MemoLookup,
+    MemoInstall,
+}
+
+impl SpanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Decompress => "decompress",
+            SpanKind::Compress => "compress",
+            SpanKind::Prefetch => "prefetch",
+            SpanKind::MemoLookup => "memo_lookup",
+            SpanKind::MemoInstall => "memo_install",
+        }
+    }
+}
+
+/// How a span ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Still live when the run ended (budget-capped runs).
+    Pending,
+    /// Retired normally; `end` is the retirement-effect cycle.
+    Retired,
+    /// Killed (e.g. the line arrived uncompressed).
+    Killed,
+}
+
+/// One assist warp's lifetime: trigger → (first issue) → retire/kill.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    /// The AWT token (monotonic per SM — a stable, mode-invariant ID).
+    pub token: u64,
+    pub kind: SpanKind,
+    /// Parent warp slot that triggered the deployment.
+    pub parent_warp: usize,
+    /// Cycle the trigger landed in the AWT (`active_from` — deploy
+    /// latency already applied for high-priority triggers).
+    pub trigger_at: u64,
+    /// First cycle an instruction of this assist warp issued
+    /// (`u64::MAX` until it happens).
+    pub first_issue: u64,
+    /// Retirement-effect or kill cycle (`u64::MAX` while pending).
+    pub end: u64,
+    pub outcome: SpanOutcome,
+}
+
+/// Bounded per-SM span log, owned by the AWC. Triggers append (O(1) — the
+/// AWT entry remembers its span index), issue/retire/kill update in place.
+#[derive(Clone, Debug, Default)]
+pub struct SpanLog {
+    cap: usize,
+    spans: Vec<Span>,
+    dropped: u64,
+}
+
+impl SpanLog {
+    /// `cap == 0` disables the log ([`Self::open`] returns [`SPAN_NONE`]).
+    pub fn new(cap: usize) -> SpanLog {
+        SpanLog {
+            cap,
+            spans: Vec::with_capacity(cap),
+            dropped: 0,
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    /// Record a trigger; returns the span index to stash on the AWT entry.
+    pub fn open(&mut self, token: u64, kind: SpanKind, parent_warp: usize, trigger_at: u64) -> u32 {
+        if !self.enabled() {
+            return SPAN_NONE;
+        }
+        if self.spans.len() >= self.cap {
+            self.dropped += 1;
+            return SPAN_NONE;
+        }
+        self.spans.push(Span {
+            token,
+            kind,
+            parent_warp,
+            trigger_at,
+            first_issue: u64::MAX,
+            end: u64::MAX,
+            outcome: SpanOutcome::Pending,
+        });
+        (self.spans.len() - 1) as u32
+    }
+
+    /// Record the first issued instruction of a span (later calls no-op).
+    #[inline]
+    pub fn note_issue(&mut self, idx: u32, now: u64) {
+        if idx == SPAN_NONE {
+            return;
+        }
+        let s = &mut self.spans[idx as usize];
+        if s.first_issue == u64::MAX {
+            s.first_issue = now;
+        }
+    }
+
+    /// Close a span. For retirements `end` is the retirement-effect cycle
+    /// (`now + retire_latency`), known at enqueue time.
+    pub fn close(&mut self, idx: u32, end: u64, outcome: SpanOutcome) {
+        if idx == SPAN_NONE {
+            return;
+        }
+        let s = &mut self.spans[idx as usize];
+        s.end = end;
+        s.outcome = outcome;
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+// ---------------------------------------------------------------- chip
+
+/// Chip-level window recorder, owned by the simulator and driven only on
+/// the drain thread (the single writer of shared state): `advance_to`
+/// after every `now` change, `finish` once after the loop exits.
+#[derive(Clone, Debug)]
+pub struct ChipRecorder {
+    window: u64,
+    next_boundary: u64,
+    cap: usize,
+    n_mcs: usize,
+    windows: Vec<ChipWindow>,
+    truncated: u64,
+    overcommit: u64,
+    prev: ChipSnap,
+}
+
+impl ChipRecorder {
+    pub fn new(window: u64, max_cycles: u64, n_mcs: usize) -> ChipRecorder {
+        let cap = window_cap(window, max_cycles);
+        ChipRecorder {
+            window,
+            next_boundary: window,
+            cap,
+            n_mcs,
+            windows: Vec::with_capacity(cap),
+            truncated: 0,
+            overcommit: 0,
+            prev: ChipSnap::default(),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.window > 0
+    }
+
+    /// First boundary not yet closed — lets the run loop skip snapshot
+    /// assembly entirely on the (vast majority of) cycles between
+    /// boundaries.
+    #[inline]
+    pub fn next_boundary(&self) -> u64 {
+        self.next_boundary
+    }
+
+    /// Close every boundary `<= now` with `snap`. Correct because the
+    /// caller invokes it whenever `now` advances: a one-cycle step closes
+    /// at most the boundary `== now` with post-drain state, and a
+    /// fast-forward jump closes the skipped boundaries with the state at
+    /// the jump — which *is* the boundary state, since no core executes
+    /// (and so no drain runs) inside a skipped range.
+    pub fn advance_to(&mut self, now: u64, snap: &ChipSnap) {
+        if !self.enabled() {
+            return;
+        }
+        while self.next_boundary <= now {
+            let cycles = self.window;
+            self.push(cycles, snap);
+            self.next_boundary += self.window;
+        }
+    }
+
+    /// Close the final partial window at run end.
+    pub fn finish(&mut self, now: u64, snap: &ChipSnap) {
+        if !self.enabled() {
+            return;
+        }
+        self.advance_to(now, snap);
+        let start = self.next_boundary - self.window;
+        if now > start {
+            self.push(now - start, snap);
+            self.next_boundary += self.window;
+        }
+    }
+
+    fn push(&mut self, cycles: u64, snap: &ChipSnap) {
+        let w = ChipWindow {
+            cycles,
+            warp_insts: snap.warp_insts - self.prev.warp_insts,
+            bursts: snap.bursts - self.prev.bursts,
+            bursts_uncompressed: snap.bursts_uncompressed - self.prev.bursts_uncompressed,
+            md_accesses: snap.md_accesses - self.prev.md_accesses,
+            bus_busy_cycles: snap.bus_busy_cycles - self.prev.bus_busy_cycles,
+            l2: cache_delta(&snap.l2, &self.prev.l2),
+            flits: snap.flits - self.prev.flits,
+        };
+        self.prev = *snap;
+        // Overcommit: strictly more bus-busy than cycles × MCs — the spans
+        // the public clamped metric hides (satellite of ISSUE 7).
+        if w.bus_busy_cycles > cycles as f64 * self.n_mcs as f64 {
+            self.overcommit += 1;
+        }
+        if self.windows.len() < self.cap {
+            self.windows.push(w);
+        } else {
+            self.truncated += 1;
+        }
+    }
+
+    pub fn windows(&self) -> &[ChipWindow] {
+        &self.windows
+    }
+
+    pub fn truncated(&self) -> u64 {
+        self.truncated
+    }
+
+    pub fn overcommit(&self) -> u64 {
+        self.overcommit
+    }
+
+    pub fn n_mcs(&self) -> usize {
+        self.n_mcs
+    }
+
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+}
+
+// ---------------------------------------------------------------- run
+
+/// One SM's complete timeline: closed windows plus its span log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreTimeline {
+    pub sm_id: usize,
+    pub windows: Vec<CoreWindow>,
+    pub truncated_windows: u64,
+    pub spans: Vec<Span>,
+    pub spans_dropped: u64,
+}
+
+/// Everything the flight recorder captured in one run — the value the
+/// three-way tick differential compares with `==` (hence `PartialEq`
+/// throughout: bit-identical timelines, not approximately-equal ones).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryRun {
+    /// Window cadence in cycles.
+    pub window: u64,
+    /// Total run cycles (the final window may be partial).
+    pub cycles: u64,
+    /// Memory-controller count (denominator of bandwidth utilization).
+    pub n_mcs: usize,
+    pub chip: Vec<ChipWindow>,
+    pub chip_truncated: u64,
+    /// Windows whose *raw* bandwidth utilization exceeded 1.0 (clamped in
+    /// the public per-run metric — see `DramStats::bandwidth_utilization`).
+    pub bus_overcommit_windows: u64,
+    pub cores: Vec<CoreTimeline>,
+}
+
+impl TelemetryRun {
+    /// Spans across all SMs (sum of per-core logs).
+    pub fn span_count(&self) -> usize {
+        self.cores.iter().map(|c| c.spans.len()).sum()
+    }
+
+    /// Total windows recorded (chip timeline length).
+    pub fn window_count(&self) -> usize {
+        self.chip.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(warp_insts: u64, busy: f64) -> ChipSnap {
+        ChipSnap {
+            warp_insts,
+            bus_busy_cycles: busy,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn chip_windows_are_deltas_and_split_on_jumps() {
+        let mut r = ChipRecorder::new(10, 100, 2);
+        assert!(r.enabled());
+        // Cycle-by-cycle advance up to 9: nothing closes.
+        for now in 1..10 {
+            r.advance_to(now, &snap(now * 3, 0.0));
+        }
+        assert!(r.windows().is_empty());
+        // Boundary 10 closes with the post-drain(9) state.
+        r.advance_to(10, &snap(30, 5.0));
+        assert_eq!(r.windows().len(), 1);
+        assert_eq!(r.windows()[0].warp_insts, 30);
+        assert_eq!(r.windows()[0].cycles, 10);
+        // Fast-forward 10 → 35 crosses boundaries 20 and 30: both close
+        // with the same (frozen) snapshot; the first takes the delta.
+        r.advance_to(35, &snap(40, 9.0));
+        assert_eq!(r.windows().len(), 3);
+        assert_eq!(r.windows()[1].warp_insts, 10);
+        assert_eq!(r.windows()[2].warp_insts, 0);
+        assert_eq!(r.windows()[1].bus_busy_cycles, 4.0);
+        assert_eq!(r.windows()[2].bus_busy_cycles, 0.0);
+        // Partial tail [30, 37).
+        r.finish(37, &snap(41, 9.0));
+        assert_eq!(r.windows().len(), 4);
+        assert_eq!(r.windows()[3].cycles, 7);
+        assert_eq!(r.windows()[3].warp_insts, 1);
+    }
+
+    #[test]
+    fn chip_finish_on_exact_boundary_has_no_tail() {
+        let mut r = ChipRecorder::new(10, 100, 1);
+        r.finish(20, &snap(7, 0.0));
+        assert_eq!(r.windows().len(), 2);
+        assert_eq!(r.windows()[0].warp_insts, 7);
+        assert_eq!(r.windows()[1].warp_insts, 0);
+        assert_eq!(r.windows()[1].cycles, 10);
+    }
+
+    #[test]
+    fn overcommit_counts_strictly_above_capacity() {
+        let mut r = ChipRecorder::new(10, 100, 2);
+        // Window capacity = 10 cycles × 2 MCs = 20 busy cycles.
+        r.advance_to(10, &snap(0, 20.0)); // exactly at capacity: not over
+        assert_eq!(r.overcommit(), 0);
+        r.advance_to(20, &snap(0, 40.5)); // 20.5 > 20: over
+        assert_eq!(r.overcommit(), 1);
+        assert!(r.windows()[1].bw_utilization_raw(2) > 1.0);
+        assert_eq!(r.windows()[1].bw_utilization(2), 1.0);
+    }
+
+    #[test]
+    fn window_cap_truncates_and_counts() {
+        // window=1 over max_cycles larger than the cap.
+        let mut r = ChipRecorder::new(1, u64::MAX - 2, 1);
+        assert_eq!(r.cap, WINDOW_CAP);
+        for now in 1..=(WINDOW_CAP as u64 + 5) {
+            r.advance_to(now, &snap(now, 0.0));
+        }
+        assert_eq!(r.windows().len(), WINDOW_CAP);
+        assert_eq!(r.truncated(), 5);
+    }
+
+    #[test]
+    fn disabled_recorders_do_nothing() {
+        let mut c = ChipRecorder::new(0, 1000, 2);
+        assert!(!c.enabled());
+        c.advance_to(500, &snap(1, 1.0));
+        c.finish(1000, &snap(2, 2.0));
+        assert!(c.windows().is_empty());
+
+        let r = CoreRecorder::new(0, 1000);
+        assert!(!r.enabled());
+
+        let mut log = SpanLog::new(0);
+        assert_eq!(log.open(1, SpanKind::Decompress, 0, 5), SPAN_NONE);
+        log.note_issue(SPAN_NONE, 6); // must be a no-op, not a panic
+        log.close(SPAN_NONE, 9, SpanOutcome::Retired);
+        assert!(log.spans().is_empty());
+        assert_eq!(log.dropped(), 0);
+    }
+
+    #[test]
+    fn core_recorder_snapshots_deltas() {
+        let mut r = CoreRecorder::new(5, 50);
+        let mut issue = IssueBreakdown::default();
+        let caba = CabaStats::default();
+        let mut l1 = CacheStats::default();
+        issue.active = 4;
+        l1.accesses = 2;
+        l1.hits = 1;
+        r.close_window(&issue, &caba, &l1, 3, 1);
+        issue.active = 9;
+        issue.idle = 6;
+        r.close_window(&issue, &caba, &l1, 0, 0);
+        assert_eq!(r.windows().len(), 2);
+        assert_eq!(r.windows()[0].issue.active, 4);
+        assert_eq!(r.windows()[0].l1.accesses, 2);
+        assert_eq!(r.windows()[0].mshr_inflight, 3);
+        assert_eq!(r.windows()[0].awt_live, 1);
+        assert_eq!(r.windows()[1].issue.active, 5);
+        assert_eq!(r.windows()[1].issue.idle, 6);
+        assert_eq!(r.windows()[1].l1.accesses, 0);
+        assert_eq!(r.next_boundary(), 15);
+        // Partial tail [10, 12).
+        issue.active = 10;
+        r.finish(12, &issue, &caba, &l1, 7, 2);
+        assert_eq!(r.windows().len(), 3);
+        assert_eq!(r.windows()[2].issue.active, 1);
+        assert_eq!(r.windows()[2].mshr_inflight, 7);
+    }
+
+    #[test]
+    fn span_log_lifecycle_and_bounding() {
+        let mut log = SpanLog::new(2);
+        let a = log.open(1, SpanKind::Decompress, 3, 100);
+        let b = log.open(2, SpanKind::MemoLookup, 5, 101);
+        assert_eq!((a, b), (0, 1));
+        // Third span drops.
+        assert_eq!(log.open(3, SpanKind::Compress, 0, 102), SPAN_NONE);
+        assert_eq!(log.dropped(), 1);
+        log.note_issue(a, 104);
+        log.note_issue(a, 105); // only the first issue sticks
+        log.close(a, 110, SpanOutcome::Retired);
+        log.close(b, 103, SpanOutcome::Killed);
+        let s = log.spans();
+        assert_eq!(s[0].first_issue, 104);
+        assert_eq!(s[0].end, 110);
+        assert_eq!(s[0].outcome, SpanOutcome::Retired);
+        assert_eq!(s[1].first_issue, u64::MAX);
+        assert_eq!(s[1].outcome, SpanOutcome::Killed);
+        assert_eq!(s[1].parent_warp, 5);
+        assert_eq!(s[1].kind, SpanKind::MemoLookup);
+    }
+
+    #[test]
+    fn boundary_split_partitions_commute() {
+        // Strict vs event-driven advance over the same execution: state
+        // changes only at "executed" cycles, and a fast-forward may jump
+        // any range containing none of them. Both walks must close every
+        // window identically — the chip-side analogue of the settle-window
+        // commutation property.
+        let executed = [0u64, 1, 2, 3, 14, 15, 29, 39];
+        // State at the start of cycle t: contributions of executed cycles
+        // strictly before t (post-drain(t-1), in simulator terms).
+        let state = |t: u64| {
+            let n = executed.iter().filter(|&&e| e < t).count() as u64;
+            snap(n * n * 3, n as f64 * 2.5)
+        };
+        let run = |steps: &[u64]| {
+            let mut r = ChipRecorder::new(7, 64, 1);
+            for &to in steps {
+                r.advance_to(to, &state(to));
+            }
+            r.finish(40, &state(40));
+            (r.windows().to_vec(), r.overcommit())
+        };
+        // Strict: advance every cycle.
+        let all: Vec<u64> = (1..=40).collect();
+        let a = run(&all);
+        // Event-driven: advance after each executed cycle (e+1), plus one
+        // jump landing on each wake cycle — exactly the two advance_to
+        // call sites in Simulator::run_serial / run_sharded.
+        let b = run(&[1, 2, 3, 4, 14, 15, 16, 29, 30, 39, 40]);
+        assert_eq!(a, b);
+        assert_eq!(a.0.len(), 6); // 5 full windows + the [35, 40) tail
+        assert_eq!(a.0[5].cycles, 5);
+    }
+}

@@ -24,6 +24,12 @@
 //! 4. under a mid-stall cycle-budget cut (settlement on the `max_cycles`
 //!    exit path charges exactly the strict count in every mode).
 //!
+//! 5. with the flight recorder on: the full `TelemetryRun` — every chip
+//!    and per-SM window delta, occupancy sample and assist-warp span —
+//!    is bit-identical across all three modes (at a window cadence chosen
+//!    to land boundaries mid-fast-forward), and turning the recorder on
+//!    leaves `SimStats` and the config fingerprint untouched.
+//!
 //! The issue-slot conservation law `issue.total() == cycles ×
 //! schedulers_per_sm × n_sms` is asserted throughout (and again as a
 //! `debug_assert` inside `Simulator::collect`).
@@ -217,6 +223,94 @@ fn strict_equals_event_under_cycle_budget_cut() {
         }
     }
     assert!(saw_cut, "no budget actually cut the run mid-flight — shrink the budgets");
+}
+
+/// Run one point with the flight recorder on and hand back both the
+/// stats and the full recorded timeline.
+fn run_with_telemetry(
+    app_name: &str,
+    design: Design,
+    base: &SimConfig,
+    strict: bool,
+    threads: usize,
+) -> (SimStats, caba::telemetry::TelemetryRun) {
+    let app = apps::find(app_name).expect("differential app exists");
+    let mut c = base.clone();
+    c.strict_tick = strict;
+    c.sim_threads = threads;
+    let mut sim = Simulator::new(c, design, app, 0.02);
+    let stats = sim.run();
+    let run = sim.telemetry_run().expect("telemetry enabled in base config");
+    (stats, run)
+}
+
+#[test]
+fn telemetry_timelines_bit_identical_across_modes() {
+    // window = 777: odd and coprime to every internal cadence, so window
+    // boundaries constantly land inside event-mode fast-forwards — the
+    // bulk-charge split's hardest case. One memory-bound compression
+    // point (long skippable stalls, decompress/compress spans) and one
+    // compute-bound memoization point (dense lookup/install spans).
+    let pairs: &[(&str, Design)] =
+        &[("PVC", Design::caba(Algo::Bdi)), ("FRAG", Design::caba_memo())];
+    for &(app, design) in pairs {
+        let mut base = cfg(false);
+        base.telemetry_window = 777;
+        let (strict_stats, strict_tl) = run_with_telemetry(app, design, &base, true, 1);
+        let label = |mode: &str| format!("{app}/{} [{mode} vs strict]", design.name);
+        // Non-vacuity: the run must produce a real timeline and spans.
+        assert!(
+            strict_tl.window_count() > 10,
+            "{app}/{}: too few windows to be a meaningful differential",
+            design.name
+        );
+        assert!(
+            strict_tl.span_count() > 0,
+            "{app}/{}: no assist-warp spans recorded",
+            design.name
+        );
+        assert_eq!(strict_tl.cycles, strict_stats.cycles);
+
+        let (serial_stats, serial_tl) = run_with_telemetry(app, design, &base, false, 1);
+        assert_eq!(serial_stats.issue, strict_stats.issue, "{}", label("event-serial"));
+        // Whole-struct equality: every window delta, every occupancy
+        // sample, every span endpoint, the overcommit count.
+        assert_eq!(serial_tl, strict_tl, "{}", label("event-serial"));
+        for &threads in &THREADS {
+            let (_, tl) = run_with_telemetry(app, design, &base, false, threads);
+            assert_eq!(tl, strict_tl, "{}", label(&format!("sharded x{threads}")));
+        }
+    }
+}
+
+#[test]
+fn telemetry_is_invisible_and_outside_the_fingerprint() {
+    // Observation-only, end to end: the same point with the recorder off
+    // and on (serial and sharded) produces bit-identical SimStats, and
+    // the telemetry knobs don't move the config fingerprint.
+    let base = cfg(false);
+    let mut on = base.clone();
+    on.telemetry_window = 777;
+    on.telemetry_spans = 64;
+    assert_eq!(
+        on.fingerprint(),
+        base.fingerprint(),
+        "telemetry knobs must stay outside the config fingerprint"
+    );
+    let app = apps::find("PVC").unwrap();
+    let design = Design::caba(Algo::Bdi);
+    let off_stats = Simulator::new(base, design, app, 0.02).run();
+    for threads in [1usize, 4] {
+        let mut c = on.clone();
+        c.sim_threads = threads;
+        let mut sim = Simulator::new(c, design, app, 0.02);
+        let stats = sim.run();
+        assert_eq!(
+            stats, off_stats,
+            "recorder on changed SimStats at sim_threads={threads}"
+        );
+        assert!(sim.telemetry_run().is_some());
+    }
 }
 
 /// Drive one hand-built core through the two-phase `cycle()`/`drain()`

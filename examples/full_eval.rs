@@ -101,7 +101,7 @@ fn main() {
                 .map(move |d| SweepJob::new(app, *d, SimConfig::default(), scale))
         })
         .collect();
-    let flat = engine.run(&matrix);
+    let flat = engine.run(&matrix).expect("eval matrix failed");
     let all: Vec<Vec<SimStats>> = flat
         .chunks(designs.len())
         .map(|row| row.to_vec())
@@ -161,7 +161,7 @@ fn main() {
                 .map(move |&app| SweepJob::new(app, *d, SimConfig::default(), scale))
         })
         .collect();
-    let algo_flat = engine.run(&algo_matrix);
+    let algo_flat = engine.run(&algo_matrix).expect("algorithm matrix failed");
     let mut speed = Vec::new();
     let mut ratio = Vec::new();
     for (di, d) in algo_designs.iter().enumerate() {

@@ -154,7 +154,7 @@ fn main() {
     while w <= max_workers {
         let engine = SweepEngine::new(w);
         let t0 = Instant::now();
-        let out = engine.run(&jobs);
+        let out = engine.run(&jobs).expect("bench sweep failed");
         let dt = t0.elapsed().as_secs_f64();
         match reference.take() {
             None => reference = Some(out),

@@ -5,7 +5,7 @@
 //! perf_hotpath` (compression-substrate throughput, oracle memoization,
 //! end-to-end simulator throughput), but:
 //!
-//! * emits a **JSON report** (`BENCH_pr7.json` by default; schema
+//! * emits a **JSON report** (`BENCH_pr8.json` by default; schema
 //!   documented in EXPERIMENTS.md §Perf) so the perf trajectory is
 //!   tracked in-repo from PR 3 onward;
 //! * measures the **event-driven tick** against the `strict_tick=true`
@@ -22,6 +22,14 @@
 //!   against a `max_telemetry_overhead` *ceiling* in the floors file, and
 //!   any `SimStats` difference between the on/off runs violates the
 //!   observation-only contract unconditionally;
+//! * measures the **fault-tolerant serve loop** end to end (PR 8): an
+//!   in-process `caba serve` daemon on fresh socket/store dirs answers a
+//!   cold pass and a multi-client warm burst (`serve_warm_hits_per_s`,
+//!   checked against `min_serve_warm_hits_per_s`), then a second daemon
+//!   with an injected worker panic must survive it: exactly one typed
+//!   error, every unaffected response bit-identical to the clean run
+//!   (by `stats_digest`), and a retry of the failed point recovering —
+//!   each of those is a violation unconditionally, not a floor;
 //! * optionally checks the numbers against a committed **floors file**
 //!   (`key=value` lines, same offline-friendly format as `SimConfig`
 //!   overrides) and reports violations — the CI `bench-smoke` job fails
@@ -34,13 +42,16 @@
 
 use crate::compress::oracle::{CompressionOracle, MemoOracle, NativeOracle};
 use crate::compress::{measure, Algo, Line, LINE_BYTES};
+use crate::serve::{self, json::Json, ServeOpts};
 use crate::sim::designs::Design;
 use crate::sim::Simulator;
+use crate::store::FaultPlan;
 use crate::workload::apps;
 use crate::workload::datagen::{line_data, DataPattern};
 use crate::SimConfig;
 use anyhow::{anyhow, Context, Result};
 use std::fmt::Write as _;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// CLI options for `caba bench`.
@@ -117,6 +128,32 @@ pub struct TelemetryPoint {
     pub spans: usize,
 }
 
+/// One fault-tolerant serve-loop measurement: a clean phase (cold pass +
+/// multi-client warm burst against an in-process daemon) followed by a
+/// fault phase (same points, fresh dirs, one injected worker panic).
+pub struct ServePoint {
+    /// Cold (app, design) points pushed through the daemon.
+    pub cold_points: usize,
+    /// Warm-burst requests answered from the store-backed cache.
+    pub warm_requests: usize,
+    /// Warm answers per wall-second across the burst — the floors-file
+    /// metric (`min_serve_warm_hits_per_s`).
+    pub warm_hits_per_s: f64,
+    /// Typed `"status":"error"` responses in the fault phase. Exactly one
+    /// panic is injected, so any other count is a violation.
+    pub fault_errors: u64,
+    /// The faulted daemon answered every request and drained cleanly.
+    /// `false` is a violation regardless of the floors file.
+    pub survived: bool,
+    /// Every unaffected fault-phase response carried the same
+    /// `stats_digest` as the clean run. `false` is a violation regardless
+    /// of the floors file.
+    pub bitident_vs_clean: bool,
+    /// Re-requesting the panicked point succeeded (errors are never
+    /// cached). `false` is a violation regardless of the floors file.
+    pub retry_recovers: bool,
+}
+
 /// One end-to-end simulator measurement.
 pub struct SimPoint {
     pub app: &'static str,
@@ -145,6 +182,7 @@ pub struct BenchReport {
     pub tick: Vec<TickPoint>,
     pub shard: Vec<ShardPoint>,
     pub telemetry: Vec<TelemetryPoint>,
+    pub serve: Vec<ServePoint>,
     pub violations: Vec<String>,
 }
 
@@ -339,11 +377,170 @@ fn measure_telemetry(
     })
 }
 
+/// What one daemon phase produced.
+struct ServePhase {
+    /// `stats_digest` per point, in request order; `None` = typed error.
+    digests: Vec<Option<String>>,
+    /// Typed `"status":"error"` responses across the cold pass.
+    errors: u64,
+    /// Every errored point answered `ok` when re-requested.
+    retry_ok: bool,
+    /// Warm-burst answers with `source:"warm"`, and the burst wall-clock.
+    warm_hits: usize,
+    warm_dt: f64,
+}
+
+/// One sweep request through the daemon's client path, parsed. All bench
+/// points share the small config (2 SMs, bounded cycles) so the serve
+/// family measures the service, not the simulator.
+fn serve_request(socket: &std::path::Path, app: &str, design: &str) -> Result<Json> {
+    let line = format!(
+        "{{\"verb\":\"sweep\",\"app\":\"{app}\",\"design\":\"{design}\",\"scale\":0.01,\
+         \"set\":{{\"n_sms\":2,\"max_cycles\":150000}}}}"
+    );
+    let resp = serve::client_request(socket, &line)?;
+    serve::json::parse(&resp).map_err(|e| anyhow!("unparseable serve response {resp:?}: {e:#}"))
+}
+
+/// Drive one in-process daemon on fresh socket/store dirs: a sequential
+/// cold pass over `points`, a retry of any errored point, an optional
+/// concurrent warm burst, then a handle-stop drain. Transport failures
+/// (no response, dead socket) propagate as `Err`; the fault phase maps
+/// that to `survived=false`.
+fn serve_phase(
+    tag: &str,
+    points: &[(&'static str, &'static str)],
+    fault: Option<Arc<FaultPlan>>,
+    warm_burst: Option<(usize, usize)>,
+) -> Result<ServePhase> {
+    let base =
+        std::env::temp_dir().join(format!("caba_bench_serve_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).with_context(|| format!("create {}", base.display()))?;
+    let socket = base.join("serve.sock");
+    let mut opts = ServeOpts::new(&socket);
+    opts.jobs = 2;
+    opts.default_deadline_ms = 120_000;
+    opts.store_dir = Some(base.join("store"));
+    opts.fault = fault;
+    let server = serve::Server::bind(opts)?;
+    let handle = server.handle();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let result = (|| -> Result<ServePhase> {
+        let mut digests = Vec::with_capacity(points.len());
+        let mut errors = 0u64;
+        for &(app, design) in points {
+            let v = serve_request(&socket, app, design)?;
+            match v.get("status").and_then(Json::as_str) {
+                Some("ok") => digests.push(Some(
+                    v.get("stats_digest")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("ok response without stats_digest"))?
+                        .to_string(),
+                )),
+                Some("error") => {
+                    errors += 1;
+                    digests.push(None);
+                }
+                other => anyhow::bail!("unexpected serve response status {other:?}"),
+            }
+        }
+
+        // Errors are never cached, so a retry must recompute and succeed.
+        let mut retry_ok = true;
+        for (i, d) in digests.iter().enumerate() {
+            if d.is_none() {
+                let (app, design) = points[i];
+                let v = serve_request(&socket, app, design)?;
+                retry_ok &= v.get("status").and_then(Json::as_str) == Some("ok");
+            }
+        }
+
+        let (mut warm_hits, mut warm_dt) = (0usize, 0.0f64);
+        if let Some((clients, reqs_each)) = warm_burst {
+            let t0 = Instant::now();
+            let counts = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let socket = &socket;
+                        scope.spawn(move || -> Result<usize> {
+                            let mut hits = 0usize;
+                            for r in 0..reqs_each {
+                                let (app, design) = points[(c + r) % points.len()];
+                                let v = serve_request(socket, app, design)?;
+                                if v.get("status").and_then(Json::as_str) == Some("ok")
+                                    && v.get("source").and_then(Json::as_str) == Some("warm")
+                                {
+                                    hits += 1;
+                                }
+                            }
+                            Ok(hits)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join()).collect::<Vec<_>>()
+            });
+            warm_dt = t0.elapsed().as_secs_f64().max(1e-9);
+            for c in counts {
+                warm_hits += c.map_err(|_| anyhow!("warm-burst client panicked"))??;
+            }
+        }
+
+        Ok(ServePhase { digests, errors, retry_ok, warm_hits, warm_dt })
+    })();
+
+    // Always drain, even on a client-side error — the accept loop polls
+    // the stop flag, so this cannot hang on a wedged socket.
+    handle.stop();
+    let summary = server_thread.join().map_err(|_| anyhow!("serve thread panicked"))?;
+    let _ = std::fs::remove_dir_all(&base);
+    summary?;
+    result
+}
+
+/// The serve family: a clean phase (cold pass + warm burst), then a
+/// fault phase on fresh dirs with one injected worker panic
+/// (`panic_at_job=1` is 0-based — the second cold job dies). The daemon
+/// must survive it, keep every other answer bit-identical to the clean
+/// run, and recompute the failed point on retry.
+fn measure_serve(quick: bool) -> Result<ServePoint> {
+    let points: &[(&'static str, &'static str)] = if quick {
+        &[("SLA", "Base"), ("SLA", "CABA-BDI")]
+    } else {
+        &[("SLA", "Base"), ("SLA", "CABA-BDI"), ("PVC", "Base"), ("PVC", "CABA-BDI")]
+    };
+    let burst = if quick { (2, 25) } else { (4, 50) };
+    let clean = serve_phase("clean", points, None, Some(burst))?;
+    if clean.errors != 0 {
+        anyhow::bail!("serve clean phase saw {} unexpected job errors", clean.errors);
+    }
+    let plan = Arc::new(FaultPlan::parse("panic_at_job=1")?);
+    let (fault_errors, survived, bitident, retry) =
+        match serve_phase("fault", points, Some(plan), None) {
+            Ok(f) => {
+                let bitident =
+                    f.digests.iter().zip(&clean.digests).all(|(f, c)| f.is_none() || f == c);
+                (f.errors, true, bitident, f.retry_ok)
+            }
+            Err(_) => (0, false, false, false),
+        };
+    Ok(ServePoint {
+        cold_points: points.len(),
+        warm_requests: clean.warm_hits,
+        warm_hits_per_s: clean.warm_hits as f64 / clean.warm_dt.max(1e-9),
+        fault_errors,
+        survived,
+        bitident_vs_clean: bitident,
+        retry_recovers: retry,
+    })
+}
+
 /// Parse a floors file: `key=value` lines, `#` comments. Known keys:
 /// `min_compress_mlines_per_s`, `min_memo_warm_mlines_per_s`,
 /// `min_memo_hit_rate`, `min_sim_kcycles_per_s`, `min_lut_hit_rate`,
-/// `min_event_speedup`, `min_shard_speedup`, and the one ceiling:
-/// `max_telemetry_overhead`.
+/// `min_event_speedup`, `min_shard_speedup`, `min_serve_warm_hits_per_s`,
+/// and the one ceiling: `max_telemetry_overhead`.
 fn parse_floors(text: &str) -> Result<Vec<(String, f64)>> {
     let mut floors = Vec::new();
     for (ln, raw) in text.lines().enumerate() {
@@ -403,6 +600,15 @@ fn check_floors(report: &mut BenchReport, floors: &[(String, f64)]) {
                 .filter(|p| p.threads > 1)
                 .map(|p| p.speedup)
                 .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.max(v)))),
+            // Worst warm-burst throughput of the serve family: warm
+            // answers come straight from the store-backed cache, so a
+            // collapse here means the serve hot path (admission, cache
+            // read-through, response render) regressed, not the simulator.
+            "min_serve_warm_hits_per_s" => report
+                .serve
+                .iter()
+                .map(|p| p.warm_hits_per_s)
+                .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.min(v)))),
             // The one ceiling key (bigger is worse): worst = the HIGHEST
             // measured recorder overhead, violated when it EXCEEDS the
             // configured value. Handled inline because the shared check
@@ -546,6 +752,24 @@ impl BenchReport {
             );
         }
         s.push_str("  ],\n");
+        s.push_str("  \"serve\": [\n");
+        for (i, p) in self.serve.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "    {{\"cold_points\": {}, \"warm_requests\": {}, \"warm_hits_per_s\": {:.1}, \
+                 \"fault_errors\": {}, \"survived\": {}, \"bitident_vs_clean\": {}, \
+                 \"retry_recovers\": {}}}{}",
+                p.cold_points,
+                p.warm_requests,
+                p.warm_hits_per_s,
+                p.fault_errors,
+                p.survived,
+                p.bitident_vs_clean,
+                p.retry_recovers,
+                if i + 1 < self.serve.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  ],\n");
         s.push_str("  \"floor_violations\": [");
         for (i, v) in self.violations.iter().enumerate() {
             if i > 0 {
@@ -650,6 +874,21 @@ impl BenchReport {
                 t.spans
             );
         }
+        if !self.serve.is_empty() {
+            s.push('\n');
+        }
+        for p in &self.serve {
+            let _ = writeln!(
+                s,
+                "serve {} cold points  warm burst {} reqs @ {:>8.1} hits/s  fault: {} error(s), {}, retry {}",
+                p.cold_points,
+                p.warm_requests,
+                p.warm_hits_per_s,
+                p.fault_errors,
+                if p.survived && p.bitident_vs_clean { "survived bit-identical" } else { "FAILED" },
+                if p.retry_recovers { "recovered" } else { "STUCK" }
+            );
+        }
         for v in &self.violations {
             let _ = writeln!(s, "\nFLOOR VIOLATION: {v}");
         }
@@ -722,6 +961,10 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
         .map(|&(a, d)| measure_telemetry(a, d, sim_scale))
         .collect::<Result<Vec<_>>>()?;
 
+    // The fault-tolerant serve loop, end to end (an in-process daemon —
+    // the same code path `caba serve` runs).
+    let serve = vec![measure_serve(opts.quick)?];
+
     // Assemble the sim section in `pairs` order, reusing the event-mode
     // run from the tick comparison where the pair overlaps (identical
     // config/scale — same measurement either way, half the simulations).
@@ -749,6 +992,7 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
         tick,
         shard,
         telemetry,
+        serve,
         violations: Vec::new(),
     };
 
@@ -778,6 +1022,33 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
                 "telemetry observation-only: {}/{} SimStats changed with the recorder on",
                 t.app, t.design
             ));
+        }
+    }
+    // The serve fault contract is unconditional too: one injected panic
+    // must yield exactly one typed error, never kill the daemon, never
+    // perturb other answers, and never poison the failed key.
+    for p in &report.serve {
+        if !p.survived {
+            report
+                .violations
+                .push("serve fault-injection: daemon died or stopped answering".to_string());
+        }
+        if p.fault_errors != 1 {
+            report.violations.push(format!(
+                "serve fault-injection: expected exactly 1 typed error, saw {}",
+                p.fault_errors
+            ));
+        }
+        if !p.bitident_vs_clean {
+            report.violations.push(
+                "serve fault-injection: unaffected responses diverged from the clean run"
+                    .to_string(),
+            );
+        }
+        if !p.retry_recovers {
+            report.violations.push(
+                "serve fault-injection: retry of the failed point did not recover".to_string(),
+            );
         }
     }
 
@@ -815,6 +1086,7 @@ mod tests {
             tick: vec![],
             shard: vec![],
             telemetry: vec![],
+            serve: vec![],
             sim: vec![SimPoint {
                 app: "PVC",
                 design: "Base",
@@ -884,6 +1156,25 @@ mod tests {
         check_floors(&mut report, &[("max_telemetry_overhead".to_string(), 0.05)]);
         assert_eq!(report.violations.len(), 8);
         assert!(report.violations[7].contains("> ceiling"));
+        // Serve warm-throughput floor: empty → flagged, a slow warm burst
+        // fails, a fast one passes.
+        check_floors(&mut report, &[("min_serve_warm_hits_per_s".to_string(), 20.0)]);
+        assert_eq!(report.violations.len(), 9);
+        assert!(report.violations[8].contains("no measurements"));
+        report.serve = vec![ServePoint {
+            cold_points: 4,
+            warm_requests: 200,
+            warm_hits_per_s: 12.0,
+            fault_errors: 1,
+            survived: true,
+            bitident_vs_clean: true,
+            retry_recovers: true,
+        }];
+        check_floors(&mut report, &[("min_serve_warm_hits_per_s".to_string(), 20.0)]);
+        assert_eq!(report.violations.len(), 10);
+        report.serve[0].warm_hits_per_s = 250.0;
+        check_floors(&mut report, &[("min_serve_warm_hits_per_s".to_string(), 20.0)]);
+        assert_eq!(report.violations.len(), 10);
     }
 
     #[test]
@@ -934,6 +1225,15 @@ mod tests {
                 windows: 12,
                 spans: 40,
             }],
+            serve: vec![ServePoint {
+                cold_points: 4,
+                warm_requests: 200,
+                warm_hits_per_s: 312.5,
+                fault_errors: 1,
+                survived: true,
+                bitident_vs_clean: true,
+                retry_recovers: true,
+            }],
             violations: vec!["min_x: measured 1 < floor 2".to_string()],
         };
         let j = report.to_json();
@@ -942,6 +1242,8 @@ mod tests {
         assert!(j.contains("\"sim_threads\""));
         assert!(j.contains("\"telemetry\""));
         assert!(j.contains("\"overhead\": 0.0417"));
+        assert!(j.contains("\"warm_hits_per_s\": 312.5"));
+        assert!(j.contains("\"bitident_vs_clean\": true"));
         assert!(j.contains("floor_violations"));
         // Balanced braces/brackets (cheap well-formedness probe).
         assert_eq!(j.matches('{').count(), j.matches('}').count());

@@ -50,7 +50,17 @@
 //!   all tick modes and provably observation-only — rendered as ASCII
 //!   sparklines and a per-SM stall heatmap (`caba run --timeline`,
 //!   [`report::timeline`]) or exported as Perfetto-loadable Chrome
-//!   trace-event JSON (`caba prof`).
+//!   trace-event JSON (`caba prof`);
+//! * a **crash-safe on-disk run store** ([`store`]): content-addressed by
+//!   the sweep `JobKey`, written atomically (temp + fsync + rename) with
+//!   per-entry checksums and version headers, quarantining anything
+//!   corrupt instead of trusting or aborting — plus a deterministic
+//!   fault-injection harness ([`store::fault`]);
+//! * a **fault-tolerant sweep service** ([`serve`]): `caba serve` answers
+//!   JSON sweep requests over a unix socket, deduping in-flight identical
+//!   requests, serving warm hits from the store, and running cold misses
+//!   on panic-isolated workers behind a bounded queue with load shedding,
+//!   per-request deadlines and graceful SIGTERM drain.
 //!
 //! See `DESIGN.md` (repo root) for the system inventory and
 //! `EXPERIMENTS.md` for paper-vs-measured results and the sweep-engine
@@ -68,8 +78,10 @@ pub mod mem;
 pub mod memo;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod stats;
+pub mod store;
 pub mod sweep;
 pub mod telemetry;
 pub mod trace;

@@ -12,13 +12,27 @@
 //!          [--jobs N] [--set key=value]...
 //! caba sweep [--apps PVC,MM|eval|all|memo] [--designs Base,CABA-BDI|headline]
 //!            [--bw 0.5,1.0,2.0] [--scale 0.1] [--jobs N] [--set k=v]...
-//!            [--trace file.cabatrace]
+//!            [--trace file.cabatrace] [--store DIR]
+//! caba serve --socket /tmp/caba.sock [--jobs N] [--queue N]
+//!            [--deadline-ms D] [--store DIR] [--fault spec]
+//! caba client <socket> '<json request>'
 //! caba trace record <app> [--design D] [--scale S] [--out file] [--set...]
 //! caba trace replay <file.cabatrace> [--design D] [--set k=v]...
 //! caba trace info <file.cabatrace>
 //! caba trace import <dump.txt> [--out file] [--pattern random|zero|...]
-//! caba bench [--quick] [--out BENCH_pr7.json] [--floors BENCH_floors.txt]
+//! caba bench [--quick] [--out BENCH_pr8.json] [--floors BENCH_floors.txt]
 //! ```
+//!
+//! `sweep --store DIR` backs the run cache with the crash-safe on-disk
+//! store: results persist across invocations, so re-sweeps are warm.
+//! A failed job (corrupt trace, simulator panic) is reported as a typed
+//! error with a nonzero exit instead of aborting the process.
+//!
+//! `serve` runs the sweep service: JSON requests over a unix socket with
+//! in-flight dedup, store-backed warm hits, a bounded cold-miss queue
+//! with load shedding, per-request deadlines and graceful SIGTERM drain
+//! (see `DESIGN.md` §serve). `--fault` injects deterministic faults
+//! (`panic_at_job=N,torn_write_at=N,...`) for robustness testing.
 //!
 //! `run --timeline` prints the flight recorder's ASCII timeline (chip
 //! sparklines + per-SM stall heatmap) after the usual summary; `run
@@ -37,15 +51,17 @@
 //! `tests/strict_tick_differential.rs`).
 
 use anyhow::{anyhow, bail, Result};
-use caba::compress::Algo;
 use caba::report::figures::{self, RunCtx};
 use caba::report::{figure_matrix, trace_summary, Series};
+use caba::serve::{self, ServeOpts};
 use caba::sim::designs::Design;
 use caba::sim::Simulator;
-use caba::sweep::{resolve_jobs, SweepEngine, SweepJob};
+use caba::store::{FaultPlan, RunStore};
+use caba::sweep::{resolve_jobs, RunCache, SweepEngine, SweepJob};
 use caba::trace::{import as trace_import, replay::TraceData, TraceKind};
 use caba::workload::apps::{self, AppSpec};
 use caba::SimConfig;
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -122,29 +138,7 @@ impl Args {
 }
 
 fn design_by_name(name: &str) -> Result<Design> {
-    let all = [
-        Design::base(),
-        Design::hw_bdi_mem(),
-        Design::hw_bdi(),
-        Design::caba(Algo::Bdi),
-        Design::caba(Algo::Fpc),
-        Design::caba(Algo::CPack),
-        Design::caba(Algo::BestOfAll),
-        Design::ideal_bdi(),
-        Design::caba_uncompressed_l2(),
-        Design::caba_direct_load(),
-        Design::caba_cache_compressed(2, 1),
-        Design::caba_cache_compressed(4, 1),
-        Design::caba_cache_compressed(1, 2),
-        Design::caba_cache_compressed(1, 4),
-        Design::caba_prefetch(),
-        Design::caba_memo(),
-        Design::caba_memo_hybrid(),
-    ];
-    all.iter()
-        .find(|d| d.name.eq_ignore_ascii_case(name))
-        .copied()
-        .ok_or_else(|| anyhow!("unknown design {name:?}; see `caba list`"))
+    Design::by_name(name).ok_or_else(|| anyhow!("unknown design {name:?}; see `caba list`"))
 }
 
 /// Parse the `sweep --apps` selector.
@@ -195,13 +189,8 @@ fn run() -> Result<()> {
                 );
             }
             println!("\n# Designs");
-            for n in [
-                "Base", "HW-BDI-Mem", "HW-BDI", "CABA-BDI", "CABA-FPC", "CABA-CPack",
-                "CABA-BestOfAll", "Ideal-BDI", "CABA-BDI-UncompL2", "CABA-BDI-DirectLoad",
-                "CABA-BDI-L1-2x", "CABA-BDI-L1-4x", "CABA-BDI-L2-2x", "CABA-BDI-L2-4x",
-                "CABA-Prefetch", "CABA-Memo", "CABA-BDI-Memo",
-            ] {
-                println!("  {n}");
+            for d in Design::all() {
+                println!("  {}", d.name);
             }
             Ok(())
         }
@@ -376,9 +365,20 @@ fn run() -> Result<()> {
                     }
                 }
             }
-            let engine = SweepEngine::shared(jobs);
+            // `--store DIR` persists every result through the crash-safe
+            // on-disk store: re-sweeps (and the serve daemon pointed at
+            // the same directory) answer warm.
+            let engine = match args.flag("store") {
+                Some(dir) => SweepEngine::with_cache(
+                    jobs,
+                    Arc::new(RunCache::with_store(Arc::new(RunStore::open(dir)?))),
+                ),
+                None => SweepEngine::shared(jobs),
+            };
             let t0 = Instant::now();
-            engine.run(&matrix);
+            // A failed point (corrupt trace, simulator panic) surfaces as
+            // a typed error and a nonzero exit — fail-fast policy.
+            engine.run(&matrix)?;
             let dt = t0.elapsed().as_secs_f64();
 
             let names: Vec<&str> = set.iter().map(|a| a.name).collect();
@@ -413,12 +413,66 @@ fn run() -> Result<()> {
                 matrix.len(),
                 resolve_jobs(jobs)
             );
+            if let Some(sc) = engine.cache().store_counters() {
+                eprintln!(
+                    "[sweep] store: puts {}  warm_hits {}  quarantined {}  temp_cleaned {}  put_errors {}",
+                    sc.puts, sc.warm_hits, sc.quarantined, sc.temp_cleaned, sc.put_errors
+                );
+            }
+            Ok(())
+        }
+        Some("serve") => {
+            let socket = args
+                .flag("socket")
+                .ok_or_else(|| anyhow!("--socket PATH required, e.g. --socket /tmp/caba.sock"))?;
+            let mut opts = ServeOpts::new(socket);
+            opts.jobs = args.jobs()?;
+            if let Some(q) = args.flag("queue") {
+                opts.queue_cap =
+                    q.parse().map_err(|_| anyhow!("--queue expects an integer, got {q:?}"))?;
+            }
+            if let Some(d) = args.flag("deadline-ms") {
+                opts.default_deadline_ms = d
+                    .parse()
+                    .map_err(|_| anyhow!("--deadline-ms expects milliseconds, got {d:?}"))?;
+            }
+            opts.store_dir = args.flag("store").map(Into::into);
+            if let Some(spec) = args.flag("fault") {
+                eprintln!("[serve] fault injection active: {spec}");
+                opts.fault = Some(Arc::new(FaultPlan::parse(spec)?));
+            }
+            serve::install_signal_handlers();
+            let server = serve::Server::bind(opts)?;
+            eprintln!(
+                "[serve] listening on {socket} ({} worker(s), queue {}, deadline {} ms{})",
+                resolve_jobs(args.jobs()?),
+                args.flag("queue").unwrap_or("64"),
+                args.flag("deadline-ms").unwrap_or("30000"),
+                match args.flag("store") {
+                    Some(d) => format!(", store {d}"),
+                    None => String::new(),
+                }
+            );
+            let summary = server.run()?;
+            println!("{}", serve::render_summary(&summary));
+            Ok(())
+        }
+        Some("client") => {
+            let socket = args.positional.get(1).map(String::as_str).ok_or_else(|| {
+                anyhow!("usage: caba client <socket> '<json>', e.g. caba client /tmp/caba.sock '{{\"verb\":\"ping\"}}'")
+            })?;
+            let request = args
+                .positional
+                .get(2)
+                .map(String::as_str)
+                .ok_or_else(|| anyhow!("client requires a JSON request as the second argument"))?;
+            println!("{}", serve::client_request(Path::new(socket), request)?);
             Ok(())
         }
         Some("bench") => {
             let opts = caba::bench::BenchOpts {
                 quick: args.flag("quick").is_some(),
-                out: args.flag("out").unwrap_or("BENCH_pr7.json").to_string(),
+                out: args.flag("out").unwrap_or("BENCH_pr8.json").to_string(),
                 floors: args.flag("floors").map(str::to_string),
             };
             let t0 = Instant::now();
@@ -440,18 +494,20 @@ fn run() -> Result<()> {
         Some("trace") => run_trace(&args),
         _ => {
             eprintln!(
-                "usage: caba <list|table1|run|prof|fig|sweep|trace|bench> [...]\n  \
+                "usage: caba <list|table1|run|prof|fig|sweep|serve|client|trace|bench> [...]\n  \
                  caba run --app PVC --design CABA-BDI [--scale 0.25] [--threads N] [--oracle native|pjrt]\n  \
                  caba run --app PVC --timeline   (ASCII flight-recorder timeline; --json for machine-readable)\n  \
                  caba prof trace.json --app PVC [--design CABA-BDI]   (Perfetto/chrome-trace export)\n  \
                  caba fig 8 [--scale 0.25] [--jobs N] [--set key=value]  (fig memo = §8.1 suite)\n  \
-                 caba sweep --apps eval|memo --designs headline --bw 0.5,1.0,2.0 [--jobs N]\n  \
+                 caba sweep --apps eval|memo --designs headline --bw 0.5,1.0,2.0 [--jobs N] [--store DIR]\n  \
                  caba sweep --trace run.cabatrace --designs headline [--bw 0.5,1.0,2.0]\n  \
+                 caba serve --socket /tmp/caba.sock [--jobs N] [--queue 64] [--deadline-ms 30000] [--store DIR] [--fault spec]\n  \
+                 caba client /tmp/caba.sock '{{\"verb\":\"sweep\",\"app\":\"SLA\",\"design\":\"CABA-BDI\",\"scale\":0.01}}'\n  \
                  caba trace record PVC [--design CABA-BDI] [--scale 0.25] [--out PVC.cabatrace]\n  \
                  caba trace replay run.cabatrace [--design CABA-BDI] [--set key=value]\n  \
                  caba trace info run.cabatrace\n  \
                  caba trace import dump.txt [--out dump.cabatrace] [--pattern random]\n  \
-                 caba bench [--quick] [--out BENCH_pr7.json] [--floors BENCH_floors.txt]"
+                 caba bench [--quick] [--out BENCH_pr8.json] [--floors BENCH_floors.txt]"
             );
             Ok(())
         }

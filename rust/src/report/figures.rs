@@ -50,13 +50,16 @@ impl RunCtx {
     }
 
     /// Execute all `(app, design, bw_scale)` points concurrently into the
-    /// shared cache (deduplicated; already-cached points are free).
+    /// shared cache (deduplicated; already-cached points are free). A
+    /// failed point panics with its typed `JobError` message: a figure
+    /// cannot exist without its points, and the message is the
+    /// diagnostic (same policy as [`RunCtx::point`]).
     pub fn warm(&self, points: &[(&'static AppSpec, Design, f64)]) {
         let jobs: Vec<SweepJob> = points
             .iter()
             .map(|&(app, design, bw)| SweepJob::with_bw(app, design, &self.cfg, bw, self.scale))
             .collect();
-        self.engine().run(&jobs);
+        self.engine().run(&jobs).unwrap_or_else(|e| panic!("{e}"));
     }
 
     /// Run (or fetch) one simulation point.

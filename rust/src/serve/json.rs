@@ -1,0 +1,347 @@
+//! A minimal JSON value + recursive-descent parser for the serve wire
+//! protocol. The container has no serde, so the daemon speaks JSON
+//! through this ~200-line module: enough for flat request objects and
+//! the string/number/bool/object shapes the protocol uses, with a depth
+//! limit so a hostile request cannot blow the stack.
+
+use anyhow::{bail, Result};
+
+/// Maximum nesting depth accepted by the parser. Protocol messages are
+/// at most 2 levels deep (`{"set": {...}}`); 32 leaves headroom without
+/// letting `[[[[…]]]]` recurse unboundedly.
+const MAX_DEPTH: usize = 32;
+
+/// A parsed JSON value. Objects preserve insertion order (the protocol
+/// never needs hashing, and ordered output is stable for tests).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object member lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Numeric member as an exact non-negative integer.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn members(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one complete JSON value; trailing non-whitespace is an error.
+pub fn parse(input: &str) -> Result<Json> {
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing bytes after JSON value at offset {}", p.pos);
+    }
+    Ok(v)
+}
+
+/// Escape a string for embedding in JSON output.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at offset {}", b as char, self.pos)
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            bail!("JSON nested deeper than {MAX_DEPTH}");
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => bail!("unexpected {:?} at offset {}", c as char, self.pos),
+            None => bail!("unexpected end of input"),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at offset {}", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap_or("");
+        let n: f64 =
+            text.parse().map_err(|_| anyhow::anyhow!("bad number {text:?} at offset {start}"))?;
+        if !n.is_finite() {
+            bail!("non-finite number {text:?}");
+        }
+        Ok(Json::Num(n))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else { bail!("unterminated string") };
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(esc) = self.peek() else { bail!("unterminated escape") };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        other => bail!("bad escape \\{}", other as char),
+                    }
+                }
+                _ => {
+                    // Re-decode from the byte position to keep multi-byte
+                    // UTF-8 sequences intact.
+                    self.pos -= 1;
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"))?;
+                    let ch = rest.chars().next().unwrap();
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.bytes.len() - self.pos < 4 {
+            bail!("truncated \\u escape");
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| anyhow::anyhow!("bad \\u escape"))?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| anyhow::anyhow!("bad \\u escape {s:?}"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        if (0xd800..0xdc00).contains(&hi) {
+            // Surrogate pair: a second \uXXXX must follow.
+            if self.bytes[self.pos..].starts_with(b"\\u") {
+                self.pos += 2;
+                let lo = self.hex4()?;
+                if !(0xdc00..0xe000).contains(&lo) {
+                    bail!("invalid low surrogate {lo:04x}");
+                }
+                let cp = 0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00);
+                return char::from_u32(cp).ok_or_else(|| anyhow::anyhow!("bad surrogate pair"));
+            }
+            bail!("lone high surrogate {hi:04x}");
+        }
+        char::from_u32(hi).ok_or_else(|| anyhow::anyhow!("bad codepoint {hi:04x}"))
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut members = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(members));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value(depth + 1)?;
+            members.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(members));
+                }
+                _ => bail!("expected ',' or '}}' at offset {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at offset {}", self.pos),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_protocol_shapes() {
+        let v = parse(
+            r#"{"verb":"sweep","app":"SLA","design":"CABA-BDI","scale":0.01,
+               "set":{"n_sms":"2","max_cycles":"150000"},"deadline_ms":500}"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("verb").and_then(Json::as_str), Some("sweep"));
+        assert_eq!(v.get("scale").and_then(Json::as_f64), Some(0.01));
+        assert_eq!(v.get("deadline_ms").and_then(Json::as_u64), Some(500));
+        let set = v.get("set").unwrap();
+        assert_eq!(set.get("n_sms").and_then(Json::as_str), Some("2"));
+        assert_eq!(set.members().unwrap().len(), 2);
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn scalars_and_arrays() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(
+            parse(r#"[1, "two", false]"#).unwrap(),
+            Json::Arr(vec![Json::Num(1.0), Json::Str("two".into()), Json::Bool(false)])
+        );
+    }
+
+    #[test]
+    fn string_escapes() {
+        assert_eq!(parse(r#""a\"b\\c\nd\u0041""#).unwrap(), Json::Str("a\"b\\c\ndA".into()));
+        // Surrogate pair (clef symbol) and raw multi-byte UTF-8.
+        assert_eq!(parse(r#""\ud834\udd1e""#).unwrap(), Json::Str("𝄞".into()));
+        assert_eq!(parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+        assert!(parse(r#""\ud834""#).is_err(), "lone surrogate must not parse");
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        for bad in ["", "{", "{\"a\":}", "[1,]", "{\"a\" 1}", "1 2", "nul", "\"open", "{]"] {
+            assert!(parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        // Depth bomb: rejected, not a stack overflow.
+        let bomb = "[".repeat(200) + &"]".repeat(200);
+        assert!(parse(&bomb).is_err());
+    }
+
+    #[test]
+    fn escape_roundtrips_through_parse() {
+        let nasty = "line1\nline2\t\"quoted\" \\slash\u{0007}é";
+        let wire = format!("\"{}\"", escape(nasty));
+        assert_eq!(parse(&wire).unwrap(), Json::Str(nasty.to_string()));
+    }
+}

@@ -1,0 +1,704 @@
+//! # `caba serve` — the fault-tolerant sweep service
+//!
+//! A long-lived daemon over a unix socket, turning the sweep engine into
+//! the ROADMAP's "sweep-as-a-service": many concurrent clients request
+//! simulation points as newline-delimited JSON and get stats back, with
+//! the crash-safe [`crate::store::RunStore`] making every answered point
+//! persistent across restarts.
+//!
+//! ## Request lifecycle
+//!
+//! ```text
+//! request ── parse ──► key = SweepJob::key()
+//!    │                     │
+//!    │              cache/store hit? ──► "warm" response
+//!    │                     │ miss
+//!    │              in-flight for key? ──► wait on it ──► "dedup" response
+//!    │                     │ no
+//!    │              queue full? ──► "shed" response (429-style, retryable)
+//!    │                     │ no
+//!    │              enqueue ──► worker runs it ──► "cold" response
+//!    │                     │
+//!    └── deadline expires while waiting ──► "deadline" response
+//!        (the job keeps running and warms the store for the retry)
+//! ```
+//!
+//! ## Fault model
+//!
+//! Every failure mode has a typed, non-fatal answer:
+//!
+//! * a panicking job (or an injected [`FaultPlan`] fault) is caught by
+//!   the engine and returned as `"status":"error"` — workers never die,
+//!   failed keys are never cached, and a retry recomputes;
+//! * a corrupt store entry quarantines on read and the request
+//!   recomputes — never wrong data;
+//! * an overloaded queue sheds new work *before* admitting it (a shed
+//!   request holds no resources and can simply be retried);
+//! * malformed JSON gets `"status":"error"` on that line and the
+//!   connection stays usable;
+//! * `SIGTERM`/`SIGINT` (or the `shutdown` verb) drains gracefully:
+//!   accepting stops, queued jobs finish, waiting clients get their
+//!   answers, then the socket is removed and the process exits 0.
+//!
+//! Every `ok` response carries `stats_digest` — the FNV-1a64 of the
+//! stats' canonical encoding — so clients (and the fault-injection
+//! harness in `tests/serve_faults.rs` and `caba bench`) can assert
+//! bit-identity without shipping the full struct.
+
+pub mod json;
+
+use crate::config::SimConfig;
+use crate::sim::designs::Design;
+use crate::stats::SimStats;
+use crate::store::{stats_digest, FaultPlan, RunStore, StoreCounters};
+use crate::sweep::{resolve_jobs, JobError, JobKey, RunCache, SweepEngine, SweepJob};
+use crate::workload::apps;
+use anyhow::{Context, Result};
+use json::Json;
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::Duration;
+
+/// Process-wide flag set by the SIGTERM/SIGINT handler; the accept loop
+/// polls it. Kept separate from the per-server stop flag so in-process
+/// test servers are not affected by signals aimed at the CLI daemon.
+static SIGNAL_SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_shutdown_signal(_sig: i32) {
+    SIGNAL_SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+// Raw libc `signal(2)` — the container is std-only, and std never
+// exposes signal installation. Typed fn-pointer parameter, so no cast.
+extern "C" {
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+}
+
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+/// Install the graceful-drain handler for SIGTERM and SIGINT. Called by
+/// the `caba serve` CLI path only (tests stop servers via
+/// [`ServerHandle::stop`] or the `shutdown` verb).
+pub fn install_signal_handlers() {
+    unsafe {
+        signal(SIGTERM, on_shutdown_signal);
+        signal(SIGINT, on_shutdown_signal);
+    }
+}
+
+/// Daemon configuration.
+#[derive(Clone)]
+pub struct ServeOpts {
+    /// Unix socket path (created on bind, removed on drain).
+    pub socket: PathBuf,
+    /// Worker threads; 0 = one per available core.
+    pub jobs: usize,
+    /// Cold-miss queue capacity; admissions beyond this are shed.
+    pub queue_cap: usize,
+    /// Deadline applied to requests that don't carry their own.
+    pub default_deadline_ms: u64,
+    /// Back the cache with a persistent store at this directory.
+    pub store_dir: Option<PathBuf>,
+    /// Fault-injection plan (tests, `caba bench`, `--fault`).
+    pub fault: Option<Arc<FaultPlan>>,
+}
+
+impl ServeOpts {
+    pub fn new(socket: impl Into<PathBuf>) -> ServeOpts {
+        ServeOpts {
+            socket: socket.into(),
+            jobs: 0,
+            queue_cap: 64,
+            default_deadline_ms: 30_000,
+            store_dir: None,
+            fault: None,
+        }
+    }
+}
+
+/// Monotonic request counters, snapshot via [`ServerHandle::counters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeCounters {
+    pub connections: u64,
+    pub requests: u64,
+    /// Answered straight from the cache/store.
+    pub warm: u64,
+    /// Simulated by a worker for this request.
+    pub cold: u64,
+    /// Waited on an identical in-flight request.
+    pub dedup: u64,
+    /// Rejected at admission because the queue was full.
+    pub shed: u64,
+    /// Waiting client gave up at its deadline (job kept running).
+    pub deadline_expired: u64,
+    /// Jobs that failed with a typed error.
+    pub job_errors: u64,
+    /// Lines that didn't parse into a valid request.
+    pub bad_requests: u64,
+}
+
+/// End-of-run report returned by [`Server::run`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSummary {
+    pub counters: ServeCounters,
+    pub store: Option<StoreCounters>,
+    pub cache_entries: u64,
+}
+
+#[derive(Default)]
+struct Pending {
+    result: Mutex<Option<Result<SimStats, JobError>>>,
+    cv: Condvar,
+}
+
+struct QueueItem {
+    job: SweepJob,
+    key: JobKey,
+    pending: Arc<Pending>,
+}
+
+struct Inner {
+    engine: SweepEngine,
+    queue_cap: usize,
+    default_deadline_ms: u64,
+    inflight: Mutex<HashMap<JobKey, Arc<Pending>>>,
+    queue: Mutex<VecDeque<QueueItem>>,
+    queue_cv: Condvar,
+    stop: AtomicBool,
+    active_conns: AtomicU64,
+    connections: AtomicU64,
+    requests: AtomicU64,
+    warm: AtomicU64,
+    cold: AtomicU64,
+    dedup: AtomicU64,
+    shed: AtomicU64,
+    deadline_expired: AtomicU64,
+    job_errors: AtomicU64,
+    bad_requests: AtomicU64,
+}
+
+impl Inner {
+    fn counters(&self) -> ServeCounters {
+        ServeCounters {
+            connections: self.connections.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            warm: self.warm.load(Ordering::Relaxed),
+            cold: self.cold.load(Ordering::Relaxed),
+            dedup: self.dedup.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            job_errors: self.job_errors.load(Ordering::Relaxed),
+            bad_requests: self.bad_requests.load(Ordering::Relaxed),
+        }
+    }
+
+    fn summary(&self) -> ServeSummary {
+        ServeSummary {
+            counters: self.counters(),
+            store: self.engine.cache().store_counters(),
+            cache_entries: self.engine.cache_entries() as u64,
+        }
+    }
+}
+
+/// A bound, not-yet-running server. [`Server::run`] blocks until drain;
+/// grab a [`ServerHandle`] first to stop/inspect it from other threads
+/// (in-process tests, the bench load generator).
+pub struct Server {
+    inner: Arc<Inner>,
+    listener: UnixListener,
+    socket: PathBuf,
+    workers: usize,
+}
+
+/// A cheap clone-around handle to a running (or drained) server.
+#[derive(Clone)]
+pub struct ServerHandle {
+    inner: Arc<Inner>,
+}
+
+impl ServerHandle {
+    /// Begin graceful drain (idempotent).
+    pub fn stop(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        self.inner.queue_cv.notify_all();
+    }
+
+    pub fn counters(&self) -> ServeCounters {
+        self.inner.counters()
+    }
+
+    pub fn summary(&self) -> ServeSummary {
+        self.inner.summary()
+    }
+}
+
+impl Server {
+    /// Bind the socket and build the engine/store. Removes a stale
+    /// socket file from a previous (crashed) daemon first.
+    pub fn bind(opts: ServeOpts) -> Result<Server> {
+        let cache = match &opts.store_dir {
+            Some(dir) => {
+                let mut store = RunStore::open(dir)?;
+                if let Some(f) = &opts.fault {
+                    store = store.with_fault(Arc::clone(f));
+                }
+                RunCache::with_store(Arc::new(store))
+            }
+            None => RunCache::new(),
+        };
+        let mut engine = SweepEngine::with_cache(opts.jobs, Arc::new(cache));
+        if let Some(f) = &opts.fault {
+            engine = engine.with_fault(Arc::clone(f));
+        }
+
+        let _ = std::fs::remove_file(&opts.socket);
+        if let Some(parent) = opts.socket.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("serve: create {}", parent.display()))?;
+            }
+        }
+        let listener = UnixListener::bind(&opts.socket)
+            .with_context(|| format!("serve: bind {}", opts.socket.display()))?;
+        listener.set_nonblocking(true).context("serve: set socket nonblocking")?;
+
+        Ok(Server {
+            inner: Arc::new(Inner {
+                engine,
+                queue_cap: opts.queue_cap,
+                default_deadline_ms: opts.default_deadline_ms,
+                inflight: Mutex::new(HashMap::new()),
+                queue: Mutex::new(VecDeque::new()),
+                queue_cv: Condvar::new(),
+                stop: AtomicBool::new(false),
+                active_conns: AtomicU64::new(0),
+                connections: AtomicU64::new(0),
+                requests: AtomicU64::new(0),
+                warm: AtomicU64::new(0),
+                cold: AtomicU64::new(0),
+                dedup: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+                deadline_expired: AtomicU64::new(0),
+                job_errors: AtomicU64::new(0),
+                bad_requests: AtomicU64::new(0),
+            }),
+            listener,
+            socket: opts.socket,
+            workers: resolve_jobs(opts.jobs),
+        })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { inner: Arc::clone(&self.inner) }
+    }
+
+    /// Accept and serve until a stop is requested ([`ServerHandle::stop`],
+    /// the `shutdown` verb, or — for the CLI daemon — SIGTERM/SIGINT),
+    /// then drain: queued jobs finish, waiting clients get answers, the
+    /// socket file is removed. Blocks the calling thread.
+    pub fn run(self) -> Result<ServeSummary> {
+        let worker_handles: Vec<_> = (0..self.workers)
+            .map(|_| {
+                let inner = Arc::clone(&self.inner);
+                std::thread::spawn(move || worker_loop(&inner))
+            })
+            .collect();
+
+        loop {
+            if self.inner.stop.load(Ordering::SeqCst) || SIGNAL_SHUTDOWN.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    self.inner.connections.fetch_add(1, Ordering::Relaxed);
+                    self.inner.active_conns.fetch_add(1, Ordering::SeqCst);
+                    let inner = Arc::clone(&self.inner);
+                    std::thread::spawn(move || {
+                        handle_connection(&inner, stream);
+                        inner.active_conns.fetch_sub(1, Ordering::SeqCst);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => return Err(e).context("serve: accept"),
+            }
+        }
+
+        // Drain: stop admissions, let workers empty the queue, let every
+        // open connection finish (their waits are deadline-bounded).
+        self.inner.stop.store(true, Ordering::SeqCst);
+        self.inner.queue_cv.notify_all();
+        for h in worker_handles {
+            let _ = h.join();
+        }
+        while self.inner.active_conns.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let _ = std::fs::remove_file(&self.socket);
+        Ok(self.inner.summary())
+    }
+}
+
+/// Worker: pop cold misses off the queue, execute panic-isolated, fill
+/// the pending slot *before* removing the in-flight entry (so a deduping
+/// waiter that found the entry is always woken with a result). Exits
+/// when stop is set **and** the queue is empty — queued work always
+/// completes, which both answers its waiters and warms the store.
+fn worker_loop(inner: &Inner) {
+    loop {
+        let item = {
+            let mut q = inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
+            loop {
+                if let Some(item) = q.pop_front() {
+                    break Some(item);
+                }
+                if inner.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                let (guard, _) = inner
+                    .queue_cv
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .unwrap_or_else(PoisonError::into_inner);
+                q = guard;
+            }
+        };
+        let Some(QueueItem { job, key, pending }) = item else { return };
+        let result = inner.engine.try_run_one(&job);
+        if result.is_err() {
+            inner.job_errors.fetch_add(1, Ordering::Relaxed);
+        }
+        *pending.result.lock().unwrap_or_else(PoisonError::into_inner) = Some(result);
+        pending.cv.notify_all();
+        inner.inflight.lock().unwrap_or_else(PoisonError::into_inner).remove(&key);
+    }
+}
+
+/// Serve one connection: newline-delimited JSON requests, one response
+/// line each. A short read timeout keeps idle connections from blocking
+/// drain forever.
+fn handle_connection(inner: &Inner, stream: UnixStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // EOF
+            Ok(_) => {
+                let response = handle_line(inner, line.trim());
+                line.clear();
+                if let Some(resp) = response {
+                    if writer.write_all(resp.as_bytes()).is_err()
+                        || writer.write_all(b"\n").is_err()
+                        || writer.flush().is_err()
+                    {
+                        return;
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Idle: partially-read bytes stay in `line`; hang up once
+                // the server is draining.
+                if inner.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Dispatch one request line. `None` = blank line, no response owed.
+fn handle_line(inner: &Inner, line: &str) -> Option<String> {
+    if line.is_empty() {
+        return None;
+    }
+    inner.requests.fetch_add(1, Ordering::Relaxed);
+    let req = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            inner.bad_requests.fetch_add(1, Ordering::Relaxed);
+            return Some(error_json("error", &format!("bad JSON: {e:#}")));
+        }
+    };
+    match req.get("verb").and_then(Json::as_str) {
+        Some("ping") => Some(r#"{"status":"ok","pong":true}"#.to_string()),
+        Some("stats") => Some(stats_json(inner)),
+        Some("shutdown") => {
+            inner.stop.store(true, Ordering::SeqCst);
+            inner.queue_cv.notify_all();
+            Some(r#"{"status":"ok","draining":true}"#.to_string())
+        }
+        Some("sweep") => Some(handle_sweep(inner, &req)),
+        Some(other) => {
+            inner.bad_requests.fetch_add(1, Ordering::Relaxed);
+            Some(error_json("error", &format!("unknown verb {other:?}")))
+        }
+        None => {
+            inner.bad_requests.fetch_add(1, Ordering::Relaxed);
+            Some(error_json("error", "missing \"verb\""))
+        }
+    }
+}
+
+/// Build the `SweepJob` a sweep request describes. The `SweepJob::new`
+/// constructor strips run-control knobs (trace_record, telemetry), so
+/// served keys can never fragment the cache/store.
+fn sweep_job_from(req: &Json) -> Result<SweepJob, String> {
+    let app_name =
+        req.get("app").and_then(Json::as_str).ok_or("missing \"app\" (string)")?;
+    let app = apps::find(app_name).ok_or_else(|| format!("unknown app {app_name:?}"))?;
+    let design_name = req.get("design").and_then(Json::as_str).unwrap_or("CABA-BDI");
+    let design =
+        Design::by_name(design_name).ok_or_else(|| format!("unknown design {design_name:?}"))?;
+    let scale = match req.get("scale") {
+        None => 0.25,
+        Some(v) => match v.as_f64() {
+            Some(s) if s.is_finite() && s > 0.0 => s,
+            _ => return Err("\"scale\" must be a positive finite number".to_string()),
+        },
+    };
+    let mut cfg = SimConfig::default();
+    if let Some(set) = req.get("set") {
+        let members = set.members().ok_or("\"set\" must be an object")?;
+        for (k, v) in members {
+            let val = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) if n.fract() == 0.0 => format!("{}", *n as i64),
+                Json::Num(n) => format!("{n}"),
+                _ => return Err(format!("set.{k}: value must be a string or number")),
+            };
+            cfg.set(k, &val).map_err(|e| format!("set.{k}: {e:#}"))?;
+        }
+    }
+    Ok(SweepJob::new(app, design, cfg, scale))
+}
+
+fn handle_sweep(inner: &Inner, req: &Json) -> String {
+    let job = match sweep_job_from(req) {
+        Ok(j) => j,
+        Err(msg) => {
+            inner.bad_requests.fetch_add(1, Ordering::Relaxed);
+            return error_json("error", &msg);
+        }
+    };
+    let key = job.key();
+    let deadline_ms = req
+        .get("deadline_ms")
+        .and_then(Json::as_u64)
+        .unwrap_or(inner.default_deadline_ms)
+        .max(1);
+
+    // Warm path: cache (and, through it, the validated store).
+    if let Some(stats) = inner.engine.cache().get(&key) {
+        inner.warm.fetch_add(1, Ordering::Relaxed);
+        return ok_json(&job, "warm", &stats);
+    }
+
+    // Admission. Lock order: inflight, then queue; both released before
+    // waiting.
+    let (pending, source) = {
+        let mut inflight = inner.inflight.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(p) = inflight.get(&key) {
+            (Arc::clone(p), "dedup")
+        } else {
+            if inner.stop.load(Ordering::SeqCst) {
+                return error_json("draining", "server is draining; retry elsewhere");
+            }
+            let mut q = inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
+            if q.len() >= inner.queue_cap {
+                inner.shed.fetch_add(1, Ordering::Relaxed);
+                return error_json("shed", "queue full; retry with backoff");
+            }
+            let p = Arc::new(Pending::default());
+            inflight.insert(key, Arc::clone(&p));
+            q.push_back(QueueItem { job: job.clone(), key, pending: Arc::clone(&p) });
+            inner.queue_cv.notify_one();
+            (p, "cold")
+        }
+    };
+
+    // Wait for the worker, bounded by the deadline.
+    let guard = pending.result.lock().unwrap_or_else(PoisonError::into_inner);
+    let (guard, _) = pending
+        .cv
+        .wait_timeout_while(guard, Duration::from_millis(deadline_ms), |r| r.is_none())
+        .unwrap_or_else(PoisonError::into_inner);
+    match guard.as_ref() {
+        None => {
+            inner.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            error_json(
+                "deadline",
+                &format!("no result within {deadline_ms} ms; the job continues and will be warm"),
+            )
+        }
+        Some(Ok(stats)) => {
+            match source {
+                "dedup" => inner.dedup.fetch_add(1, Ordering::Relaxed),
+                _ => inner.cold.fetch_add(1, Ordering::Relaxed),
+            };
+            ok_json(&job, source, stats)
+        }
+        Some(Err(e)) => error_json("error", &e.to_string()),
+    }
+}
+
+fn ok_json(job: &SweepJob, source: &str, stats: &SimStats) -> String {
+    format!(
+        "{{\"status\":\"ok\",\"source\":\"{source}\",\"app\":\"{}\",\"design\":\"{}\",\
+         \"cycles\":{},\"warp_insts\":{},\"finished\":{},\"stats_digest\":\"{:016x}\"}}",
+        json::escape(job.app.name),
+        json::escape(job.design.name),
+        stats.cycles,
+        stats.warp_insts,
+        stats.finished,
+        stats_digest(stats),
+    )
+}
+
+fn error_json(status: &str, message: &str) -> String {
+    format!("{{\"status\":\"{status}\",\"message\":\"{}\"}}", json::escape(message))
+}
+
+fn stats_json(inner: &Inner) -> String {
+    let c = inner.counters();
+    let mut out = format!(
+        "{{\"status\":\"ok\",\"connections\":{},\"requests\":{},\"warm\":{},\"cold\":{},\
+         \"dedup\":{},\"shed\":{},\"deadline_expired\":{},\"job_errors\":{},\
+         \"bad_requests\":{},\"cache_entries\":{}",
+        c.connections,
+        c.requests,
+        c.warm,
+        c.cold,
+        c.dedup,
+        c.shed,
+        c.deadline_expired,
+        c.job_errors,
+        c.bad_requests,
+        inner.engine.cache_entries(),
+    );
+    if let Some(s) = inner.engine.cache().store_counters() {
+        out.push_str(&format!(
+            ",\"store_puts\":{},\"store_warm_hits\":{},\"store_quarantined\":{},\
+             \"store_temp_cleaned\":{},\"store_put_errors\":{}",
+            s.puts, s.warm_hits, s.quarantined, s.temp_cleaned, s.put_errors
+        ));
+    }
+    out.push('}');
+    out
+}
+
+/// One-shot client: send a single request line, return the response
+/// line. Used by `caba client` and the CI smoke test.
+pub fn client_request(socket: &Path, line: &str) -> Result<String> {
+    let mut stream = UnixStream::connect(socket)
+        .with_context(|| format!("connect {}", socket.display()))?;
+    stream.write_all(line.trim().as_bytes()).context("send request")?;
+    stream.write_all(b"\n").context("send request")?;
+    stream.flush().context("send request")?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).context("read response")?;
+    if resp.is_empty() {
+        anyhow::bail!("server closed the connection without a response");
+    }
+    Ok(resp.trim_end().to_string())
+}
+
+/// Human-readable drain report for the CLI.
+pub fn render_summary(s: &ServeSummary) -> String {
+    let c = &s.counters;
+    let mut out = format!(
+        "serve: drained cleanly\n\
+         connections {}  requests {}\n\
+         warm {}  cold {}  dedup {}  shed {}  deadline {}\n\
+         job_errors {}  bad_requests {}  cache_entries {}",
+        c.connections,
+        c.requests,
+        c.warm,
+        c.cold,
+        c.dedup,
+        c.shed,
+        c.deadline_expired,
+        c.job_errors,
+        c.bad_requests,
+        s.cache_entries,
+    );
+    if let Some(st) = &s.store {
+        out.push_str(&format!(
+            "\nstore: puts {}  warm_hits {}  quarantined {}  temp_cleaned {}  put_errors {}",
+            st.puts, st.warm_hits, st.quarantined, st.temp_cleaned, st.put_errors
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(line: &str) -> Json {
+        json::parse(line).unwrap()
+    }
+
+    #[test]
+    fn sweep_job_parsing_strips_knobs_and_validates() {
+        let j = sweep_job_from(&req(
+            r#"{"verb":"sweep","app":"SLA","design":"caba-bdi","scale":0.01,
+               "set":{"n_sms":2,"max_cycles":"150000","telemetry_window":512}}"#,
+        ))
+        .unwrap();
+        assert_eq!(j.app.name, "SLA");
+        assert_eq!(j.design.name, "CABA-BDI");
+        assert_eq!(j.cfg.n_sms, 2);
+        assert_eq!(j.cfg.max_cycles, 150_000);
+        // Run-control knobs are stripped by the SweepJob constructor: a
+        // telemetry-carrying request hits the same key as a plain one.
+        assert_eq!(j.cfg.telemetry_window, 0);
+        let plain = sweep_job_from(&req(
+            r#"{"verb":"sweep","app":"SLA","design":"CABA-BDI","scale":0.01,
+               "set":{"n_sms":2,"max_cycles":150000}}"#,
+        ))
+        .unwrap();
+        assert_eq!(j.key(), plain.key());
+
+        for bad in [
+            r#"{"verb":"sweep"}"#,
+            r#"{"verb":"sweep","app":"NOPE"}"#,
+            r#"{"verb":"sweep","app":"SLA","design":"NOPE"}"#,
+            r#"{"verb":"sweep","app":"SLA","scale":-1}"#,
+            r#"{"verb":"sweep","app":"SLA","set":{"no_such_key":"1"}}"#,
+            r#"{"verb":"sweep","app":"SLA","set":[1]}"#,
+        ] {
+            assert!(sweep_job_from(&req(bad)).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn responses_are_valid_json() {
+        let s = SimStats::default();
+        let job = sweep_job_from(&req(r#"{"verb":"sweep","app":"SLA"}"#)).unwrap();
+        let ok = ok_json(&job, "warm", &s);
+        let v = json::parse(&ok).unwrap();
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
+        assert_eq!(v.get("source").and_then(Json::as_str), Some("warm"));
+        assert_eq!(v.get("stats_digest").and_then(Json::as_str).map(str::len), Some(16));
+
+        let err = error_json("shed", "queue full; retry \"later\"");
+        let v = json::parse(&err).unwrap();
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("shed"));
+    }
+}

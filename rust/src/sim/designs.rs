@@ -193,6 +193,35 @@ impl Design {
         ]
     }
 
+    /// Every nameable design point — the lookup universe for the CLI and
+    /// the serve daemon's request parser.
+    pub fn all() -> [Design; 17] {
+        [
+            Design::base(),
+            Design::hw_bdi_mem(),
+            Design::hw_bdi(),
+            Design::caba(Algo::Bdi),
+            Design::caba(Algo::Fpc),
+            Design::caba(Algo::CPack),
+            Design::caba(Algo::BestOfAll),
+            Design::ideal_bdi(),
+            Design::caba_uncompressed_l2(),
+            Design::caba_direct_load(),
+            Design::caba_cache_compressed(2, 1),
+            Design::caba_cache_compressed(4, 1),
+            Design::caba_cache_compressed(1, 2),
+            Design::caba_cache_compressed(1, 4),
+            Design::caba_prefetch(),
+            Design::caba_memo(),
+            Design::caba_memo_hybrid(),
+        ]
+    }
+
+    /// Look a design up by its display name (case-insensitive).
+    pub fn by_name(name: &str) -> Option<Design> {
+        Design::all().iter().find(|d| d.name.eq_ignore_ascii_case(name)).copied()
+    }
+
     /// Does any compression happen at all?
     pub fn compression_enabled(&self) -> bool {
         self.mem_compression || self.icnt_compression || self.l1_tag_mult > 1 || self.l2_tag_mult > 1
@@ -241,6 +270,21 @@ mod tests {
         assert!(Design::caba_direct_load().l1_holds_compressed());
         assert!(Design::caba_cache_compressed(2, 1).l1_holds_compressed());
         assert_eq!(Design::caba_cache_compressed(1, 4).l2_tag_mult, 4);
+    }
+
+    #[test]
+    fn by_name_covers_all_and_is_case_insensitive() {
+        for d in Design::all() {
+            assert_eq!(Design::by_name(d.name).map(|x| x.name), Some(d.name));
+            assert_eq!(Design::by_name(&d.name.to_lowercase()).map(|x| x.name), Some(d.name));
+        }
+        // Names are unique — a duplicate would make by_name ambiguous.
+        let names: Vec<_> = Design::all().iter().map(|d| d.name).collect();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+        assert!(Design::by_name("no-such-design").is_none());
     }
 
     #[test]

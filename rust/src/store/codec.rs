@@ -1,0 +1,376 @@
+//! Bit-exact binary codec for [`SimStats`] — the payload format of the
+//! on-disk run store.
+//!
+//! Every field is written in declaration order as fixed-width
+//! little-endian words (`u64`, `f64` by bit pattern, `bool` as one byte),
+//! so `decode(encode(s)) == s` holds *bit-identically* — including the
+//! `f64` bus-busy counter, which round-trips through `to_bits`/`from_bits`
+//! rather than any textual form. The encoder destructures [`SimStats`] and
+//! every sub-struct exhaustively: adding a field to any of them is a
+//! compile error here, which is the prompt to bump
+//! [`super::STORE_VERSION`] (old entries then quarantine instead of
+//! mis-parsing).
+//!
+//! A `tests/proptests.rs` property pins the round-trip over randomized
+//! stats; `tests/store_faults.rs` pins the failure paths (truncation never
+//! mis-parses, always errors).
+
+use crate::stats::{
+    CabaStats, CacheStats, DramStats, EnergyEvents, IcntStats, IssueBreakdown, MdCacheStats,
+    SimStats, TraceStats,
+};
+use anyhow::{bail, Result};
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+/// A bounds-checked little-endian reader over the payload bytes.
+pub struct StatsReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> StatsReader<'a> {
+    pub fn new(buf: &'a [u8]) -> StatsReader<'a> {
+        StatsReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        if self.remaining() < 8 {
+            bail!(
+                "truncated stats payload: need 8 bytes at offset {}, only {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
+        self.pos += 8;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        if self.remaining() < 1 {
+            bail!("truncated stats payload: missing trailing bool at offset {}", self.pos);
+        }
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        match b {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("corrupt stats payload: bool byte is {other}, not 0/1"),
+        }
+    }
+}
+
+/// Serialize a full [`SimStats`] into `out`. Exhaustive destructuring —
+/// see the module docs for why.
+pub fn encode_stats(s: &SimStats, out: &mut Vec<u8>) {
+    let SimStats {
+        cycles,
+        warp_insts,
+        thread_insts,
+        issue,
+        l1,
+        l2,
+        dram,
+        icnt,
+        caba,
+        md,
+        energy_events,
+        trace,
+        ctas_launched,
+        finished,
+    } = s;
+    put_u64(out, *cycles);
+    put_u64(out, *warp_insts);
+    put_u64(out, *thread_insts);
+    let IssueBreakdown { active, compute_stall, memory_stall, data_stall, idle } = issue;
+    for v in [active, compute_stall, memory_stall, data_stall, idle] {
+        put_u64(out, *v);
+    }
+    for cache in [l1, l2] {
+        let CacheStats { accesses, hits, misses, evictions, writebacks } = cache;
+        for v in [accesses, hits, misses, evictions, writebacks] {
+            put_u64(out, *v);
+        }
+    }
+    let DramStats {
+        reads,
+        writes,
+        row_hits,
+        row_misses,
+        bursts,
+        bursts_uncompressed,
+        bus_busy_cycles,
+        md_accesses,
+    } = dram;
+    for v in [reads, writes, row_hits, row_misses, bursts, bursts_uncompressed] {
+        put_u64(out, *v);
+    }
+    put_f64(out, *bus_busy_cycles);
+    put_u64(out, *md_accesses);
+    let IcntStats { packets_fwd, packets_back, flits_fwd, flits_back } = icnt;
+    for v in [packets_fwd, packets_back, flits_fwd, flits_back] {
+        put_u64(out, *v);
+    }
+    let CabaStats {
+        decompress_warps,
+        compress_warps,
+        assist_insts_issued,
+        assist_insts_idle_slots,
+        compress_skipped,
+        throttled_deploys,
+        killed,
+        prefetches_issued,
+        memo_lookups,
+        memo_hits,
+        memo_alias_hits,
+        memo_installs,
+        memo_evictions,
+        memo_lookups_skipped,
+    } = caba;
+    for v in [
+        decompress_warps,
+        compress_warps,
+        assist_insts_issued,
+        assist_insts_idle_slots,
+        compress_skipped,
+        throttled_deploys,
+        killed,
+        prefetches_issued,
+        memo_lookups,
+        memo_hits,
+        memo_alias_hits,
+        memo_installs,
+        memo_evictions,
+        memo_lookups_skipped,
+    ] {
+        put_u64(out, *v);
+    }
+    let MdCacheStats { accesses, hits } = md;
+    put_u64(out, *accesses);
+    put_u64(out, *hits);
+    let EnergyEvents {
+        core_insts,
+        assist_insts,
+        l1_accesses,
+        l2_accesses,
+        icnt_flits,
+        dram_bursts,
+        dram_activates,
+        md_cache_accesses,
+        hw_compressor_ops,
+    } = energy_events;
+    for v in [
+        core_insts,
+        assist_insts,
+        l1_accesses,
+        l2_accesses,
+        icnt_flits,
+        dram_bursts,
+        dram_activates,
+        md_cache_accesses,
+        hw_compressor_ops,
+    ] {
+        put_u64(out, *v);
+    }
+    let TraceStats { accesses_recorded, payloads_recorded } = trace;
+    put_u64(out, *accesses_recorded);
+    put_u64(out, *payloads_recorded);
+    put_u64(out, *ctas_launched);
+    out.push(u8::from(*finished));
+}
+
+/// Deserialize a [`SimStats`] written by [`encode_stats`]. The whole
+/// payload must be consumed exactly — trailing bytes are corruption, not
+/// padding.
+pub fn decode_stats(buf: &[u8]) -> Result<SimStats> {
+    let mut r = StatsReader::new(buf);
+    let mut s = SimStats {
+        cycles: r.u64()?,
+        warp_insts: r.u64()?,
+        thread_insts: r.u64()?,
+        ..SimStats::default()
+    };
+    s.issue = IssueBreakdown {
+        active: r.u64()?,
+        compute_stall: r.u64()?,
+        memory_stall: r.u64()?,
+        data_stall: r.u64()?,
+        idle: r.u64()?,
+    };
+    let cache = |r: &mut StatsReader| -> Result<CacheStats> {
+        Ok(CacheStats {
+            accesses: r.u64()?,
+            hits: r.u64()?,
+            misses: r.u64()?,
+            evictions: r.u64()?,
+            writebacks: r.u64()?,
+        })
+    };
+    s.l1 = cache(&mut r)?;
+    s.l2 = cache(&mut r)?;
+    s.dram = DramStats {
+        reads: r.u64()?,
+        writes: r.u64()?,
+        row_hits: r.u64()?,
+        row_misses: r.u64()?,
+        bursts: r.u64()?,
+        bursts_uncompressed: r.u64()?,
+        bus_busy_cycles: r.f64()?,
+        md_accesses: r.u64()?,
+    };
+    s.icnt = IcntStats {
+        packets_fwd: r.u64()?,
+        packets_back: r.u64()?,
+        flits_fwd: r.u64()?,
+        flits_back: r.u64()?,
+    };
+    s.caba = CabaStats {
+        decompress_warps: r.u64()?,
+        compress_warps: r.u64()?,
+        assist_insts_issued: r.u64()?,
+        assist_insts_idle_slots: r.u64()?,
+        compress_skipped: r.u64()?,
+        throttled_deploys: r.u64()?,
+        killed: r.u64()?,
+        prefetches_issued: r.u64()?,
+        memo_lookups: r.u64()?,
+        memo_hits: r.u64()?,
+        memo_alias_hits: r.u64()?,
+        memo_installs: r.u64()?,
+        memo_evictions: r.u64()?,
+        memo_lookups_skipped: r.u64()?,
+    };
+    s.md = MdCacheStats { accesses: r.u64()?, hits: r.u64()? };
+    s.energy_events = EnergyEvents {
+        core_insts: r.u64()?,
+        assist_insts: r.u64()?,
+        l1_accesses: r.u64()?,
+        l2_accesses: r.u64()?,
+        icnt_flits: r.u64()?,
+        dram_bursts: r.u64()?,
+        dram_activates: r.u64()?,
+        md_cache_accesses: r.u64()?,
+        hw_compressor_ops: r.u64()?,
+    };
+    s.trace = TraceStats { accesses_recorded: r.u64()?, payloads_recorded: r.u64()? };
+    s.ctas_launched = r.u64()?;
+    s.finished = r.bool()?;
+    if r.remaining() != 0 {
+        bail!("corrupt stats payload: {} trailing bytes after the last field", r.remaining());
+    }
+    Ok(s)
+}
+
+/// FNV-1a 64 — the store's entry checksum. Not cryptographic (the threat
+/// model is torn writes and bit rot, not adversaries); chosen because it
+/// is tiny, dependency-free and byte-order independent.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Content digest of a stats object: FNV over its canonical encoding.
+/// The serve daemon returns this with every response so clients (and the
+/// fault-injection harness) can assert bit-identity without shipping the
+/// full struct.
+pub fn stats_digest(s: &SimStats) -> u64 {
+    let mut buf = Vec::with_capacity(512);
+    encode_stats(s, &mut buf);
+    fnv1a64(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_stats() -> SimStats {
+        let mut s = SimStats::default();
+        s.cycles = 123_456;
+        s.warp_insts = 9_876;
+        s.thread_insts = 314_159;
+        s.issue.active = 7;
+        s.issue.idle = 11;
+        s.l1.hits = 42;
+        s.l2.misses = 17;
+        s.dram.bursts = 1_000;
+        s.dram.bursts_uncompressed = 2_000;
+        s.dram.bus_busy_cycles = 1234.5678;
+        s.icnt.flits_back = 5;
+        s.caba.memo_hits = 99;
+        s.md.accesses = 3;
+        s.energy_events.hw_compressor_ops = 8;
+        s.trace.accesses_recorded = 1;
+        s.ctas_launched = 64;
+        s.finished = true;
+        s
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let s = busy_stats();
+        let mut buf = Vec::new();
+        encode_stats(&s, &mut buf);
+        assert_eq!(decode_stats(&buf).unwrap(), s);
+        // Deterministic encoding: same stats, same bytes.
+        let mut buf2 = Vec::new();
+        encode_stats(&s, &mut buf2);
+        assert_eq!(buf, buf2);
+    }
+
+    #[test]
+    fn truncation_errors_at_every_length() {
+        let mut buf = Vec::new();
+        encode_stats(&busy_stats(), &mut buf);
+        for cut in 0..buf.len() {
+            assert!(
+                decode_stats(&buf[..cut]).is_err(),
+                "decode of a {cut}-byte prefix must fail, not mis-parse"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut buf = Vec::new();
+        encode_stats(&busy_stats(), &mut buf);
+        buf.push(0);
+        assert!(decode_stats(&buf).is_err());
+    }
+
+    #[test]
+    fn bad_bool_rejected() {
+        let mut buf = Vec::new();
+        encode_stats(&busy_stats(), &mut buf);
+        *buf.last_mut().unwrap() = 2;
+        assert!(decode_stats(&buf).is_err());
+    }
+
+    #[test]
+    fn digest_tracks_content() {
+        let a = busy_stats();
+        let mut b = a.clone();
+        assert_eq!(stats_digest(&a), stats_digest(&b));
+        b.dram.bursts += 1;
+        assert_ne!(stats_digest(&a), stats_digest(&b));
+    }
+}

@@ -1,0 +1,167 @@
+//! Deterministic fault injection for the store and the sweep/serve
+//! execution paths.
+//!
+//! A [`FaultPlan`] names *which* operation fails and *how*: the Nth store
+//! write is torn or checksum-flipped, the Nth executed job panics or
+//! stalls. Indices are 0-based over the lifetime of the plan and counted
+//! with atomics, so a plan shared across worker threads still fires
+//! exactly once, at a deterministic global index — the fault-injection
+//! suites (`tests/store_faults.rs`, `tests/serve_faults.rs`), the
+//! `caba bench` serve family and the CI `serve-smoke` job all drive the
+//! same plans and assert the daemon survives every one of them.
+//!
+//! Faults are *silent at the injection site* by design: a torn write
+//! returns `Ok` exactly like a real `kill -9` mid-write would leave no
+//! error behind. The contract under test is that the *read* side
+//! quarantines the damage and the *execution* side converts the panic
+//! into a typed [`crate::sweep::JobError`] — never wrong data, never a
+//! process abort.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// What [`FaultPlan::on_put`] tells the store to do to this write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PutFault {
+    /// Write normally (temp file + fsync + atomic rename).
+    None,
+    /// Simulate a crash mid-write: only a truncated prefix of the entry
+    /// reaches the final path, bypassing the atomic-rename protocol (a
+    /// stand-in for pre-protocol writers and disk-level damage).
+    Torn,
+    /// Flip one payload bit *after* the checksum is computed, then write
+    /// atomically — the entry lands complete but fails verification.
+    FlipChecksum,
+}
+
+/// A deterministic fault schedule. Construct with [`FaultPlan::parse`]
+/// (`key=value` comma list, the repo's offline-friendly config idiom) or
+/// build in tests via [`FaultPlan::default`] plus the `*_at` fields.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Tear the Nth (0-based) store write.
+    pub torn_write_at: Option<u64>,
+    /// Corrupt the Nth store write so its checksum fails on read.
+    pub flip_checksum_at: Option<u64>,
+    /// Panic inside the Nth executed sweep job (caught by the engine and
+    /// surfaced as a typed `JobError`).
+    pub panic_at_job: Option<u64>,
+    /// Stall the Nth executed sweep job for [`FaultPlan::slow_job_ms`].
+    pub slow_at_job: Option<u64>,
+    /// Stall duration for `slow_at_job` (default 500 ms when unset).
+    pub slow_job_ms: u64,
+
+    puts_seen: AtomicU64,
+    jobs_seen: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a plan from a comma-separated `key=value` spec, e.g.
+    /// `panic_at_job=2,torn_write_at=0,slow_at_job=5,slow_job_ms=250`.
+    /// Unknown keys fail loudly — a typo'd fault spec that silently
+    /// injects nothing would make the harness lie.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("fault spec {part:?} is not key=value");
+            };
+            let n: u64 = v
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault spec {k}: bad value {v:?}"))?;
+            match k.trim() {
+                "torn_write_at" => plan.torn_write_at = Some(n),
+                "flip_checksum_at" => plan.flip_checksum_at = Some(n),
+                "panic_at_job" => plan.panic_at_job = Some(n),
+                "slow_at_job" => plan.slow_at_job = Some(n),
+                "slow_job_ms" => plan.slow_job_ms = n,
+                other => bail!(
+                    "unknown fault key {other:?} (torn_write_at|flip_checksum_at|panic_at_job|slow_at_job|slow_job_ms)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Total faults actually fired so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Called by the store before each write; returns the fault (if any)
+    /// scheduled for this write index.
+    pub fn on_put(&self) -> PutFault {
+        let i = self.puts_seen.fetch_add(1, Ordering::Relaxed);
+        if self.torn_write_at == Some(i) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return PutFault::Torn;
+        }
+        if self.flip_checksum_at == Some(i) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return PutFault::FlipChecksum;
+        }
+        PutFault::None
+    }
+
+    /// Called by the sweep engine immediately before executing a job.
+    /// May sleep (slow-job fault) or panic (worker-panic fault — the
+    /// caller's `catch_unwind` turns it into a `JobError`).
+    pub fn before_job(&self, app: &str, design: &str) {
+        let i = self.jobs_seen.fetch_add(1, Ordering::Relaxed);
+        if self.slow_at_job == Some(i) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            let ms = if self.slow_job_ms == 0 { 500 } else { self.slow_job_ms };
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        if self.panic_at_job == Some(i) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            panic!("injected fault: worker panic at job {i} ({app}, {design})");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let p = FaultPlan::parse("panic_at_job=2, torn_write_at=0,slow_job_ms=50").unwrap();
+        assert_eq!(p.panic_at_job, Some(2));
+        assert_eq!(p.torn_write_at, Some(0));
+        assert_eq!(p.slow_job_ms, 50);
+        assert_eq!(p.flip_checksum_at, None);
+        assert!(FaultPlan::parse("panic_at_job").is_err());
+        assert!(FaultPlan::parse("nope=1").is_err());
+        assert!(FaultPlan::parse("panic_at_job=x").is_err());
+        // Empty spec = no faults.
+        assert_eq!(FaultPlan::parse("").unwrap().injected(), 0);
+    }
+
+    #[test]
+    fn put_faults_fire_once_at_index() {
+        let p = FaultPlan::parse("torn_write_at=1").unwrap();
+        assert_eq!(p.on_put(), PutFault::None);
+        assert_eq!(p.on_put(), PutFault::Torn);
+        assert_eq!(p.on_put(), PutFault::None);
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn job_panic_fires_at_index() {
+        let p = FaultPlan::parse("panic_at_job=1").unwrap();
+        p.before_job("A", "Base"); // job 0: no fault
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.before_job("A", "Base")
+        }));
+        assert!(caught.is_err());
+        assert_eq!(p.injected(), 1);
+        p.before_job("A", "Base"); // job 2: no fault again
+    }
+}

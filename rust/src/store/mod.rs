@@ -1,0 +1,588 @@
+//! # The crash-safe on-disk run store
+//!
+//! The sweep engine's [`crate::sweep::RunCache`] is sharded but
+//! in-process: it dies with the run, so every `caba fig` invocation and
+//! every serve-daemon restart re-simulates from scratch. This module
+//! promotes it to a **persistent content-addressed store**: one file per
+//! completed run, keyed by the existing [`crate::sweep::JobKey`]
+//! (app, design, full-config fingerprint, scale bits, trace digest).
+//! Because the key already digests *every* simulated parameter — and the
+//! sweep constructors strip run-control knobs like `trace_record` and the
+//! telemetry settings — a store entry is valid forever: same key, same
+//! bit-identical [`SimStats`], across processes and PRs.
+//!
+//! ## Durability contract
+//!
+//! Writes are **atomic or invisible**:
+//!
+//! 1. encode the full entry (header + payload + checksum) in memory;
+//! 2. write it to `<name>.tmp.<pid>.<seq>` in the store directory;
+//! 3. `fsync` the temp file;
+//! 4. atomically `rename` onto the final `<name>.run` path;
+//! 5. `fsync` the directory so the rename itself is durable.
+//!
+//! A `kill -9` at any point leaves either the old state or a stale
+//! `*.tmp.*` file, which [`RunStore::open`] deletes (counted as
+//! `temp_cleaned`) — never a half-written entry under the final name.
+//!
+//! ## Read-side skepticism
+//!
+//! The store trusts nothing it reads. Every entry carries a magic tag, a
+//! format version, the full key it was written under, and an FNV-1a64
+//! checksum over everything that precedes it. Any mismatch — truncation,
+//! bit rot, a stale format version, a file renamed onto the wrong key —
+//! **quarantines** the entry: it is renamed aside
+//! (`<name>.quarantined.<pid>.<seq>`), counted, and reported as a miss so
+//! the caller recomputes. Corruption can cost a re-simulation; it can
+//! never produce wrong stats, and it is never fatal.
+//!
+//! The entry payload is the bit-exact [`codec`] encoding of `SimStats`;
+//! [`fault`] provides the deterministic fault-injection plans the test
+//! suites and `caba bench` use to prove all of the above.
+
+pub mod codec;
+pub mod fault;
+
+pub use codec::{decode_stats, encode_stats, fnv1a64, stats_digest};
+pub use fault::{FaultPlan, PutFault};
+
+use crate::stats::SimStats;
+use crate::sweep::JobKey;
+use anyhow::{bail, Context, Result};
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// On-disk entry format version. Bump whenever the entry layout *or* the
+/// stats payload codec changes shape — old entries then quarantine on
+/// read (and are recomputed) instead of mis-parsing.
+pub const STORE_VERSION: u32 = 1;
+
+/// Entry magic: identifies run-store files regardless of name.
+const MAGIC: &[u8; 8] = b"CABARUN1";
+
+/// Extension of committed entries.
+const ENTRY_EXT: &str = ".run";
+
+/// Monotonic counters describing a store's activity since open.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    /// Entries durably committed.
+    pub puts: u64,
+    /// Reads answered from a valid on-disk entry.
+    pub warm_hits: u64,
+    /// Reads that found no entry (including just-quarantined ones).
+    pub misses: u64,
+    /// Entries renamed aside because they failed validation.
+    pub quarantined: u64,
+    /// Stale `*.tmp.*` files removed by [`RunStore::open`].
+    pub temp_cleaned: u64,
+    /// Writes that failed with an I/O error (non-fatal to callers that
+    /// treat the store as a cache).
+    pub put_errors: u64,
+}
+
+/// A crash-safe, content-addressed `JobKey → SimStats` store rooted at
+/// one directory. All methods are `&self` and thread-safe: concurrent
+/// writers racing on the same key each perform an independent atomic
+/// rename, and since identical keys imply bit-identical payloads, either
+/// winner leaves the same bytes.
+pub struct RunStore {
+    dir: PathBuf,
+    fault: Option<Arc<FaultPlan>>,
+    seq: AtomicU64,
+    puts: AtomicU64,
+    warm_hits: AtomicU64,
+    misses: AtomicU64,
+    quarantined: AtomicU64,
+    temp_cleaned: AtomicU64,
+    put_errors: AtomicU64,
+}
+
+impl RunStore {
+    /// Open (creating if needed) a store at `dir`, sweeping any stale
+    /// temp files left by crashed writers.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<RunStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("run store: create {}", dir.display()))?;
+        let store = RunStore {
+            dir,
+            fault: None,
+            seq: AtomicU64::new(0),
+            puts: AtomicU64::new(0),
+            warm_hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            temp_cleaned: AtomicU64::new(0),
+            put_errors: AtomicU64::new(0),
+        };
+        store.clean_stale_temps()?;
+        Ok(store)
+    }
+
+    /// Attach a fault-injection plan (tests, `caba bench`, `caba serve
+    /// --fault`). Store writes then consult [`FaultPlan::on_put`].
+    pub fn with_fault(mut self, fault: Arc<FaultPlan>) -> RunStore {
+        self.fault = Some(fault);
+        self
+    }
+
+    /// The directory this store persists into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Snapshot of the activity counters.
+    pub fn counters(&self) -> StoreCounters {
+        StoreCounters {
+            puts: self.puts.load(Ordering::Relaxed),
+            warm_hits: self.warm_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            temp_cleaned: self.temp_cleaned.load(Ordering::Relaxed),
+            put_errors: self.put_errors.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Committed entries currently on disk (diagnostics/tests; excludes
+    /// quarantined and temp files).
+    pub fn len(&self) -> usize {
+        let Ok(rd) = fs::read_dir(&self.dir) else { return 0 };
+        rd.filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(ENTRY_EXT))
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up `key`. `None` means "recompute" — covers both a genuinely
+    /// missing entry and one that failed validation (which is quarantined
+    /// as a side effect). Never returns stats that failed any check.
+    pub fn get(&self, key: &JobKey) -> Option<SimStats> {
+        let path = self.entry_path(key);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            Err(_) => {
+                // Unreadable (permissions, I/O error): treat as a miss
+                // without quarantining — the file may recover.
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match parse_entry(&bytes, key) {
+            Ok(stats) => {
+                self.warm_hits.fetch_add(1, Ordering::Relaxed);
+                Some(stats)
+            }
+            Err(_) => {
+                self.quarantine(&path);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Durably store `key → stats` via the temp + fsync + rename
+    /// protocol. Errors are returned (and counted) but callers treating
+    /// the store as a cache may ignore them — a failed put only costs a
+    /// future recompute.
+    pub fn put(&self, key: &JobKey, stats: &SimStats) -> Result<()> {
+        let mut bytes = encode_entry(key, stats);
+        let final_path = self.entry_path(key);
+
+        match self.fault.as_deref().map_or(PutFault::None, FaultPlan::on_put) {
+            PutFault::None => {}
+            PutFault::Torn => {
+                // Simulated crash mid-write: a truncated prefix lands on
+                // the final path directly (no temp, no fsync) and the
+                // writer "dies" — reported as success, like a real crash
+                // reports nothing at all.
+                let _ = fs::write(&final_path, &bytes[..bytes.len() / 2]);
+                return Ok(());
+            }
+            PutFault::FlipChecksum => {
+                // Corrupt one payload byte *after* the checksum was
+                // computed, then commit atomically: the entry arrives
+                // whole but fails verification on read.
+                let payload_byte = bytes.len() - 9; // last payload byte (before 8-byte checksum)
+                bytes[payload_byte] ^= 0x01;
+            }
+        }
+
+        let res = self.put_atomic(&final_path, &bytes);
+        match res {
+            Ok(()) => {
+                self.puts.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                self.put_errors.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    fn put_atomic(&self, final_path: &Path, bytes: &[u8]) -> Result<()> {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let tmp_name = format!(
+            "{}.tmp.{}.{}",
+            final_path.file_name().unwrap_or_default().to_string_lossy(),
+            std::process::id(),
+            seq
+        );
+        let tmp_path = self.dir.join(tmp_name);
+        let write = (|| -> Result<()> {
+            let mut f = File::create(&tmp_path)
+                .with_context(|| format!("run store: create {}", tmp_path.display()))?;
+            f.write_all(bytes).context("run store: write entry")?;
+            f.sync_all().context("run store: fsync entry")?;
+            drop(f);
+            fs::rename(&tmp_path, final_path)
+                .with_context(|| format!("run store: commit {}", final_path.display()))?;
+            // Make the rename itself durable. Best-effort: some
+            // filesystems reject fsync on directories — the entry is
+            // still atomic, just not crash-durable there.
+            if let Ok(d) = File::open(&self.dir) {
+                let _ = d.sync_all();
+            }
+            Ok(())
+        })();
+        if write.is_err() {
+            let _ = fs::remove_file(&tmp_path);
+        }
+        write
+    }
+
+    /// Rename a failed entry aside so it is preserved for inspection but
+    /// never consulted again.
+    fn quarantine(&self, path: &Path) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let q_name = format!(
+            "{}.quarantined.{}.{}",
+            path.file_name().unwrap_or_default().to_string_lossy(),
+            std::process::id(),
+            seq
+        );
+        // A concurrent quarantine of the same file can win the rename
+        // race; either way the bad entry is gone from the read path.
+        let _ = fs::rename(path, self.dir.join(q_name));
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn clean_stale_temps(&self) -> Result<()> {
+        let rd = fs::read_dir(&self.dir)
+            .with_context(|| format!("run store: scan {}", self.dir.display()))?;
+        for entry in rd.filter_map(|e| e.ok()) {
+            let name = entry.file_name();
+            if name.to_string_lossy().contains(".tmp.")
+                && fs::remove_file(entry.path()).is_ok()
+            {
+                self.temp_cleaned.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    /// Final path of `key`'s entry. The name is human-greppable
+    /// (`app__design__hexes.run`) but only advisory: the key embedded in
+    /// the entry is what [`parse_entry`] actually verifies.
+    fn entry_path(&self, key: &JobKey) -> PathBuf {
+        let sane = |s: &str| -> String {
+            s.chars()
+                .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+                .collect()
+        };
+        let (app, design, fp, scale, digest) = key;
+        self.dir.join(format!(
+            "{}__{}__{fp:016x}_{scale:016x}_{digest:016x}{ENTRY_EXT}",
+            sane(app),
+            sane(design)
+        ))
+    }
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode a complete store entry:
+/// `MAGIC · version:u32 · app_len:u16 · app · design_len:u16 · design ·
+/// fp:u64 · scale:u64 · digest:u64 · payload_len:u32 · payload ·
+/// fnv1a64(everything preceding):u64` — all little-endian.
+pub fn encode_entry(key: &JobKey, stats: &SimStats) -> Vec<u8> {
+    let (app, design, fp, scale, digest) = key;
+    let mut payload = Vec::with_capacity(512);
+    encode_stats(stats, &mut payload);
+
+    let mut out = Vec::with_capacity(payload.len() + 96);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, STORE_VERSION);
+    put_u16(&mut out, app.len() as u16);
+    out.extend_from_slice(app.as_bytes());
+    put_u16(&mut out, design.len() as u16);
+    out.extend_from_slice(design.as_bytes());
+    put_u64(&mut out, *fp);
+    put_u64(&mut out, *scale);
+    put_u64(&mut out, *digest);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    let sum = fnv1a64(&out);
+    put_u64(&mut out, sum);
+    out
+}
+
+/// Bounds-checked little-endian reader for the entry header.
+struct EntryReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> EntryReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!(
+                "truncated entry: need {n} bytes at offset {}, only {} left",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Validate and decode an entry read from disk, in strictly escalating
+/// order of trust: magic → version → checksum → embedded-key match →
+/// payload decode → exact-length consumption. Any failure is corruption
+/// (or a stale format) and the caller quarantines the file.
+pub fn parse_entry(bytes: &[u8], key: &JobKey) -> Result<SimStats> {
+    let mut r = EntryReader { buf: bytes, pos: 0 };
+    if r.take(MAGIC.len())? != MAGIC {
+        bail!("bad magic: not a run-store entry");
+    }
+    let version = r.u32()?;
+    if version != STORE_VERSION {
+        bail!("entry version {version}, this build reads {STORE_VERSION}");
+    }
+    if bytes.len() < r.pos + 8 {
+        bail!("truncated entry: missing checksum");
+    }
+    let body = &bytes[..bytes.len() - 8];
+    let stored_sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let actual_sum = fnv1a64(body);
+    if stored_sum != actual_sum {
+        bail!("checksum mismatch: stored {stored_sum:016x}, computed {actual_sum:016x}");
+    }
+
+    let app_len = r.u16()? as usize;
+    let app = r.take(app_len)?;
+    let design_len = r.u16()? as usize;
+    let design = r.take(design_len)?;
+    let fp = r.u64()?;
+    let scale = r.u64()?;
+    let digest = r.u64()?;
+    let (want_app, want_design, want_fp, want_scale, want_digest) = key;
+    if app != want_app.as_bytes()
+        || design != want_design.as_bytes()
+        || fp != *want_fp
+        || scale != *want_scale
+        || digest != *want_digest
+    {
+        bail!(
+            "key mismatch: entry written for ({}, {}), requested ({want_app}, {want_design})",
+            String::from_utf8_lossy(app),
+            String::from_utf8_lossy(design),
+        );
+    }
+
+    let payload_len = r.u32()? as usize;
+    let payload = r.take(payload_len)?;
+    if r.pos != body.len() {
+        bail!("corrupt entry: {} stray bytes between payload and checksum", body.len() - r.pos);
+    }
+    decode_stats(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("caba_store_{}_{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        p
+    }
+
+    fn a_key() -> JobKey {
+        ("SLA", "CABA-BDI", 0xdead_beef_0000_0001, 0.01f64.to_bits(), 0)
+    }
+
+    fn a_stats() -> SimStats {
+        let mut s = SimStats::default();
+        s.cycles = 42_000;
+        s.warp_insts = 1234;
+        s.dram.bus_busy_cycles = 98.75;
+        s.finished = true;
+        s
+    }
+
+    #[test]
+    fn put_get_roundtrip_bit_identical() {
+        let dir = tmp_store("roundtrip");
+        let store = RunStore::open(&dir).unwrap();
+        let (key, stats) = (a_key(), a_stats());
+        assert_eq!(store.get(&key), None);
+        store.put(&key, &stats).unwrap();
+        assert_eq!(store.get(&key), Some(stats));
+        let c = store.counters();
+        assert_eq!((c.puts, c.warm_hits, c.misses, c.quarantined), (1, 1, 1, 0));
+
+        // A fresh open over the same directory sees the entry.
+        let store2 = RunStore::open(&dir).unwrap();
+        assert_eq!(store2.get(&key), Some(a_stats()));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_entry_quarantines() {
+        let dir = tmp_store("trunc");
+        let store = RunStore::open(&dir).unwrap();
+        let key = a_key();
+        store.put(&key, &a_stats()).unwrap();
+        let path = store.entry_path(&key);
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+
+        assert_eq!(store.get(&key), None, "truncated entry must read as a miss");
+        assert_eq!(store.counters().quarantined, 1);
+        assert!(!path.exists(), "bad entry must be renamed aside");
+        // Recompute + re-put heals the slot.
+        store.put(&key, &a_stats()).unwrap();
+        assert_eq!(store.get(&key), Some(a_stats()));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_mismatch_quarantines_even_with_valid_checksum() {
+        let dir = tmp_store("version");
+        let store = RunStore::open(&dir).unwrap();
+        let key = a_key();
+        store.put(&key, &a_stats()).unwrap();
+        let path = store.entry_path(&key);
+        let mut bytes = fs::read(&path).unwrap();
+        // Bump the version field and recompute the checksum so *only* the
+        // version check can reject it.
+        bytes[8..12].copy_from_slice(&(STORE_VERSION + 1).to_le_bytes());
+        let body_len = bytes.len() - 8;
+        let sum = fnv1a64(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        fs::write(&path, &bytes).unwrap();
+
+        assert_eq!(store.get(&key), None);
+        assert_eq!(store.counters().quarantined, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_mismatch_quarantines() {
+        let dir = tmp_store("keymatch");
+        let store = RunStore::open(&dir).unwrap();
+        let key = a_key();
+        store.put(&key, &a_stats()).unwrap();
+        // Copy the (valid) entry onto a different key's path — e.g. a
+        // file restored to the wrong name.
+        let other: JobKey = ("SLA", "Base", 0x1111, 0.01f64.to_bits(), 0);
+        fs::copy(store.entry_path(&key), store.entry_path(&other)).unwrap();
+
+        assert_eq!(store.get(&other), None, "entry for another key must never be served");
+        assert_eq!(store.counters().quarantined, 1);
+        assert_eq!(store.get(&key), Some(a_stats()), "original entry unaffected");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_cleans_stale_temp_files() {
+        let dir = tmp_store("temps");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("x.run.tmp.999.0"), b"half-written junk").unwrap();
+        fs::write(dir.join("y.run.tmp.999.1"), b"").unwrap();
+        let store = RunStore::open(&dir).unwrap();
+        assert_eq!(store.counters().temp_cleaned, 2);
+        assert_eq!(store.len(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_write_fault_is_quarantined_on_read() {
+        let dir = tmp_store("torn");
+        let fault = Arc::new(FaultPlan::parse("torn_write_at=0").unwrap());
+        let store = RunStore::open(&dir).unwrap().with_fault(Arc::clone(&fault));
+        let key = a_key();
+        store.put(&key, &a_stats()).unwrap(); // "succeeds" like a crash would
+        assert_eq!(fault.injected(), 1);
+        assert_eq!(store.get(&key), None, "torn entry must not parse");
+        assert_eq!(store.counters().quarantined, 1);
+        // Second put has no fault scheduled; store heals.
+        store.put(&key, &a_stats()).unwrap();
+        assert_eq!(store.get(&key), Some(a_stats()));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_flip_fault_is_quarantined_on_read() {
+        let dir = tmp_store("flip");
+        let fault = Arc::new(FaultPlan::parse("flip_checksum_at=0").unwrap());
+        let store = RunStore::open(&dir).unwrap().with_fault(fault);
+        let key = a_key();
+        store.put(&key, &a_stats()).unwrap();
+        assert_eq!(store.get(&key), None, "checksum-flipped entry must not parse");
+        assert_eq!(store.counters().quarantined, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_writers_same_key_converge() {
+        let dir = tmp_store("race");
+        let store = Arc::new(RunStore::open(&dir).unwrap());
+        let key = a_key();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let store = Arc::clone(&store);
+                s.spawn(move || store.put(&key, &a_stats()).unwrap());
+            }
+        });
+        assert_eq!(store.get(&key), Some(a_stats()));
+        assert_eq!(store.len(), 1, "same key, same bytes: one entry, no temp litter");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

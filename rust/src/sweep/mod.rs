@@ -47,17 +47,45 @@
 //!
 //! `tests/integration_sweep.rs` asserts `--jobs 1` ≡ `--jobs 4` on a small
 //! matrix, field for field.
+//!
+//! ## Fault tolerance
+//!
+//! The engine is the execution substrate of the `caba serve` daemon, so
+//! one bad job must never take down the process or poison shared state:
+//!
+//! * [`SweepJob::execute`] runs under `catch_unwind` and returns a typed
+//!   [`JobError`] (app, design, cause) — a panicking simulation (or an
+//!   injected [`crate::store::FaultPlan`] fault) becomes an error the
+//!   caller chooses how to handle, never an abort;
+//! * every [`RunCache`] lock recovers from poisoning
+//!   (`PoisonError::into_inner`): the cache only ever holds fully
+//!   constructed `SimStats` values inserted under a brief lock, so a
+//!   worker that panicked *while holding* a shard lock cannot have left a
+//!   torn entry behind — recovering is safe, and the process-wide
+//!   [`shared_cache`] stays usable for figure regeneration;
+//! * [`SweepEngine::run`] is **fail-fast** (first error aborts the matrix
+//!   and is returned), [`SweepEngine::run_collect`] is
+//!   **collect-and-report** (every point gets its own `Result` — the
+//!   daemon's policy, where one client's bad request must not starve the
+//!   others). Errors are never cached: a failed key stays cold and is
+//!   retried on the next request.
+//!
+//! With [`RunCache::with_store`] the cache becomes read-through /
+//! write-through against the crash-safe on-disk [`crate::store::RunStore`],
+//! making sweep results persistent across processes.
 
 use crate::config::SimConfig;
 use crate::sim::designs::Design;
 use crate::sim::Simulator;
 use crate::stats::SimStats;
+use crate::store::{FaultPlan, RunStore, StoreCounters};
 use crate::trace::replay::TraceData;
 use crate::workload::apps::AppSpec;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 
 /// One point of an evaluation sweep: a complete, self-contained
 /// simulation request — synthetic (`app` drives generation) or
@@ -86,6 +114,38 @@ pub struct SweepJob {
 /// collision between two *different* configs/traces is a 64-bit hash
 /// collision — negligible against what a process ever sweeps.
 pub type JobKey = (&'static str, &'static str, u64, u64, u64);
+
+/// A sweep point that failed: which point, and why. Carried as a value
+/// (not a panic) so one bad job in a matrix — a corrupt trace, an
+/// injected fault, a simulator bug — is reportable per-point by the
+/// daemon and fail-fast-able by `caba sweep`, without tearing down the
+/// engine or poisoning the shared cache.
+#[derive(Clone, Debug)]
+pub struct JobError {
+    pub app: &'static str,
+    pub design: &'static str,
+    pub cause: String,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sweep job ({}, {}) failed: {}", self.app, self.design, self.cause)
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Best-effort extraction of a panic payload's message (`panic!` with a
+/// `&str` or a formatted `String` covers everything this crate raises).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panicked with a non-string payload".to_string()
+    }
+}
 
 impl SweepJob {
     pub fn new(app: &'static AppSpec, design: Design, mut cfg: SimConfig, scale: f64) -> SweepJob {
@@ -141,7 +201,10 @@ impl SweepJob {
         }
     }
 
-    fn key(&self) -> JobKey {
+    /// The cache/store key of this point. Public because the serve
+    /// daemon dedups in-flight requests and addresses the on-disk store
+    /// by this key.
+    pub fn key(&self) -> JobKey {
         (
             self.app.name,
             self.effective_design().name,
@@ -151,15 +214,42 @@ impl SweepJob {
         )
     }
 
-    fn execute(&self) -> SimStats {
-        match &self.trace {
-            Some(t) => Simulator::from_trace(self.cfg.clone(), self.effective_design(), Arc::clone(t))
-                .unwrap_or_else(|e| {
-                    panic!("trace-driven sweep job ({}, {}): {e:#}", self.app.name, self.design.name)
-                })
-                .run(),
-            None => Simulator::new(self.cfg.clone(), self.effective_design(), self.app, self.scale)
-                .run(),
+    /// Run the simulation for this point. Any failure — a trace that no
+    /// longer loads, a panic anywhere inside the simulator, an injected
+    /// `fault` — comes back as a typed [`JobError`]; this method never
+    /// unwinds into the caller.
+    fn execute(&self, fault: Option<&FaultPlan>) -> Result<SimStats, JobError> {
+        let err = |cause: String| JobError {
+            app: self.app.name,
+            design: self.design.name,
+            cause,
+        };
+        let run = || -> Result<SimStats, JobError> {
+            if let Some(f) = fault {
+                f.before_job(self.app.name, self.design.name);
+            }
+            match &self.trace {
+                Some(t) => {
+                    Simulator::from_trace(self.cfg.clone(), self.effective_design(), Arc::clone(t))
+                        .map_err(|e| err(format!("trace replay setup: {e:#}")))
+                        .map(Simulator::run)
+                }
+                None => Ok(Simulator::new(
+                    self.cfg.clone(),
+                    self.effective_design(),
+                    self.app,
+                    self.scale,
+                )
+                .run()),
+            }
+        };
+        // `AssertUnwindSafe` is justified: `run` owns its Simulator
+        // outright, and on unwind nothing it touched survives — the only
+        // shared structure (the cache) is written strictly *after* a
+        // successful return.
+        match std::panic::catch_unwind(AssertUnwindSafe(run)) {
+            Ok(res) => res,
+            Err(payload) => Err(err(panic_message(payload))),
         }
     }
 }
@@ -171,14 +261,23 @@ const N_SHARDS: usize = 16;
 
 /// A sharded run cache: `key → SimStats`, split over [`N_SHARDS`]
 /// independently locked maps. Locks are held only for single map
-/// operations (simulations run entirely outside them).
+/// operations (simulations run entirely outside them), and every lock
+/// recovers from poisoning — a panicked worker can only have completed
+/// or not-started a whole-value insert, so the map is always coherent.
+///
+/// With [`RunCache::with_store`] the cache is additionally backed by a
+/// persistent [`RunStore`]: reads fall through to disk (populating the
+/// memory shard), writes go through to disk (store I/O errors are
+/// counted by the store and swallowed — the cache contract is
+/// best-effort persistence, never a failed insert).
 pub struct RunCache {
     shards: [Mutex<HashMap<JobKey, SimStats>>; N_SHARDS],
+    store: Option<Arc<RunStore>>,
 }
 
 impl Default for RunCache {
     fn default() -> Self {
-        RunCache { shards: std::array::from_fn(|_| Mutex::new(HashMap::new())) }
+        RunCache { shards: std::array::from_fn(|_| Mutex::new(HashMap::new())), store: None }
     }
 }
 
@@ -187,31 +286,90 @@ impl RunCache {
         RunCache::default()
     }
 
+    /// A cache persisted through `store` (read-through + write-through).
+    pub fn with_store(store: Arc<RunStore>) -> RunCache {
+        RunCache { store: Some(store), ..RunCache::default() }
+    }
+
+    /// The backing store, if any (the serve daemon reports its counters).
+    pub fn store(&self) -> Option<&Arc<RunStore>> {
+        self.store.as_ref()
+    }
+
+    /// Activity counters of the backing store, if any.
+    pub fn store_counters(&self) -> Option<StoreCounters> {
+        self.store.as_ref().map(|s| s.counters())
+    }
+
     fn shard(&self, key: &JobKey) -> &Mutex<HashMap<JobKey, SimStats>> {
         let mut h = std::collections::hash_map::DefaultHasher::new();
         key.hash(&mut h);
         &self.shards[(h.finish() as usize) % N_SHARDS]
     }
 
+    /// Lock a shard, recovering from poisoning (see the type docs for
+    /// why recovery is safe here).
+    fn locked(&self, key: &JobKey) -> MutexGuard<'_, HashMap<JobKey, SimStats>> {
+        self.shard(key).lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     pub fn get(&self, key: &JobKey) -> Option<SimStats> {
-        self.shard(key).lock().unwrap().get(key).cloned()
+        if let Some(s) = self.locked(key).get(key).cloned() {
+            return Some(s);
+        }
+        // Read-through: a store hit (which survives the store's own
+        // checksum/version/key validation) warms the memory shard so the
+        // disk is touched once per key per process.
+        let stats = self.store.as_ref()?.get(key)?;
+        self.locked(key).insert(*key, stats.clone());
+        Some(stats)
     }
 
     pub fn insert(&self, key: JobKey, stats: SimStats) {
-        self.shard(&key).lock().unwrap().insert(key, stats);
+        self.locked(&key).insert(key, stats.clone());
+        if let Some(store) = &self.store {
+            // Write-through, best-effort: a failed put is counted by the
+            // store (`put_errors`) and costs at most a future recompute.
+            let _ = store.put(&key, &stats);
+        }
     }
 
+    /// Whether `key` would hit. Exactly as strict as [`RunCache::get`]:
+    /// when store-backed this *reads* (and validates) the entry, so a
+    /// corrupt on-disk entry never counts as present — `contains`
+    /// followed by `get` cannot go from `true` to `None`.
     pub fn contains(&self, key: &JobKey) -> bool {
-        self.shard(key).lock().unwrap().contains_key(key)
+        if self.store.is_none() {
+            return self.locked(key).contains_key(key);
+        }
+        self.get(key).is_some()
     }
 
-    /// Total cached entries (diagnostics).
+    /// Total **in-memory** cached entries (diagnostics; store-resident
+    /// entries not yet read through are not counted).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(PoisonError::into_inner).len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Poison the shard holding `key` by panicking a thread inside its
+    /// critical section. Test-only hook for proving poison recovery.
+    #[doc(hidden)]
+    pub fn poison_for_tests(&self, key: &JobKey) {
+        let shard = self.shard(key);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let _guard = shard.lock().unwrap_or_else(PoisonError::into_inner);
+                panic!("poisoning shard for test");
+            });
+            assert!(h.join().is_err());
+        });
     }
 }
 
@@ -236,18 +394,33 @@ pub fn resolve_jobs(jobs: usize) -> usize {
 pub struct SweepEngine {
     jobs: usize,
     cache: Arc<RunCache>,
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl SweepEngine {
     /// An engine with its own private cache (tests, one-shot sweeps).
     pub fn new(jobs: usize) -> SweepEngine {
-        SweepEngine { jobs: resolve_jobs(jobs), cache: Arc::new(RunCache::new()) }
+        Self::with_cache(jobs, Arc::new(RunCache::new()))
     }
 
     /// An engine backed by the process-wide [`shared_cache`] (the figure
     /// regenerators, so figures sharing runs don't re-simulate).
     pub fn shared(jobs: usize) -> SweepEngine {
-        SweepEngine { jobs: resolve_jobs(jobs), cache: Arc::clone(shared_cache()) }
+        Self::with_cache(jobs, Arc::clone(shared_cache()))
+    }
+
+    /// An engine over an explicit cache — e.g. a store-backed
+    /// [`RunCache::with_store`], shared between `caba sweep` runs and the
+    /// serve daemon's workers.
+    pub fn with_cache(jobs: usize, cache: Arc<RunCache>) -> SweepEngine {
+        SweepEngine { jobs: resolve_jobs(jobs), cache, fault: None }
+    }
+
+    /// Attach a fault-injection plan: [`FaultPlan::before_job`] runs
+    /// ahead of every executed (non-cached) job.
+    pub fn with_fault(mut self, fault: Arc<FaultPlan>) -> SweepEngine {
+        self.fault = Some(fault);
+        self
     }
 
     /// Worker count this engine resolves to.
@@ -261,14 +434,15 @@ impl SweepEngine {
         self.cache.len()
     }
 
-    /// Run every job, returning stats in request order. Duplicate and
-    /// already-cached points are simulated exactly once; the misses run on
-    /// a scoped worker pool of `min(jobs, misses)` threads.
-    pub fn run(&self, jobs: &[SweepJob]) -> Vec<SimStats> {
-        let keys: Vec<JobKey> = jobs.iter().map(SweepJob::key).collect();
+    /// This engine's cache (the serve daemon reads store counters off it).
+    pub fn cache(&self) -> &Arc<RunCache> {
+        &self.cache
+    }
 
-        // Dedup the misses, preserving first-seen order (keeps serial
-        // execution order identical to the pre-engine code paths).
+    /// Dedup `jobs` against the cache, preserving first-seen order (keeps
+    /// serial execution order identical to the pre-engine code paths).
+    fn plan<'j>(&self, jobs: &'j [SweepJob]) -> (Vec<JobKey>, Vec<&'j SweepJob>, Vec<JobKey>) {
+        let keys: Vec<JobKey> = jobs.iter().map(SweepJob::key).collect();
         let mut todo: Vec<&SweepJob> = Vec::new();
         let mut todo_keys: Vec<JobKey> = Vec::new();
         for (job, key) in jobs.iter().zip(&keys) {
@@ -277,48 +451,123 @@ impl SweepEngine {
                 todo_keys.push(*key);
             }
         }
+        (keys, todo, todo_keys)
+    }
 
+    /// Execute the deduped misses on a scoped worker pool of
+    /// `min(jobs, misses)` threads, publishing successes into the cache
+    /// and errors into the returned list (indexed into `todo`). When
+    /// `fail_fast` is set, the first error stops workers from *claiming*
+    /// further jobs (in-flight simulations still finish and are cached).
+    fn execute_todo(
+        &self,
+        todo: &[&SweepJob],
+        todo_keys: &[JobKey],
+        fail_fast: bool,
+    ) -> Vec<(usize, JobError)> {
+        let errors: Mutex<Vec<(usize, JobError)>> = Mutex::new(Vec::new());
+        let abort = AtomicBool::new(false);
+        let fault = self.fault.as_deref();
         let workers = self.jobs.min(todo.len()).max(1);
+        let run_one = |i: usize| match todo[i].execute(fault) {
+            Ok(stats) => self.cache.insert(todo_keys[i], stats),
+            Err(e) => {
+                errors.lock().unwrap_or_else(PoisonError::into_inner).push((i, e));
+                if fail_fast {
+                    abort.store(true, Ordering::Relaxed);
+                }
+            }
+        };
         if workers <= 1 {
-            for (job, key) in todo.iter().zip(&todo_keys) {
-                self.cache.insert(*key, job.execute());
+            for i in 0..todo.len() {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                run_one(i);
             }
         } else {
             // Scoped worker pool over an atomic work index: each worker
-            // claims the next un-run job, simulates it without holding any
-            // lock, and publishes the result under its precomputed key.
+            // claims the next un-run job, simulates it without holding
+            // any lock, and publishes the result under its precomputed
+            // key.
             let next = AtomicUsize::new(0);
-            let cache = &self.cache;
-            let todo = &todo;
-            let todo_keys = &todo_keys;
             std::thread::scope(|s| {
                 for _ in 0..workers {
                     s.spawn(|| loop {
+                        if abort.load(Ordering::Relaxed) {
+                            break;
+                        }
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= todo.len() {
                             break;
                         }
-                        let stats = todo[i].execute();
-                        cache.insert(todo_keys[i], stats);
+                        run_one(i);
                     });
                 }
             });
         }
+        let mut errs = errors.into_inner().unwrap_or_else(PoisonError::into_inner);
+        errs.sort_by_key(|(i, _)| *i);
+        errs
+    }
 
-        keys.iter()
+    /// Run every job, returning stats in request order. Duplicate and
+    /// already-cached points are simulated exactly once. **Fail-fast**:
+    /// the first job error aborts the remaining matrix and is returned —
+    /// the policy for `caba sweep` and the test suites, where a partial
+    /// matrix is useless. Successes computed before the abort stay
+    /// cached, so a retry resumes rather than restarts.
+    pub fn run(&self, jobs: &[SweepJob]) -> Result<Vec<SimStats>, JobError> {
+        let (keys, todo, todo_keys) = self.plan(jobs);
+        let errs = self.execute_todo(&todo, &todo_keys, true);
+        if let Some((_, e)) = errs.into_iter().next() {
+            return Err(e);
+        }
+        Ok(keys
+            .iter()
             .map(|k| self.cache.get(k).expect("sweep job executed but not cached"))
+            .collect())
+    }
+
+    /// Run every job, returning a per-point `Result` in request order.
+    /// **Collect-and-report**: every miss is attempted regardless of
+    /// other points' failures — the serve daemon's policy, where one
+    /// client's broken request must not starve the rest. Failed keys are
+    /// never cached (the next request retries them).
+    pub fn run_collect(&self, jobs: &[SweepJob]) -> Vec<Result<SimStats, JobError>> {
+        let (keys, todo, todo_keys) = self.plan(jobs);
+        let errs = self.execute_todo(&todo, &todo_keys, false);
+        let by_key: HashMap<JobKey, JobError> =
+            errs.into_iter().map(|(i, e)| (todo_keys[i], e)).collect();
+        keys.iter()
+            .map(|k| match self.cache.get(k) {
+                Some(s) => Ok(s),
+                None => Err(by_key.get(k).cloned().unwrap_or_else(|| JobError {
+                    app: k.0,
+                    design: k.1,
+                    cause: "job executed but neither cached nor reported".to_string(),
+                })),
+            })
             .collect()
     }
 
-    /// Run (or fetch) a single point.
-    pub fn run_one(&self, job: &SweepJob) -> SimStats {
+    /// Run (or fetch) a single point, surfacing failure as a value (the
+    /// serve daemon's per-request entry point).
+    pub fn try_run_one(&self, job: &SweepJob) -> Result<SimStats, JobError> {
         let key = job.key();
         if let Some(s) = self.cache.get(&key) {
-            return s;
+            return Ok(s);
         }
-        let stats = job.execute();
+        let stats = job.execute(self.fault.as_deref())?;
         self.cache.insert(key, stats.clone());
-        stats
+        Ok(stats)
+    }
+
+    /// Run (or fetch) a single point, panicking on job failure — the
+    /// figure-regeneration path, where a failed point means the figure
+    /// cannot exist and the typed message is the diagnostic.
+    pub fn run_one(&self, job: &SweepJob) -> SimStats {
+        self.try_run_one(job).unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
@@ -340,12 +589,67 @@ mod tests {
         let app = apps::find("SLA").unwrap();
         let j = SweepJob::new(app, Design::base(), tiny_cfg(), 0.01);
         let engine = SweepEngine::new(2);
-        let out = engine.run(&[j.clone(), j.clone(), j.clone()]);
+        let out = engine.run(&[j.clone(), j.clone(), j.clone()]).unwrap();
         assert_eq!(out.len(), 3);
         assert_eq!(out[0], out[1]);
         assert_eq!(out[1], out[2]);
         // All three collapsed to one cache entry.
         assert_eq!(engine.cache.len(), 1);
+    }
+
+    #[test]
+    fn injected_panic_becomes_typed_error_not_abort() {
+        let app = apps::find("SLA").unwrap();
+        let j = SweepJob::new(app, Design::base(), tiny_cfg(), 0.01);
+        let fault = Arc::new(FaultPlan::parse("panic_at_job=0").unwrap());
+        let engine = SweepEngine::new(1).with_fault(fault);
+        let err = engine.try_run_one(&j).expect_err("injected panic must surface as JobError");
+        assert_eq!(err.app, "SLA");
+        assert!(err.cause.contains("injected fault"), "cause: {}", err.cause);
+        // The failure was not cached: the retry (no fault scheduled at
+        // index 1) succeeds.
+        assert_eq!(engine.cache_entries(), 0);
+        assert!(engine.try_run_one(&j).is_ok());
+    }
+
+    #[test]
+    fn run_is_fail_fast_and_run_collect_reports_per_point() {
+        let sla = apps::find("SLA").unwrap();
+        let pvc = apps::find("PVC").unwrap();
+        let jobs = [
+            SweepJob::new(sla, Design::base(), tiny_cfg(), 0.01),
+            SweepJob::new(pvc, Design::base(), tiny_cfg(), 0.01),
+        ];
+        // Serial engine, fault at job index 0: `run` returns that error.
+        let fault = Arc::new(FaultPlan::parse("panic_at_job=0").unwrap());
+        let engine = SweepEngine::new(1).with_fault(fault);
+        assert!(engine.run(&jobs).is_err());
+
+        // collect-and-report: the faulted point errors, the other still
+        // computes (fresh engine, fresh fault so indices restart).
+        let fault = Arc::new(FaultPlan::parse("panic_at_job=0").unwrap());
+        let engine = SweepEngine::new(1).with_fault(fault);
+        let out = engine.run_collect(&jobs);
+        assert!(out[0].is_err());
+        assert!(out[1].is_ok());
+        // And a clean re-run heals the failed point from cache + retry.
+        let healed = engine.run(&jobs).unwrap();
+        assert_eq!(healed[1], *out[1].as_ref().unwrap());
+    }
+
+    #[test]
+    fn poisoned_shard_recovers() {
+        let app = apps::find("SLA").unwrap();
+        let j = SweepJob::new(app, Design::base(), tiny_cfg(), 0.01);
+        let cache = RunCache::new();
+        let key = j.key();
+        cache.insert(key, SimStats::default());
+        cache.poison_for_tests(&key);
+        // Every accessor still works after the poisoning panic.
+        assert!(cache.contains(&key));
+        assert_eq!(cache.get(&key), Some(SimStats::default()));
+        assert_eq!(cache.len(), 1);
+        cache.insert(key, SimStats::default());
     }
 
     #[test]

@@ -43,8 +43,8 @@ fn small_matrix() -> Vec<SweepJob> {
 fn parallel_sweep_bit_identical_to_serial() {
     let jobs = small_matrix();
     // Private caches: each engine must actually execute its own runs.
-    let serial = SweepEngine::new(1).run(&jobs);
-    let parallel = SweepEngine::new(4).run(&jobs);
+    let serial = SweepEngine::new(1).run(&jobs).unwrap();
+    let parallel = SweepEngine::new(4).run(&jobs).unwrap();
     assert_eq!(serial.len(), parallel.len());
     for (i, (s, p)) in serial.iter().zip(&parallel).enumerate() {
         // SimStats derives PartialEq over every counter (cycles, issue
@@ -56,15 +56,16 @@ fn parallel_sweep_bit_identical_to_serial() {
     let app = apps::find("PVC").unwrap();
     let direct = Simulator::new(tiny_cfg(), Design::caba(Algo::Bdi), app, 0.015).run();
     let via_engine = SweepEngine::new(2)
-        .run(&[SweepJob::new(app, Design::caba(Algo::Bdi), tiny_cfg(), 0.015)]);
+        .run(&[SweepJob::new(app, Design::caba(Algo::Bdi), tiny_cfg(), 0.015)])
+        .unwrap();
     assert_eq!(direct, via_engine[0]);
 }
 
 #[test]
 fn parallel_sweep_is_repeatable() {
     let jobs = small_matrix();
-    let a = SweepEngine::new(4).run(&jobs);
-    let b = SweepEngine::new(4).run(&jobs);
+    let a = SweepEngine::new(4).run(&jobs).unwrap();
+    let b = SweepEngine::new(4).run(&jobs).unwrap();
     assert_eq!(a, b);
 }
 
@@ -82,15 +83,15 @@ fn cache_key_regression_set_overrides_are_not_aliased() {
     let mut cfg_b = tiny_cfg();
     cfg_b.set("n_sms", "1").unwrap(); // a --set override
 
-    let a = engine.run(&[SweepJob::new(app, Design::base(), cfg_a.clone(), 0.015)]);
-    let b = engine.run(&[SweepJob::new(app, Design::base(), cfg_b.clone(), 0.015)]);
+    let a = engine.run(&[SweepJob::new(app, Design::base(), cfg_a.clone(), 0.015)]).unwrap();
+    let b = engine.run(&[SweepJob::new(app, Design::base(), cfg_b.clone(), 0.015)]).unwrap();
     // Fewer SMs must change the simulation outcome; a stale cache hit
     // would have returned `a` verbatim.
     assert_ne!(a[0], b[0], "cache served stale stats across --set override");
 
     // Lookups under the original configs still hit their own entries.
-    let a2 = engine.run(&[SweepJob::new(app, Design::base(), cfg_a, 0.015)]);
-    let b2 = engine.run(&[SweepJob::new(app, Design::base(), cfg_b, 0.015)]);
+    let a2 = engine.run(&[SweepJob::new(app, Design::base(), cfg_a, 0.015)]).unwrap();
+    let b2 = engine.run(&[SweepJob::new(app, Design::base(), cfg_b, 0.015)]).unwrap();
     assert_eq!(a[0], a2[0]);
     assert_eq!(b[0], b2[0]);
 }
@@ -117,7 +118,7 @@ fn figure_ctx_honors_config_overrides() {
 fn duplicate_jobs_simulate_once_and_fan_out() {
     let app = apps::find("SLA").unwrap();
     let job = SweepJob::new(app, Design::base(), tiny_cfg(), 0.01);
-    let out = SweepEngine::new(4).run(&vec![job.clone(); 8]);
+    let out = SweepEngine::new(4).run(&vec![job.clone(); 8]).unwrap();
     assert_eq!(out.len(), 8);
     for s in &out[1..] {
         assert_eq!(&out[0], s);

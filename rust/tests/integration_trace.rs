@@ -169,12 +169,12 @@ fn trace_jobs_sweep_with_cache_hits() {
             matrix.push(SweepJob::replay(&trace, design, cfg));
         }
     }
-    let first = engine.run(&matrix);
+    let first = engine.run(&matrix).unwrap();
     let entries = engine.cache_entries();
     assert_eq!(entries, 4, "4 distinct trace-driven points expected");
 
     // Re-running the matrix must be pure cache hits.
-    let second = engine.run(&matrix);
+    let second = engine.run(&matrix).unwrap();
     assert_eq!(first, second);
     assert_eq!(engine.cache_entries(), entries, "re-run executed new simulations");
 

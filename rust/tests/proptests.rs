@@ -506,3 +506,56 @@ fn prop_memo_hit_rate_monotone_in_value_redundancy() {
         },
     );
 }
+
+// ------------------------------------------------------------- run store
+
+/// The store codec writes `SimStats` as fixed-width little-endian words
+/// plus one trailing bool byte, so a uniformly random well-formed payload
+/// reaches every field with an arbitrary bit pattern — including the one
+/// `f64`, which must round-trip through `to_bits`/`from_bits` untouched.
+/// Byte-level re-encode identity is the pinned property (struct-level
+/// `PartialEq` would reject NaN even though the codec preserves it).
+#[test]
+fn prop_store_codec_roundtrip() {
+    use caba::stats::SimStats;
+    use caba::store::{decode_stats, encode_stats, stats_digest};
+    let payload_len = {
+        let mut buf = Vec::new();
+        encode_stats(&SimStats::default(), &mut buf);
+        buf.len()
+    };
+    let words = (payload_len - 1) / 8;
+    forall(
+        "store-codec",
+        default_cases(),
+        |rng: &mut Rng| {
+            let mut buf = Vec::with_capacity(payload_len);
+            for _ in 0..words {
+                buf.extend_from_slice(&rng.next_u64().to_le_bytes());
+            }
+            buf.push((rng.next_u32() & 1) as u8);
+            buf
+        },
+        |payload| {
+            let s = decode_stats(payload).map_err(|e| format!("{e:#}"))?;
+            let mut back = Vec::new();
+            encode_stats(&s, &mut back);
+            prop_assert!(&back == payload, "re-encode diverged from source bytes");
+            // With a finite float, struct-level equality and the serve
+            // digest must agree with the byte-level identity.
+            if s.dram.bus_busy_cycles.is_finite() {
+                let s2 = decode_stats(&back).map_err(|e| format!("{e:#}"))?;
+                prop_assert!(s2 == s, "struct roundtrip mismatch");
+                prop_assert!(stats_digest(&s2) == stats_digest(&s), "digest unstable");
+            }
+            // Truncation never mis-parses, at any depth.
+            let cut = payload.len() / 2;
+            prop_assert!(decode_stats(&payload[..cut]).is_err(), "truncated prefix parsed");
+            prop_assert!(
+                decode_stats(&payload[..payload.len() - 1]).is_err(),
+                "payload missing its bool byte parsed"
+            );
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,264 @@
+//! Fault-injection harness for `caba serve` — in-process daemons on
+//! temp sockets, driven through the same client path as `caba client`.
+//!
+//! The contract under test (DESIGN.md §serve): every failure mode gets a
+//! typed, non-fatal answer. An injected worker panic yields exactly one
+//! `"status":"error"`, never kills the daemon, never perturbs other
+//! answers, and never poisons its key; a corrupt store entry quarantines
+//! and recomputes — never wrong data; an overloaded queue sheds; a
+//! deadline expiry leaves the job running so the retry is warm; a
+//! malformed line leaves the connection usable; shutdown drains cleanly.
+
+use caba::serve::json::Json;
+use caba::serve::{self, ServeOpts, ServeSummary, Server, ServerHandle};
+use caba::store::FaultPlan;
+use std::io::{BufRead, BufReader, Write as _};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+struct TestServer {
+    base: PathBuf,
+    socket: PathBuf,
+    handle: ServerHandle,
+    thread: Option<JoinHandle<anyhow::Result<ServeSummary>>>,
+}
+
+impl TestServer {
+    /// Bind a daemon on fresh socket/store dirs under a per-test temp
+    /// root; `tweak` adjusts the options (queue cap, fault plan) before
+    /// bind. The store dir is kept across restarts of the same tag.
+    fn start(tag: &str, tweak: impl FnOnce(&mut ServeOpts)) -> TestServer {
+        let base =
+            std::env::temp_dir().join(format!("caba_serve_faults_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&base).unwrap();
+        let socket = base.join("serve.sock");
+        let mut opts = ServeOpts::new(&socket);
+        opts.jobs = 2;
+        opts.store_dir = Some(base.join("store"));
+        tweak(&mut opts);
+        let server = Server::bind(opts).unwrap();
+        let handle = server.handle();
+        let thread = Some(std::thread::spawn(move || server.run()));
+        TestServer { base, socket, handle, thread }
+    }
+
+    fn request(&self, line: &str) -> Json {
+        let resp = serve::client_request(&self.socket, line).unwrap();
+        serve::json::parse(&resp).unwrap_or_else(|e| panic!("bad response {resp:?}: {e:#}"))
+    }
+
+    fn sweep(&self, app: &str, extra: &str) -> Json {
+        self.request(&sweep_line(app, extra))
+    }
+
+    /// Drain and return the end-of-run summary; removes the temp root.
+    fn finish(mut self) -> ServeSummary {
+        self.handle.stop();
+        let summary = self.thread.take().unwrap().join().unwrap().unwrap();
+        let _ = std::fs::remove_dir_all(&self.base);
+        summary
+    }
+
+    /// Drain but keep the dirs (for restart-over-same-store tests).
+    fn stop_keep_dirs(mut self) -> ServeSummary {
+        self.handle.stop();
+        self.thread.take().unwrap().join().unwrap().unwrap()
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.handle.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn sweep_line(app: &str, extra: &str) -> String {
+    format!(
+        "{{\"verb\":\"sweep\",\"app\":\"{app}\",\"design\":\"Base\",\"scale\":0.01,\
+         \"set\":{{\"n_sms\":2,\"max_cycles\":150000}}{extra}}}"
+    )
+}
+
+fn status(v: &Json) -> &str {
+    v.get("status").and_then(Json::as_str).unwrap_or("<none>")
+}
+
+fn digest(v: &Json) -> String {
+    v.get("stats_digest").and_then(Json::as_str).expect("ok response carries a digest").to_string()
+}
+
+#[test]
+fn cold_then_warm_then_restart_warm_from_store() {
+    let ts = TestServer::start("warm", |_| {});
+    let a = ts.sweep("SLA", "");
+    assert_eq!(status(&a), "ok");
+    assert_eq!(a.get("source").and_then(Json::as_str), Some("cold"));
+    let b = ts.sweep("SLA", "");
+    assert_eq!(b.get("source").and_then(Json::as_str), Some("warm"));
+    assert_eq!(digest(&a), digest(&b));
+    let summary = ts.stop_keep_dirs();
+    assert_eq!((summary.counters.cold, summary.counters.warm), (1, 1));
+
+    // A restarted daemon over the same store dir answers warm on its
+    // very first request — crash-safe persistence, end to end.
+    let ts2 = TestServer::start("warm", |_| {});
+    let c = ts2.sweep("SLA", "");
+    assert_eq!(c.get("source").and_then(Json::as_str), Some("warm"));
+    assert_eq!(digest(&a), digest(&c), "restart must serve bit-identical stats");
+    let s2 = ts2.finish();
+    assert_eq!(s2.store.unwrap().warm_hits, 1);
+}
+
+#[test]
+fn injected_panic_is_isolated_typed_and_retryable() {
+    // Job 0 (the first cold request) panics inside the worker.
+    let plan = Arc::new(FaultPlan::parse("panic_at_job=0").unwrap());
+    let fired = Arc::clone(&plan);
+    let ts = TestServer::start("panic", move |o| o.fault = Some(plan));
+
+    let err = ts.sweep("SLA", "");
+    assert_eq!(status(&err), "error");
+    let msg = err.get("message").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("injected fault"), "typed error must carry the panic message: {msg}");
+    assert_eq!(fired.injected(), 1);
+
+    // The daemon is alive, other points still work, and the failed key
+    // was never cached — its retry recomputes and succeeds.
+    assert_eq!(status(&ts.request(r#"{"verb":"ping"}"#)), "ok");
+    assert_eq!(status(&ts.sweep("PVC", "")), "ok");
+    let retry = ts.sweep("SLA", "");
+    assert_eq!(status(&retry), "ok");
+    assert_eq!(retry.get("source").and_then(Json::as_str), Some("cold"));
+
+    let summary = ts.finish();
+    assert_eq!(summary.counters.job_errors, 1);
+    assert_eq!(summary.counters.cold, 2);
+}
+
+#[test]
+fn unaffected_answers_are_bit_identical_with_a_fault_present() {
+    // Clean reference digests first, then the same points through a
+    // daemon whose second job panics.
+    let ts = TestServer::start("bitident_clean", |_| {});
+    let clean_sla = digest(&ts.sweep("SLA", ""));
+    let clean_pvc = digest(&ts.sweep("PVC", ""));
+    ts.finish();
+
+    let plan = Arc::new(FaultPlan::parse("panic_at_job=1").unwrap());
+    let ts = TestServer::start("bitident_fault", move |o| o.fault = Some(plan));
+    assert_eq!(digest(&ts.sweep("SLA", "")), clean_sla);
+    assert_eq!(status(&ts.sweep("PVC", "")), "error");
+    assert_eq!(digest(&ts.sweep("PVC", "")), clean_pvc, "recovery must be bit-identical");
+    ts.finish();
+}
+
+#[test]
+fn full_queue_sheds_instead_of_blocking() {
+    // queue_cap=0: every cold admission sheds. Shedding holds no
+    // resources, so the same request succeeds once capacity returns (here:
+    // never, but the daemon stays responsive and counts the rejections).
+    let ts = TestServer::start("shed", |o| o.queue_cap = 0);
+    for _ in 0..3 {
+        let v = ts.sweep("SLA", "");
+        assert_eq!(status(&v), "shed");
+    }
+    assert_eq!(status(&ts.request(r#"{"verb":"ping"}"#)), "ok");
+    let summary = ts.finish();
+    assert_eq!(summary.counters.shed, 3);
+    assert_eq!(summary.counters.cold, 0);
+}
+
+#[test]
+fn deadline_expiry_leaves_the_job_running_and_warms_the_retry() {
+    // Job 0 stalls 1.5 s; the client only waits 50 ms. The answer is a
+    // typed deadline, the job keeps running, and the retry is answered
+    // from the cache/store (or by deduping onto the still-running job) —
+    // never recomputed from scratch a second time.
+    let plan = Arc::new(FaultPlan::parse("slow_at_job=0,slow_job_ms=1500").unwrap());
+    let ts = TestServer::start("deadline", move |o| o.fault = Some(plan));
+    let v = ts.sweep("SLA", ",\"deadline_ms\":50");
+    assert_eq!(status(&v), "deadline");
+    let retry = ts.sweep("SLA", ",\"deadline_ms\":30000");
+    assert_eq!(status(&retry), "ok");
+    let summary = ts.finish();
+    assert_eq!(summary.counters.deadline_expired, 1);
+    assert_eq!(summary.store.unwrap().puts, 1, "the deadline'd job must have completed once");
+}
+
+#[test]
+fn corrupt_store_entry_quarantines_and_recomputes_on_restart() {
+    // First daemon persists one entry whose write is checksum-flipped —
+    // the response itself is correct (in-memory stats), the disk is not.
+    let plan = Arc::new(FaultPlan::parse("flip_checksum_at=0").unwrap());
+    let ts = TestServer::start("corrupt", move |o| o.fault = Some(plan));
+    let first = ts.sweep("SLA", "");
+    assert_eq!(status(&first), "ok");
+    let reference = digest(&first);
+    ts.stop_keep_dirs();
+
+    // The restarted daemon must never serve the corrupt bytes: the entry
+    // quarantines on read, the point recomputes cold, and the digest
+    // matches the pre-corruption truth.
+    let ts2 = TestServer::start("corrupt", |_| {});
+    let v = ts2.sweep("SLA", "");
+    assert_eq!(status(&v), "ok");
+    assert_eq!(v.get("source").and_then(Json::as_str), Some("cold"));
+    assert_eq!(digest(&v), reference, "recomputed stats must match the original");
+    let summary = ts2.finish();
+    let store = summary.store.unwrap();
+    assert_eq!(store.quarantined, 1);
+    assert_eq!(store.puts, 1, "the healed entry must be re-persisted");
+}
+
+#[test]
+fn bad_lines_answer_typed_errors_and_keep_the_connection_usable() {
+    let ts = TestServer::start("badline", |_| {});
+    // One persistent connection: garbage, unknown verb, then a valid ping.
+    {
+        let stream = UnixStream::connect(&ts.socket).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut roundtrip = |line: &str| -> Json {
+            writer.write_all(line.as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+            writer.flush().unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            serve::json::parse(resp.trim()).unwrap()
+        };
+        assert_eq!(status(&roundtrip("{not json")), "error");
+        assert_eq!(status(&roundtrip(r#"{"verb":"frobnicate"}"#)), "error");
+        assert_eq!(status(&roundtrip(r#"{"verb":"sweep","app":"NOPE"}"#)), "error");
+        assert_eq!(status(&roundtrip(r#"{"verb":"ping"}"#)), "ok");
+    }
+
+    let summary = ts.finish();
+    assert_eq!(summary.counters.bad_requests, 3);
+    assert_eq!(summary.counters.requests, 4);
+}
+
+#[test]
+fn shutdown_verb_drains_gracefully_and_removes_the_socket() {
+    let ts = TestServer::start("shutdown", |_| {});
+    assert_eq!(status(&ts.sweep("SLA", "")), "ok");
+    let v = ts.request(r#"{"verb":"shutdown"}"#);
+    assert_eq!(status(&v), "ok");
+    assert_eq!(v.get("draining").and_then(Json::as_bool), Some(true));
+
+    // run() returns on its own — no handle.stop() needed — and the
+    // socket file is gone afterwards.
+    let mut ts = ts;
+    let summary = ts.thread.take().unwrap().join().unwrap().unwrap();
+    assert_eq!(summary.counters.cold, 1);
+    assert!(!ts.socket.exists(), "drained server must remove its socket");
+    assert!(
+        UnixStream::connect(&ts.socket).is_err(),
+        "no listener may survive the drain"
+    );
+    let _ = std::fs::remove_dir_all(&ts.base);
+}

@@ -1,0 +1,131 @@
+//! Integration tests for the crash-safe run store driven through the
+//! sweep engine — the contracts `caba sweep --store` and `caba serve`
+//! rely on:
+//!
+//! * a cold matrix against a fresh store and a warm re-run from a fresh
+//!   in-memory cache over the same directory are **bit-identical**;
+//! * run-control knobs (telemetry, trace recording) never fragment store
+//!   keys — a telemetry-carrying job warms from a plain job's entry;
+//! * injected torn writes quarantine on read and the point recomputes and
+//!   heals — never wrong data, never a crash.
+
+use caba::sim::designs::Design;
+use caba::stats::SimStats;
+use caba::store::{FaultPlan, RunStore};
+use caba::sweep::{RunCache, SweepEngine, SweepJob};
+use caba::workload::apps;
+use caba::SimConfig;
+use std::sync::Arc;
+
+fn small_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.n_sms = 2;
+    cfg.max_cycles = 150_000;
+    cfg
+}
+
+fn matrix() -> Vec<SweepJob> {
+    ["SLA", "PVC"]
+        .into_iter()
+        .flat_map(|name| {
+            let app = apps::find(name).unwrap();
+            [Design::base(), Design::caba(caba::compress::Algo::Bdi)]
+                .into_iter()
+                .map(move |d| SweepJob::new(app, d, small_cfg(), 0.01))
+        })
+        .collect()
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("caba_store_faults_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn engine_over(dir: &std::path::Path) -> SweepEngine {
+    let store = RunStore::open(dir).unwrap();
+    SweepEngine::with_cache(2, Arc::new(RunCache::with_store(Arc::new(store))))
+}
+
+#[test]
+fn cold_and_warm_runs_are_bit_identical_across_processes() {
+    let dir = temp_dir("coldwarm");
+    let jobs = matrix();
+
+    // Cold pass: every point simulated, every point persisted.
+    let cold_engine = engine_over(&dir);
+    let cold: Vec<SimStats> = cold_engine.run(&jobs).unwrap();
+    let c = cold_engine.cache().store_counters().unwrap();
+    assert_eq!(c.puts, jobs.len() as u64, "every cold point must be persisted");
+    assert_eq!(c.warm_hits, 0);
+    assert_eq!(c.quarantined, 0);
+
+    // Warm pass: a fresh in-memory cache over the same directory — the
+    // moral equivalent of a process restart. No simulation, no new puts,
+    // and the stats must round-trip bit-identically (the f64 included).
+    let warm_engine = engine_over(&dir);
+    let warm: Vec<SimStats> = warm_engine.run(&jobs).unwrap();
+    let w = warm_engine.cache().store_counters().unwrap();
+    assert_eq!(w.puts, 0, "warm run must not re-simulate");
+    assert_eq!(w.warm_hits, jobs.len() as u64);
+    assert_eq!(cold, warm, "store round-trip must be bit-identical");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn run_control_knobs_never_fragment_store_keys() {
+    let dir = temp_dir("knobs");
+    let app = apps::find("SLA").unwrap();
+    let plain = SweepJob::new(app, Design::base(), small_cfg(), 0.01);
+    let mut telem_cfg = small_cfg();
+    telem_cfg.telemetry_window = 512;
+    telem_cfg.trace_record = "/tmp/should_not_be_written.cabatrace".to_string();
+    let knobbed = SweepJob::new(app, Design::base(), telem_cfg, 0.01);
+    assert_eq!(plain.key(), knobbed.key(), "run-control knobs must be stripped from keys");
+
+    let cold = engine_over(&dir);
+    let a = cold.run(std::slice::from_ref(&plain)).unwrap();
+    // A fresh cache over the same dir answers the knob-carrying job from
+    // the plain job's entry — one file, one simulation, ever.
+    let warm = engine_over(&dir);
+    let b = warm.run(std::slice::from_ref(&knobbed)).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(warm.cache().store_counters().unwrap().warm_hits, 1);
+    assert_eq!(RunStore::open(&dir).unwrap().len(), 1);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_write_quarantines_then_recomputes_and_heals() {
+    let dir = temp_dir("torn");
+    let app = apps::find("SLA").unwrap();
+    let job = SweepJob::new(app, Design::base(), small_cfg(), 0.01);
+
+    // Cold run whose one store write is torn mid-entry (the injected
+    // fault writes a truncated entry to the final path and reports
+    // success, exactly like a crash between write and fsync).
+    let fault = Arc::new(FaultPlan::parse("torn_write_at=0").unwrap());
+    let store = RunStore::open(&dir).unwrap().with_fault(Arc::clone(&fault));
+    let torn_engine = SweepEngine::with_cache(1, Arc::new(RunCache::with_store(Arc::new(store))));
+    let reference = torn_engine.run(std::slice::from_ref(&job)).unwrap();
+    assert_eq!(fault.injected(), 1, "the torn-write fault must have fired");
+
+    // Restart: the truncated entry must quarantine on read — never
+    // mis-parse — and the point recomputes to the same stats and heals
+    // the store for the run after that.
+    let second = engine_over(&dir);
+    let recomputed = second.run(std::slice::from_ref(&job)).unwrap();
+    let c = second.cache().store_counters().unwrap();
+    assert_eq!(c.quarantined, 1, "torn entry must be quarantined, not parsed");
+    assert_eq!(c.puts, 1, "recomputed point must be re-persisted");
+    assert_eq!(reference, recomputed, "recovery must reproduce the same stats");
+
+    let third = engine_over(&dir);
+    assert_eq!(third.run(std::slice::from_ref(&job)).unwrap(), reference);
+    let h = third.cache().store_counters().unwrap();
+    assert_eq!((h.warm_hits, h.quarantined, h.puts), (1, 0, 0), "store must be healed");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

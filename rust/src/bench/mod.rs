@@ -5,7 +5,7 @@
 //! perf_hotpath` (compression-substrate throughput, oracle memoization,
 //! end-to-end simulator throughput), but:
 //!
-//! * emits a **JSON report** (`BENCH_pr8.json` by default; schema
+//! * emits a **JSON report** (`BENCH_pr9.json` by default; schema
 //!   documented in EXPERIMENTS.md §Perf) so the perf trajectory is
 //!   tracked in-repo from PR 3 onward;
 //! * measures the **event-driven tick** against the `strict_tick=true`
@@ -25,7 +25,9 @@
 //! * measures the **fault-tolerant serve loop** end to end (PR 8): an
 //!   in-process `caba serve` daemon on fresh socket/store dirs answers a
 //!   cold pass and a multi-client warm burst (`serve_warm_hits_per_s`,
-//!   checked against `min_serve_warm_hits_per_s`), then a second daemon
+//!   checked against `min_serve_warm_hits_per_s`, plus client-observed
+//!   p50/p95/p99 request latency from a log2-bucketed histogram — see
+//!   EXPERIMENTS.md measurement family 8), then a second daemon
 //!   with an injected worker panic must survive it: exactly one typed
 //!   error, every unaffected response bit-identical to the clean run
 //!   (by `stats_digest`), and a retry of the failed point recovering —
@@ -42,6 +44,7 @@
 
 use crate::compress::oracle::{CompressionOracle, MemoOracle, NativeOracle};
 use crate::compress::{measure, Algo, Line, LINE_BYTES};
+use crate::obs::{HistSnapshot, Histogram};
 use crate::serve::{self, json::Json, ServeOpts};
 use crate::sim::designs::Design;
 use crate::sim::Simulator;
@@ -139,6 +142,13 @@ pub struct ServePoint {
     /// Warm answers per wall-second across the burst — the floors-file
     /// metric (`min_serve_warm_hits_per_s`).
     pub warm_hits_per_s: f64,
+    /// Client-observed warm-burst request latency percentiles, in
+    /// microseconds, from a log2-bucketed histogram (each is the upper
+    /// bound of its bucket, so within 2x of the true percentile). Zero
+    /// when the burst made no requests.
+    pub warm_p50_us: u64,
+    pub warm_p95_us: u64,
+    pub warm_p99_us: u64,
     /// Typed `"status":"error"` responses in the fault phase. Exactly one
     /// panic is injected, so any other count is a violation.
     pub fault_errors: u64,
@@ -388,6 +398,9 @@ struct ServePhase {
     /// Warm-burst answers with `source:"warm"`, and the burst wall-clock.
     warm_hits: usize,
     warm_dt: f64,
+    /// Client-observed request latency across the warm burst (all
+    /// requests, hit or not), in microseconds.
+    warm_lat: HistSnapshot,
 }
 
 /// One sweep request through the daemon's client path, parsed. All bench
@@ -458,17 +471,21 @@ fn serve_phase(
         }
 
         let (mut warm_hits, mut warm_dt) = (0usize, 0.0f64);
+        let warm_lat = Histogram::new();
         if let Some((clients, reqs_each)) = warm_burst {
             let t0 = Instant::now();
             let counts = std::thread::scope(|scope| {
                 let handles: Vec<_> = (0..clients)
                     .map(|c| {
                         let socket = &socket;
+                        let warm_lat = &warm_lat;
                         scope.spawn(move || -> Result<usize> {
                             let mut hits = 0usize;
                             for r in 0..reqs_each {
                                 let (app, design) = points[(c + r) % points.len()];
+                                let t_req = Instant::now();
                                 let v = serve_request(socket, app, design)?;
+                                warm_lat.record_duration(t_req.elapsed());
                                 if v.get("status").and_then(Json::as_str) == Some("ok")
                                     && v.get("source").and_then(Json::as_str) == Some("warm")
                                 {
@@ -487,7 +504,7 @@ fn serve_phase(
             }
         }
 
-        Ok(ServePhase { digests, errors, retry_ok, warm_hits, warm_dt })
+        Ok(ServePhase { digests, errors, retry_ok, warm_hits, warm_dt, warm_lat: warm_lat.snapshot() })
     })();
 
     // Always drain, even on a client-side error — the accept loop polls
@@ -529,6 +546,9 @@ fn measure_serve(quick: bool) -> Result<ServePoint> {
         cold_points: points.len(),
         warm_requests: clean.warm_hits,
         warm_hits_per_s: clean.warm_hits as f64 / clean.warm_dt.max(1e-9),
+        warm_p50_us: clean.warm_lat.p50(),
+        warm_p95_us: clean.warm_lat.p95(),
+        warm_p99_us: clean.warm_lat.p99(),
         fault_errors,
         survived,
         bitident_vs_clean: bitident,
@@ -757,11 +777,15 @@ impl BenchReport {
             let _ = writeln!(
                 s,
                 "    {{\"cold_points\": {}, \"warm_requests\": {}, \"warm_hits_per_s\": {:.1}, \
+                 \"warm_p50_us\": {}, \"warm_p95_us\": {}, \"warm_p99_us\": {}, \
                  \"fault_errors\": {}, \"survived\": {}, \"bitident_vs_clean\": {}, \
                  \"retry_recovers\": {}}}{}",
                 p.cold_points,
                 p.warm_requests,
                 p.warm_hits_per_s,
+                p.warm_p50_us,
+                p.warm_p95_us,
+                p.warm_p99_us,
                 p.fault_errors,
                 p.survived,
                 p.bitident_vs_clean,
@@ -880,10 +904,13 @@ impl BenchReport {
         for p in &self.serve {
             let _ = writeln!(
                 s,
-                "serve {} cold points  warm burst {} reqs @ {:>8.1} hits/s  fault: {} error(s), {}, retry {}",
+                "serve {} cold points  warm burst {} reqs @ {:>8.1} hits/s  p50/p95/p99 {}/{}/{} us  fault: {} error(s), {}, retry {}",
                 p.cold_points,
                 p.warm_requests,
                 p.warm_hits_per_s,
+                p.warm_p50_us,
+                p.warm_p95_us,
+                p.warm_p99_us,
                 p.fault_errors,
                 if p.survived && p.bitident_vs_clean { "survived bit-identical" } else { "FAILED" },
                 if p.retry_recovers { "recovered" } else { "STUCK" }
@@ -1165,6 +1192,9 @@ mod tests {
             cold_points: 4,
             warm_requests: 200,
             warm_hits_per_s: 12.0,
+            warm_p50_us: 2047,
+            warm_p95_us: 8191,
+            warm_p99_us: 16383,
             fault_errors: 1,
             survived: true,
             bitident_vs_clean: true,
@@ -1229,6 +1259,9 @@ mod tests {
                 cold_points: 4,
                 warm_requests: 200,
                 warm_hits_per_s: 312.5,
+                warm_p50_us: 1023,
+                warm_p95_us: 4095,
+                warm_p99_us: 8191,
                 fault_errors: 1,
                 survived: true,
                 bitident_vs_clean: true,
@@ -1243,6 +1276,7 @@ mod tests {
         assert!(j.contains("\"telemetry\""));
         assert!(j.contains("\"overhead\": 0.0417"));
         assert!(j.contains("\"warm_hits_per_s\": 312.5"));
+        assert!(j.contains("\"warm_p95_us\": 4095"));
         assert!(j.contains("\"bitident_vs_clean\": true"));
         assert!(j.contains("floor_violations"));
         // Balanced braces/brackets (cheap well-formedness probe).

@@ -60,7 +60,14 @@
 //!   JSON sweep requests over a unix socket, deduping in-flight identical
 //!   requests, serving warm hits from the store, and running cold misses
 //!   on panic-isolated workers behind a bounded queue with load shedding,
-//!   per-request deadlines and graceful SIGTERM drain.
+//!   per-request deadlines and graceful SIGTERM drain;
+//! * a **service observability layer** ([`obs`]): lock-cheap atomic
+//!   counters/gauges and log2-bucketed latency histograms (p50/p95/p99
+//!   from buckets, allocation-free hot path), per-request trace spans
+//!   with ids echoed in every serve response, a hand-rolled Prometheus
+//!   text exposition behind the `metrics` verb, and `caba prof --serve`
+//!   rendering server request spans as Perfetto-loadable Chrome trace
+//!   JSON — all observation-only, pinned bit-identical on/off by test.
 //!
 //! See `DESIGN.md` (repo root) for the system inventory and
 //! `EXPERIMENTS.md` for paper-vs-measured results and the sweep-engine
@@ -76,6 +83,7 @@ pub mod energy;
 pub mod isa;
 pub mod mem;
 pub mod memo;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;

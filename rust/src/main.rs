@@ -8,19 +8,21 @@
 //! caba run --app PVC --design CABA-BDI [--scale 0.1] [--threads N]
 //!          [--oracle native|pjrt] [--timeline] [--json] [--set key=value]...
 //! caba prof <out.json> --app PVC [--design D] [--scale S] [--set k=v]...
+//! caba prof <out.json> --serve <socket>   # server request spans → Perfetto
 //! caba fig <2|3|8|9|10|11|12|13|14|15|16|md|memo> [--scale 0.1]
 //!          [--jobs N] [--set key=value]...
 //! caba sweep [--apps PVC,MM|eval|all|memo] [--designs Base,CABA-BDI|headline]
 //!            [--bw 0.5,1.0,2.0] [--scale 0.1] [--jobs N] [--set k=v]...
 //!            [--trace file.cabatrace] [--store DIR]
 //! caba serve --socket /tmp/caba.sock [--jobs N] [--queue N]
-//!            [--deadline-ms D] [--store DIR] [--fault spec]
+//!            [--deadline-ms D] [--store DIR] [--fault spec] [--log]
 //! caba client <socket> '<json request>'
+//! caba metrics <socket>                 # Prometheus exposition, decoded
 //! caba trace record <app> [--design D] [--scale S] [--out file] [--set...]
 //! caba trace replay <file.cabatrace> [--design D] [--set k=v]...
 //! caba trace info <file.cabatrace>
 //! caba trace import <dump.txt> [--out file] [--pattern random|zero|...]
-//! caba bench [--quick] [--out BENCH_pr8.json] [--floors BENCH_floors.txt]
+//! caba bench [--quick] [--out BENCH_pr9.json] [--floors BENCH_floors.txt]
 //! ```
 //!
 //! `sweep --store DIR` backs the run cache with the crash-safe on-disk
@@ -32,7 +34,11 @@
 //! in-flight dedup, store-backed warm hits, a bounded cold-miss queue
 //! with load shedding, per-request deadlines and graceful SIGTERM drain
 //! (see `DESIGN.md` §serve). `--fault` injects deterministic faults
-//! (`panic_at_job=N,torn_write_at=N,...`) for robustness testing.
+//! (`panic_at_job=N,torn_write_at=N,...`) for robustness testing;
+//! `--log` writes one structured stderr line per request. Every response
+//! echoes a `request_id`; the `metrics`/`stats`/`trace` verbs (and
+//! `caba metrics` / `caba prof --serve` as client-side sugar) expose the
+//! daemon's observability registry — see `DESIGN.md` §5d.
 //!
 //! `run --timeline` prints the flight recorder's ASCII timeline (chip
 //! sparklines + per-SM stall heatmap) after the usual summary; `run
@@ -250,6 +256,39 @@ fn run() -> Result<()> {
             let out = args.positional.get(1).map(String::as_str).ok_or_else(|| {
                 anyhow!("prof requires an output path, e.g. caba prof trace.json --app PVC")
             })?;
+            // `--serve SOCKET`: export a running daemon's request spans
+            // instead of simulating — fetch the `trace` verb, decode the
+            // spans, render them with the same Chrome-trace writer.
+            if let Some(socket) = args.flag("serve") {
+                if socket.is_empty() {
+                    bail!("--serve expects the daemon's socket path");
+                }
+                let resp = serve::client_request(Path::new(socket), r#"{"verb":"trace"}"#)?;
+                let v = serve::json::parse(&resp)
+                    .map_err(|e| anyhow!("trace response was not valid JSON: {e:#}"))?;
+                if v.get("status").and_then(serve::json::Json::as_str) != Some("ok") {
+                    bail!("trace verb failed: {resp}");
+                }
+                let spans: Vec<_> = v
+                    .get("spans")
+                    .and_then(serve::json::Json::elements)
+                    .ok_or_else(|| anyhow!("trace response carried no spans array"))?
+                    .iter()
+                    .filter_map(serve::span_from_json)
+                    .collect();
+                let dropped =
+                    v.get("dropped").and_then(serve::json::Json::as_u64).unwrap_or(0);
+                let trace =
+                    caba::telemetry::export::server_trace_json(&spans, socket, dropped);
+                std::fs::write(out, &trace).map_err(|e| anyhow!("writing {out}: {e}"))?;
+                println!(
+                    "prof: wrote {out} ({} request spans from {socket}, {} dropped)",
+                    spans.len(),
+                    dropped
+                );
+                println!("open it in https://ui.perfetto.dev or chrome://tracing");
+                return Ok(());
+            }
             let app_name = args.flag("app").ok_or_else(|| anyhow!("--app required"))?;
             let app = apps::find(app_name)
                 .ok_or_else(|| anyhow!("unknown app {app_name:?}; see `caba list`"))?;
@@ -415,8 +454,8 @@ fn run() -> Result<()> {
             );
             if let Some(sc) = engine.cache().store_counters() {
                 eprintln!(
-                    "[sweep] store: puts {}  warm_hits {}  quarantined {}  temp_cleaned {}  put_errors {}",
-                    sc.puts, sc.warm_hits, sc.quarantined, sc.temp_cleaned, sc.put_errors
+                    "[sweep] store: puts {}  warm_hits {}  misses {}  quarantined {}  temp_cleaned {}  put_errors {}",
+                    sc.puts, sc.warm_hits, sc.misses, sc.quarantined, sc.temp_cleaned, sc.put_errors
                 );
             }
             Ok(())
@@ -437,6 +476,7 @@ fn run() -> Result<()> {
                     .map_err(|_| anyhow!("--deadline-ms expects milliseconds, got {d:?}"))?;
             }
             opts.store_dir = args.flag("store").map(Into::into);
+            opts.log = args.flag("log").is_some();
             if let Some(spec) = args.flag("fault") {
                 eprintln!("[serve] fault injection active: {spec}");
                 opts.fault = Some(Arc::new(FaultPlan::parse(spec)?));
@@ -469,10 +509,27 @@ fn run() -> Result<()> {
             println!("{}", serve::client_request(Path::new(socket), request)?);
             Ok(())
         }
+        Some("metrics") => {
+            // Client-side sugar over the `metrics` verb: fetch the
+            // one-line JSON response and print the decoded Prometheus
+            // exposition raw — pipe-friendly for CI greps and scrapers.
+            let socket = args.positional.get(1).map(String::as_str).ok_or_else(|| {
+                anyhow!("usage: caba metrics <socket>, e.g. caba metrics /tmp/caba.sock")
+            })?;
+            let resp = serve::client_request(Path::new(socket), r#"{"verb":"metrics"}"#)?;
+            let v = serve::json::parse(&resp)
+                .map_err(|e| anyhow!("metrics response was not valid JSON: {e:#}"))?;
+            let text = v
+                .get("metrics")
+                .and_then(serve::json::Json::as_str)
+                .ok_or_else(|| anyhow!("metrics verb failed: {resp}"))?;
+            print!("{text}");
+            Ok(())
+        }
         Some("bench") => {
             let opts = caba::bench::BenchOpts {
                 quick: args.flag("quick").is_some(),
-                out: args.flag("out").unwrap_or("BENCH_pr8.json").to_string(),
+                out: args.flag("out").unwrap_or("BENCH_pr9.json").to_string(),
                 floors: args.flag("floors").map(str::to_string),
             };
             let t0 = Instant::now();
@@ -494,20 +551,22 @@ fn run() -> Result<()> {
         Some("trace") => run_trace(&args),
         _ => {
             eprintln!(
-                "usage: caba <list|table1|run|prof|fig|sweep|serve|client|trace|bench> [...]\n  \
+                "usage: caba <list|table1|run|prof|fig|sweep|serve|client|metrics|trace|bench> [...]\n  \
                  caba run --app PVC --design CABA-BDI [--scale 0.25] [--threads N] [--oracle native|pjrt]\n  \
                  caba run --app PVC --timeline   (ASCII flight-recorder timeline; --json for machine-readable)\n  \
                  caba prof trace.json --app PVC [--design CABA-BDI]   (Perfetto/chrome-trace export)\n  \
+                 caba prof spans.json --serve /tmp/caba.sock   (daemon request spans -> Perfetto)\n  \
                  caba fig 8 [--scale 0.25] [--jobs N] [--set key=value]  (fig memo = §8.1 suite)\n  \
                  caba sweep --apps eval|memo --designs headline --bw 0.5,1.0,2.0 [--jobs N] [--store DIR]\n  \
                  caba sweep --trace run.cabatrace --designs headline [--bw 0.5,1.0,2.0]\n  \
-                 caba serve --socket /tmp/caba.sock [--jobs N] [--queue 64] [--deadline-ms 30000] [--store DIR] [--fault spec]\n  \
+                 caba serve --socket /tmp/caba.sock [--jobs N] [--queue 64] [--deadline-ms 30000] [--store DIR] [--fault spec] [--log]\n  \
                  caba client /tmp/caba.sock '{{\"verb\":\"sweep\",\"app\":\"SLA\",\"design\":\"CABA-BDI\",\"scale\":0.01}}'\n  \
+                 caba metrics /tmp/caba.sock   (Prometheus text exposition from a running daemon)\n  \
                  caba trace record PVC [--design CABA-BDI] [--scale 0.25] [--out PVC.cabatrace]\n  \
                  caba trace replay run.cabatrace [--design CABA-BDI] [--set key=value]\n  \
                  caba trace info run.cabatrace\n  \
                  caba trace import dump.txt [--out dump.cabatrace] [--pattern random]\n  \
-                 caba bench [--quick] [--out BENCH_pr8.json] [--floors BENCH_floors.txt]"
+                 caba bench [--quick] [--out BENCH_pr9.json] [--floors BENCH_floors.txt]"
             );
             Ok(())
         }

@@ -1,0 +1,233 @@
+//! Log2-bucketed latency histogram — the allocation-free primitive under
+//! every latency figure the service stack reports.
+//!
+//! Design constraints (DESIGN.md §5d):
+//!
+//! * **Lock-cheap hot path.** `record` is two relaxed `fetch_add`s plus one
+//!   on the bucket — no mutex, no allocation, shareable behind `&self`
+//!   across the daemon's connection and worker threads.
+//! * **Percentiles without samples.** Buckets are powers of two: bucket 0
+//!   holds the value 0 and bucket `k` (1..=64) holds `[2^(k-1), 2^k - 1]`.
+//!   A quantile is answered as the *upper bound* of the first bucket whose
+//!   cumulative count reaches the rank, so the reported value `p` brackets
+//!   the true order statistic `t` as `t <= p < 2*max(t, 1)` — a guarantee
+//!   the property suite (`prop_hist_percentile_brackets_model`) pins
+//!   against a sorted-vec model.
+//! * **Mergeable.** Snapshots add bucket-wise; merge is associative and
+//!   commutative, so per-thread or per-phase histograms can be combined
+//!   without coordination (pinned by `prop_hist_merge_associative`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Bucket 0 plus one bucket per possible bit width of a `u64`.
+pub const N_BUCKETS: usize = 65;
+
+/// Bucket index for a value: 0 for 0, otherwise its bit width
+/// (`64 - leading_zeros`). `2^k` lands in bucket `k+1`, `2^k - 1` in
+/// bucket `k` — the power-of-two boundary exactness the unit tests pin.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros()) as usize
+    }
+}
+
+/// Inclusive upper bound of a bucket: 0, 1, 3, 7, … `u64::MAX`.
+#[inline]
+pub fn bucket_upper_bound(idx: usize) -> u64 {
+    debug_assert!(idx < N_BUCKETS);
+    if idx >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << idx) - 1
+    }
+}
+
+/// Thread-safe histogram. All operations are relaxed atomics: counts are
+/// eventually consistent across threads, which is the right contract for
+/// observability (the serve protocol never branches on them).
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value. No allocation, no locks.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a wall-clock duration in microseconds.
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// A point-in-time copy of the buckets, for percentile math and the
+    /// Prometheus exposition. Reads are relaxed: a snapshot taken while
+    /// writers are active is some valid interleaving, not a torn bucket.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-value copy of a histogram: mergeable, queryable, serializable by
+/// hand (no serde in the offline image).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; N_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl HistSnapshot {
+    pub fn empty() -> Self {
+        HistSnapshot {
+            buckets: [0; N_BUCKETS],
+            count: 0,
+            sum: 0,
+        }
+    }
+
+    /// Bucket-wise sum. Associative and commutative (property-tested), so
+    /// any merge tree over per-thread histograms yields the same result.
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i] + other.buckets[i]),
+            count: self.count + other.count,
+            sum: self.sum + other.sum,
+        }
+    }
+
+    /// Quantile `q` in [0, 1]: the upper bound of the first bucket whose
+    /// cumulative count reaches `ceil(q * count)` (clamped to at least 1).
+    /// Returns 0 for an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                return bucket_upper_bound(i);
+            }
+        }
+        bucket_upper_bound(N_BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+    pub fn p95(&self) -> u64 {
+        self.percentile(0.95)
+    }
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    /// Mean of the recorded values (exact, from `sum`/`count`), 0 if empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_exact_at_powers_of_two() {
+        // 2^k goes to bucket k+1 (it is that bucket's lower bound);
+        // 2^k - 1 goes to bucket k (it is that bucket's upper bound).
+        for k in 1..64usize {
+            let p = 1u64 << k;
+            assert_eq!(bucket_index(p), k + 1, "2^{k}");
+            assert_eq!(bucket_index(p - 1), k, "2^{k} - 1");
+            assert_eq!(bucket_upper_bound(k), p - 1);
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_upper_bound(0), 0);
+        assert_eq!(bucket_upper_bound(64), u64::MAX);
+    }
+
+    #[test]
+    fn record_and_percentile_smoke() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 100, 1000, 100_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 7);
+        assert_eq!(s.sum, 101_106);
+        // Median rank is ceil(0.5*7)=4 → the bucket holding 3 (index 2).
+        assert_eq!(s.p50(), 3);
+        // p99 rank is 7 → bucket of 100_000 (bit width 17, upper 131071).
+        assert_eq!(s.p99(), (1u64 << 17) - 1);
+        assert_eq!(s.percentile(0.0), 0); // clamped to rank 1 → value 0
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s, HistSnapshot::empty());
+        assert_eq!(s.percentile(0.5), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_bucketwise() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(5);
+        a.record(9);
+        b.record(5);
+        let m = a.snapshot().merge(&b.snapshot());
+        assert_eq!(m.count, 3);
+        assert_eq!(m.sum, 19);
+        assert_eq!(m.buckets[bucket_index(5)], 2);
+        assert_eq!(m.buckets[bucket_index(9)], 1);
+    }
+}

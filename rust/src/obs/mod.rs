@@ -1,0 +1,177 @@
+//! Service observability: the process-wide metrics layer for the serve /
+//! sweep / store stack (DESIGN.md §5d).
+//!
+//! Three pieces, each allocation-free on its hot path:
+//!
+//! * [`hist`] — log2-bucketed latency histograms (p50/p95/p99 derivable
+//!   from buckets, property-tested against a sorted-vec model);
+//! * [`prom`] — hand-rolled Prometheus text exposition (the offline image
+//!   has no serde, so the writer is golden-tested bytes);
+//! * [`spans`] — bounded per-request trace ring behind the `trace` verb
+//!   and `caba prof --serve`.
+//!
+//! [`ServiceMetrics`] is the daemon's registry: one instance per
+//! `serve::Server`, shared as an `Arc` by every connection thread and
+//! worker; [`JobMetrics`] is the slice of it the sweep engine accepts via
+//! `SweepEngine::with_metrics`, so CLI sweeps and figure regeneration can
+//! opt in without dragging the daemon types along.
+//!
+//! **Observation-only guarantee.** Nothing in this module is reachable
+//! from `SimConfig::fingerprint()` or from any simulation decision: the
+//! engine hook times `job.execute()` from the *outside*. The contract is
+//! pinned by `tests/serve_obs.rs::metrics_do_not_perturb_simulation`,
+//! which asserts SimStats bit-identity with metrics on vs off and that
+//! the fingerprinted key list did not grow.
+
+pub mod hist;
+pub mod prom;
+pub mod spans;
+
+pub use hist::{HistSnapshot, Histogram};
+pub use prom::PromWriter;
+pub use spans::{RequestTrace, TraceLog, DEFAULT_SPAN_CAP, UNSET};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Engine-side metrics: per-job wall time and queue wait, plus ok/failed
+/// outcome counts keyed off the `JobError` taxonomy. Shared between the
+/// sweep engine's internal work loop and the daemon's worker loop so both
+/// feed the same histograms.
+#[derive(Default)]
+pub struct JobMetrics {
+    /// Time from submission (engine `run` start, or daemon enqueue) until
+    /// a worker claimed the job. Microseconds.
+    pub queue_wait_us: Histogram,
+    /// `SweepJob::execute` wall time per executed job. Microseconds.
+    pub job_wall_us: Histogram,
+    /// Jobs that returned stats.
+    pub jobs_ok: AtomicU64,
+    /// Jobs that returned a typed `JobError`.
+    pub jobs_failed: AtomicU64,
+}
+
+impl JobMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// The daemon's metrics registry. Counters and gauges are relaxed
+/// `AtomicU64`s — cheap enough to bump on every request without showing
+/// up next to a multi-second simulation job.
+pub struct ServiceMetrics {
+    started: Instant,
+    request_seq: AtomicU64,
+
+    // Request-outcome counters (monotonic).
+    pub connections: AtomicU64,
+    pub requests: AtomicU64,
+    pub warm: AtomicU64,
+    pub cold: AtomicU64,
+    pub dedup: AtomicU64,
+    pub shed: AtomicU64,
+    pub deadline_expired: AtomicU64,
+    pub job_errors: AtomicU64,
+    pub bad_requests: AtomicU64,
+
+    // Queue gauges: live depth and its high-water mark.
+    pub queue_depth: AtomicU64,
+    pub queue_depth_hwm: AtomicU64,
+
+    /// End-to-end request latency (line received → response rendered).
+    pub request_us: Histogram,
+
+    /// The engine-facing slice, handed to `SweepEngine::with_metrics`.
+    pub jobs: Arc<JobMetrics>,
+
+    /// Completed request spans for the `trace` verb / Perfetto export.
+    pub trace: TraceLog,
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        ServiceMetrics {
+            started: Instant::now(),
+            request_seq: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            warm: AtomicU64::new(0),
+            cold: AtomicU64::new(0),
+            dedup: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            job_errors: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            queue_depth_hwm: AtomicU64::new(0),
+            request_us: Histogram::new(),
+            jobs: Arc::new(JobMetrics::new()),
+            trace: TraceLog::new(DEFAULT_SPAN_CAP),
+        }
+    }
+
+    /// Next request id, starting at 1. Ids are per-daemon-lifetime and
+    /// echoed in every JSON response for client-side correlation.
+    pub fn next_request_id(&self) -> u64 {
+        self.request_seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Microseconds since the daemon started — the time base every span
+    /// timestamp uses.
+    pub fn now_us(&self) -> u64 {
+        self.started.elapsed().as_micros().min(u64::MAX as u128) as u64
+    }
+
+    /// Track a queue push: bumps depth and folds it into the high-water
+    /// mark.
+    pub fn queue_pushed(&self) {
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_depth_hwm.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Track a queue pop (worker claimed a job).
+    pub fn queue_popped(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_ids_are_dense_from_one() {
+        let m = ServiceMetrics::new();
+        assert_eq!(m.next_request_id(), 1);
+        assert_eq!(m.next_request_id(), 2);
+        assert_eq!(m.next_request_id(), 3);
+    }
+
+    #[test]
+    fn queue_hwm_tracks_peak_not_current() {
+        let m = ServiceMetrics::new();
+        m.queue_pushed();
+        m.queue_pushed();
+        m.queue_pushed();
+        m.queue_popped();
+        m.queue_popped();
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 1);
+        assert_eq!(m.queue_depth_hwm.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn now_us_is_monotonic_from_start() {
+        let m = ServiceMetrics::new();
+        let a = m.now_us();
+        let b = m.now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,200 @@
+//! Hand-rolled Prometheus text exposition (format version 0.0.4).
+//!
+//! The offline image has no serde and no prometheus crate, so — like
+//! `serve/json.rs` — the writer is built by hand and pinned by a golden
+//! test. Only the three shapes the daemon needs are implemented:
+//! `counter`, `gauge`, and `histogram` (rendered from a
+//! [`HistSnapshot`](super::hist::HistSnapshot) as cumulative
+//! `_bucket{le="…"}` lines plus `_sum`/`_count`).
+//!
+//! Conventions:
+//! * metric names are `caba_`-prefixed snake_case, durations suffixed
+//!   `_us` (integer microseconds — the native unit of the histograms);
+//! * every metric gets exactly one `# HELP` and one `# TYPE` line;
+//! * histogram buckets are emitted cumulatively from bucket 0 through the
+//!   highest non-empty bucket, then `+Inf`, so scrapes stay small while
+//!   still being valid Prometheus histograms.
+
+use super::hist::{bucket_upper_bound, HistSnapshot};
+use std::fmt::Write as _;
+
+/// Incremental exposition builder. `into_string` yields the full scrape
+/// body, each metric separated by its HELP/TYPE header.
+#[derive(Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        PromWriter { out: String::new() }
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        debug_assert!(is_valid_metric_name(name), "bad metric name {name}");
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, v: u64) {
+        self.header(name, help, "counter");
+        let _ = writeln!(self.out, "{name} {v}");
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, v: u64) {
+        self.header(name, help, "gauge");
+        let _ = writeln!(self.out, "{name} {v}");
+    }
+
+    /// Cumulative-bucket histogram. `le` bounds are the inclusive bucket
+    /// upper bounds (0, 1, 3, 7, …) in the histogram's own unit.
+    pub fn histogram(&mut self, name: &str, help: &str, h: &HistSnapshot) {
+        self.header(name, help, "histogram");
+        let highest = h
+            .buckets
+            .iter()
+            .rposition(|&b| b != 0)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        let mut cum = 0u64;
+        for (i, &b) in h.buckets.iter().enumerate().take(highest) {
+            cum += b;
+            let le = bucket_upper_bound(i);
+            let _ = writeln!(self.out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+        }
+        let _ = writeln!(self.out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+        let _ = writeln!(self.out, "{name}_sum {}", h.sum);
+        let _ = writeln!(self.out, "{name}_count {}", h.count);
+    }
+
+    pub fn into_string(self) -> String {
+        self.out
+    }
+}
+
+fn is_valid_metric_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .next()
+            .is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Structural validity check used by the daemon tests and CI: every line
+/// must be a `# HELP`/`# TYPE` comment or a `name[{labels}] value` sample,
+/// every sample must follow a TYPE declaration for its family, and the
+/// value must parse as a number. Returns the first offending line.
+pub fn validate(text: &str) -> Result<(), String> {
+    let mut typed: Vec<String> = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let err = |m: &str| Err(format!("line {}: {m}: {line:?}", ln + 1));
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            if let Some(decl) = rest.strip_prefix("TYPE ") {
+                let mut it = decl.split_whitespace();
+                let (Some(name), Some(kind)) = (it.next(), it.next()) else {
+                    return err("malformed TYPE");
+                };
+                if !matches!(kind, "counter" | "gauge" | "histogram") {
+                    return err("unknown metric kind");
+                }
+                typed.push(name.to_string());
+            } else if !rest.starts_with("HELP ") {
+                return err("unknown comment");
+            }
+            continue;
+        }
+        // Sample line: name, optional {labels}, space, numeric value.
+        let (name_labels, value) = match line.rsplit_once(' ') {
+            Some(p) => p,
+            None => return err("no value"),
+        };
+        if value.parse::<f64>().is_err() && value != "+Inf" {
+            return err("non-numeric value");
+        }
+        let base = name_labels.split('{').next().unwrap_or("");
+        if !is_valid_metric_name(base) {
+            return err("bad metric name");
+        }
+        if name_labels.contains('{') && !name_labels.ends_with('}') {
+            return err("unterminated label set");
+        }
+        // The family is the name with histogram suffixes stripped.
+        let family = base
+            .strip_suffix("_bucket")
+            .or_else(|| base.strip_suffix("_sum"))
+            .or_else(|| base.strip_suffix("_count"))
+            .filter(|f| typed.iter().any(|t| t == f))
+            .unwrap_or(base);
+        if !typed.iter().any(|t| t == family) {
+            return err("sample before TYPE declaration");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::Histogram;
+
+    /// Golden exposition: the exact byte shape of each metric kind. A
+    /// change here is a scrape-format change and must be deliberate.
+    #[test]
+    fn golden_exposition_format() {
+        let h = Histogram::new();
+        h.record(0); // bucket 0
+        h.record(1); // bucket 1
+        h.record(6); // bucket 3 (range 4..=7)
+        h.record(7); // bucket 3
+        let mut w = PromWriter::new();
+        w.counter("caba_serve_requests_total", "Request lines received.", 9);
+        w.gauge("caba_serve_queue_depth", "Jobs waiting in queue.", 2);
+        w.histogram("caba_queue_wait_us", "Queue wait, microseconds.", &h.snapshot());
+        let got = w.into_string();
+        let want = "\
+# HELP caba_serve_requests_total Request lines received.
+# TYPE caba_serve_requests_total counter
+caba_serve_requests_total 9
+# HELP caba_serve_queue_depth Jobs waiting in queue.
+# TYPE caba_serve_queue_depth gauge
+caba_serve_queue_depth 2
+# HELP caba_queue_wait_us Queue wait, microseconds.
+# TYPE caba_queue_wait_us histogram
+caba_queue_wait_us_bucket{le=\"0\"} 1
+caba_queue_wait_us_bucket{le=\"1\"} 2
+caba_queue_wait_us_bucket{le=\"3\"} 2
+caba_queue_wait_us_bucket{le=\"7\"} 4
+caba_queue_wait_us_bucket{le=\"+Inf\"} 4
+caba_queue_wait_us_sum 14
+caba_queue_wait_us_count 4
+";
+        assert_eq!(got, want);
+        validate(&got).expect("golden exposition must validate");
+    }
+
+    #[test]
+    fn empty_histogram_renders_inf_only() {
+        let mut w = PromWriter::new();
+        w.histogram("caba_empty_us", "Nothing yet.", &HistSnapshot::empty());
+        let got = w.into_string();
+        assert!(got.contains("caba_empty_us_bucket{le=\"+Inf\"} 0\n"));
+        assert!(!got.contains("le=\"0\""));
+        validate(&got).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        assert!(validate("caba_x 1").is_err(), "sample before TYPE");
+        assert!(validate("# TYPE caba_x counter\ncaba_x one").is_err());
+        assert!(validate("# TYPE caba_x widget\ncaba_x 1").is_err());
+        assert!(validate("# TYPE caba_x counter\n9bad 1").is_err());
+        assert!(validate("# TYPE caba_x counter\ncaba_x{le=\"1\" 1").is_err());
+        assert!(validate("# HELP caba_x fine\n# TYPE caba_x counter\ncaba_x 1").is_ok());
+    }
+}

@@ -1,0 +1,136 @@
+//! Per-request trace spans for the serve daemon.
+//!
+//! Every request line the daemon accepts gets a [`RequestTrace`]: stage
+//! timestamps (microseconds since daemon start) through the lifecycle
+//! accept → parse → queue → execute → respond, plus the outcome and the
+//! request id that is echoed in the JSON response. Completed spans land in
+//! a bounded ring ([`TraceLog`]) that the `trace` verb snapshots and
+//! `caba prof --serve` renders as Chrome trace JSON
+//! (`telemetry::export::server_trace_json`).
+//!
+//! Stages a request never reached keep the [`UNSET`] sentinel; the wire
+//! encoding maps it to JSON `null` and the Perfetto export skips it.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Sentinel for "this stage never happened" (e.g. `t_queued` on a warm
+/// hit). Kept out of arithmetic by explicit checks, never subtracted.
+pub const UNSET: u64 = u64::MAX;
+
+/// Default ring capacity: enough for a full CI burst plus interactive
+/// poking, small enough that the daemon's footprint stays flat.
+pub const DEFAULT_SPAN_CAP: usize = 4096;
+
+/// One completed request. All timestamps are µs since daemon start.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RequestTrace {
+    /// The id echoed as `"request_id"` in the JSON response.
+    pub id: u64,
+    /// Verb as received ("sweep", "stats", …, or "?" for unparsable lines).
+    pub verb: String,
+    /// Sweep requests carry "APP/DESIGN"; other verbs leave it empty.
+    pub detail: String,
+    /// Terminal state: ok | warm | cold | dedup | shed | deadline |
+    /// error | bad_request | draining.
+    pub outcome: String,
+    /// Line received on the connection thread.
+    pub t_accept: u64,
+    /// JSON parse + validation finished ([`UNSET`] if parse failed).
+    pub t_parsed: u64,
+    /// Job enqueued for a worker ([`UNSET`] on warm/dedup/shed paths).
+    pub t_queued: u64,
+    /// Response rendered back to the client.
+    pub t_done: u64,
+    /// Time the job spent queued before a worker claimed it (0 if never
+    /// queued). For dedup followers this is the leader's queue wait.
+    pub queue_wait_us: u64,
+    /// Engine execute wall time for the job this request observed
+    /// (0 on warm hits).
+    pub exec_us: u64,
+}
+
+/// Bounded MPMC span ring: completed spans push at the tail, the oldest
+/// fall off the head once `cap` is reached, and `dropped` counts the
+/// evictions so the `trace` verb can report truncation honestly. A plain
+/// mutex is fine here — pushes happen once per *request*, not per
+/// simulated cycle, and the critical section is a VecDeque rotate.
+pub struct TraceLog {
+    ring: Mutex<VecDeque<RequestTrace>>,
+    cap: usize,
+    dropped: AtomicU64,
+}
+
+impl TraceLog {
+    pub fn new(cap: usize) -> Self {
+        TraceLog {
+            ring: Mutex::new(VecDeque::with_capacity(cap.min(1024))),
+            cap: cap.max(1),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn push(&self, span: RequestTrace) {
+        let mut ring = match self.ring.lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        };
+        if ring.len() == self.cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(span);
+    }
+
+    /// Copy of the ring, oldest first.
+    pub fn snapshot(&self) -> Vec<RequestTrace> {
+        match self.ring.lock() {
+            Ok(g) => g.iter().cloned().collect(),
+            Err(poison) => poison.into_inner().iter().cloned().collect(),
+        }
+    }
+
+    /// Spans evicted to honour the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64) -> RequestTrace {
+        RequestTrace {
+            id,
+            verb: "sweep".into(),
+            detail: "SLA/Base".into(),
+            outcome: "cold".into(),
+            t_accept: id * 10,
+            t_parsed: id * 10 + 1,
+            t_queued: id * 10 + 2,
+            t_done: id * 10 + 9,
+            queue_wait_us: 3,
+            exec_us: 4,
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let log = TraceLog::new(3);
+        for id in 1..=5 {
+            log.push(span(id));
+        }
+        let snap = log.snapshot();
+        assert_eq!(snap.iter().map(|s| s.id).collect::<Vec<_>>(), vec![3, 4, 5]);
+        assert_eq!(log.dropped(), 2);
+    }
+
+    #[test]
+    fn snapshot_preserves_fields() {
+        let log = TraceLog::new(8);
+        log.push(span(7));
+        assert_eq!(log.snapshot(), vec![span(7)]);
+    }
+}

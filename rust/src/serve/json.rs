@@ -69,6 +69,15 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Array elements (`caba prof --serve` walks the `trace` verb's
+    /// spans array with this).
+    pub fn elements(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
 }
 
 /// Parse one complete JSON value; trailing non-whitespace is an error.

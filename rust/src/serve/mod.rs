@@ -44,10 +44,37 @@
 //! stats' canonical encoding — so clients (and the fault-injection
 //! harness in `tests/serve_faults.rs` and `caba bench`) can assert
 //! bit-identity without shipping the full struct.
+//!
+//! ## Observability
+//!
+//! The daemon owns a [`crate::obs::ServiceMetrics`] registry (atomic
+//! counters/gauges, log2 latency histograms, a bounded request-span
+//! ring). Every request line gets a **request id**, echoed as
+//! `"request_id"` in every response — ok, error, shed, deadline — so a
+//! client retrying across shed/deadline answers can correlate them; with
+//! `--log` the daemon also writes one structured line per request to
+//! stderr. Three read-out surfaces:
+//!
+//! * the `metrics` verb — Prometheus text exposition (hand-rolled, like
+//!   this module's JSON) carried as one escaped `"metrics"` string field
+//!   to keep the one-line-per-response wire protocol;
+//! * the enriched `stats` verb — queue depth + high-water mark, the
+//!   warm/cold/dedup/shed/deadline split, request-latency percentiles,
+//!   and the full [`StoreCounters`] (quarantines, put errors, swept
+//!   temps — previously counted but invisible to clients);
+//! * the `trace` verb — recent request spans (accept → parse → queue →
+//!   execute → respond timestamps), which `caba prof --serve` renders as
+//!   Perfetto-loadable Chrome trace JSON via
+//!   [`crate::telemetry::export::server_trace_json`].
+//!
+//! All of it is observation-only: metrics are recorded strictly around
+//! engine/store calls, nothing is fingerprinted, and
+//! `tests/serve_obs.rs` pins SimStats bit-identity with metrics on/off.
 
 pub mod json;
 
 use crate::config::SimConfig;
+use crate::obs::{PromWriter, RequestTrace, ServiceMetrics, UNSET};
 use crate::sim::designs::Design;
 use crate::stats::SimStats;
 use crate::store::{stats_digest, FaultPlan, RunStore, StoreCounters};
@@ -61,7 +88,7 @@ use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Process-wide flag set by the SIGTERM/SIGINT handler; the accept loop
 /// polls it. Kept separate from the per-server stop flag so in-process
@@ -106,6 +133,8 @@ pub struct ServeOpts {
     pub store_dir: Option<PathBuf>,
     /// Fault-injection plan (tests, `caba bench`, `--fault`).
     pub fault: Option<Arc<FaultPlan>>,
+    /// Write one structured line per request to stderr (`--log`).
+    pub log: bool,
 }
 
 impl ServeOpts {
@@ -117,6 +146,7 @@ impl ServeOpts {
             default_deadline_ms: 30_000,
             store_dir: None,
             fault: None,
+            log: false,
         }
     }
 }
@@ -148,18 +178,32 @@ pub struct ServeSummary {
     pub counters: ServeCounters,
     pub store: Option<StoreCounters>,
     pub cache_entries: u64,
+    /// Deepest the cold-miss queue ever got.
+    pub queue_depth_hwm: u64,
+    /// End-to-end request latency percentiles, microseconds (log2-bucket
+    /// upper bounds — see `crate::obs::hist`).
+    pub request_p50_us: u64,
+    pub request_p95_us: u64,
+    pub request_p99_us: u64,
 }
 
 #[derive(Default)]
 struct Pending {
     result: Mutex<Option<Result<SimStats, JobError>>>,
     cv: Condvar,
+    /// Filled by the worker before it notifies: how long the job queued
+    /// and how long it executed. Dedup followers read the leader's
+    /// values — the span they observed *is* the shared job's.
+    queue_wait_us: AtomicU64,
+    exec_us: AtomicU64,
 }
 
 struct QueueItem {
     job: SweepJob,
     key: JobKey,
     pending: Arc<Pending>,
+    /// Admission time, for the queue-wait histogram.
+    enqueued: Instant,
 }
 
 struct Inner {
@@ -171,37 +215,40 @@ struct Inner {
     queue_cv: Condvar,
     stop: AtomicBool,
     active_conns: AtomicU64,
-    connections: AtomicU64,
-    requests: AtomicU64,
-    warm: AtomicU64,
-    cold: AtomicU64,
-    dedup: AtomicU64,
-    shed: AtomicU64,
-    deadline_expired: AtomicU64,
-    job_errors: AtomicU64,
-    bad_requests: AtomicU64,
+    /// The observability registry (DESIGN.md §5d): request/outcome
+    /// counters, queue gauges, latency histograms, the span ring. The
+    /// engine shares its `jobs` slice via `SweepEngine::with_metrics`.
+    metrics: Arc<ServiceMetrics>,
+    /// Structured per-request stderr logging (`--log`).
+    log: bool,
 }
 
 impl Inner {
     fn counters(&self) -> ServeCounters {
+        let m = &self.metrics;
         ServeCounters {
-            connections: self.connections.load(Ordering::Relaxed),
-            requests: self.requests.load(Ordering::Relaxed),
-            warm: self.warm.load(Ordering::Relaxed),
-            cold: self.cold.load(Ordering::Relaxed),
-            dedup: self.dedup.load(Ordering::Relaxed),
-            shed: self.shed.load(Ordering::Relaxed),
-            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
-            job_errors: self.job_errors.load(Ordering::Relaxed),
-            bad_requests: self.bad_requests.load(Ordering::Relaxed),
+            connections: m.connections.load(Ordering::Relaxed),
+            requests: m.requests.load(Ordering::Relaxed),
+            warm: m.warm.load(Ordering::Relaxed),
+            cold: m.cold.load(Ordering::Relaxed),
+            dedup: m.dedup.load(Ordering::Relaxed),
+            shed: m.shed.load(Ordering::Relaxed),
+            deadline_expired: m.deadline_expired.load(Ordering::Relaxed),
+            job_errors: m.job_errors.load(Ordering::Relaxed),
+            bad_requests: m.bad_requests.load(Ordering::Relaxed),
         }
     }
 
     fn summary(&self) -> ServeSummary {
+        let req = self.metrics.request_us.snapshot();
         ServeSummary {
             counters: self.counters(),
             store: self.engine.cache().store_counters(),
             cache_entries: self.engine.cache_entries() as u64,
+            queue_depth_hwm: self.metrics.queue_depth_hwm.load(Ordering::Relaxed),
+            request_p50_us: req.p50(),
+            request_p95_us: req.p95(),
+            request_p99_us: req.p99(),
         }
     }
 }
@@ -236,6 +283,12 @@ impl ServerHandle {
     pub fn summary(&self) -> ServeSummary {
         self.inner.summary()
     }
+
+    /// The live metrics registry (in-process tests and the bench load
+    /// generator read histograms/gauges without a socket round-trip).
+    pub fn metrics(&self) -> &Arc<ServiceMetrics> {
+        &self.inner.metrics
+    }
 }
 
 impl Server {
@@ -252,7 +305,9 @@ impl Server {
             }
             None => RunCache::new(),
         };
-        let mut engine = SweepEngine::with_cache(opts.jobs, Arc::new(cache));
+        let metrics = Arc::new(ServiceMetrics::new());
+        let mut engine = SweepEngine::with_cache(opts.jobs, Arc::new(cache))
+            .with_metrics(Arc::clone(&metrics.jobs));
         if let Some(f) = &opts.fault {
             engine = engine.with_fault(Arc::clone(f));
         }
@@ -278,15 +333,8 @@ impl Server {
                 queue_cv: Condvar::new(),
                 stop: AtomicBool::new(false),
                 active_conns: AtomicU64::new(0),
-                connections: AtomicU64::new(0),
-                requests: AtomicU64::new(0),
-                warm: AtomicU64::new(0),
-                cold: AtomicU64::new(0),
-                dedup: AtomicU64::new(0),
-                shed: AtomicU64::new(0),
-                deadline_expired: AtomicU64::new(0),
-                job_errors: AtomicU64::new(0),
-                bad_requests: AtomicU64::new(0),
+                metrics,
+                log: opts.log,
             }),
             listener,
             socket: opts.socket,
@@ -316,7 +364,7 @@ impl Server {
             }
             match self.listener.accept() {
                 Ok((stream, _)) => {
-                    self.inner.connections.fetch_add(1, Ordering::Relaxed);
+                    self.inner.metrics.connections.fetch_add(1, Ordering::Relaxed);
                     self.inner.active_conns.fetch_add(1, Ordering::SeqCst);
                     let inner = Arc::clone(&self.inner);
                     std::thread::spawn(move || {
@@ -369,10 +417,21 @@ fn worker_loop(inner: &Inner) {
                 q = guard;
             }
         };
-        let Some(QueueItem { job, key, pending }) = item else { return };
+        let Some(QueueItem { job, key, pending, enqueued }) = item else { return };
+        let m = &inner.metrics;
+        m.queue_popped();
+        let queue_wait = enqueued.elapsed();
+        m.jobs.queue_wait_us.record_duration(queue_wait);
+        pending
+            .queue_wait_us
+            .store(queue_wait.as_micros().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+        let t0 = Instant::now();
         let result = inner.engine.try_run_one(&job);
+        pending
+            .exec_us
+            .store(t0.elapsed().as_micros().min(u64::MAX as u128) as u64, Ordering::Relaxed);
         if result.is_err() {
-            inner.job_errors.fetch_add(1, Ordering::Relaxed);
+            m.job_errors.fetch_add(1, Ordering::Relaxed);
         }
         *pending.result.lock().unwrap_or_else(PoisonError::into_inner) = Some(result);
         pending.cv.notify_all();
@@ -422,34 +481,102 @@ fn handle_connection(inner: &Inner, stream: UnixStream) {
 }
 
 /// Dispatch one request line. `None` = blank line, no response owed.
+/// Everything else — including unparsable garbage — gets a response
+/// carrying a fresh `request_id`, a completed span in the trace ring,
+/// and (under `--log`) one structured stderr line.
 fn handle_line(inner: &Inner, line: &str) -> Option<String> {
     if line.is_empty() {
         return None;
     }
-    inner.requests.fetch_add(1, Ordering::Relaxed);
+    let m = &inner.metrics;
+    m.requests.fetch_add(1, Ordering::Relaxed);
+    let id = m.next_request_id();
+    let mut span = RequestTrace {
+        id,
+        verb: "?".to_string(),
+        detail: String::new(),
+        outcome: String::new(),
+        t_accept: m.now_us(),
+        t_parsed: UNSET,
+        t_queued: UNSET,
+        t_done: 0,
+        queue_wait_us: 0,
+        exec_us: 0,
+    };
+    let response = dispatch(inner, line, id, &mut span);
+    span.t_done = m.now_us();
+    m.request_us.record(span.t_done.saturating_sub(span.t_accept));
+    if inner.log {
+        eprintln!(
+            "[serve] req={} verb={} detail={} outcome={} total_us={} queue_us={} exec_us={}",
+            span.id,
+            span.verb,
+            if span.detail.is_empty() { "-" } else { &span.detail },
+            span.outcome,
+            span.t_done.saturating_sub(span.t_accept),
+            span.queue_wait_us,
+            span.exec_us,
+        );
+    }
+    m.trace.push(span);
+    Some(response)
+}
+
+/// Verb dispatch, filling the request span as stages complete.
+fn dispatch(inner: &Inner, line: &str, id: u64, span: &mut RequestTrace) -> String {
+    let m = &inner.metrics;
     let req = match json::parse(line) {
         Ok(v) => v,
         Err(e) => {
-            inner.bad_requests.fetch_add(1, Ordering::Relaxed);
-            return Some(error_json("error", &format!("bad JSON: {e:#}")));
+            m.bad_requests.fetch_add(1, Ordering::Relaxed);
+            span.outcome = "bad_request".to_string();
+            return error_json("error", id, &format!("bad JSON: {e:#}"));
         }
     };
-    match req.get("verb").and_then(Json::as_str) {
-        Some("ping") => Some(r#"{"status":"ok","pong":true}"#.to_string()),
-        Some("stats") => Some(stats_json(inner)),
+    span.t_parsed = m.now_us();
+    let verb = req.get("verb").and_then(Json::as_str);
+    if let Some(v) = verb {
+        span.verb = v.to_string();
+    }
+    match verb {
+        Some("ping") => {
+            span.outcome = "ok".to_string();
+            format!("{{\"status\":\"ok\",\"request_id\":{id},\"pong\":true}}")
+        }
+        Some("stats") => {
+            span.outcome = "ok".to_string();
+            stats_json(inner, id)
+        }
+        Some("metrics") => {
+            // The wire protocol is one JSON line per response, so the
+            // multi-line Prometheus exposition ships as one escaped
+            // string field (`caba metrics` decodes and prints it raw).
+            span.outcome = "ok".to_string();
+            format!(
+                "{{\"status\":\"ok\",\"request_id\":{id},\"metrics\":\"{}\"}}",
+                json::escape(&render_prometheus(inner))
+            )
+        }
+        Some("trace") => {
+            span.outcome = "ok".to_string();
+            trace_json(inner, id)
+        }
         Some("shutdown") => {
             inner.stop.store(true, Ordering::SeqCst);
             inner.queue_cv.notify_all();
-            Some(r#"{"status":"ok","draining":true}"#.to_string())
+            span.outcome = "draining".to_string();
+            format!("{{\"status\":\"ok\",\"request_id\":{id},\"draining\":true}}")
         }
-        Some("sweep") => Some(handle_sweep(inner, &req)),
+        Some("sweep") => handle_sweep(inner, &req, id, span),
         Some(other) => {
-            inner.bad_requests.fetch_add(1, Ordering::Relaxed);
-            Some(error_json("error", &format!("unknown verb {other:?}")))
+            m.bad_requests.fetch_add(1, Ordering::Relaxed);
+            span.outcome = "bad_request".to_string();
+            error_json("error", id, &format!("unknown verb {other:?}"))
         }
         None => {
-            inner.bad_requests.fetch_add(1, Ordering::Relaxed);
-            Some(error_json("error", "missing \"verb\""))
+            m.bad_requests.fetch_add(1, Ordering::Relaxed);
+            span.outcome = "bad_request".to_string();
+            error_json("error", id, "missing \"verb\"")
         }
     }
 }
@@ -487,14 +614,17 @@ fn sweep_job_from(req: &Json) -> Result<SweepJob, String> {
     Ok(SweepJob::new(app, design, cfg, scale))
 }
 
-fn handle_sweep(inner: &Inner, req: &Json) -> String {
+fn handle_sweep(inner: &Inner, req: &Json, id: u64, span: &mut RequestTrace) -> String {
+    let m = &inner.metrics;
     let job = match sweep_job_from(req) {
         Ok(j) => j,
         Err(msg) => {
-            inner.bad_requests.fetch_add(1, Ordering::Relaxed);
-            return error_json("error", &msg);
+            m.bad_requests.fetch_add(1, Ordering::Relaxed);
+            span.outcome = "bad_request".to_string();
+            return error_json("error", id, &msg);
         }
     };
+    span.detail = format!("{}/{}", job.app.name, job.design.name);
     let key = job.key();
     let deadline_ms = req
         .get("deadline_ms")
@@ -504,8 +634,9 @@ fn handle_sweep(inner: &Inner, req: &Json) -> String {
 
     // Warm path: cache (and, through it, the validated store).
     if let Some(stats) = inner.engine.cache().get(&key) {
-        inner.warm.fetch_add(1, Ordering::Relaxed);
-        return ok_json(&job, "warm", &stats);
+        m.warm.fetch_add(1, Ordering::Relaxed);
+        span.outcome = "warm".to_string();
+        return ok_json(&job, "warm", id, &stats);
     }
 
     // Admission. Lock order: inflight, then queue; both released before
@@ -516,16 +647,25 @@ fn handle_sweep(inner: &Inner, req: &Json) -> String {
             (Arc::clone(p), "dedup")
         } else {
             if inner.stop.load(Ordering::SeqCst) {
-                return error_json("draining", "server is draining; retry elsewhere");
+                span.outcome = "draining".to_string();
+                return error_json("draining", id, "server is draining; retry elsewhere");
             }
             let mut q = inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
             if q.len() >= inner.queue_cap {
-                inner.shed.fetch_add(1, Ordering::Relaxed);
-                return error_json("shed", "queue full; retry with backoff");
+                m.shed.fetch_add(1, Ordering::Relaxed);
+                span.outcome = "shed".to_string();
+                return error_json("shed", id, "queue full; retry with backoff");
             }
             let p = Arc::new(Pending::default());
             inflight.insert(key, Arc::clone(&p));
-            q.push_back(QueueItem { job: job.clone(), key, pending: Arc::clone(&p) });
+            q.push_back(QueueItem {
+                job: job.clone(),
+                key,
+                pending: Arc::clone(&p),
+                enqueued: Instant::now(),
+            });
+            m.queue_pushed();
+            span.t_queued = m.now_us();
             inner.queue_cv.notify_one();
             (p, "cold")
         }
@@ -537,29 +677,41 @@ fn handle_sweep(inner: &Inner, req: &Json) -> String {
         .cv
         .wait_timeout_while(guard, Duration::from_millis(deadline_ms), |r| r.is_none())
         .unwrap_or_else(PoisonError::into_inner);
+    // Worker-side timings (the leader's, for dedup followers — the span
+    // they observed *is* the shared job's). Unfilled on deadline: the
+    // job is still running.
+    span.queue_wait_us = pending.queue_wait_us.load(Ordering::Relaxed);
+    span.exec_us = pending.exec_us.load(Ordering::Relaxed);
     match guard.as_ref() {
         None => {
-            inner.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            m.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            span.outcome = "deadline".to_string();
             error_json(
                 "deadline",
+                id,
                 &format!("no result within {deadline_ms} ms; the job continues and will be warm"),
             )
         }
         Some(Ok(stats)) => {
             match source {
-                "dedup" => inner.dedup.fetch_add(1, Ordering::Relaxed),
-                _ => inner.cold.fetch_add(1, Ordering::Relaxed),
+                "dedup" => m.dedup.fetch_add(1, Ordering::Relaxed),
+                _ => m.cold.fetch_add(1, Ordering::Relaxed),
             };
-            ok_json(&job, source, stats)
+            span.outcome = source.to_string();
+            ok_json(&job, source, id, stats)
         }
-        Some(Err(e)) => error_json("error", &e.to_string()),
+        Some(Err(e)) => {
+            span.outcome = "error".to_string();
+            error_json("error", id, &e.to_string())
+        }
     }
 }
 
-fn ok_json(job: &SweepJob, source: &str, stats: &SimStats) -> String {
+fn ok_json(job: &SweepJob, source: &str, id: u64, stats: &SimStats) -> String {
     format!(
-        "{{\"status\":\"ok\",\"source\":\"{source}\",\"app\":\"{}\",\"design\":\"{}\",\
-         \"cycles\":{},\"warp_insts\":{},\"finished\":{},\"stats_digest\":\"{:016x}\"}}",
+        "{{\"status\":\"ok\",\"request_id\":{id},\"source\":\"{source}\",\"app\":\"{}\",\
+         \"design\":\"{}\",\"cycles\":{},\"warp_insts\":{},\"finished\":{},\
+         \"stats_digest\":\"{:016x}\"}}",
         json::escape(job.app.name),
         json::escape(job.design.name),
         stats.cycles,
@@ -569,16 +721,23 @@ fn ok_json(job: &SweepJob, source: &str, stats: &SimStats) -> String {
     )
 }
 
-fn error_json(status: &str, message: &str) -> String {
-    format!("{{\"status\":\"{status}\",\"message\":\"{}\"}}", json::escape(message))
+fn error_json(status: &str, id: u64, message: &str) -> String {
+    format!(
+        "{{\"status\":\"{status}\",\"request_id\":{id},\"message\":\"{}\"}}",
+        json::escape(message)
+    )
 }
 
-fn stats_json(inner: &Inner) -> String {
+fn stats_json(inner: &Inner, id: u64) -> String {
     let c = inner.counters();
+    let m = &inner.metrics;
+    let req_us = m.request_us.snapshot();
     let mut out = format!(
-        "{{\"status\":\"ok\",\"connections\":{},\"requests\":{},\"warm\":{},\"cold\":{},\
-         \"dedup\":{},\"shed\":{},\"deadline_expired\":{},\"job_errors\":{},\
-         \"bad_requests\":{},\"cache_entries\":{}",
+        "{{\"status\":\"ok\",\"request_id\":{id},\"connections\":{},\"requests\":{},\
+         \"warm\":{},\"cold\":{},\"dedup\":{},\"shed\":{},\"deadline_expired\":{},\
+         \"job_errors\":{},\"bad_requests\":{},\"cache_entries\":{},\"queue_depth\":{},\
+         \"queue_depth_hwm\":{},\"request_p50_us\":{},\"request_p95_us\":{},\
+         \"request_p99_us\":{}",
         c.connections,
         c.requests,
         c.warm,
@@ -589,16 +748,177 @@ fn stats_json(inner: &Inner) -> String {
         c.job_errors,
         c.bad_requests,
         inner.engine.cache_entries(),
+        m.queue_depth.load(Ordering::Relaxed),
+        m.queue_depth_hwm.load(Ordering::Relaxed),
+        req_us.p50(),
+        req_us.p95(),
+        req_us.p99(),
     );
     if let Some(s) = inner.engine.cache().store_counters() {
         out.push_str(&format!(
-            ",\"store_puts\":{},\"store_warm_hits\":{},\"store_quarantined\":{},\
-             \"store_temp_cleaned\":{},\"store_put_errors\":{}",
-            s.puts, s.warm_hits, s.quarantined, s.temp_cleaned, s.put_errors
+            ",\"store_puts\":{},\"store_warm_hits\":{},\"store_misses\":{},\
+             \"store_quarantined\":{},\"store_temp_cleaned\":{},\"store_put_errors\":{}",
+            s.puts, s.warm_hits, s.misses, s.quarantined, s.temp_cleaned, s.put_errors
         ));
     }
     out.push('}');
     out
+}
+
+/// The Prometheus text exposition behind the `metrics` verb: every serve
+/// counter/gauge, the three latency histograms, and — when store-backed —
+/// the full [`StoreCounters`] including the previously invisible
+/// quarantine/put-error/temp-sweep counts.
+fn render_prometheus(inner: &Inner) -> String {
+    let m = &inner.metrics;
+    let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+    let mut w = PromWriter::new();
+    w.counter("caba_serve_connections_total", "Client connections accepted.", ld(&m.connections));
+    w.counter("caba_serve_requests_total", "Request lines received.", ld(&m.requests));
+    w.counter("caba_serve_warm_total", "Requests answered from the cache/store.", ld(&m.warm));
+    w.counter("caba_serve_cold_total", "Requests computed by a worker.", ld(&m.cold));
+    w.counter(
+        "caba_serve_dedup_total",
+        "Requests that joined an identical in-flight job.",
+        ld(&m.dedup),
+    );
+    w.counter("caba_serve_shed_total", "Requests shed at admission (queue full).", ld(&m.shed));
+    w.counter(
+        "caba_serve_deadline_total",
+        "Requests whose client gave up at its deadline.",
+        ld(&m.deadline_expired),
+    );
+    w.counter(
+        "caba_serve_job_errors_total",
+        "Jobs that failed with a typed JobError.",
+        ld(&m.job_errors),
+    );
+    w.counter(
+        "caba_serve_bad_requests_total",
+        "Lines that did not parse into a valid request.",
+        ld(&m.bad_requests),
+    );
+    w.counter(
+        "caba_serve_trace_dropped_total",
+        "Request spans evicted from the bounded trace ring.",
+        m.trace.dropped(),
+    );
+    w.gauge("caba_serve_queue_depth", "Cold-miss jobs currently queued.", ld(&m.queue_depth));
+    w.gauge(
+        "caba_serve_queue_depth_hwm",
+        "Queue depth high-water mark.",
+        ld(&m.queue_depth_hwm),
+    );
+    w.gauge(
+        "caba_serve_cache_entries",
+        "In-memory run-cache entries.",
+        inner.engine.cache_entries() as u64,
+    );
+    w.counter("caba_jobs_ok_total", "Engine jobs that returned stats.", ld(&m.jobs.jobs_ok));
+    w.counter(
+        "caba_jobs_failed_total",
+        "Engine jobs that returned a typed JobError.",
+        ld(&m.jobs.jobs_failed),
+    );
+    w.histogram(
+        "caba_serve_request_us",
+        "End-to-end request latency, microseconds.",
+        &m.request_us.snapshot(),
+    );
+    w.histogram(
+        "caba_serve_queue_wait_us",
+        "Queue wait before a worker claimed the job, microseconds.",
+        &m.jobs.queue_wait_us.snapshot(),
+    );
+    w.histogram(
+        "caba_job_wall_us",
+        "SweepJob::execute wall time, microseconds.",
+        &m.jobs.job_wall_us.snapshot(),
+    );
+    if let Some(s) = inner.engine.cache().store_counters() {
+        w.counter("caba_store_puts_total", "Store entries written.", s.puts);
+        w.counter("caba_store_warm_hits_total", "Store reads that validated.", s.warm_hits);
+        w.counter("caba_store_misses_total", "Store reads that found no entry.", s.misses);
+        w.counter(
+            "caba_store_quarantined_total",
+            "Corrupt entries quarantined on read.",
+            s.quarantined,
+        );
+        w.counter(
+            "caba_store_temp_cleaned_total",
+            "Stale temp files swept at open.",
+            s.temp_cleaned,
+        );
+        w.counter("caba_store_put_errors_total", "Store writes that failed.", s.put_errors);
+    }
+    w.into_string()
+}
+
+/// The `trace` verb: recent request spans, oldest first, as one JSON
+/// line. Unreached stages ([`UNSET`]) encode as `null`.
+fn trace_json(inner: &Inner, id: u64) -> String {
+    let spans = inner.metrics.trace.snapshot();
+    let mut out = format!(
+        "{{\"status\":\"ok\",\"request_id\":{id},\"dropped\":{},\"spans\":[",
+        inner.metrics.trace.dropped()
+    );
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&span_json(s));
+    }
+    out.push_str("]}");
+    out
+}
+
+fn span_json(s: &RequestTrace) -> String {
+    fn opt(v: u64) -> String {
+        if v == UNSET {
+            "null".to_string()
+        } else {
+            v.to_string()
+        }
+    }
+    format!(
+        "{{\"id\":{},\"verb\":\"{}\",\"detail\":\"{}\",\"outcome\":\"{}\",\"t_accept\":{},\
+         \"t_parsed\":{},\"t_queued\":{},\"t_done\":{},\"queue_wait_us\":{},\"exec_us\":{}}}",
+        s.id,
+        json::escape(&s.verb),
+        json::escape(&s.detail),
+        json::escape(&s.outcome),
+        s.t_accept,
+        opt(s.t_parsed),
+        opt(s.t_queued),
+        s.t_done,
+        s.queue_wait_us,
+        s.exec_us,
+    )
+}
+
+/// Decode one span object of a `trace` response back into a
+/// [`RequestTrace`] (`caba prof --serve` feeds these to
+/// [`crate::telemetry::export::server_trace_json`]). `null` timestamps
+/// map back to [`UNSET`]. Returns `None` on a malformed object.
+pub fn span_from_json(v: &Json) -> Option<RequestTrace> {
+    let num = |k: &str| v.get(k).and_then(Json::as_u64);
+    let opt = |k: &str| match v.get(k) {
+        None | Some(Json::Null) => Some(UNSET),
+        Some(x) => x.as_u64(),
+    };
+    let s = |k: &str| v.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+    Some(RequestTrace {
+        id: num("id")?,
+        verb: s("verb"),
+        detail: s("detail"),
+        outcome: s("outcome"),
+        t_accept: num("t_accept")?,
+        t_parsed: opt("t_parsed")?,
+        t_queued: opt("t_queued")?,
+        t_done: num("t_done")?,
+        queue_wait_us: num("queue_wait_us").unwrap_or(0),
+        exec_us: num("exec_us").unwrap_or(0),
+    })
 }
 
 /// One-shot client: send a single request line, return the response
@@ -637,10 +957,15 @@ pub fn render_summary(s: &ServeSummary) -> String {
         c.bad_requests,
         s.cache_entries,
     );
+    out.push_str(&format!(
+        "\nlatency: request p50 {} us  p95 {} us  p99 {} us  queue_hwm {}",
+        s.request_p50_us, s.request_p95_us, s.request_p99_us, s.queue_depth_hwm
+    ));
     if let Some(st) = &s.store {
         out.push_str(&format!(
-            "\nstore: puts {}  warm_hits {}  quarantined {}  temp_cleaned {}  put_errors {}",
-            st.puts, st.warm_hits, st.quarantined, st.temp_cleaned, st.put_errors
+            "\nstore: puts {}  warm_hits {}  misses {}  quarantined {}  temp_cleaned {}  \
+             put_errors {}",
+            st.puts, st.warm_hits, st.misses, st.quarantined, st.temp_cleaned, st.put_errors
         ));
     }
     out
@@ -691,14 +1016,36 @@ mod tests {
     fn responses_are_valid_json() {
         let s = SimStats::default();
         let job = sweep_job_from(&req(r#"{"verb":"sweep","app":"SLA"}"#)).unwrap();
-        let ok = ok_json(&job, "warm", &s);
+        let ok = ok_json(&job, "warm", 7, &s);
         let v = json::parse(&ok).unwrap();
         assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
         assert_eq!(v.get("source").and_then(Json::as_str), Some("warm"));
+        assert_eq!(v.get("request_id").and_then(Json::as_u64), Some(7));
         assert_eq!(v.get("stats_digest").and_then(Json::as_str).map(str::len), Some(16));
 
-        let err = error_json("shed", "queue full; retry \"later\"");
+        let err = error_json("shed", 8, "queue full; retry \"later\"");
         let v = json::parse(&err).unwrap();
         assert_eq!(v.get("status").and_then(Json::as_str), Some("shed"));
+        assert_eq!(v.get("request_id").and_then(Json::as_u64), Some(8));
+    }
+
+    #[test]
+    fn span_json_round_trips_including_null_stages() {
+        let span = RequestTrace {
+            id: 42,
+            verb: "sweep".to_string(),
+            detail: "SLA/Base".to_string(),
+            outcome: "warm".to_string(),
+            t_accept: 10,
+            t_parsed: 12,
+            t_queued: UNSET, // warm hit: never queued → null on the wire
+            t_done: 99,
+            queue_wait_us: 0,
+            exec_us: 0,
+        };
+        let wire = span_json(&span);
+        let v = json::parse(&wire).unwrap();
+        assert_eq!(v.get("t_queued"), Some(&Json::Null));
+        assert_eq!(span_from_json(&v), Some(span));
     }
 }

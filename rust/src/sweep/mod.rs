@@ -73,8 +73,15 @@
 //! With [`RunCache::with_store`] the cache becomes read-through /
 //! write-through against the crash-safe on-disk [`crate::store::RunStore`],
 //! making sweep results persistent across processes.
+//!
+//! With [`SweepEngine::with_metrics`] the engine feeds an observation-only
+//! [`crate::obs::JobMetrics`]: per-job wall time and queue wait into log2
+//! histograms, ok/failed outcome counts — timed strictly *around*
+//! [`SweepJob::execute`], so attaching metrics cannot perturb results
+//! (SimStats bit-identity on/off is pinned by `tests/serve_obs.rs`).
 
 use crate::config::SimConfig;
+use crate::obs::JobMetrics;
 use crate::sim::designs::Design;
 use crate::sim::Simulator;
 use crate::stats::SimStats;
@@ -86,6 +93,7 @@ use std::hash::{Hash, Hasher};
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
 
 /// One point of an evaluation sweep: a complete, self-contained
 /// simulation request — synthetic (`app` drives generation) or
@@ -395,6 +403,12 @@ pub struct SweepEngine {
     jobs: usize,
     cache: Arc<RunCache>,
     fault: Option<Arc<FaultPlan>>,
+    /// Observation-only instrumentation (`crate::obs`): per-job wall time,
+    /// queue wait, and ok/failed counts. `None` (the default) costs
+    /// nothing; when set, the hooks time `SweepJob::execute` strictly from
+    /// the *outside* — simulation inputs and results are untouched, a
+    /// contract pinned by `tests/serve_obs.rs`.
+    metrics: Option<Arc<JobMetrics>>,
 }
 
 impl SweepEngine {
@@ -413,13 +427,21 @@ impl SweepEngine {
     /// [`RunCache::with_store`], shared between `caba sweep` runs and the
     /// serve daemon's workers.
     pub fn with_cache(jobs: usize, cache: Arc<RunCache>) -> SweepEngine {
-        SweepEngine { jobs: resolve_jobs(jobs), cache, fault: None }
+        SweepEngine { jobs: resolve_jobs(jobs), cache, fault: None, metrics: None }
     }
 
     /// Attach a fault-injection plan: [`FaultPlan::before_job`] runs
     /// ahead of every executed (non-cached) job.
     pub fn with_fault(mut self, fault: Arc<FaultPlan>) -> SweepEngine {
         self.fault = Some(fault);
+        self
+    }
+
+    /// Attach job metrics (the serve daemon passes the [`JobMetrics`]
+    /// slice of its `obs::ServiceMetrics` registry; `caba sweep` could do
+    /// the same). Purely observational — see the field docs.
+    pub fn with_metrics(mut self, metrics: Arc<JobMetrics>) -> SweepEngine {
+        self.metrics = Some(metrics);
         self
     }
 
@@ -437,6 +459,23 @@ impl SweepEngine {
     /// This engine's cache (the serve daemon reads store counters off it).
     pub fn cache(&self) -> &Arc<RunCache> {
         &self.cache
+    }
+
+    /// Execute a job with the observation hooks around it: wall time into
+    /// `job_wall_us`, outcome into `jobs_ok`/`jobs_failed`. With no
+    /// metrics attached this is exactly `SweepJob::execute`.
+    fn observed_execute(&self, job: &SweepJob) -> Result<SimStats, JobError> {
+        let Some(m) = &self.metrics else {
+            return job.execute(self.fault.as_deref());
+        };
+        let t0 = Instant::now();
+        let res = job.execute(self.fault.as_deref());
+        m.job_wall_us.record_duration(t0.elapsed());
+        match &res {
+            Ok(_) => m.jobs_ok.fetch_add(1, Ordering::Relaxed),
+            Err(_) => m.jobs_failed.fetch_add(1, Ordering::Relaxed),
+        };
+        res
     }
 
     /// Dedup `jobs` against the cache, preserving first-seen order (keeps
@@ -467,14 +506,23 @@ impl SweepEngine {
     ) -> Vec<(usize, JobError)> {
         let errors: Mutex<Vec<(usize, JobError)>> = Mutex::new(Vec::new());
         let abort = AtomicBool::new(false);
-        let fault = self.fault.as_deref();
         let workers = self.jobs.min(todo.len()).max(1);
-        let run_one = |i: usize| match todo[i].execute(fault) {
-            Ok(stats) => self.cache.insert(todo_keys[i], stats),
-            Err(e) => {
-                errors.lock().unwrap_or_else(PoisonError::into_inner).push((i, e));
-                if fail_fast {
-                    abort.store(true, Ordering::Relaxed);
+        // Queue-wait instrumentation: every miss is conceptually enqueued
+        // when the matrix is submitted, and "claimed" when a worker calls
+        // `run_one` — the gap is what the engine's internal queue cost
+        // this job (observation-only, recorded nowhere near results).
+        let submitted = Instant::now();
+        let run_one = |i: usize| {
+            if let Some(m) = &self.metrics {
+                m.queue_wait_us.record_duration(submitted.elapsed());
+            }
+            match self.observed_execute(todo[i]) {
+                Ok(stats) => self.cache.insert(todo_keys[i], stats),
+                Err(e) => {
+                    errors.lock().unwrap_or_else(PoisonError::into_inner).push((i, e));
+                    if fail_fast {
+                        abort.store(true, Ordering::Relaxed);
+                    }
                 }
             }
         };
@@ -558,7 +606,7 @@ impl SweepEngine {
         if let Some(s) = self.cache.get(&key) {
             return Ok(s);
         }
-        let stats = job.execute(self.fault.as_deref())?;
+        let stats = self.observed_execute(job)?;
         self.cache.insert(key, stats.clone());
         Ok(stats)
     }

@@ -15,8 +15,15 @@
 //!
 //! Timestamps map 1 core cycle → 1 µs (`ts`/`dur` are µs in the format).
 //! Hand-rolled writer in the `BenchReport::to_json` idiom — no serde.
+//!
+//! [`server_trace_json`] reuses the same writer and lane packing for the
+//! serve daemon's request spans (`caba prof --serve`): pid 0 is the
+//! daemon, each request an `"X"` event from accept to respond (ts are
+//! the daemon's native µs), lane-packed so concurrent requests stack —
+//! loadable in the same Perfetto session as a simulator trace.
 
 use super::{Span, SpanOutcome, TelemetryRun};
+use crate::obs::{RequestTrace, UNSET};
 use std::fmt::Write as _;
 
 /// Pack overlapping spans into lanes: each span takes the first lane
@@ -164,6 +171,70 @@ pub fn chrome_trace_json(run: &TelemetryRun, app: &str, design: &str) -> String 
     out
 }
 
+/// Render the serve daemon's request spans ([`crate::obs::RequestTrace`],
+/// fetched via the `trace` verb) as Chrome trace-event JSON. One `"X"`
+/// event per request, ts/dur in the daemon's µs time base, lane-packed by
+/// accept order so concurrent requests stack in the viewer; queue/exec
+/// timings and the request id ride in `args`. `source` labels the trace
+/// (the socket path, typically).
+pub fn server_trace_json(spans: &[RequestTrace], source: &str, dropped: u64) -> String {
+    let mut spans: Vec<&RequestTrace> = spans.iter().collect();
+    spans.sort_by_key(|s| (s.t_accept, s.id));
+    let mut out = String::new();
+    let w = &mut out;
+    writeln!(w, "{{").unwrap();
+    writeln!(w, "  \"displayTimeUnit\": \"ms\",").unwrap();
+    writeln!(
+        w,
+        "  \"otherData\": {{\"source\": \"{}\", \"spans\": {}, \"spans_dropped\": {}}},",
+        esc(source),
+        spans.len(),
+        dropped
+    )
+    .unwrap();
+    writeln!(w, "  \"traceEvents\": [").unwrap();
+
+    let mut events: Vec<String> = Vec::new();
+    events.push(
+        "{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": 0, \"tid\": 0, \"args\": {\"name\": \"caba serve\"}}"
+            .to_string(),
+    );
+    let mut lanes: Vec<u64> = Vec::new();
+    for s in &spans {
+        let start = s.t_accept;
+        let end = s.t_done.max(start + 1);
+        let tid = lane_of(&mut lanes, start, end);
+        let t_queued = if s.t_queued == UNSET {
+            "null".to_string()
+        } else {
+            s.t_queued.to_string()
+        };
+        events.push(format!(
+            "{{\"name\": \"{} #{}\", \"cat\": \"{}\", \"ph\": \"X\", \"ts\": {}, \"dur\": {}, \"pid\": 0, \"tid\": {}, \"args\": {{\"request_id\": {}, \"detail\": \"{}\", \"outcome\": \"{}\", \"t_queued\": {}, \"queue_wait_us\": {}, \"exec_us\": {}}}}}",
+            esc(&s.verb),
+            s.id,
+            esc(&s.outcome),
+            start,
+            end - start,
+            tid,
+            s.id,
+            esc(&s.detail),
+            esc(&s.outcome),
+            t_queued,
+            s.queue_wait_us,
+            s.exec_us
+        ));
+    }
+
+    for (i, e) in events.iter().enumerate() {
+        let comma = if i + 1 < events.len() { "," } else { "" };
+        writeln!(w, "    {}{}", e, comma).unwrap();
+    }
+    writeln!(w, "  ]").unwrap();
+    writeln!(w, "}}").unwrap();
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{ChipWindow, CoreTimeline, CoreWindow, Span, SpanKind, SpanOutcome};
@@ -242,6 +313,39 @@ mod tests {
         // Pending span clamps to run end: dur = 25 - 5.
         assert!(json.contains("\"dur\": 20"));
         // Trailing element has no comma before the closing bracket.
+        assert!(!json.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn server_trace_json_is_balanced_and_lane_packed() {
+        let mk = |id: u64, t_accept: u64, t_done: u64, outcome: &str| RequestTrace {
+            id,
+            verb: "sweep".to_string(),
+            detail: "SLA/Base".to_string(),
+            outcome: outcome.to_string(),
+            t_accept,
+            t_parsed: t_accept + 1,
+            t_queued: if outcome == "cold" { t_accept + 2 } else { UNSET },
+            t_done,
+            queue_wait_us: 5,
+            exec_us: 100,
+        };
+        // Two overlapping requests and one later one — out of accept
+        // order, to prove the export sorts before lane packing.
+        let spans = vec![mk(3, 500, 600, "warm"), mk(1, 0, 400, "cold"), mk(2, 100, 300, "dedup")];
+        let json = server_trace_json(&spans, "/tmp/test.sock", 7);
+        let braces =
+            json.chars().filter(|&c| c == '{').count() - json.chars().filter(|&c| c == '}').count();
+        assert_eq!(braces, 0);
+        assert!(json.contains("\"name\": \"caba serve\""));
+        assert!(json.contains("\"spans_dropped\": 7"));
+        assert!(json.contains("sweep #1"));
+        assert!(json.contains("\"request_id\": 2"));
+        // Request 2 overlaps request 1 → lane 1; request 3 reuses lane 0.
+        assert!(json.contains("\"tid\": 1"));
+        // Warm span's t_queued is null, cold's is numeric.
+        assert!(json.contains("\"t_queued\": null"));
+        assert!(json.contains("\"t_queued\": 2"));
         assert!(!json.contains(",\n  ]"));
     }
 

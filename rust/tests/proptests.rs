@@ -559,3 +559,105 @@ fn prop_store_codec_roundtrip() {
         },
     );
 }
+
+// ---- obs histogram properties (PR 9) ------------------------------------
+
+/// A value mix spanning all bucket regimes: zeros, small ints, exact
+/// powers of two and their neighbours, and full-range randoms.
+fn arb_latencies(rng: &mut Rng) -> Vec<u64> {
+    let n = 1 + rng.range(0, 64);
+    (0..n)
+        .map(|_| match rng.range(0, 5) {
+            0 => 0,
+            1 => rng.next_u64() % 16,
+            2 => 1u64 << rng.range(0, 63),
+            3 => (1u64 << rng.range(0, 63)).wrapping_sub(1),
+            _ => rng.next_u64(),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_hist_percentile_brackets_sorted_model() {
+    use caba::obs::Histogram;
+    forall("hist-percentile", default_cases(), arb_latencies, |values| {
+        let h = Histogram::new();
+        for &v in values {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        for &q in &[0.01, 0.50, 0.95, 0.99, 1.0] {
+            // The model: the rank-th smallest value, the same rank rule
+            // the bucketed estimate uses.
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let t = sorted[rank - 1];
+            let p = snap.percentile(q);
+            // Log2 buckets bracket the truth: never below it, and within
+            // one bucket (a factor of 2) above. u128 avoids overflow at
+            // the top bucket.
+            prop_assert!(p >= t, "p{q}: estimate {p} below true {t}");
+            prop_assert!(
+                (p as u128) < 2 * (t.max(1) as u128),
+                "p{q}: estimate {p} not within 2x of true {t}"
+            );
+        }
+        prop_assert!(snap.count == values.len() as u64, "count mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hist_merge_is_associative_and_commutative() {
+    use caba::obs::{HistSnapshot, Histogram};
+    forall(
+        "hist-merge",
+        default_cases(),
+        |rng| (arb_latencies(rng), arb_latencies(rng), arb_latencies(rng)),
+        |(xs, ys, zs)| {
+            let snap = |vals: &Vec<u64>| {
+                let h = Histogram::new();
+                for &v in vals {
+                    h.record(v);
+                }
+                h.snapshot()
+            };
+            let (a, b, c) = (snap(xs), snap(ys), snap(zs));
+            prop_assert!(a.merge(&b) == b.merge(&a), "merge not commutative");
+            prop_assert!(
+                a.merge(&b).merge(&c) == a.merge(&b.merge(&c)),
+                "merge not associative"
+            );
+            prop_assert!(a.merge(&HistSnapshot::empty()) == a, "empty is not identity");
+            // A merged snapshot answers percentiles exactly as one
+            // histogram fed both streams would.
+            let both = Histogram::new();
+            for &v in xs.iter().chain(ys) {
+                both.record(v);
+            }
+            prop_assert!(a.merge(&b) == both.snapshot(), "merge != combined stream");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hist_bucket_boundaries_are_powers_of_two() {
+    use caba::obs::hist::{bucket_index, bucket_upper_bound};
+    forall(
+        "hist-bucket",
+        default_cases(),
+        |rng| rng.next_u64(),
+        |&v| {
+            let i = bucket_index(v);
+            prop_assert!(v <= bucket_upper_bound(i), "{v} above its bucket bound");
+            if i > 0 {
+                prop_assert!(v > bucket_upper_bound(i - 1), "{v} overlaps bucket {}", i - 1);
+            } else {
+                prop_assert!(v == 0, "only 0 lands in bucket 0, got {v}");
+            }
+            Ok(())
+        },
+    );
+}

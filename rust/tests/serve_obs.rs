@@ -1,0 +1,227 @@
+//! Observability harness for `caba serve` — in-process daemons on temp
+//! sockets exercising the three surfaces from DESIGN.md §5d:
+//!
+//! * the `metrics` verb must return a structurally valid Prometheus text
+//!   exposition whose counters match what the daemon actually did;
+//! * every response — ok, error, shed — must echo a `request_id`, and
+//!   ids must be dense and monotonic per daemon;
+//! * the `stats` verb must surface the queue gauges, latency
+//!   percentiles, and the full store counters;
+//! * the `trace` verb's spans must decode and export to a balanced
+//!   Chrome trace JSON;
+//! * and the whole layer must be observation-only: an engine with
+//!   metrics attached produces bit-identical `SimStats` to one without,
+//!   and no new key enters the fingerprinted config surface.
+
+use caba::obs::prom;
+use caba::serve::json::Json;
+use caba::serve::{self, ServeOpts, ServeSummary, Server, ServerHandle};
+use caba::sim::designs::Design;
+use caba::sweep::{RunCache, SweepEngine, SweepJob};
+use caba::telemetry::export::server_trace_json;
+use caba::workload::apps;
+use caba::SimConfig;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+struct TestServer {
+    base: PathBuf,
+    socket: PathBuf,
+    handle: ServerHandle,
+    thread: Option<JoinHandle<anyhow::Result<ServeSummary>>>,
+}
+
+impl TestServer {
+    fn start(tag: &str, tweak: impl FnOnce(&mut ServeOpts)) -> TestServer {
+        let base =
+            std::env::temp_dir().join(format!("caba_serve_obs_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&base).unwrap();
+        let socket = base.join("serve.sock");
+        let mut opts = ServeOpts::new(&socket);
+        opts.jobs = 2;
+        opts.store_dir = Some(base.join("store"));
+        tweak(&mut opts);
+        let server = Server::bind(opts).unwrap();
+        let handle = server.handle();
+        let thread = Some(std::thread::spawn(move || server.run()));
+        TestServer { base, socket, handle, thread }
+    }
+
+    fn request(&self, line: &str) -> Json {
+        let resp = serve::client_request(&self.socket, line).unwrap();
+        serve::json::parse(&resp).unwrap_or_else(|e| panic!("bad response {resp:?}: {e:#}"))
+    }
+
+    fn sweep(&self, app: &str) -> Json {
+        self.request(&format!(
+            "{{\"verb\":\"sweep\",\"app\":\"{app}\",\"design\":\"Base\",\"scale\":0.01,\
+             \"set\":{{\"n_sms\":2,\"max_cycles\":150000}}}}"
+        ))
+    }
+
+    fn finish(mut self) -> ServeSummary {
+        self.handle.stop();
+        let summary = self.thread.take().unwrap().join().unwrap().unwrap();
+        let _ = std::fs::remove_dir_all(&self.base);
+        summary
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.handle.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn status(v: &Json) -> &str {
+    v.get("status").and_then(Json::as_str).unwrap_or("<none>")
+}
+
+fn request_id(v: &Json) -> u64 {
+    v.get("request_id").and_then(Json::as_u64).expect("every response must echo a request_id")
+}
+
+/// One sample line's value out of an exposition (`name value`).
+fn sample(text: &str, name: &str) -> Option<f64> {
+    text.lines()
+        .find(|l| l.split_whitespace().next() == Some(name))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
+#[test]
+fn metrics_verb_returns_a_valid_exposition_that_matches_activity() {
+    let ts = TestServer::start("metrics", |_| {});
+    assert_eq!(status(&ts.sweep("SLA")), "ok"); // cold
+    assert_eq!(status(&ts.sweep("SLA")), "ok"); // warm
+    let v = ts.request(r#"{"verb":"metrics"}"#);
+    assert_eq!(status(&v), "ok");
+    let text = v.get("metrics").and_then(Json::as_str).expect("metrics payload string");
+
+    prom::validate(text).unwrap_or_else(|e| panic!("invalid exposition: {e}\n{text}"));
+
+    // The metrics request itself is counted before it renders: 2 sweeps
+    // + this scrape = 3.
+    assert_eq!(sample(text, "caba_serve_requests_total"), Some(3.0));
+    assert_eq!(sample(text, "caba_serve_cold_total"), Some(1.0));
+    assert_eq!(sample(text, "caba_serve_warm_total"), Some(1.0));
+    assert_eq!(sample(text, "caba_jobs_ok_total"), Some(1.0));
+    assert_eq!(sample(text, "caba_store_puts_total"), Some(1.0));
+    // The cold job sat in the queue at least momentarily — the
+    // queue-wait histogram must carry its observation.
+    assert_eq!(sample(text, "caba_serve_queue_wait_us_count"), Some(1.0));
+    assert_eq!(sample(text, "caba_job_wall_us_count"), Some(1.0));
+    // Request latency histogram saw the two sweeps (the scrape's own
+    // span finishes after rendering).
+    assert_eq!(sample(text, "caba_serve_request_us_count"), Some(2.0));
+
+    // The in-process registry agrees with the wire exposition.
+    assert!(ts.handle.metrics().jobs.queue_wait_us.count() >= 1);
+    ts.finish();
+}
+
+#[test]
+fn every_response_kind_echoes_a_dense_monotonic_request_id() {
+    let ts = TestServer::start("reqid", |_| {});
+    let a = ts.request(r#"{"verb":"ping"}"#);
+    assert_eq!(status(&a), "ok");
+    assert_eq!(request_id(&a), 1);
+    let b = ts.sweep("SLA");
+    assert_eq!(status(&b), "ok");
+    assert_eq!(request_id(&b), 2);
+    let c = ts.request(r#"{"verb":"frobnicate"}"#);
+    assert_eq!(status(&c), "error");
+    assert_eq!(request_id(&c), 3);
+    let d = ts.request("{not json");
+    assert_eq!(status(&d), "error");
+    assert_eq!(request_id(&d), 4);
+    ts.finish();
+
+    // Shed responses carry ids too (queue_cap=0 rejects every cold job).
+    let ts = TestServer::start("reqid_shed", |o| o.queue_cap = 0);
+    let v = ts.sweep("SLA");
+    assert_eq!(status(&v), "shed");
+    assert_eq!(request_id(&v), 1);
+    ts.finish();
+}
+
+#[test]
+fn stats_verb_surfaces_queue_gauges_percentiles_and_store_counters() {
+    let ts = TestServer::start("stats", |_| {});
+    assert_eq!(status(&ts.sweep("SLA")), "ok");
+    assert_eq!(status(&ts.sweep("SLA")), "ok");
+    let v = ts.request(r#"{"verb":"stats"}"#);
+    assert_eq!(status(&v), "ok");
+    let u = |k: &str| v.get(k).and_then(Json::as_u64).unwrap_or_else(|| panic!("missing {k}"));
+    assert_eq!(u("cold"), 1);
+    assert_eq!(u("warm"), 1);
+    assert_eq!(u("queue_depth"), 0, "nothing queued at rest");
+    assert_eq!(u("queue_depth_hwm"), 1, "the one cold job peaked the queue");
+    assert!(u("request_p50_us") > 0, "two completed requests give nonzero p50");
+    assert!(u("request_p99_us") >= u("request_p50_us"));
+    assert_eq!(u("store_puts"), 1);
+    assert_eq!(u("store_quarantined"), 0);
+    assert_eq!(u("store_put_errors"), 0);
+    // The cold miss probed the store before simulating.
+    assert!(u("store_misses") >= 1);
+    let summary = ts.finish();
+    assert_eq!(summary.queue_depth_hwm, 1);
+    assert!(summary.request_p50_us > 0);
+}
+
+#[test]
+fn trace_spans_decode_and_export_to_balanced_chrome_json() {
+    let ts = TestServer::start("trace", |_| {});
+    assert_eq!(status(&ts.sweep("SLA")), "ok");
+    assert_eq!(status(&ts.request(r#"{"verb":"ping"}"#)), "ok");
+    let v = ts.request(r#"{"verb":"trace"}"#);
+    assert_eq!(status(&v), "ok");
+    let spans: Vec<_> = v
+        .get("spans")
+        .and_then(Json::elements)
+        .expect("trace response carries spans")
+        .iter()
+        .filter_map(serve::span_from_json)
+        .collect();
+    // The trace request itself isn't in the ring yet (its span is pushed
+    // after responding), so: the sweep and the ping.
+    assert_eq!(spans.len(), 2);
+    assert_eq!(spans[0].verb, "sweep");
+    assert_eq!(spans[0].outcome, "cold");
+    assert!(spans[0].queue_wait_us > 0 || spans[0].exec_us > 0);
+    assert_eq!(spans[1].verb, "ping");
+
+    let dropped = v.get("dropped").and_then(Json::as_u64).unwrap();
+    let json = server_trace_json(&spans, "test", dropped);
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    assert_eq!(json.matches('[').count(), json.matches(']').count());
+    assert!(json.contains("caba serve"));
+    assert!(json.contains("\"sweep #"));
+    ts.finish();
+}
+
+/// The observation-only contract: attaching the metrics registry to an
+/// engine changes nothing about what the simulation computes, and the
+/// fingerprinted config surface gains no keys from this layer.
+#[test]
+fn metrics_do_not_perturb_simulation() {
+    let mut cfg = SimConfig::default();
+    cfg.n_sms = 2;
+    cfg.max_cycles = 150_000;
+    let app = apps::find("SLA").unwrap();
+    let job = SweepJob::new(app, Design::caba(caba::compress::Algo::Bdi), cfg, 0.01);
+
+    let plain = SweepEngine::with_cache(1, Arc::new(RunCache::new()));
+    let metered = SweepEngine::with_cache(1, Arc::new(RunCache::new()))
+        .with_metrics(Arc::new(caba::obs::JobMetrics::default()));
+    let a = plain.try_run_one(&job).unwrap();
+    let b = metered.try_run_one(&job).unwrap();
+    assert_eq!(a, b, "metrics must be observation-only");
+
+    // No obs knob may enter the fingerprint: the key set is pinned.
+    assert_eq!(SimConfig::KEYS.len(), 51, "obs layer must not grow the fingerprinted surface");
+}

@@ -5,7 +5,7 @@
 //! perf_hotpath` (compression-substrate throughput, oracle memoization,
 //! end-to-end simulator throughput), but:
 //!
-//! * emits a **JSON report** (`BENCH_pr9.json` by default; schema
+//! * emits a **JSON report** (`BENCH_pr10.json` by default; schema
 //!   documented in EXPERIMENTS.md §Perf) so the perf trajectory is
 //!   tracked in-repo from PR 3 onward;
 //! * measures the **event-driven tick** against the `strict_tick=true`
@@ -32,6 +32,12 @@
 //!   error, every unaffected response bit-identical to the clean run
 //!   (by `stats_digest`), and a retry of the failed point recovering —
 //!   each of those is a violation unconditionally, not a floor;
+//! * measures the serve daemon **under overload** (PR 10): a 4x-queue-cap
+//!   burst of distinct cold points against one worker with a 1 ms
+//!   brownout threshold, while a concurrent client hammers a warm point —
+//!   the shed-vs-brownout split lands in the JSON, warm throughput
+//!   *during* the storm is checked against `min_brownout_warm_hits_per_s`,
+//!   and a storm with zero brownout sheds is an unconditional violation;
 //! * optionally checks the numbers against a committed **floors file**
 //!   (`key=value` lines, same offline-friendly format as `SimConfig`
 //!   overrides) and reports violations — the CI `bench-smoke` job fails
@@ -164,6 +170,33 @@ pub struct ServePoint {
     pub retry_recovers: bool,
 }
 
+/// One overload measurement (PR 10): a 1-worker daemon with a small
+/// queue and a 1 ms brownout threshold takes a burst of 4x-queue-cap
+/// distinct cold points while a concurrent client hammers one
+/// already-stored warm point. The point of the point: under brownout the
+/// daemon keeps serving warm hits at full speed while shedding new cold
+/// work — `warm_hits_per_s` here is measured *during* the storm and
+/// checked against the `min_brownout_warm_hits_per_s` floor.
+pub struct OverloadPoint {
+    /// Cold requests fired in the burst (4x the queue cap).
+    pub burst_requests: usize,
+    pub queue_cap: usize,
+    /// Total shed answers the daemon counted (queue-full + brownout).
+    pub shed: u64,
+    /// Sheds attributable to the brownout controller (subset of `shed`).
+    pub brownout_shed: u64,
+    /// The brownout controller engaged at least once during the storm.
+    pub brownout_engaged: bool,
+    /// Warm answers served to the hammer client while the storm ran.
+    pub warm_hits: usize,
+    /// Warm answers per wall-second during the storm — the floors-file
+    /// metric (`min_brownout_warm_hits_per_s`).
+    pub warm_hits_per_s: f64,
+    /// The daemon answered everything and drained cleanly. `false` is a
+    /// violation regardless of the floors file.
+    pub survived: bool,
+}
+
 /// One end-to-end simulator measurement.
 pub struct SimPoint {
     pub app: &'static str,
@@ -193,6 +226,7 @@ pub struct BenchReport {
     pub shard: Vec<ShardPoint>,
     pub telemetry: Vec<TelemetryPoint>,
     pub serve: Vec<ServePoint>,
+    pub overload: Vec<OverloadPoint>,
     pub violations: Vec<String>,
 }
 
@@ -556,11 +590,125 @@ fn measure_serve(quick: bool) -> Result<ServePoint> {
     })
 }
 
+/// The overload family: one daemon, one worker, queue cap 4, brownout
+/// threshold 1 ms with a 1-sample window. Seed a warm point, then fire a
+/// 4x-queue-cap burst of *distinct* cold points from 4 client threads
+/// while a fifth thread hammers the warm point until the storm ends.
+/// Cold requests serialize behind the single worker, so queue waits blow
+/// past the threshold after the first claim and the controller sheds the
+/// rest of the burst; warm hits never touch the queue and must keep
+/// flowing throughout.
+fn measure_overload() -> Result<OverloadPoint> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let queue_cap = 4usize;
+    let burst = queue_cap * 4;
+    let clients = 4usize;
+    let base = std::env::temp_dir().join(format!("caba_bench_overload_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).with_context(|| format!("create {}", base.display()))?;
+    let socket = base.join("serve.sock");
+    let mut opts = ServeOpts::new(&socket);
+    opts.jobs = 1;
+    opts.queue_cap = queue_cap;
+    opts.default_deadline_ms = 120_000;
+    opts.store_dir = Some(base.join("store"));
+    opts.brownout_p95_ms = 1;
+    opts.brownout_min_samples = 1;
+    let server = serve::Server::bind(opts)?;
+    let handle = server.handle();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let result = (|| -> Result<(u64, usize, f64)> {
+        // Seed the warm point before any pressure exists.
+        let v = serve_request(&socket, "SLA", "Base")?;
+        if v.get("status").and_then(Json::as_str) != Some("ok") {
+            anyhow::bail!("overload warm seed failed");
+        }
+
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|scope| -> Result<(u64, usize, f64)> {
+            let socket_ref = &socket;
+            let stop_ref = &stop;
+            // The warm hammer: full-speed requests for the stored point
+            // until the storm ends. Warm answers are served on the
+            // connection thread — no queue, no worker — so brownout must
+            // not slow them down.
+            let hammer = scope.spawn(move || -> Result<(usize, f64)> {
+                let t0 = Instant::now();
+                let mut hits = 0usize;
+                while !stop_ref.load(Ordering::Relaxed) {
+                    let v = serve_request(socket_ref, "SLA", "Base")?;
+                    if v.get("status").and_then(Json::as_str) == Some("ok")
+                        && v.get("source").and_then(Json::as_str) == Some("warm")
+                    {
+                        hits += 1;
+                    }
+                }
+                Ok((hits, t0.elapsed().as_secs_f64().max(1e-9)))
+            });
+            // The storm: `burst` distinct cold points (distinct scales →
+            // distinct job keys), `clients` threads issuing them. Shed
+            // answers return immediately; admitted ones block until the
+            // single worker gets there.
+            let storm: Vec<_> = (0..clients)
+                .map(|c| {
+                    scope.spawn(move || -> Result<u64> {
+                        let mut sheds = 0u64;
+                        for r in 0..burst / clients {
+                            let scale = 0.011 + 0.001 * (c * (burst / clients) + r) as f64;
+                            let line = format!(
+                                "{{\"verb\":\"sweep\",\"app\":\"PVC\",\"design\":\"Base\",\
+                                 \"scale\":{scale},\"set\":{{\"n_sms\":2,\"max_cycles\":150000}}}}"
+                            );
+                            let resp = serve::client_request(socket_ref, &line)?;
+                            let v = serve::json::parse(&resp)
+                                .map_err(|e| anyhow!("bad overload response {resp:?}: {e:#}"))?;
+                            match v.get("status").and_then(Json::as_str) {
+                                Some("ok") => {}
+                                Some("shed") => sheds += 1,
+                                other => anyhow::bail!("unexpected overload status {other:?}"),
+                            }
+                        }
+                        Ok(sheds)
+                    })
+                })
+                .collect();
+            let mut client_sheds = 0u64;
+            for s in storm {
+                client_sheds += s.join().map_err(|_| anyhow!("storm client panicked"))??;
+            }
+            stop.store(true, Ordering::Relaxed);
+            let (hits, dt) = hammer.join().map_err(|_| anyhow!("warm hammer panicked"))??;
+            Ok((client_sheds, hits, dt))
+        })
+    })();
+
+    // Daemon-side counters carry the shed split; read before drain so the
+    // numbers describe the storm, then always drain.
+    let counters = handle.counters();
+    handle.stop();
+    let survived = matches!(server_thread.join(), Ok(Ok(_)));
+    let _ = std::fs::remove_dir_all(&base);
+    let (_client_sheds, warm_hits, warm_dt) = result?;
+    Ok(OverloadPoint {
+        burst_requests: burst,
+        queue_cap,
+        shed: counters.shed,
+        brownout_shed: counters.brownout_shed,
+        brownout_engaged: counters.brownout_entered > 0,
+        warm_hits,
+        warm_hits_per_s: warm_hits as f64 / warm_dt,
+        survived,
+    })
+}
+
 /// Parse a floors file: `key=value` lines, `#` comments. Known keys:
 /// `min_compress_mlines_per_s`, `min_memo_warm_mlines_per_s`,
 /// `min_memo_hit_rate`, `min_sim_kcycles_per_s`, `min_lut_hit_rate`,
 /// `min_event_speedup`, `min_shard_speedup`, `min_serve_warm_hits_per_s`,
-/// and the one ceiling: `max_telemetry_overhead`.
+/// `min_brownout_warm_hits_per_s`, and the one ceiling:
+/// `max_telemetry_overhead`.
 fn parse_floors(text: &str) -> Result<Vec<(String, f64)>> {
     let mut floors = Vec::new();
     for (ln, raw) in text.lines().enumerate() {
@@ -626,6 +774,14 @@ fn check_floors(report: &mut BenchReport, floors: &[(String, f64)]) {
             // read-through, response render) regressed, not the simulator.
             "min_serve_warm_hits_per_s" => report
                 .serve
+                .iter()
+                .map(|p| p.warm_hits_per_s)
+                .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.min(v)))),
+            // Worst warm throughput measured DURING a brownout storm: the
+            // warm path must stay a connection-thread cache read, immune
+            // to the cold queue melting down next to it.
+            "min_brownout_warm_hits_per_s" => report
+                .overload
                 .iter()
                 .map(|p| p.warm_hits_per_s)
                 .fold(None, |a: Option<f64>, v| Some(a.map_or(v, |a| a.min(v)))),
@@ -794,6 +950,25 @@ impl BenchReport {
             );
         }
         s.push_str("  ],\n");
+        s.push_str("  \"overload\": [\n");
+        for (i, p) in self.overload.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "    {{\"burst_requests\": {}, \"queue_cap\": {}, \"shed\": {}, \
+                 \"brownout_shed\": {}, \"brownout_engaged\": {}, \"warm_hits\": {}, \
+                 \"warm_hits_per_s\": {:.1}, \"survived\": {}}}{}",
+                p.burst_requests,
+                p.queue_cap,
+                p.shed,
+                p.brownout_shed,
+                p.brownout_engaged,
+                p.warm_hits,
+                p.warm_hits_per_s,
+                p.survived,
+                if i + 1 < self.overload.len() { "," } else { "" }
+            );
+        }
+        s.push_str("  ],\n");
         s.push_str("  \"floor_violations\": [");
         for (i, v) in self.violations.iter().enumerate() {
             if i > 0 {
@@ -916,6 +1091,19 @@ impl BenchReport {
                 if p.retry_recovers { "recovered" } else { "STUCK" }
             );
         }
+        for p in &self.overload {
+            let _ = writeln!(
+                s,
+                "overload burst {} (queue {})  shed {} ({} brownout)  warm during storm {} @ {:>8.1} hits/s  {}",
+                p.burst_requests,
+                p.queue_cap,
+                p.shed,
+                p.brownout_shed,
+                p.warm_hits,
+                p.warm_hits_per_s,
+                if p.survived && p.brownout_engaged { "browned out and survived" } else { "FAILED" }
+            );
+        }
         for v in &self.violations {
             let _ = writeln!(s, "\nFLOOR VIOLATION: {v}");
         }
@@ -992,6 +1180,10 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
     // the same code path `caba serve` runs).
     let serve = vec![measure_serve(opts.quick)?];
 
+    // The overload/brownout family (PR 10): same burst in both modes —
+    // the jobs are tiny and the point is service behavior, not speed.
+    let overload = vec![measure_overload()?];
+
     // Assemble the sim section in `pairs` order, reusing the event-mode
     // run from the tick comparison where the pair overlaps (identical
     // config/scale — same measurement either way, half the simulations).
@@ -1020,6 +1212,7 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
         shard,
         telemetry,
         serve,
+        overload,
         violations: Vec::new(),
     };
 
@@ -1078,6 +1271,23 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport> {
             );
         }
     }
+    // The overload contract is unconditional: the daemon survives the
+    // storm and the brownout controller actually sheds — a 4x-queue-cap
+    // burst against one worker with a 1 ms threshold that produces zero
+    // brownout sheds means the controller is broken, not the host slow.
+    for p in &report.overload {
+        if !p.survived {
+            report
+                .violations
+                .push("serve overload: daemon died or stopped answering".to_string());
+        }
+        if p.brownout_shed == 0 {
+            report.violations.push(format!(
+                "serve overload: burst of {} produced no brownout sheds (engaged={}, shed={})",
+                p.burst_requests, p.brownout_engaged, p.shed
+            ));
+        }
+    }
 
     if let Some(path) = &opts.floors {
         let text = std::fs::read_to_string(path)
@@ -1114,6 +1324,7 @@ mod tests {
             shard: vec![],
             telemetry: vec![],
             serve: vec![],
+            overload: vec![],
             sim: vec![SimPoint {
                 app: "PVC",
                 design: "Base",
@@ -1205,6 +1416,26 @@ mod tests {
         report.serve[0].warm_hits_per_s = 250.0;
         check_floors(&mut report, &[("min_serve_warm_hits_per_s".to_string(), 20.0)]);
         assert_eq!(report.violations.len(), 10);
+        // Brownout warm-throughput floor (PR 10): empty → flagged, warm
+        // service collapsing during the storm fails, staying fast passes.
+        check_floors(&mut report, &[("min_brownout_warm_hits_per_s".to_string(), 10.0)]);
+        assert_eq!(report.violations.len(), 11);
+        assert!(report.violations[10].contains("no measurements"));
+        report.overload = vec![OverloadPoint {
+            burst_requests: 16,
+            queue_cap: 4,
+            shed: 12,
+            brownout_shed: 12,
+            brownout_engaged: true,
+            warm_hits: 40,
+            warm_hits_per_s: 4.0,
+            survived: true,
+        }];
+        check_floors(&mut report, &[("min_brownout_warm_hits_per_s".to_string(), 10.0)]);
+        assert_eq!(report.violations.len(), 12);
+        report.overload[0].warm_hits_per_s = 150.0;
+        check_floors(&mut report, &[("min_brownout_warm_hits_per_s".to_string(), 10.0)]);
+        assert_eq!(report.violations.len(), 12);
     }
 
     #[test]
@@ -1267,6 +1498,16 @@ mod tests {
                 bitident_vs_clean: true,
                 retry_recovers: true,
             }],
+            overload: vec![OverloadPoint {
+                burst_requests: 16,
+                queue_cap: 4,
+                shed: 12,
+                brownout_shed: 11,
+                brownout_engaged: true,
+                warm_hits: 80,
+                warm_hits_per_s: 160.0,
+                survived: true,
+            }],
             violations: vec!["min_x: measured 1 < floor 2".to_string()],
         };
         let j = report.to_json();
@@ -1278,6 +1519,8 @@ mod tests {
         assert!(j.contains("\"warm_hits_per_s\": 312.5"));
         assert!(j.contains("\"warm_p95_us\": 4095"));
         assert!(j.contains("\"bitident_vs_clean\": true"));
+        assert!(j.contains("\"brownout_shed\": 11"));
+        assert!(j.contains("\"brownout_engaged\": true"));
         assert!(j.contains("floor_violations"));
         // Balanced braces/brackets (cheap well-formedness probe).
         assert_eq!(j.matches('{').count(), j.matches('}').count());

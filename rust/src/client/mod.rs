@@ -1,0 +1,350 @@
+//! # Retrying serve client
+//!
+//! [`crate::serve::client_request`] is a deliberately dumb one-shot:
+//! connect, one line out, one line back. Real clients of a service that
+//! *sheds under load by design* (queue-full, brownout), expires
+//! deadlines, and may drop a connection mid-flight (see the
+//! `drop_conn_at` chaos key) need a retry loop — and a retry loop that
+//! is honest about what is retryable:
+//!
+//! * **retryable** — `"status":"shed"` (queue full or brownout),
+//!   `"status":"deadline"` (the job keeps running and will be warm on
+//!   retry), and any transport failure (connect error, mid-flight EOF,
+//!   unparsable response). These hold no server resources; backing off
+//!   and retrying is exactly what the daemon's shed message asks for.
+//! * **terminal** — `"status":"ok"` (done), `"status":"error"` (a typed
+//!   [`crate::sweep::JobError`] or a bad request: retrying would
+//!   recompute the same failure), and `"status":"draining"` (this
+//!   daemon is going away; the caller decides where to go next).
+//!
+//! ## Backoff: capped exponential, deterministic jitter
+//!
+//! Delays follow full jitter over `[0, min(cap, base * 2^attempt)]`,
+//! but the "randomness" is a seeded xorshift over
+//! `(seed, request, attempt)` — two runs with the same seed produce the
+//! same delays, so the chaos soak (`tests/chaos_soak.rs`) is replayable,
+//! while different requests still decorrelate their retry storms.
+//!
+//! ## Idempotent retry, asserted
+//!
+//! Every `ok` response carries `stats_digest` (FNV-1a64 of the stats'
+//! canonical encoding). [`Conn`] remembers the first digest it saw per
+//! request line and **asserts bit-identity** on every later `ok` for the
+//! same line — across retries and across repeats. A mismatch is not a
+//! retryable blip, it is the one thing the whole stack promises can
+//! never happen, so it surfaces as a hard error.
+
+use crate::serve::json::{self, Json};
+use crate::store::fnv1a64;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Capped exponential backoff with deterministic (seeded) full jitter.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 = one-shot).
+    pub max_retries: u32,
+    /// Backoff base, milliseconds: attempt `k` draws from
+    /// `[0, min(cap_ms, base_ms * 2^k)]`.
+    pub base_ms: u64,
+    /// Backoff ceiling, milliseconds.
+    pub cap_ms: u64,
+    /// Jitter seed. Same seed, same request, same attempt → same delay.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_retries: 4, base_ms: 10, cap_ms: 2_000, seed: 0xcaba_5eed }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before retry `attempt` (0-based) of the request whose
+    /// identity hash is `salt`. Pure: the chaos soak replays byte-equal
+    /// schedules from the seed alone.
+    pub fn backoff_ms(&self, attempt: u32, salt: u64) -> u64 {
+        let ceiling = self
+            .base_ms
+            .saturating_mul(1u64 << attempt.min(20))
+            .min(self.cap_ms);
+        if ceiling == 0 {
+            return 0;
+        }
+        // xorshift64* over the (seed, request, attempt) tuple.
+        let stride = (u64::from(attempt) + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut x = self.seed ^ salt.rotate_left(17) ^ stride;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d) % (ceiling + 1)
+    }
+}
+
+/// What a converged request ended as. Both variants carry the verbatim
+/// response line (`raw`) — the CLI prints it unchanged, so scripts see
+/// exactly what the daemon said.
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// `"status":"ok"`.
+    Ok {
+        raw: String,
+        /// `stats_digest` if the response carried one (sweep answers do,
+        /// ping/stats answers don't).
+        digest: Option<String>,
+        /// `source` field (`warm`/`cold`/`dedup`) if present.
+        source: Option<String>,
+    },
+    /// A terminal non-ok: typed job/request error or a draining daemon.
+    Terminal { raw: String, status: String, message: String },
+}
+
+impl Response {
+    /// The verbatim response line.
+    pub fn raw(&self) -> &str {
+        match self {
+            Response::Ok { raw, .. } | Response::Terminal { raw, .. } => raw,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Response::Ok { .. })
+    }
+}
+
+/// Client-side tallies, mostly for tests and the CLI's `--log`-style
+/// stderr note. Plain fields: [`Conn`] is `&mut self` throughout.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClientCounters {
+    /// Request attempts sent (first tries + retries).
+    pub attempts: u64,
+    /// Retries performed (attempts beyond each request's first).
+    pub retries: u64,
+    /// `shed` answers seen (queue full or brownout).
+    pub sheds_seen: u64,
+    /// `deadline` answers seen.
+    pub deadlines_seen: u64,
+    /// Transport failures (connect/EOF/unparsable response).
+    pub conn_errors: u64,
+    /// `ok` answers whose digest was checked against a remembered one.
+    pub digest_rechecks: u64,
+}
+
+/// A persistent connection to a serve daemon with retry, reconnect and
+/// digest bit-identity built in. One line of protocol per call: hand a
+/// request line to [`Conn::request`], get a terminal [`Response`] or an
+/// error after the retry budget is spent.
+pub struct Conn {
+    socket: PathBuf,
+    policy: RetryPolicy,
+    reader: Option<BufReader<UnixStream>>,
+    /// First `stats_digest` seen per request-line hash; later `ok`s for
+    /// the same line must match bit-for-bit.
+    digests: HashMap<u64, String>,
+    counters: ClientCounters,
+}
+
+impl Conn {
+    /// Lazily-connecting client for `socket`. No I/O happens until the
+    /// first [`Conn::request`].
+    pub fn new(socket: impl Into<PathBuf>, policy: RetryPolicy) -> Conn {
+        Conn {
+            socket: socket.into(),
+            policy,
+            reader: None,
+            digests: HashMap::new(),
+            counters: ClientCounters::default(),
+        }
+    }
+
+    pub fn counters(&self) -> ClientCounters {
+        self.counters
+    }
+
+    /// One write+read over the persistent stream, (re)connecting as
+    /// needed. Any failure tears the stream down so the next attempt
+    /// reconnects from scratch.
+    fn roundtrip(&mut self, line: &str) -> Result<String> {
+        if self.reader.is_none() {
+            let stream = UnixStream::connect(&self.socket)
+                .with_context(|| format!("connect {}", self.socket.display()))?;
+            self.reader = Some(BufReader::new(stream));
+        }
+        let reader = self.reader.as_mut().expect("just connected");
+        let io = (|| -> Result<String> {
+            let mut w = reader.get_ref();
+            w.write_all(line.as_bytes()).context("send request")?;
+            w.write_all(b"\n").context("send request")?;
+            w.flush().context("send request")?;
+            let mut resp = String::new();
+            reader.read_line(&mut resp).context("read response")?;
+            if resp.is_empty() {
+                bail!("server closed the connection without a response");
+            }
+            Ok(resp.trim_end().to_string())
+        })();
+        if io.is_err() {
+            self.reader = None;
+        }
+        io
+    }
+
+    /// Drive `line` to a terminal answer: retry shed/deadline/transport
+    /// failures under the backoff policy, return `ok` and typed
+    /// error/draining answers as-is, and fail hard on either an
+    /// exhausted retry budget or — the one unforgivable case — an `ok`
+    /// whose `stats_digest` differs from an earlier answer to the same
+    /// request.
+    pub fn request(&mut self, line: &str) -> Result<Response> {
+        let line = line.trim();
+        let salt = fnv1a64(line.as_bytes());
+        let mut attempt = 0u32;
+        loop {
+            self.counters.attempts += 1;
+            let retryable_because = match self.roundtrip(line) {
+                Ok(raw) => match classify(&raw) {
+                    Classified::Ok { digest, source } => {
+                        if let Some(d) = &digest {
+                            match self.digests.get(&salt) {
+                                None => {
+                                    self.digests.insert(salt, d.clone());
+                                }
+                                Some(first) => {
+                                    self.counters.digest_rechecks += 1;
+                                    if first != d {
+                                        bail!(
+                                            "stats_digest mismatch for retried request: \
+                                             first answer {first}, now {d} — the store/serve \
+                                             bit-identity contract is broken (request: {line})"
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        return Ok(Response::Ok { raw, digest, source });
+                    }
+                    Classified::Terminal { status, message } => {
+                        return Ok(Response::Terminal { raw, status, message });
+                    }
+                    Classified::RetryShed => {
+                        self.counters.sheds_seen += 1;
+                        "shed"
+                    }
+                    Classified::RetryDeadline => {
+                        self.counters.deadlines_seen += 1;
+                        "deadline"
+                    }
+                    Classified::RetryGarbled => {
+                        self.counters.conn_errors += 1;
+                        self.reader = None; // desynced framing: reconnect
+                        "garbled response"
+                    }
+                },
+                Err(_) => {
+                    self.counters.conn_errors += 1;
+                    "connection failure"
+                }
+            };
+            if attempt >= self.policy.max_retries {
+                bail!(
+                    "request did not converge after {} attempt(s); last failure: {} \
+                     (request: {line})",
+                    attempt + 1,
+                    retryable_because
+                );
+            }
+            let delay = self.policy.backoff_ms(attempt, salt);
+            if delay > 0 {
+                std::thread::sleep(Duration::from_millis(delay));
+            }
+            attempt += 1;
+            self.counters.retries += 1;
+        }
+    }
+}
+
+enum Classified {
+    Ok { digest: Option<String>, source: Option<String> },
+    Terminal { status: String, message: String },
+    RetryShed,
+    RetryDeadline,
+    RetryGarbled,
+}
+
+fn classify(raw: &str) -> Classified {
+    let Ok(v) = json::parse(raw) else {
+        return Classified::RetryGarbled;
+    };
+    let status = v.get("status").and_then(Json::as_str).unwrap_or("");
+    let field = |k: &str| v.get(k).and_then(Json::as_str).map(str::to_string);
+    match status {
+        "ok" => Classified::Ok { digest: field("stats_digest"), source: field("source") },
+        "shed" => Classified::RetryShed,
+        "deadline" => Classified::RetryDeadline,
+        "" => Classified::RetryGarbled,
+        other => Classified::Terminal {
+            status: other.to_string(),
+            message: field("message").unwrap_or_default(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_request_decorrelated() {
+        let p = RetryPolicy { max_retries: 8, base_ms: 10, cap_ms: 400, seed: 7 };
+        for attempt in 0..8 {
+            for salt in [1u64, 2, 0xdead_beef] {
+                let a = p.backoff_ms(attempt, salt);
+                let b = p.backoff_ms(attempt, salt);
+                assert_eq!(a, b, "same (seed, request, attempt) must draw the same delay");
+                let ceiling = 10u64.saturating_mul(1 << attempt).min(400);
+                assert!(a <= ceiling, "attempt {attempt}: {a} > ceiling {ceiling}");
+            }
+        }
+        // Different seeds / requests decorrelate (not a hard guarantee of
+        // xorshift, but these particular tuples must not all collide).
+        let spread: std::collections::HashSet<u64> =
+            (0..16u64).map(|s| p.backoff_ms(4, s)).collect();
+        assert!(spread.len() > 4, "jitter must actually spread: {spread:?}");
+        // Zero-base policy never sleeps.
+        let z = RetryPolicy { base_ms: 0, ..p };
+        assert_eq!(z.backoff_ms(3, 1), 0);
+    }
+
+    #[test]
+    fn classify_is_honest_about_retryable_vs_terminal() {
+        assert!(matches!(
+            classify(r#"{"status":"ok","stats_digest":"00ff","source":"warm"}"#),
+            Classified::Ok { digest: Some(d), source: Some(s) } if d == "00ff" && s == "warm"
+        ));
+        assert!(matches!(
+            classify(r#"{"status":"shed","message":"queue full"}"#),
+            Classified::RetryShed
+        ));
+        assert!(matches!(
+            classify(r#"{"status":"deadline","message":"no result"}"#),
+            Classified::RetryDeadline
+        ));
+        // Typed job errors and draining are terminal: retrying recomputes
+        // the same failure / hits the same dying daemon.
+        assert!(matches!(
+            classify(r#"{"status":"error","message":"worker panic"}"#),
+            Classified::Terminal { status, .. } if status == "error"
+        ));
+        assert!(matches!(
+            classify(r#"{"status":"draining"}"#),
+            Classified::Terminal { status, .. } if status == "draining"
+        ));
+        // Garbage and statusless lines are transport-class: retry.
+        assert!(matches!(classify("not json at all"), Classified::RetryGarbled));
+        assert!(matches!(classify(r#"{"pong":true}"#), Classified::RetryGarbled));
+    }
+}

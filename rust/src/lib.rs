@@ -67,7 +67,17 @@
 //!   with ids echoed in every serve response, a hand-rolled Prometheus
 //!   text exposition behind the `metrics` verb, and `caba prof --serve`
 //!   rendering server request spans as Perfetto-loadable Chrome trace
-//!   JSON — all observation-only, pinned bit-identical on/off by test.
+//!   JSON — all observation-only, pinned bit-identical on/off by test;
+//! * a **bounded-resource resilience layer** ([`client`], plus capacity
+//!   management in [`store`] and brownout in [`serve`]): the store runs
+//!   under a byte budget (`--store-max-bytes`) with LRU eviction,
+//!   incremental compaction and quarantine GC; disk faults (ENOSPC, read
+//!   EIO, slow fsync, dropped connections) degrade to
+//!   compute-without-caching instead of failing; the daemon sheds new
+//!   cold work when queue-wait p95 crosses `--brownout-p95-ms` while
+//!   still serving warm hits; and `caba client` retries shed/deadline/
+//!   connection failures with capped, deterministically-jittered backoff,
+//!   asserting bit-identical `stats_digest`s across retries.
 //!
 //! See `DESIGN.md` (repo root) for the system inventory and
 //! `EXPERIMENTS.md` for paper-vs-measured results and the sweep-engine
@@ -76,6 +86,7 @@
 
 pub mod bench;
 pub mod caba;
+pub mod client;
 pub mod compress;
 pub mod config;
 pub mod core;

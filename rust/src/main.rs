@@ -13,16 +13,19 @@
 //!          [--jobs N] [--set key=value]...
 //! caba sweep [--apps PVC,MM|eval|all|memo] [--designs Base,CABA-BDI|headline]
 //!            [--bw 0.5,1.0,2.0] [--scale 0.1] [--jobs N] [--set k=v]...
-//!            [--trace file.cabatrace] [--store DIR]
+//!            [--trace file.cabatrace] [--store DIR] [--store-max-bytes B]
 //! caba serve --socket /tmp/caba.sock [--jobs N] [--queue N]
-//!            [--deadline-ms D] [--store DIR] [--fault spec] [--log]
-//! caba client <socket> '<json request>'
+//!            [--deadline-ms D] [--store DIR] [--store-max-bytes B]
+//!            [--brownout-p95-ms P] [--brownout-min-samples N]
+//!            [--fault spec] [--log]
+//! caba client <socket> '<json request>' [--retries N] [--backoff-ms B]
+//!             [--backoff-cap-ms C] [--seed S]
 //! caba metrics <socket>                 # Prometheus exposition, decoded
 //! caba trace record <app> [--design D] [--scale S] [--out file] [--set...]
 //! caba trace replay <file.cabatrace> [--design D] [--set k=v]...
 //! caba trace info <file.cabatrace>
 //! caba trace import <dump.txt> [--out file] [--pattern random|zero|...]
-//! caba bench [--quick] [--out BENCH_pr9.json] [--floors BENCH_floors.txt]
+//! caba bench [--quick] [--out BENCH_pr10.json] [--floors BENCH_floors.txt]
 //! ```
 //!
 //! `sweep --store DIR` backs the run cache with the crash-safe on-disk
@@ -159,6 +162,17 @@ fn apps_by_selector(sel: &str) -> Result<Vec<&'static AppSpec>> {
                 apps::find(n.trim()).ok_or_else(|| anyhow!("unknown app {n:?}; see `caba list`"))
             })
             .collect(),
+    }
+}
+
+/// `--store-max-bytes B`: store disk budget in bytes, 0/absent = unbounded.
+/// Shared by `sweep` and `serve`.
+fn parse_store_max_bytes(args: &Args) -> Result<u64> {
+    match args.flag("store-max-bytes") {
+        None => Ok(0),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("--store-max-bytes expects a byte count, got {v:?}")),
     }
 }
 
@@ -408,10 +422,18 @@ fn run() -> Result<()> {
             // on-disk store: re-sweeps (and the serve daemon pointed at
             // the same directory) answer warm.
             let engine = match args.flag("store") {
-                Some(dir) => SweepEngine::with_cache(
-                    jobs,
-                    Arc::new(RunCache::with_store(Arc::new(RunStore::open(dir)?))),
-                ),
+                Some(dir) => {
+                    let policy = caba::store::CapacityPolicy {
+                        max_bytes: parse_store_max_bytes(&args)?,
+                        ..Default::default()
+                    };
+                    SweepEngine::with_cache(
+                        jobs,
+                        Arc::new(RunCache::with_store(Arc::new(RunStore::open_with(
+                            dir, policy,
+                        )?))),
+                    )
+                }
                 None => SweepEngine::shared(jobs),
             };
             let t0 = Instant::now();
@@ -457,6 +479,12 @@ fn run() -> Result<()> {
                     "[sweep] store: puts {}  warm_hits {}  misses {}  quarantined {}  temp_cleaned {}  put_errors {}",
                     sc.puts, sc.warm_hits, sc.misses, sc.quarantined, sc.temp_cleaned, sc.put_errors
                 );
+                if sc.evicted > 0 || sc.quarantine_gced > 0 || sc.put_uncached > 0 {
+                    eprintln!(
+                        "[sweep] store capacity: evicted {} ({} bytes)  quarantine_gced {}  put_uncached {}",
+                        sc.evicted, sc.evicted_bytes, sc.quarantine_gced, sc.put_uncached
+                    );
+                }
             }
             Ok(())
         }
@@ -476,6 +504,17 @@ fn run() -> Result<()> {
                     .map_err(|_| anyhow!("--deadline-ms expects milliseconds, got {d:?}"))?;
             }
             opts.store_dir = args.flag("store").map(Into::into);
+            opts.store_max_bytes = parse_store_max_bytes(&args)?;
+            if let Some(b) = args.flag("brownout-p95-ms") {
+                opts.brownout_p95_ms = b
+                    .parse()
+                    .map_err(|_| anyhow!("--brownout-p95-ms expects milliseconds, got {b:?}"))?;
+            }
+            if let Some(n) = args.flag("brownout-min-samples") {
+                opts.brownout_min_samples = n
+                    .parse()
+                    .map_err(|_| anyhow!("--brownout-min-samples expects an integer, got {n:?}"))?;
+            }
             opts.log = args.flag("log").is_some();
             if let Some(spec) = args.flag("fault") {
                 eprintln!("[serve] fault injection active: {spec}");
@@ -506,7 +545,40 @@ fn run() -> Result<()> {
                 .get(2)
                 .map(String::as_str)
                 .ok_or_else(|| anyhow!("client requires a JSON request as the second argument"))?;
-            println!("{}", serve::client_request(Path::new(socket), request)?);
+            let mut policy = caba::client::RetryPolicy::default();
+            if let Some(r) = args.flag("retries") {
+                policy.max_retries = r
+                    .parse()
+                    .map_err(|_| anyhow!("--retries expects an integer, got {r:?}"))?;
+            }
+            if let Some(b) = args.flag("backoff-ms") {
+                policy.base_ms = b
+                    .parse()
+                    .map_err(|_| anyhow!("--backoff-ms expects milliseconds, got {b:?}"))?;
+            }
+            if let Some(c) = args.flag("backoff-cap-ms") {
+                policy.cap_ms = c
+                    .parse()
+                    .map_err(|_| anyhow!("--backoff-cap-ms expects milliseconds, got {c:?}"))?;
+            }
+            if let Some(s) = args.flag("seed") {
+                policy.seed = s
+                    .parse()
+                    .map_err(|_| anyhow!("--seed expects an integer, got {s:?}"))?;
+            }
+            let mut conn = caba::client::Conn::new(Path::new(socket), policy);
+            let resp = conn.request(request)?;
+            // Verbatim response on stdout — scripts see what the daemon
+            // said, same as the old one-shot client. Retry activity goes
+            // to stderr so it never pollutes pipelines.
+            println!("{}", resp.raw());
+            let c = conn.counters();
+            if c.retries > 0 {
+                eprintln!(
+                    "[client] converged after {} attempt(s): {} shed, {} deadline, {} connection failure(s)",
+                    c.attempts, c.sheds_seen, c.deadlines_seen, c.conn_errors
+                );
+            }
             Ok(())
         }
         Some("metrics") => {
@@ -529,7 +601,7 @@ fn run() -> Result<()> {
         Some("bench") => {
             let opts = caba::bench::BenchOpts {
                 quick: args.flag("quick").is_some(),
-                out: args.flag("out").unwrap_or("BENCH_pr9.json").to_string(),
+                out: args.flag("out").unwrap_or("BENCH_pr10.json").to_string(),
                 floors: args.flag("floors").map(str::to_string),
             };
             let t0 = Instant::now();
@@ -559,14 +631,16 @@ fn run() -> Result<()> {
                  caba fig 8 [--scale 0.25] [--jobs N] [--set key=value]  (fig memo = §8.1 suite)\n  \
                  caba sweep --apps eval|memo --designs headline --bw 0.5,1.0,2.0 [--jobs N] [--store DIR]\n  \
                  caba sweep --trace run.cabatrace --designs headline [--bw 0.5,1.0,2.0]\n  \
-                 caba serve --socket /tmp/caba.sock [--jobs N] [--queue 64] [--deadline-ms 30000] [--store DIR] [--fault spec] [--log]\n  \
+                 caba serve --socket /tmp/caba.sock [--jobs N] [--queue 64] [--deadline-ms 30000] [--store DIR]\n  \
+                 \x20          [--store-max-bytes B] [--brownout-p95-ms P] [--brownout-min-samples N] [--fault spec] [--log]\n  \
                  caba client /tmp/caba.sock '{{\"verb\":\"sweep\",\"app\":\"SLA\",\"design\":\"CABA-BDI\",\"scale\":0.01}}'\n  \
+                 \x20          [--retries 4] [--backoff-ms 10] [--backoff-cap-ms 2000] [--seed S]  (retries shed/deadline/conn-drop)\n  \
                  caba metrics /tmp/caba.sock   (Prometheus text exposition from a running daemon)\n  \
                  caba trace record PVC [--design CABA-BDI] [--scale 0.25] [--out PVC.cabatrace]\n  \
                  caba trace replay run.cabatrace [--design CABA-BDI] [--set key=value]\n  \
                  caba trace info run.cabatrace\n  \
                  caba trace import dump.txt [--out dump.cabatrace] [--pattern random]\n  \
-                 caba bench [--quick] [--out BENCH_pr9.json] [--floors BENCH_floors.txt]"
+                 caba bench [--quick] [--out BENCH_pr10.json] [--floors BENCH_floors.txt]"
             );
             Ok(())
         }

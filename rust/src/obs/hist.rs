@@ -134,6 +134,24 @@ impl HistSnapshot {
         }
     }
 
+    /// Bucket-wise difference `self - earlier`, the inverse of
+    /// [`HistSnapshot::merge`] for snapshots of the *same* histogram
+    /// taken at two times: the result is the window of activity between
+    /// them. Saturating per bucket, so a mismatched pair degrades to
+    /// zeros instead of wrapping — histogram counters only ever grow, so
+    /// a genuine (snapshot, earlier-snapshot) pair never saturates. The
+    /// serve brownout controller computes its windowed queue-wait p95
+    /// from exactly this delta.
+    pub fn delta_since(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].saturating_sub(earlier.buckets[i])
+            }),
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum.saturating_sub(earlier.sum),
+        }
+    }
+
     /// Quantile `q` in [0, 1]: the upper bound of the first bucket whose
     /// cumulative count reaches `ceil(q * count)` (clamped to at least 1).
     /// Returns 0 for an empty histogram.
@@ -215,6 +233,27 @@ mod tests {
         assert_eq!(s, HistSnapshot::empty());
         assert_eq!(s.percentile(0.5), 0);
         assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn delta_since_inverts_merge_for_growing_histograms() {
+        let h = Histogram::new();
+        h.record(5);
+        h.record(900);
+        let early = h.snapshot();
+        h.record(5);
+        h.record(70_000);
+        let late = h.snapshot();
+        let win = late.delta_since(&early);
+        assert_eq!(win.count, 2);
+        assert_eq!(win.sum, 70_005);
+        assert_eq!(win.buckets[bucket_index(5)], 1);
+        assert_eq!(win.buckets[bucket_index(70_000)], 1);
+        assert_eq!(win.buckets[bucket_index(900)], 0);
+        // delta ∘ merge round-trips: early.merge(win) == late.
+        assert_eq!(early.merge(&win), late);
+        // Mismatched order saturates to empty rather than wrapping.
+        assert_eq!(early.delta_since(&late).count, 0);
     }
 
     #[test]

@@ -76,6 +76,13 @@ pub struct ServiceMetrics {
     pub job_errors: AtomicU64,
     pub bad_requests: AtomicU64,
 
+    // Brownout (adaptive overload shedding): mode transitions, requests
+    // shed *because* of brownout (a subset of `shed`), and a 0/1 gauge.
+    pub brownout_entered: AtomicU64,
+    pub brownout_exited: AtomicU64,
+    pub brownout_shed: AtomicU64,
+    pub brownout_active: AtomicU64,
+
     // Queue gauges: live depth and its high-water mark.
     pub queue_depth: AtomicU64,
     pub queue_depth_hwm: AtomicU64,
@@ -110,6 +117,10 @@ impl ServiceMetrics {
             deadline_expired: AtomicU64::new(0),
             job_errors: AtomicU64::new(0),
             bad_requests: AtomicU64::new(0),
+            brownout_entered: AtomicU64::new(0),
+            brownout_exited: AtomicU64::new(0),
+            brownout_shed: AtomicU64::new(0),
+            brownout_active: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             queue_depth_hwm: AtomicU64::new(0),
             request_us: Histogram::new(),

@@ -80,6 +80,44 @@ impl Json {
     }
 }
 
+impl std::fmt::Display for Json {
+    /// Serialize back to compact wire JSON — the inverse of [`parse`].
+    /// Numbers print via Rust's shortest-round-trip `f64` formatting, so
+    /// `parse(v.to_string()) == v` for every parseable value (pinned by
+    /// `prop_json_display_parse_roundtrip`). Non-finite numbers cannot
+    /// come out of [`parse`]; a hand-built one serializes as `null`
+    /// rather than emitting invalid JSON.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) if n.is_finite() => write!(f, "{n}"),
+            Json::Num(_) => f.write_str("null"),
+            Json::Str(s) => write!(f, "\"{}\"", escape(s)),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(members) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in members.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "\"{}\":{v}", escape(k))?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
 /// Parse one complete JSON value; trailing non-whitespace is an error.
 pub fn parse(input: &str) -> Result<Json> {
     let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
@@ -345,6 +383,25 @@ mod tests {
         // Depth bomb: rejected, not a stack overflow.
         let bomb = "[".repeat(200) + &"]".repeat(200);
         assert!(parse(&bomb).is_err());
+    }
+
+    #[test]
+    fn display_is_the_inverse_of_parse() {
+        for wire in [
+            r#"{"status":"ok","source":"warm","stats_digest":"00ff","n":3}"#,
+            r#"[0,-1.5,1e300,"a\nb",null,true,{"k":[]}]"#,
+            "null",
+            r#"{"set":{"n_sms":"2"},"deadline_ms":500}"#,
+        ] {
+            let v = parse(wire).unwrap();
+            let out = v.to_string();
+            assert_eq!(parse(&out).unwrap(), v, "{wire} -> {out}");
+        }
+        // Member order and duplicate keys survive verbatim.
+        let v = parse(r#"{"b":1,"a":2,"b":3}"#).unwrap();
+        assert_eq!(v.to_string(), r#"{"b":1,"a":2,"b":3}"#);
+        // Hand-built non-finite numbers degrade to null, not invalid JSON.
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
     }
 
     #[test]

@@ -36,6 +36,19 @@
 //!   request holds no resources and can simply be retried);
 //! * malformed JSON gets `"status":"error"` on that line and the
 //!   connection stays usable;
+//! * under sustained overload the daemon **browns out** (PR 10): when
+//!   the windowed queue-wait p95 crosses `--brownout-p95-ms`, *new cold*
+//!   admissions are shed (`"status":"shed"`, message names brownout)
+//!   while warm hits and dedup followers keep being answered — graceful
+//!   degradation, with entry/exit transitions counted
+//!   (`caba_serve_brownout_*`), gauged, and logged under `--log`. The
+//!   controller exits on a calm window (hysteresis at threshold/2) or
+//!   when the queue fully drains;
+//! * a byte-budgeted store (`--store-max-bytes`) evicts
+//!   least-recently-used entries instead of filling the disk; an
+//!   injected ENOSPC/EIO (chaos keys in [`FaultPlan`]) degrades to
+//!   compute-without-caching / recompute-and-heal — see
+//!   `tests/chaos_soak.rs` for the whole menagerie at once;
 //! * `SIGTERM`/`SIGINT` (or the `shutdown` verb) drains gracefully:
 //!   accepting stops, queued jobs finish, waiting clients get their
 //!   answers, then the socket is removed and the process exits 0.
@@ -131,6 +144,19 @@ pub struct ServeOpts {
     pub default_deadline_ms: u64,
     /// Back the cache with a persistent store at this directory.
     pub store_dir: Option<PathBuf>,
+    /// Byte budget for the persistent store (`--store-max-bytes`);
+    /// 0 = unbounded. LRU entries are evicted to stay under it.
+    pub store_max_bytes: u64,
+    /// Brownout threshold (`--brownout-p95-ms`): when the windowed
+    /// queue-wait p95 exceeds this, new cold admissions are shed while
+    /// warm hits and dedup followers are still served. 0 = disabled —
+    /// production jobs legitimately queue for seconds; tests, bench and
+    /// CI opt in explicitly.
+    pub brownout_p95_ms: u64,
+    /// Minimum queue-wait samples a brownout window needs before the
+    /// controller acts on its p95 (guards against one slow job flipping
+    /// the mode).
+    pub brownout_min_samples: u64,
     /// Fault-injection plan (tests, `caba bench`, `--fault`).
     pub fault: Option<Arc<FaultPlan>>,
     /// Write one structured line per request to stderr (`--log`).
@@ -145,6 +171,9 @@ impl ServeOpts {
             queue_cap: 64,
             default_deadline_ms: 30_000,
             store_dir: None,
+            store_max_bytes: 0,
+            brownout_p95_ms: 0,
+            brownout_min_samples: 8,
             fault: None,
             log: false,
         }
@@ -170,6 +199,13 @@ pub struct ServeCounters {
     pub job_errors: u64,
     /// Lines that didn't parse into a valid request.
     pub bad_requests: u64,
+    /// Cold admissions shed *because* brownout was active (a subset of
+    /// `shed`).
+    pub brownout_shed: u64,
+    /// Times the brownout controller engaged.
+    pub brownout_entered: u64,
+    /// Times the brownout controller disengaged.
+    pub brownout_exited: u64,
 }
 
 /// End-of-run report returned by [`Server::run`].
@@ -206,6 +242,24 @@ struct QueueItem {
     enqueued: Instant,
 }
 
+/// Adaptive overload controller (DESIGN.md §5e). Watches the queue-wait
+/// histogram as a sequence of *windows* (snapshot deltas — the lifetime
+/// histogram is sticky, so a past overload would otherwise poison the
+/// p95 forever) and trips a shed-new-cold-work mode when a window's p95
+/// crosses the threshold. Exit has hysteresis (half the threshold) plus
+/// an idle path: brownout blocks the very admissions that would produce
+/// new samples, so a drained queue with an empty window also disengages.
+struct Brownout {
+    /// Entry threshold, microseconds; 0 = disabled.
+    threshold_us: u64,
+    /// Exit threshold (hysteresis): threshold / 2.
+    exit_us: u64,
+    /// Minimum samples in a window before its p95 is acted on.
+    min_samples: u64,
+    /// Start of the current window (the last consumed snapshot).
+    window_start: Mutex<crate::obs::HistSnapshot>,
+}
+
 struct Inner {
     engine: SweepEngine,
     queue_cap: usize,
@@ -219,6 +273,11 @@ struct Inner {
     /// counters, queue gauges, latency histograms, the span ring. The
     /// engine shares its `jobs` slice via `SweepEngine::with_metrics`.
     metrics: Arc<ServiceMetrics>,
+    brownout: Brownout,
+    /// Fault plan shared with the store/engine, consulted here for the
+    /// `drop_conn_at` chaos key (close the Nth response's connection
+    /// without answering).
+    fault: Option<Arc<FaultPlan>>,
     /// Structured per-request stderr logging (`--log`).
     log: bool,
 }
@@ -236,6 +295,64 @@ impl Inner {
             deadline_expired: m.deadline_expired.load(Ordering::Relaxed),
             job_errors: m.job_errors.load(Ordering::Relaxed),
             bad_requests: m.bad_requests.load(Ordering::Relaxed),
+            brownout_shed: m.brownout_shed.load(Ordering::Relaxed),
+            brownout_entered: m.brownout_entered.load(Ordering::Relaxed),
+            brownout_exited: m.brownout_exited.load(Ordering::Relaxed),
+        }
+    }
+
+    fn brownout_active(&self) -> bool {
+        self.metrics.brownout_active.load(Ordering::Relaxed) == 1
+    }
+
+    /// Evaluate the brownout state machine against the latest queue-wait
+    /// window. Called from cold-admission attempts and from workers after
+    /// each pop — cheap (one snapshot + one small mutex), never on the
+    /// warm path's critical section.
+    fn brownout_evaluate(&self) {
+        let b = &self.brownout;
+        if b.threshold_us == 0 {
+            return;
+        }
+        let m = &self.metrics;
+        let snap = m.jobs.queue_wait_us.snapshot();
+        let mut start = b.window_start.lock().unwrap_or_else(PoisonError::into_inner);
+        let win = snap.delta_since(&start);
+        let active = self.brownout_active();
+        if win.count >= b.min_samples {
+            let p95 = win.percentile(0.95);
+            *start = snap;
+            if !active && p95 > b.threshold_us {
+                m.brownout_active.store(1, Ordering::Relaxed);
+                m.brownout_entered.fetch_add(1, Ordering::Relaxed);
+                if self.log {
+                    eprintln!(
+                        "[serve] brownout enter: queue-wait p95 {p95} us > {} us \
+                         (window n={}) — shedding new cold work",
+                        b.threshold_us, win.count
+                    );
+                }
+            } else if active && p95 <= b.exit_us {
+                m.brownout_active.store(0, Ordering::Relaxed);
+                m.brownout_exited.fetch_add(1, Ordering::Relaxed);
+                if self.log {
+                    eprintln!(
+                        "[serve] brownout exit: queue-wait p95 {p95} us <= {} us (window n={})",
+                        b.exit_us, win.count
+                    );
+                }
+            }
+        } else if active && win.count == 0 && m.queue_depth.load(Ordering::Relaxed) == 0 {
+            // Idle drain: nothing queued and no pops since the window
+            // started. Brownout itself suppresses the cold admissions
+            // that would produce samples, so waiting for min_samples
+            // here would latch the mode on forever.
+            *start = snap;
+            m.brownout_active.store(0, Ordering::Relaxed);
+            m.brownout_exited.fetch_add(1, Ordering::Relaxed);
+            if self.log {
+                eprintln!("[serve] brownout exit: queue drained, window empty");
+            }
         }
     }
 
@@ -297,7 +414,11 @@ impl Server {
     pub fn bind(opts: ServeOpts) -> Result<Server> {
         let cache = match &opts.store_dir {
             Some(dir) => {
-                let mut store = RunStore::open(dir)?;
+                let policy = crate::store::CapacityPolicy {
+                    max_bytes: opts.store_max_bytes,
+                    ..Default::default()
+                };
+                let mut store = RunStore::open_with(dir, policy)?;
                 if let Some(f) = &opts.fault {
                     store = store.with_fault(Arc::clone(f));
                 }
@@ -334,6 +455,13 @@ impl Server {
                 stop: AtomicBool::new(false),
                 active_conns: AtomicU64::new(0),
                 metrics,
+                brownout: Brownout {
+                    threshold_us: opts.brownout_p95_ms.saturating_mul(1000),
+                    exit_us: opts.brownout_p95_ms.saturating_mul(1000) / 2,
+                    min_samples: opts.brownout_min_samples.max(1),
+                    window_start: Mutex::new(crate::obs::HistSnapshot::empty()),
+                },
+                fault: opts.fault.clone(),
                 log: opts.log,
             }),
             listener,
@@ -422,6 +550,9 @@ fn worker_loop(inner: &Inner) {
         m.queue_popped();
         let queue_wait = enqueued.elapsed();
         m.jobs.queue_wait_us.record_duration(queue_wait);
+        // Each pop lands a fresh queue-wait sample — the brownout
+        // controller's signal.
+        inner.brownout_evaluate();
         pending
             .queue_wait_us
             .store(queue_wait.as_micros().min(u64::MAX as u128) as u64, Ordering::Relaxed);
@@ -457,6 +588,13 @@ fn handle_connection(inner: &Inner, stream: UnixStream) {
                 let response = handle_line(inner, line.trim());
                 line.clear();
                 if let Some(resp) = response {
+                    if inner.fault.as_deref().is_some_and(FaultPlan::on_respond) {
+                        // Injected connection drop: the answer is
+                        // computed (and, for cold work, already in the
+                        // store) but the peer sees EOF — a retryable
+                        // mid-flight network failure.
+                        return;
+                    }
                     if writer.write_all(resp.as_bytes()).is_err()
                         || writer.write_all(b"\n").is_err()
                         || writer.flush().is_err()
@@ -640,7 +778,9 @@ fn handle_sweep(inner: &Inner, req: &Json, id: u64, span: &mut RequestTrace) -> 
     }
 
     // Admission. Lock order: inflight, then queue; both released before
-    // waiting.
+    // waiting. Brownout is evaluated before any lock: a cold attempt is
+    // exactly the event that should notice a saturated queue window.
+    inner.brownout_evaluate();
     let (pending, source) = {
         let mut inflight = inner.inflight.lock().unwrap_or_else(PoisonError::into_inner);
         if let Some(p) = inflight.get(&key) {
@@ -649,6 +789,19 @@ fn handle_sweep(inner: &Inner, req: &Json, id: u64, span: &mut RequestTrace) -> 
             if inner.stop.load(Ordering::SeqCst) {
                 span.outcome = "draining".to_string();
                 return error_json("draining", id, "server is draining; retry elsewhere");
+            }
+            // Brownout sheds *new cold* work only: warm hits returned
+            // above, dedup followers joined above — both keep flowing
+            // while the daemon digests its backlog.
+            if inner.brownout_active() {
+                m.shed.fetch_add(1, Ordering::Relaxed);
+                m.brownout_shed.fetch_add(1, Ordering::Relaxed);
+                span.outcome = "brownout_shed".to_string();
+                return error_json(
+                    "shed",
+                    id,
+                    "brownout: queue-wait p95 over threshold; retry with backoff",
+                );
             }
             let mut q = inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
             if q.len() >= inner.queue_cap {
@@ -754,11 +907,35 @@ fn stats_json(inner: &Inner, id: u64) -> String {
         req_us.p95(),
         req_us.p99(),
     );
-    if let Some(s) = inner.engine.cache().store_counters() {
+    out.push_str(&format!(
+        ",\"brownout_active\":{},\"brownout_entered\":{},\"brownout_exited\":{},\
+         \"brownout_shed\":{}",
+        m.brownout_active.load(Ordering::Relaxed),
+        m.brownout_entered.load(Ordering::Relaxed),
+        m.brownout_exited.load(Ordering::Relaxed),
+        m.brownout_shed.load(Ordering::Relaxed),
+    ));
+    if let Some(store) = inner.engine.cache().store() {
+        let s = store.counters();
         out.push_str(&format!(
             ",\"store_puts\":{},\"store_warm_hits\":{},\"store_misses\":{},\
-             \"store_quarantined\":{},\"store_temp_cleaned\":{},\"store_put_errors\":{}",
-            s.puts, s.warm_hits, s.misses, s.quarantined, s.temp_cleaned, s.put_errors
+             \"store_quarantined\":{},\"store_temp_cleaned\":{},\"store_put_errors\":{},\
+             \"store_evicted\":{},\"store_evicted_bytes\":{},\"store_quarantine_gced\":{},\
+             \"store_put_uncached\":{},\"store_read_faults\":{},\"store_disk_bytes\":{},\
+             \"store_max_bytes\":{}",
+            s.puts,
+            s.warm_hits,
+            s.misses,
+            s.quarantined,
+            s.temp_cleaned,
+            s.put_errors,
+            s.evicted,
+            s.evicted_bytes,
+            s.quarantine_gced,
+            s.put_uncached,
+            s.read_faults,
+            store.disk_bytes(),
+            store.policy().max_bytes,
         ));
     }
     out.push('}');
@@ -803,6 +980,26 @@ fn render_prometheus(inner: &Inner) -> String {
         "Request spans evicted from the bounded trace ring.",
         m.trace.dropped(),
     );
+    w.counter(
+        "caba_serve_brownout_entered_total",
+        "Times the brownout controller engaged (queue-wait p95 over threshold).",
+        ld(&m.brownout_entered),
+    );
+    w.counter(
+        "caba_serve_brownout_exited_total",
+        "Times the brownout controller disengaged.",
+        ld(&m.brownout_exited),
+    );
+    w.counter(
+        "caba_serve_brownout_shed_total",
+        "Cold admissions shed because brownout was active.",
+        ld(&m.brownout_shed),
+    );
+    w.gauge(
+        "caba_serve_brownout_active",
+        "1 while the daemon is shedding new cold work, else 0.",
+        ld(&m.brownout_active),
+    );
     w.gauge("caba_serve_queue_depth", "Cold-miss jobs currently queued.", ld(&m.queue_depth));
     w.gauge(
         "caba_serve_queue_depth_hwm",
@@ -835,7 +1032,8 @@ fn render_prometheus(inner: &Inner) -> String {
         "SweepJob::execute wall time, microseconds.",
         &m.jobs.job_wall_us.snapshot(),
     );
-    if let Some(s) = inner.engine.cache().store_counters() {
+    if let Some(store) = inner.engine.cache().store() {
+        let s = store.counters();
         w.counter("caba_store_puts_total", "Store entries written.", s.puts);
         w.counter("caba_store_warm_hits_total", "Store reads that validated.", s.warm_hits);
         w.counter("caba_store_misses_total", "Store reads that found no entry.", s.misses);
@@ -850,6 +1048,46 @@ fn render_prometheus(inner: &Inner) -> String {
             s.temp_cleaned,
         );
         w.counter("caba_store_put_errors_total", "Store writes that failed.", s.put_errors);
+        w.counter(
+            "caba_store_evicted_total",
+            "Entries evicted (LRU) to stay under the byte budget.",
+            s.evicted,
+        );
+        w.counter(
+            "caba_store_evicted_bytes_total",
+            "Bytes reclaimed by LRU eviction.",
+            s.evicted_bytes,
+        );
+        w.counter(
+            "caba_store_quarantine_gced_total",
+            "Quarantined files aged out (keep-newest-K).",
+            s.quarantine_gced,
+        );
+        w.counter(
+            "caba_store_put_uncached_total",
+            "Writes skipped because one entry exceeds the whole budget.",
+            s.put_uncached,
+        );
+        w.counter(
+            "caba_store_read_faults_total",
+            "Reads that failed with an I/O error (recompute-and-heal).",
+            s.read_faults,
+        );
+        w.counter(
+            "caba_store_compact_steps_total",
+            "Incremental compaction steps executed.",
+            s.compact_steps,
+        );
+        w.gauge(
+            "caba_store_disk_bytes",
+            "Committed entry bytes accounted by the LRU index.",
+            store.disk_bytes(),
+        );
+        w.gauge(
+            "caba_store_max_bytes",
+            "Configured byte budget (0 = unbounded).",
+            store.policy().max_bytes,
+        );
     }
     w.into_string()
 }
@@ -961,12 +1199,27 @@ pub fn render_summary(s: &ServeSummary) -> String {
         "\nlatency: request p50 {} us  p95 {} us  p99 {} us  queue_hwm {}",
         s.request_p50_us, s.request_p95_us, s.request_p99_us, s.queue_depth_hwm
     ));
+    if c.brownout_entered > 0 || c.brownout_shed > 0 {
+        out.push_str(&format!(
+            "\nbrownout: entered {}  exited {}  shed {}",
+            c.brownout_entered, c.brownout_exited, c.brownout_shed
+        ));
+    }
     if let Some(st) = &s.store {
         out.push_str(&format!(
             "\nstore: puts {}  warm_hits {}  misses {}  quarantined {}  temp_cleaned {}  \
              put_errors {}",
             st.puts, st.warm_hits, st.misses, st.quarantined, st.temp_cleaned, st.put_errors
         ));
+        if st.evicted > 0 || st.quarantine_gced > 0 || st.put_uncached > 0 || st.read_faults > 0
+        {
+            out.push_str(&format!(
+                "\nstore capacity: evicted {} ({} bytes)  quarantine_gced {}  \
+                 put_uncached {}  read_faults {}",
+                st.evicted, st.evicted_bytes, st.quarantine_gced, st.put_uncached,
+                st.read_faults
+            ));
+        }
     }
     out
 }

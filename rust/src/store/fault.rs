@@ -32,6 +32,10 @@ pub enum PutFault {
     /// Flip one payload bit *after* the checksum is computed, then write
     /// atomically — the entry lands complete but fails verification.
     FlipChecksum,
+    /// Fail the write with an ENOSPC-style error before anything reaches
+    /// disk. The store counts it as a `put_error`; callers that treat the
+    /// store as a cache degrade to compute-without-caching.
+    Enospc,
 }
 
 /// A deterministic fault schedule. Construct with [`FaultPlan::parse`]
@@ -50,9 +54,26 @@ pub struct FaultPlan {
     pub slow_at_job: Option<u64>,
     /// Stall duration for `slow_at_job` (default 500 ms when unset).
     pub slow_job_ms: u64,
+    /// Fail the Nth (0-based) store write with an ENOSPC-style error.
+    pub enospc_at: Option<u64>,
+    /// Fail the Nth (0-based) store read with an EIO-style error: the
+    /// read is reported as a miss *without* quarantining the (healthy)
+    /// file, so the caller recomputes and the re-put heals the slot.
+    pub eio_read_at: Option<u64>,
+    /// Stall every store fsync by this many milliseconds (a latency
+    /// shaping knob for a degraded disk, not a discrete fault — it does
+    /// not count toward [`FaultPlan::injected`]).
+    pub slow_fsync_ms: u64,
+    /// Drop the Nth (0-based) response connection: the daemon closes the
+    /// stream without writing an answer, exactly like a mid-flight
+    /// network/peer failure. The client must classify the EOF as
+    /// retryable and converge on a later attempt.
+    pub drop_conn_at: Option<u64>,
 
     puts_seen: AtomicU64,
     jobs_seen: AtomicU64,
+    reads_seen: AtomicU64,
+    responds_seen: AtomicU64,
     injected: AtomicU64,
 }
 
@@ -81,8 +102,13 @@ impl FaultPlan {
                 "panic_at_job" => plan.panic_at_job = Some(n),
                 "slow_at_job" => plan.slow_at_job = Some(n),
                 "slow_job_ms" => plan.slow_job_ms = n,
+                "enospc_at" => plan.enospc_at = Some(n),
+                "eio_read_at" => plan.eio_read_at = Some(n),
+                "slow_fsync_ms" => plan.slow_fsync_ms = n,
+                "drop_conn_at" => plan.drop_conn_at = Some(n),
                 other => bail!(
-                    "unknown fault key {other:?} (torn_write_at|flip_checksum_at|panic_at_job|slow_at_job|slow_job_ms)"
+                    "unknown fault key {other:?} (torn_write_at|flip_checksum_at|panic_at_job|\
+                     slow_at_job|slow_job_ms|enospc_at|eio_read_at|slow_fsync_ms|drop_conn_at)"
                 ),
             }
         }
@@ -106,7 +132,40 @@ impl FaultPlan {
             self.injected.fetch_add(1, Ordering::Relaxed);
             return PutFault::FlipChecksum;
         }
+        if self.enospc_at == Some(i) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return PutFault::Enospc;
+        }
         PutFault::None
+    }
+
+    /// Called by the store before each read; `true` means this read
+    /// fails with a simulated I/O error (reported as a miss, no
+    /// quarantine — the file itself is healthy).
+    pub fn on_read(&self) -> bool {
+        let i = self.reads_seen.fetch_add(1, Ordering::Relaxed);
+        if self.eio_read_at == Some(i) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Per-fsync stall in milliseconds (0 = none). Applied by the store
+    /// around every durable write while the plan is attached.
+    pub fn fsync_stall_ms(&self) -> u64 {
+        self.slow_fsync_ms
+    }
+
+    /// Called by the serve daemon before writing each response; `true`
+    /// means the connection is dropped without an answer.
+    pub fn on_respond(&self) -> bool {
+        let i = self.responds_seen.fetch_add(1, Ordering::Relaxed);
+        if self.drop_conn_at == Some(i) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
     }
 
     /// Called by the sweep engine immediately before executing a job.
@@ -151,6 +210,28 @@ mod tests {
         assert_eq!(p.on_put(), PutFault::Torn);
         assert_eq!(p.on_put(), PutFault::None);
         assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn chaos_keys_parse_and_fire_once() {
+        let p = FaultPlan::parse("enospc_at=1,eio_read_at=0,slow_fsync_ms=7,drop_conn_at=2")
+            .unwrap();
+        assert_eq!(p.fsync_stall_ms(), 7);
+        // Put index 0 clean, index 1 ENOSPC, index 2 clean again.
+        assert_eq!(p.on_put(), PutFault::None);
+        assert_eq!(p.on_put(), PutFault::Enospc);
+        assert_eq!(p.on_put(), PutFault::None);
+        // Read index 0 fails, later reads succeed.
+        assert!(p.on_read());
+        assert!(!p.on_read());
+        // Response connections 0 and 1 survive, 2 is dropped.
+        assert!(!p.on_respond());
+        assert!(!p.on_respond());
+        assert!(p.on_respond());
+        assert!(!p.on_respond());
+        // ENOSPC + EIO + conn-drop; the fsync stall is shaping, not a
+        // discrete fault, so it never counts.
+        assert_eq!(p.injected(), 3);
     }
 
     #[test]

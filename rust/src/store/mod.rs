@@ -36,9 +36,43 @@
 //! the caller recomputes. Corruption can cost a re-simulation; it can
 //! never produce wrong stats, and it is never fatal.
 //!
+//! ## Bounded capacity (PR 10)
+//!
+//! The store is a cache over recomputation, so *any* entry may be
+//! discarded at any moment without correctness loss — the same
+//! reclaimable-donation property CABA demands of assist warps and
+//! Morpheus of its victim cache. [`CapacityPolicy`] makes that bound
+//! explicit:
+//!
+//! - **Byte budget** (`max_bytes`, `--store-max-bytes`): committed
+//!   `.run` bytes never exceed the budget. [`RunStore::open_with`] runs a
+//!   manifest scan that seeds an in-memory LRU index from file mtimes;
+//!   every warm hit bumps the entry's stamp (and best-effort re-stamps
+//!   the file so recency survives restarts); every put evicts
+//!   least-recently-used entries until the total fits. An entry larger
+//!   than the whole budget is not written at all (`put_uncached`).
+//! - **Quarantine GC**: `.quarantined.*` files used to accumulate
+//!   forever; now only the newest `quarantine_keep` are retained, the
+//!   rest are deleted on open and whenever a new quarantine happens
+//!   (`quarantine_gced`).
+//! - **Incremental compaction**: every `compact_every` puts, one
+//!   background-free [`RunStore::compact_step`] revalidates a couple of
+//!   entries (proactively quarantining bit rot before a reader trips on
+//!   it) and reconciles the index with disk truth (externally deleted or
+//!   resized files). No rewrite pass is needed: a valid entry is already
+//!   canonical (exact-length, checksummed), so "compaction" is
+//!   validate + quarantine + reconcile, and any replacement write goes
+//!   through the same temp+fsync+rename discipline as a normal put.
+//!
+//! All of it is observation-only for results: eviction and GC can cost a
+//! recompute, never a wrong answer, and none of the knobs enter the
+//! config fingerprint.
+//!
 //! The entry payload is the bit-exact [`codec`] encoding of `SimStats`;
 //! [`fault`] provides the deterministic fault-injection plans the test
-//! suites and `caba bench` use to prove all of the above.
+//! suites and `caba bench` use to prove all of the above — including the
+//! disk-chaos keys (`enospc_at`, `eio_read_at`, `slow_fsync_ms`) that
+//! drive `tests/chaos_soak.rs`.
 
 pub mod codec;
 pub mod fault;
@@ -49,11 +83,13 @@ pub use fault::{FaultPlan, PutFault};
 use crate::stats::SimStats;
 use crate::sweep::JobKey;
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::fs::{self, File};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::SystemTime;
 
 /// On-disk entry format version. Bump whenever the entry layout *or* the
 /// stats payload codec changes shape — old entries then quarantine on
@@ -65,6 +101,52 @@ const MAGIC: &[u8; 8] = b"CABARUN1";
 
 /// Extension of committed entries.
 const ENTRY_EXT: &str = ".run";
+
+/// Marker embedded in quarantined file names.
+const QUARANTINE_MARK: &str = ".quarantined.";
+
+/// Entries structurally revalidated per [`RunStore::compact_step`].
+const COMPACT_BATCH: usize = 2;
+
+/// Bounded-resource policy for a [`RunStore`]. Everything here is
+/// reclamation policy over a cache — none of it can change a result,
+/// and none of it enters the config fingerprint.
+#[derive(Clone, Copy, Debug)]
+pub struct CapacityPolicy {
+    /// Byte budget over committed `.run` entries; 0 = unbounded.
+    pub max_bytes: u64,
+    /// Keep at most this many `.quarantined.*` files (newest by mtime);
+    /// the rest are deleted on open and on each new quarantine.
+    pub quarantine_keep: usize,
+    /// Run one incremental [`RunStore::compact_step`] every N puts
+    /// (0 disables the piggybacked cadence; explicit calls still work).
+    pub compact_every: u64,
+}
+
+impl Default for CapacityPolicy {
+    fn default() -> CapacityPolicy {
+        CapacityPolicy { max_bytes: 0, quarantine_keep: 8, compact_every: 16 }
+    }
+}
+
+/// In-memory LRU index over committed entries: file name → (size,
+/// recency stamp). Seeded from mtimes by the on-open manifest scan,
+/// stamped monotonically afterwards.
+#[derive(Default)]
+struct CapIndex {
+    entries: HashMap<String, EntryMeta>,
+    total_bytes: u64,
+    clock: u64,
+    /// Pending compaction scan queue (drained [`COMPACT_BATCH`] at a
+    /// time, refilled from a fresh dir listing when empty).
+    scan: Vec<String>,
+}
+
+#[derive(Clone, Copy)]
+struct EntryMeta {
+    size: u64,
+    stamp: u64,
+}
 
 /// Monotonic counters describing a store's activity since open.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -82,6 +164,21 @@ pub struct StoreCounters {
     /// Writes that failed with an I/O error (non-fatal to callers that
     /// treat the store as a cache).
     pub put_errors: u64,
+    /// Entries removed by LRU eviction to stay under the byte budget.
+    pub evicted: u64,
+    /// Bytes reclaimed by LRU eviction.
+    pub evicted_bytes: u64,
+    /// `.quarantined.*` files aged out (keep-newest-K policy).
+    pub quarantine_gced: u64,
+    /// Writes skipped because the encoded entry alone exceeds the byte
+    /// budget (the result is still returned to the caller — compute
+    /// without caching).
+    pub put_uncached: u64,
+    /// Reads that failed with a (possibly injected) I/O error and were
+    /// reported as misses without quarantining — recompute-and-heal.
+    pub read_faults: u64,
+    /// Incremental compaction steps executed.
+    pub compact_steps: u64,
 }
 
 /// A crash-safe, content-addressed `JobKey → SimStats` store rooted at
@@ -92,6 +189,8 @@ pub struct StoreCounters {
 pub struct RunStore {
     dir: PathBuf,
     fault: Option<Arc<FaultPlan>>,
+    policy: CapacityPolicy,
+    index: Mutex<CapIndex>,
     seq: AtomicU64,
     puts: AtomicU64,
     warm_hits: AtomicU64,
@@ -99,18 +198,35 @@ pub struct RunStore {
     quarantined: AtomicU64,
     temp_cleaned: AtomicU64,
     put_errors: AtomicU64,
+    evicted: AtomicU64,
+    evicted_bytes: AtomicU64,
+    quarantine_gced: AtomicU64,
+    put_uncached: AtomicU64,
+    read_faults: AtomicU64,
+    compact_steps: AtomicU64,
 }
 
 impl RunStore {
-    /// Open (creating if needed) a store at `dir`, sweeping any stale
-    /// temp files left by crashed writers.
+    /// Open (creating if needed) a store at `dir` with the default
+    /// [`CapacityPolicy`] (unbounded bytes, quarantine GC active),
+    /// sweeping any stale temp files left by crashed writers.
     pub fn open(dir: impl Into<PathBuf>) -> Result<RunStore> {
+        Self::open_with(dir, CapacityPolicy::default())
+    }
+
+    /// Open a store under an explicit capacity policy. Runs the manifest
+    /// scan (seeding the LRU index from file mtimes), sweeps stale
+    /// temps, ages out excess `.quarantined.*` files, and evicts down to
+    /// the byte budget before returning.
+    pub fn open_with(dir: impl Into<PathBuf>, policy: CapacityPolicy) -> Result<RunStore> {
         let dir = dir.into();
         fs::create_dir_all(&dir)
             .with_context(|| format!("run store: create {}", dir.display()))?;
         let store = RunStore {
             dir,
             fault: None,
+            policy,
+            index: Mutex::new(CapIndex::default()),
             seq: AtomicU64::new(0),
             puts: AtomicU64::new(0),
             warm_hits: AtomicU64::new(0),
@@ -118,8 +234,17 @@ impl RunStore {
             quarantined: AtomicU64::new(0),
             temp_cleaned: AtomicU64::new(0),
             put_errors: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            evicted_bytes: AtomicU64::new(0),
+            quarantine_gced: AtomicU64::new(0),
+            put_uncached: AtomicU64::new(0),
+            read_faults: AtomicU64::new(0),
+            compact_steps: AtomicU64::new(0),
         };
         store.clean_stale_temps()?;
+        store.gc_quarantined();
+        store.scan_manifest();
+        store.enforce_budget();
         Ok(store)
     }
 
@@ -144,7 +269,24 @@ impl RunStore {
             quarantined: self.quarantined.load(Ordering::Relaxed),
             temp_cleaned: self.temp_cleaned.load(Ordering::Relaxed),
             put_errors: self.put_errors.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            evicted_bytes: self.evicted_bytes.load(Ordering::Relaxed),
+            quarantine_gced: self.quarantine_gced.load(Ordering::Relaxed),
+            put_uncached: self.put_uncached.load(Ordering::Relaxed),
+            read_faults: self.read_faults.load(Ordering::Relaxed),
+            compact_steps: self.compact_steps.load(Ordering::Relaxed),
         }
+    }
+
+    /// The capacity policy this store was opened with.
+    pub fn policy(&self) -> CapacityPolicy {
+        self.policy
+    }
+
+    /// Committed `.run` bytes currently accounted by the LRU index
+    /// (what the byte budget bounds).
+    pub fn disk_bytes(&self) -> u64 {
+        self.lock_index().total_bytes
     }
 
     /// Committed entries currently on disk (diagnostics/tests; excludes
@@ -165,6 +307,14 @@ impl RunStore {
     /// as a side effect). Never returns stats that failed any check.
     pub fn get(&self, key: &JobKey) -> Option<SimStats> {
         let path = self.entry_path(key);
+        if self.fault.as_deref().is_some_and(FaultPlan::on_read) {
+            // Injected EIO: the file (if any) is healthy, so no
+            // quarantine — report a miss and let the caller recompute;
+            // its re-put heals the slot.
+            self.read_faults.fetch_add(1, Ordering::Relaxed);
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
         let bytes = match fs::read(&path) {
             Ok(b) => b,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
@@ -174,6 +324,7 @@ impl RunStore {
             Err(_) => {
                 // Unreadable (permissions, I/O error): treat as a miss
                 // without quarantining — the file may recover.
+                self.read_faults.fetch_add(1, Ordering::Relaxed);
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 return None;
             }
@@ -181,6 +332,7 @@ impl RunStore {
         match parse_entry(&bytes, key) {
             Ok(stats) => {
                 self.warm_hits.fetch_add(1, Ordering::Relaxed);
+                self.touch(&path, bytes.len() as u64);
                 Some(stats)
             }
             Err(_) => {
@@ -199,8 +351,27 @@ impl RunStore {
         let mut bytes = encode_entry(key, stats);
         let final_path = self.entry_path(key);
 
+        if self.policy.max_bytes > 0 && bytes.len() as u64 > self.policy.max_bytes {
+            // The entry alone overflows the budget: writing it just to
+            // evict it (or everything else) would churn the disk for
+            // nothing. Skip the write — compute-without-caching, not an
+            // error.
+            self.put_uncached.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+
         match self.fault.as_deref().map_or(PutFault::None, FaultPlan::on_put) {
             PutFault::None => {}
+            PutFault::Enospc => {
+                // Injected disk-full: nothing reaches disk, the caller
+                // sees a counted, non-fatal error and keeps its computed
+                // result — the cache degrades, the answer does not.
+                self.put_errors.fetch_add(1, Ordering::Relaxed);
+                bail!(
+                    "injected fault: ENOSPC writing {} (no space left on device)",
+                    final_path.display()
+                );
+            }
             PutFault::Torn => {
                 // Simulated crash mid-write: a truncated prefix lands on
                 // the final path directly (no temp, no fsync) and the
@@ -221,7 +392,12 @@ impl RunStore {
         let res = self.put_atomic(&final_path, &bytes);
         match res {
             Ok(()) => {
-                self.puts.fetch_add(1, Ordering::Relaxed);
+                let n = self.puts.fetch_add(1, Ordering::Relaxed) + 1;
+                self.index_insert(&final_path, bytes.len() as u64);
+                if self.policy.compact_every > 0 && n % self.policy.compact_every == 0 {
+                    self.compact_step();
+                }
+                self.enforce_budget();
                 Ok(())
             }
             Err(e) => {
@@ -244,6 +420,12 @@ impl RunStore {
             let mut f = File::create(&tmp_path)
                 .with_context(|| format!("run store: create {}", tmp_path.display()))?;
             f.write_all(bytes).context("run store: write entry")?;
+            // Degraded-disk shaping: an attached fault plan may stall
+            // every fsync (slow_fsync_ms) to model a saturated device.
+            let stall = self.fault.as_deref().map_or(0, FaultPlan::fsync_stall_ms);
+            if stall > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(stall));
+            }
             f.sync_all().context("run store: fsync entry")?;
             drop(f);
             fs::rename(&tmp_path, final_path)
@@ -276,6 +458,227 @@ impl RunStore {
         // race; either way the bad entry is gone from the read path.
         let _ = fs::rename(path, self.dir.join(q_name));
         self.quarantined.fetch_add(1, Ordering::Relaxed);
+        self.index_remove(path);
+        // Keep the quarantine shelf bounded: age out everything beyond
+        // the newest `quarantine_keep` right away.
+        self.gc_quarantined();
+    }
+
+    // ---- capacity manager ------------------------------------------------
+
+    /// Poison-recovering index lock: a panicking thread (e.g. an
+    /// injected worker panic mid-put) must never wedge the store.
+    fn lock_index(&self) -> MutexGuard<'_, CapIndex> {
+        self.index.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn file_name_of(path: &Path) -> String {
+        path.file_name().unwrap_or_default().to_string_lossy().into_owned()
+    }
+
+    /// Record (or refresh) a committed entry in the LRU index.
+    fn index_insert(&self, path: &Path, size: u64) {
+        let name = Self::file_name_of(path);
+        let mut ix = self.lock_index();
+        ix.clock += 1;
+        let stamp = ix.clock;
+        let old = ix.entries.insert(name, EntryMeta { size, stamp });
+        ix.total_bytes = ix.total_bytes - old.map_or(0, |m| m.size) + size;
+    }
+
+    fn index_remove(&self, path: &Path) {
+        let name = Self::file_name_of(path);
+        let mut ix = self.lock_index();
+        if let Some(m) = ix.entries.remove(&name) {
+            ix.total_bytes = ix.total_bytes.saturating_sub(m.size);
+        }
+    }
+
+    /// Bump an entry's recency stamp on a warm hit, and best-effort
+    /// re-stamp the file's mtime so LRU order survives a restart (the
+    /// manifest scan seeds stamps from mtimes — an "atime" we control).
+    fn touch(&self, path: &Path, size: u64) {
+        let name = Self::file_name_of(path);
+        {
+            let mut ix = self.lock_index();
+            ix.clock += 1;
+            let stamp = ix.clock;
+            match ix.entries.get_mut(&name) {
+                Some(m) => m.stamp = stamp,
+                None => {
+                    ix.entries.insert(name, EntryMeta { size, stamp });
+                    ix.total_bytes += size;
+                }
+            }
+        }
+        let _ = File::options()
+            .append(true)
+            .open(path)
+            .and_then(|f| f.set_modified(SystemTime::now()));
+    }
+
+    /// On-open manifest scan: list committed entries, seed LRU stamps in
+    /// mtime order (oldest = least recently used). Unreadable metadata
+    /// degrades to stamp order of discovery — never fatal.
+    fn scan_manifest(&self) {
+        let Ok(rd) = fs::read_dir(&self.dir) else { return };
+        let mut found: Vec<(String, u64, SystemTime)> = rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if !name.ends_with(ENTRY_EXT) {
+                    return None;
+                }
+                let md = e.metadata().ok()?;
+                let mtime = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+                Some((name, md.len(), mtime))
+            })
+            .collect();
+        found.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
+        let mut ix = self.lock_index();
+        for (name, size, _) in found {
+            ix.clock += 1;
+            let stamp = ix.clock;
+            if ix.entries.insert(name, EntryMeta { size, stamp }).is_none() {
+                ix.total_bytes += size;
+            }
+        }
+    }
+
+    /// Age out `.quarantined.*` files beyond the newest
+    /// `quarantine_keep` (by mtime, name as tiebreak). They exist for
+    /// inspection, not as an unbounded graveyard.
+    fn gc_quarantined(&self) {
+        let Ok(rd) = fs::read_dir(&self.dir) else { return };
+        let mut quarantined: Vec<(SystemTime, String)> = rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if !name.contains(QUARANTINE_MARK) {
+                    return None;
+                }
+                let mtime = e
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .unwrap_or(SystemTime::UNIX_EPOCH);
+                Some((mtime, name))
+            })
+            .collect();
+        if quarantined.len() <= self.policy.quarantine_keep {
+            return;
+        }
+        // Oldest first; delete everything before the keep window.
+        quarantined.sort();
+        let excess = quarantined.len() - self.policy.quarantine_keep;
+        for (_, name) in quarantined.into_iter().take(excess) {
+            if fs::remove_file(self.dir.join(name)).is_ok() {
+                self.quarantine_gced.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Evict least-recently-used entries until committed bytes fit the
+    /// budget. Eviction is always safe: entries are a cache over
+    /// recomputation, so the worst case is a future warm hit becoming a
+    /// recompute. The just-written entry carries the newest stamp and is
+    /// therefore chosen last.
+    fn enforce_budget(&self) {
+        if self.policy.max_bytes == 0 {
+            return;
+        }
+        loop {
+            let victim = {
+                let mut ix = self.lock_index();
+                if ix.total_bytes <= self.policy.max_bytes {
+                    return;
+                }
+                let name = ix
+                    .entries
+                    .iter()
+                    .min_by(|a, b| a.1.stamp.cmp(&b.1.stamp).then_with(|| a.0.cmp(b.0)))
+                    .map(|(n, _)| n.clone());
+                match name {
+                    Some(n) => {
+                        let meta = ix.entries.remove(&n).expect("victim exists");
+                        ix.total_bytes = ix.total_bytes.saturating_sub(meta.size);
+                        (n, meta.size)
+                    }
+                    // Index empty but total nonzero: accounting drift
+                    // (e.g. external writes); reset and let compaction
+                    // re-reconcile.
+                    None => {
+                        ix.total_bytes = 0;
+                        return;
+                    }
+                }
+            };
+            // Best-effort removal outside the lock; a racing external
+            // delete is fine (the bytes are gone either way).
+            let _ = fs::remove_file(self.dir.join(&victim.0));
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+            self.evicted_bytes.fetch_add(victim.1, Ordering::Relaxed);
+        }
+    }
+
+    /// One background-free compaction step: structurally revalidate up
+    /// to [`COMPACT_BATCH`] committed entries (quarantining bit rot
+    /// before a reader trips on it) and reconcile the LRU index with
+    /// disk truth — externally deleted files leave the index, externally
+    /// grown/shrunk ones are re-measured. Piggybacked on every
+    /// `compact_every`-th put; also callable directly. Never blocks
+    /// readers and never touches a valid entry's bytes (valid entries
+    /// are already canonical — exact-length, checksummed — so there is
+    /// nothing to rewrite).
+    pub fn compact_step(&self) {
+        self.compact_steps.fetch_add(1, Ordering::Relaxed);
+        let batch: Vec<String> = {
+            let mut ix = self.lock_index();
+            if ix.scan.is_empty() {
+                if let Ok(rd) = fs::read_dir(&self.dir) {
+                    ix.scan = rd
+                        .filter_map(|e| e.ok())
+                        .map(|e| e.file_name().to_string_lossy().into_owned())
+                        .filter(|n| n.ends_with(ENTRY_EXT))
+                        .collect();
+                }
+            }
+            let take = ix.scan.len().min(COMPACT_BATCH);
+            ix.scan.split_off(ix.scan.len() - take)
+        };
+        for name in batch {
+            let path = self.dir.join(&name);
+            match fs::read(&path) {
+                Err(_) => self.index_remove(&path),
+                Ok(bytes) => {
+                    if validate_entry(&bytes).is_ok() {
+                        let disk_size = bytes.len() as u64;
+                        let mut ix = self.lock_index();
+                        ix.clock += 1;
+                        let stamp = ix.clock;
+                        match ix.entries.get_mut(&name) {
+                            Some(m) if m.size != disk_size => {
+                                ix.total_bytes =
+                                    ix.total_bytes.saturating_sub(m.size) + disk_size;
+                                m.size = disk_size;
+                            }
+                            Some(_) => {}
+                            // Discovered outside the index (external
+                            // copy-in, torn-write debris that validated
+                            // — impossible — or a pre-open writer):
+                            // adopt it as oldest-known.
+                            None => {
+                                let meta = EntryMeta { size: disk_size, stamp };
+                                ix.entries.insert(name.clone(), meta);
+                                ix.total_bytes += disk_size;
+                            }
+                        }
+                    } else {
+                        self.quarantine(&path);
+                    }
+                }
+            }
+        }
+        self.enforce_budget();
     }
 
     fn clean_stale_temps(&self) -> Result<()> {
@@ -379,6 +782,43 @@ impl<'a> EntryReader<'a> {
     fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
+}
+
+/// Structurally validate an entry without knowing its key: magic →
+/// version → checksum → header bounds → payload decode → exact-length
+/// consumption. Used by [`RunStore::compact_step`] to quarantine bit rot
+/// proactively — key matching still happens on every real read.
+pub fn validate_entry(bytes: &[u8]) -> Result<()> {
+    let mut r = EntryReader { buf: bytes, pos: 0 };
+    if r.take(MAGIC.len())? != MAGIC {
+        bail!("bad magic: not a run-store entry");
+    }
+    let version = r.u32()?;
+    if version != STORE_VERSION {
+        bail!("entry version {version}, this build reads {STORE_VERSION}");
+    }
+    if bytes.len() < r.pos + 8 {
+        bail!("truncated entry: missing checksum");
+    }
+    let body = &bytes[..bytes.len() - 8];
+    let stored_sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if stored_sum != fnv1a64(body) {
+        bail!("checksum mismatch");
+    }
+    let app_len = r.u16()? as usize;
+    r.take(app_len)?;
+    let design_len = r.u16()? as usize;
+    r.take(design_len)?;
+    r.u64()?; // fp
+    r.u64()?; // scale
+    r.u64()?; // digest
+    let payload_len = r.u32()? as usize;
+    let payload = r.take(payload_len)?;
+    if r.pos != body.len() {
+        bail!("corrupt entry: stray bytes between payload and checksum");
+    }
+    decode_stats(payload)?;
+    Ok(())
 }
 
 /// Validate and decode an entry read from disk, in strictly escalating
@@ -567,6 +1007,143 @@ mod tests {
         store.put(&key, &a_stats()).unwrap();
         assert_eq!(store.get(&key), None, "checksum-flipped entry must not parse");
         assert_eq!(store.counters().quarantined, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    fn key_n(i: u64) -> JobKey {
+        ("SLA", "CABA-BDI", 0xdead_beef_0000_0000 + i, 0.01f64.to_bits(), 0)
+    }
+
+    #[test]
+    fn budget_evicts_lru_and_never_exceeds() {
+        let dir = tmp_store("budget");
+        let entry_len = encode_entry(&key_n(0), &a_stats()).len() as u64;
+        // Room for exactly two entries.
+        let policy = CapacityPolicy { max_bytes: entry_len * 2, ..Default::default() };
+        let store = RunStore::open_with(&dir, policy).unwrap();
+        store.put(&key_n(0), &a_stats()).unwrap();
+        store.put(&key_n(1), &a_stats()).unwrap();
+        assert_eq!(store.counters().evicted, 0);
+        assert!(store.disk_bytes() <= policy.max_bytes);
+
+        // Touch key 0 so key 1 becomes the LRU victim.
+        assert!(store.get(&key_n(0)).is_some());
+        store.put(&key_n(2), &a_stats()).unwrap();
+        let c = store.counters();
+        assert_eq!((c.evicted, c.evicted_bytes), (1, entry_len));
+        assert!(store.disk_bytes() <= policy.max_bytes);
+        assert!(store.get(&key_n(0)).is_some(), "recently-touched entry survives");
+        assert!(store.get(&key_n(2)).is_some(), "newest entry survives");
+        assert!(store.get(&key_n(1)).is_none(), "LRU entry was evicted");
+        // Eviction is observation-only: recompute + re-put returns
+        // bit-identical stats.
+        store.put(&key_n(1), &a_stats()).unwrap();
+        assert_eq!(store.get(&key_n(1)), Some(a_stats()));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_scan_seeds_lru_from_mtime_and_enforces_budget() {
+        let dir = tmp_store("scan");
+        let entry_len = encode_entry(&key_n(0), &a_stats()).len() as u64;
+        // Unbounded first open writes three entries...
+        let store = RunStore::open(&dir).unwrap();
+        for i in 0..3 {
+            store.put(&key_n(i), &a_stats()).unwrap();
+        }
+        drop(store);
+        // ...then a budgeted re-open must scan the manifest and evict
+        // down to the two newest.
+        let policy = CapacityPolicy { max_bytes: entry_len * 2, ..Default::default() };
+        let store = RunStore::open_with(&dir, policy).unwrap();
+        assert_eq!(store.counters().evicted, 1);
+        assert!(store.disk_bytes() <= policy.max_bytes);
+        assert_eq!(store.len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversize_entry_is_compute_without_caching() {
+        let dir = tmp_store("oversize");
+        let policy = CapacityPolicy { max_bytes: 16, ..Default::default() };
+        let store = RunStore::open_with(&dir, policy).unwrap();
+        store.put(&key_n(0), &a_stats()).unwrap();
+        let c = store.counters();
+        assert_eq!((c.puts, c.put_uncached, c.put_errors), (0, 1, 0));
+        assert_eq!(store.len(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quarantine_gc_keeps_newest_k() {
+        let dir = tmp_store("qgc");
+        fs::create_dir_all(&dir).unwrap();
+        for i in 0..6 {
+            fs::write(dir.join(format!("x{i}.run.quarantined.999.{i}")), b"junk").unwrap();
+        }
+        let policy = CapacityPolicy { quarantine_keep: 2, ..Default::default() };
+        let store = RunStore::open_with(&dir, policy).unwrap();
+        assert_eq!(store.counters().quarantine_gced, 4);
+        let left = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(QUARANTINE_MARK))
+            .count();
+        assert_eq!(left, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn enospc_fault_is_counted_nonfatal_put_error() {
+        let dir = tmp_store("enospc");
+        let fault = Arc::new(FaultPlan::parse("enospc_at=0").unwrap());
+        let store = RunStore::open(&dir).unwrap().with_fault(Arc::clone(&fault));
+        assert!(store.put(&key_n(0), &a_stats()).is_err());
+        assert_eq!(fault.injected(), 1);
+        assert_eq!(store.counters().put_errors, 1);
+        assert_eq!(store.len(), 0, "nothing reaches disk on ENOSPC");
+        // Next put succeeds — the store heals.
+        store.put(&key_n(0), &a_stats()).unwrap();
+        assert_eq!(store.get(&key_n(0)), Some(a_stats()));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eio_read_fault_is_miss_without_quarantine() {
+        let dir = tmp_store("eio");
+        let fault = Arc::new(FaultPlan::parse("eio_read_at=0").unwrap());
+        let store = RunStore::open(&dir).unwrap().with_fault(Arc::clone(&fault));
+        store.put(&key_n(0), &a_stats()).unwrap();
+        assert_eq!(store.get(&key_n(0)), None, "injected EIO reads as a miss");
+        let c = store.counters();
+        assert_eq!((c.read_faults, c.quarantined), (1, 0));
+        // The healthy file is untouched: the next read serves it.
+        assert_eq!(store.get(&key_n(0)), Some(a_stats()));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_step_quarantines_rot_and_reconciles_index() {
+        let dir = tmp_store("compact");
+        let store = RunStore::open(&dir).unwrap();
+        store.put(&key_n(0), &a_stats()).unwrap();
+        store.put(&key_n(1), &a_stats()).unwrap();
+        // Rot entry 0 behind the store's back; delete entry 1 externally.
+        let p0 = store.entry_path(&key_n(0));
+        let mut bytes = fs::read(&p0).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        fs::write(&p0, &bytes).unwrap();
+        fs::remove_file(store.entry_path(&key_n(1))).unwrap();
+
+        // Enough steps to cover the whole dir.
+        store.compact_step();
+        store.compact_step();
+        let c = store.counters();
+        assert!(c.compact_steps >= 2);
+        assert_eq!(c.quarantined, 1, "rotted entry quarantined proactively");
+        assert!(!p0.exists());
+        assert_eq!(store.disk_bytes(), 0, "index reconciled with disk truth");
         let _ = fs::remove_dir_all(&dir);
     }
 

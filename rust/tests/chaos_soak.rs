@@ -1,0 +1,292 @@
+//! Chaos soak: one in-process daemon under a seeded disk/connection
+//! fault plan AND a store byte budget, hammered by concurrent retrying
+//! clients. The resilience contract under test (DESIGN.md §5e):
+//!
+//! * the daemon never crashes — every request gets an answer or a
+//!   dropped connection the client recovers from;
+//! * every `ok` is **bit-identical** to the clean (fault-free,
+//!   unbounded) run of the same point — eviction, ENOSPC, read EIO and
+//!   dropped connections degrade caching, never correctness;
+//! * the committed `.run` bytes on disk never exceed the budget;
+//! * the retrying client converges: no request exhausts its backoff
+//!   budget under this plan.
+//!
+//! Everything is seeded (`FaultPlan` indices, client jitter seeds), so a
+//! failure replays exactly.
+
+use caba::client::{Conn, RetryPolicy};
+use caba::serve::{ServeOpts, ServeSummary, Server, ServerHandle};
+use caba::store::FaultPlan;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+struct TestServer {
+    base: PathBuf,
+    socket: PathBuf,
+    handle: ServerHandle,
+    thread: Option<JoinHandle<anyhow::Result<ServeSummary>>>,
+}
+
+impl TestServer {
+    fn start(tag: &str, tweak: impl FnOnce(&mut ServeOpts)) -> TestServer {
+        let base =
+            std::env::temp_dir().join(format!("caba_chaos_soak_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&base).unwrap();
+        let socket = base.join("serve.sock");
+        let mut opts = ServeOpts::new(&socket);
+        opts.jobs = 2;
+        opts.store_dir = Some(base.join("store"));
+        tweak(&mut opts);
+        let server = Server::bind(opts).unwrap();
+        let handle = server.handle();
+        let thread = Some(std::thread::spawn(move || server.run()));
+        TestServer { base, socket, handle, thread }
+    }
+
+    fn store_dir(&self) -> PathBuf {
+        self.base.join("store")
+    }
+
+    /// Drain; the `Result`/join doubles as the never-crashed assert.
+    fn finish(mut self) -> ServeSummary {
+        self.handle.stop();
+        let summary =
+            self.thread.take().unwrap().join().expect("daemon thread must not panic").unwrap();
+        let _ = std::fs::remove_dir_all(&self.base);
+        summary
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.handle.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        let _ = std::fs::remove_dir_all(&self.base);
+    }
+}
+
+fn sweep_line(app: &str, scale: f64) -> String {
+    format!(
+        "{{\"verb\":\"sweep\",\"app\":\"{app}\",\"design\":\"Base\",\"scale\":{scale},\
+         \"set\":{{\"n_sms\":2,\"max_cycles\":150000}}}}"
+    )
+}
+
+/// The four distinct sweep points the soak cycles through. Tiny configs:
+/// the soak is about the service fabric, not simulator throughput.
+fn points() -> Vec<String> {
+    ["SLA", "PVC", "MM", "TRA"].iter().map(|app| sweep_line(app, 0.01)).collect()
+}
+
+/// Sum of committed entry bytes on disk (quarantine/temp files excluded,
+/// exactly as the budget accounts them).
+fn run_bytes(dir: &Path) -> u64 {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().ends_with(".run"))
+                .filter_map(|e| e.metadata().ok())
+                .map(|m| m.len())
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+fn digest_of(resp: &caba::client::Response) -> String {
+    match resp {
+        caba::client::Response::Ok { digest: Some(d), .. } => d.clone(),
+        other => panic!("expected an ok response with a digest, got {other:?}"),
+    }
+}
+
+#[test]
+fn chaos_soak_faulted_budgeted_daemon_stays_correct() {
+    // ---- Pass 1: clean reference. Unbounded store, no faults. ----
+    let clean = TestServer::start("clean", |_| {});
+    let mut reference = Vec::new();
+    {
+        let mut conn = Conn::new(&clean.socket, RetryPolicy::default());
+        for line in points() {
+            let resp = conn.request(&line).unwrap();
+            reference.push((line, digest_of(&resp)));
+        }
+    }
+    let clean_bytes = run_bytes(&clean.store_dir());
+    assert!(clean_bytes > 0, "clean pass must have persisted entries");
+    clean.finish();
+
+    // A budget that holds roughly half the working set forces live
+    // eviction while every single entry still fits individually.
+    let budget = clean_bytes / 2 + 1;
+
+    // ---- Pass 2: chaos. Budgeted store + seeded fault plan. ----
+    // Faults are 0-based operation indices: the 2nd durable write hits
+    // ENOSPC, the 2nd disk read hits EIO, the 2nd served response drops
+    // its connection mid-flight, and every fsync stalls 2 ms.
+    let plan = Arc::new(
+        FaultPlan::parse("enospc_at=1,eio_read_at=1,drop_conn_at=1,slow_fsync_ms=2").unwrap(),
+    );
+    let plan_probe = Arc::clone(&plan);
+    let chaos = TestServer::start("chaos", move |o| {
+        o.fault = Some(plan);
+        o.store_max_bytes = budget;
+    });
+
+    // Concurrent retrying clients, distinct jitter seeds, each cycling
+    // the full point set twice (first cycle mixes cold/warm/dedup, the
+    // second re-validates against the clients' remembered digests).
+    let mut workers = Vec::new();
+    for client_id in 0..3u64 {
+        let socket = chaos.socket.clone();
+        let reference = reference.clone();
+        workers.push(std::thread::spawn(move || {
+            let policy = RetryPolicy {
+                max_retries: 6,
+                base_ms: 2,
+                cap_ms: 50,
+                seed: 0xcaba_0000 + client_id,
+            };
+            let mut conn = Conn::new(&socket, policy);
+            for _round in 0..2 {
+                for (line, want) in &reference {
+                    // `request` converging (not erroring) IS the retry
+                    // assert; Conn itself re-checks digest bit-identity
+                    // across its own retries and rounds.
+                    let resp = conn.request(line).unwrap_or_else(|e| {
+                        panic!("client {client_id} failed to converge: {e:#}")
+                    });
+                    assert_eq!(
+                        &digest_of(&resp),
+                        want,
+                        "client {client_id}: faulted answer diverged from the clean run"
+                    );
+                }
+            }
+            conn.counters()
+        }));
+    }
+    let mut attempts = 0u64;
+    let mut retries = 0u64;
+    let mut conn_errors = 0u64;
+    for w in workers {
+        let c = w.join().expect("client thread must not panic");
+        attempts += c.attempts;
+        retries += c.retries;
+        conn_errors += c.conn_errors;
+    }
+    // 3 clients × 2 rounds × 4 points all converged.
+    assert!(attempts >= 24, "every request must have been attempted");
+    assert_eq!(
+        plan_probe.injected(),
+        3,
+        "enospc, eio and drop_conn must each have fired exactly once"
+    );
+    // The dropped connection is the one fault a client *must* observe.
+    assert!(conn_errors >= 1, "drop_conn_at never reached a client");
+    assert!(retries >= 1, "the dropped connection must have been retried");
+
+    // Budget held under fire — measured from disk, not the index.
+    let disk = run_bytes(&chaos.store_dir());
+    assert!(disk <= budget, "committed bytes {disk} exceed the budget {budget}");
+
+    let summary = chaos.finish();
+    let store = summary.store.expect("chaos daemon ran with a store");
+    assert!(store.evicted >= 1, "a half-sized budget must have evicted at least once");
+    assert_eq!(store.put_errors, 1, "the injected ENOSPC is counted, not fatal");
+    assert_eq!(store.read_faults, 1, "the injected EIO is counted, not fatal");
+    assert_eq!(summary.counters.job_errors, 0, "no fault may surface as a job error");
+}
+
+/// Brownout under deterministic pressure: a slow job pins the single
+/// worker while more cold points pile up behind it, so the next worker
+/// claim sees a queue wait far over the 1 ms threshold and engages the
+/// controller. While backlog remains, new cold admissions shed with a
+/// message naming brownout, warm hits keep flowing, and a retrying
+/// client rides the sheds to a bit-identical `ok` after the idle-drain
+/// exit.
+#[test]
+fn brownout_sheds_cold_serves_warm_and_recovers() {
+    // Job 0 stalls 900 ms; jobs admitted behind it wait most of that.
+    let plan = Arc::new(FaultPlan::parse("slow_at_job=0,slow_job_ms=900").unwrap());
+    let ts = TestServer::start("brownout", move |o| {
+        o.jobs = 1;
+        o.fault = Some(plan);
+        o.brownout_p95_ms = 1;
+        o.brownout_min_samples = 1;
+    });
+
+    // Three cold points from three threads: the first claims the worker
+    // and stalls, the other two queue behind it.
+    let mut pressure = Vec::new();
+    for (i, line) in points().into_iter().take(3).enumerate() {
+        let socket = ts.socket.clone();
+        pressure.push(std::thread::spawn(move || {
+            let resp = caba::serve::client_request(&socket, &line).unwrap();
+            assert!(resp.contains("\"status\":\"ok\""), "pressure point {i} failed: {resp}");
+            resp
+        }));
+        // Admission order matters: point 0 must be the slow job.
+        std::thread::sleep(Duration::from_millis(30));
+    }
+
+    // Wait for the controller to engage (the claim after the slow job
+    // completes sees its ~900 ms queue wait). While the remaining
+    // backlog drains, cold admissions must shed.
+    let metrics = ts.handle.metrics().clone();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while metrics.brownout_entered.load(Ordering::Relaxed) == 0 {
+        assert!(Instant::now() < deadline, "brownout never engaged");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut brownout_sheds = 0;
+    let mut probe = 0u32;
+    while metrics.brownout_active.load(Ordering::Relaxed) == 1 && probe < 20 {
+        // Distinct scale per probe → always a cold admission, never warm.
+        let line = sweep_line("LPS", 0.011 + 0.001 * f64::from(probe));
+        let resp = caba::serve::client_request(&ts.socket, &line).unwrap();
+        if resp.contains("\"status\":\"shed\"") && resp.contains("brownout") {
+            brownout_sheds += 1;
+            break;
+        }
+        probe += 1;
+    }
+    assert!(brownout_sheds >= 1, "no cold admission shed while brownout was active");
+
+    for p in pressure {
+        p.join().expect("pressure client must not panic");
+    }
+
+    // Warm hits flow regardless of brownout state: the slow point is now
+    // in the store, and repeats answer ok with the same digest.
+    let mut conn = Conn::new(
+        &ts.socket,
+        RetryPolicy { max_retries: 10, base_ms: 5, cap_ms: 200, seed: 7 },
+    );
+    let first = points().remove(0);
+    let a = digest_of(&conn.request(&first).unwrap());
+    let b = digest_of(&conn.request(&first).unwrap());
+    assert_eq!(a, b, "warm repeats must be bit-identical");
+
+    // The shed probe point converges through the retrying client once
+    // the queue drains (idle-drain exits the brownout).
+    let probe_line = sweep_line("LPS", 0.011);
+    let resp = conn.request(&probe_line).unwrap();
+    assert!(resp.is_ok(), "retry must converge to ok, got {:?}", resp.raw());
+
+    let summary = ts.finish();
+    assert!(summary.counters.brownout_entered >= 1, "controller never engaged");
+    assert!(summary.counters.brownout_shed >= 1, "brownout sheds must be counted");
+    assert!(
+        summary.counters.shed >= summary.counters.brownout_shed,
+        "brownout sheds must be a subset of sheds"
+    );
+    assert!(
+        summary.counters.brownout_exited >= 1,
+        "idle-drain must have disengaged the controller by drain time"
+    );
+}

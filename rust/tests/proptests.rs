@@ -661,3 +661,108 @@ fn prop_hist_bucket_boundaries_are_powers_of_two() {
         },
     );
 }
+
+// ---- serve wire JSON properties (PR 10) ---------------------------------
+
+/// Arbitrary wire-JSON values: every scalar regime (finite doubles from
+/// raw bit patterns, exact small ints, nasty strings full of quotes,
+/// escapes, control bytes and multi-byte UTF-8) plus bounded-depth
+/// arrays and objects with duplicate-prone short keys.
+fn arb_json(rng: &mut Rng, depth: usize) -> caba::serve::json::Json {
+    use caba::serve::json::Json;
+    let arb_string = |rng: &mut Rng| -> String {
+        let n = rng.range(0, 12);
+        (0..n)
+            .map(|_| match rng.range(0, 6) {
+                0 => '"',
+                1 => '\\',
+                2 => char::from(rng.next_u32() as u8 % 0x20), // control
+                3 => 'é',
+                4 => '𝄞', // needs a surrogate pair on the wire
+                _ => char::from(b'a' + (rng.next_u32() as u8 % 26)),
+            })
+            .collect()
+    };
+    let n_kinds = if depth == 0 { 4 } else { 6 };
+    match rng.range(0, n_kinds) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => {
+            if rng.chance(0.5) {
+                Json::Num((rng.next_u64() % 2_000) as f64 - 1_000.0)
+            } else {
+                // Raw bit patterns, rerolled until finite: exercises
+                // subnormals, huge magnitudes and negative zero.
+                loop {
+                    let f = f64::from_bits(rng.next_u64());
+                    if f.is_finite() {
+                        break Json::Num(f);
+                    }
+                }
+            }
+        }
+        3 => Json::Str(arb_string(rng)),
+        4 => Json::Arr((0..rng.range(0, 4)).map(|_| arb_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.range(0, 4))
+                .map(|_| (arb_string(rng), arb_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// `Display` is a right inverse of `parse`: any value the generator can
+/// build survives a serialize→parse round trip, and the serialized form
+/// is a fixpoint (printing the reparsed value is byte-identical).
+#[test]
+fn prop_json_display_parse_roundtrip() {
+    use caba::serve::json::parse;
+    forall(
+        "json-roundtrip",
+        default_cases() * 2,
+        |rng: &mut Rng| arb_json(rng, 4),
+        |v| {
+            let wire = v.to_string();
+            let back = parse(&wire).map_err(|e| format!("{wire:?} did not reparse: {e:#}"))?;
+            prop_assert!(&back == v, "round trip changed the value: {wire}");
+            prop_assert!(back.to_string() == wire, "serialized form is not a fixpoint");
+            Ok(())
+        },
+    );
+}
+
+/// The malformed corpus: every entry must be *rejected* — errors, never
+/// panics, stack overflows or silent truncation. Families: truncated
+/// escape sequences, nesting past the depth limit, and numbers too large
+/// for a finite f64.
+#[test]
+fn json_malformed_corpus_is_rejected() {
+    use caba::serve::json::parse;
+    let mut corpus: Vec<String> = vec![
+        // Truncated escapes, in every spot an escape can be cut short.
+        r#""\"#.into(),
+        r#""abc\"#.into(),
+        r#""\u"#.into(),
+        r#""\u00"#.into(),
+        r#""\u123"#.into(),
+        r#""\ud834\u"#.into(),
+        r#""\ud834\udd"#.into(),
+        r#"{"k":"\"#.into(),
+        r#""\x41""#.into(), // bad escape letter
+        // Huge numbers: syntactically fine, semantically non-finite.
+        "1e999".into(),
+        "-1e999".into(),
+        "1e309".into(),
+        "9".repeat(400),
+        r#"{"n":1e999}"#.into(),
+    ];
+    // Deep nesting: one past the limit must fail, for arrays and objects.
+    corpus.push("[".repeat(33) + &"]".repeat(33));
+    corpus.push("{\"k\":".repeat(33) + "0" + &"}".repeat(33));
+    for bad in &corpus {
+        assert!(parse(bad).is_err(), "{bad:?} must be rejected");
+    }
+    // The boundary itself is accepted: exactly MAX_DEPTH nested arrays.
+    let at_limit = "[".repeat(32) + &"]".repeat(32);
+    assert!(parse(&at_limit).is_ok(), "depth-32 value must still parse");
+}
